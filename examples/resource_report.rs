@@ -1,0 +1,68 @@
+//! Resource report: regenerates Table III and Figure 10 from the
+//! synthesis estimator, and answers the paper's §V-C question — how many
+//! IPs *could* fit per board, area-wise, for each kernel (the headroom
+//! the paper says a better design flow would unlock).
+//!
+//! ```sh
+//! cargo run --release --example resource_report
+//! ```
+
+use omp_fpga::figures::tables;
+use omp_fpga::hw::resources;
+use omp_fpga::stencil::kernels::ALL_KERNELS;
+use omp_fpga::stencil::workload::paper_workload;
+
+fn main() {
+    for block in [
+        tables::table1(),
+        tables::table2(),
+        tables::table3(),
+        tables::fig10(),
+    ] {
+        for line in block {
+            println!("{line}");
+        }
+        println!();
+    }
+
+    println!("== area headroom (paper §V-C: \"plenty of hardware to be used\") ==");
+    println!(
+        "{:<18} {:>10} {:>12} {:>16}",
+        "kernel", "Table-II", "area-max", "binding resource"
+    );
+    for k in ALL_KERNELS {
+        let w = paper_workload(k);
+        let free = resources::free_region();
+        let one = resources::ip_resources(k, &w.shape);
+        let max_ips = [
+            free.luts / one.luts.max(1),
+            free.bram36 / one.bram36.max(1),
+            free.dsp / one.dsp.max(1),
+        ]
+        .into_iter()
+        .min()
+        .unwrap();
+        let binding = if max_ips == free.luts / one.luts.max(1) {
+            "LUTs"
+        } else if max_ips == free.bram36 / one.bram36.max(1) {
+            "BRAM"
+        } else {
+            "DSP"
+        };
+        println!(
+            "{:<18} {:>10} {:>12} {:>16}",
+            k.paper_name(),
+            w.ips_per_fpga,
+            max_ips,
+            binding
+        );
+        assert!(
+            resources::fits(k, &w.shape, w.ips_per_fpga),
+            "Table-II configuration must fit"
+        );
+    }
+    println!(
+        "\nthe Table-II IP counts were limited by Vivado timing closure, \
+         not area — consistent with the paper's §V-C discussion"
+    );
+}

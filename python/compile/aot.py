@@ -1,0 +1,135 @@
+"""AOT bridge: lower every (kernel x shape x variant) to HLO **text**.
+
+HLO text — not ``lowered.compile()`` or a serialized ``HloModuleProto`` —
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+
+Outputs (under --out, default ../artifacts):
+  <name>.hlo.txt      one per artifact
+  manifest.json       index the Rust runtime::registry parses
+
+Run once via ``make artifacts``; never at request time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Tuple
+
+import jax
+
+from . import model
+from .kernels import common
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, shape: Tuple[int, ...]) -> str:
+    spec = jax.ShapeDtypeStruct(shape, jax.numpy.float32)
+    # donate_argnums: the grid buffer is dead after the step — lets XLA
+    # update in place when the backend supports it.
+    lowered = jax.jit(fn, donate_argnums=(0,)).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def artifact_list():
+    """Every artifact we ship: per-kernel step at paper + small shapes,
+    plus fused chains for the multi-IP-per-FPGA kernels."""
+    arts = []
+    for name in sorted(model.TABLE_II):
+        paper_shape, _iters, ips = model.TABLE_II[name]
+        small_shape = model.SMALL[name]
+        for tag, shape in (("paper", paper_shape), ("small", small_shape)):
+            arts.append(
+                dict(kind="step", kernel=name, tag=tag, shape=shape, k=1)
+            )
+        # Fused k-IP chain (single-load fast path) for kernels that place
+        # more than one IP per FPGA in Table II; small-shape chain for all
+        # kernels so tests can cross-check step-by-step vs fused execution.
+        if ips > 1:
+            arts.append(
+                dict(kind="chain", kernel=name, tag="paper",
+                     shape=paper_shape, k=ips)
+            )
+        arts.append(
+            dict(kind="chain", kernel=name, tag="small", shape=small_shape,
+                 k=4)
+        )
+    return arts
+
+
+def art_name(a) -> str:
+    shape = "x".join(str(d) for d in a["shape"])
+    if a["kind"] == "step":
+        return f"{a['kernel']}_{a['tag']}_{shape}"
+    return f"{a['kernel']}_{a['tag']}_{shape}_chain{a['k']}"
+
+
+def build(out_dir: str, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for a in artifact_list():
+        name = art_name(a)
+        if only and only not in name:
+            continue
+        shape = tuple(a["shape"])
+        if a["kind"] == "step":
+            fn = model.step_fn(a["kernel"], shape)
+        else:
+            fn = model.chain_fn(a["kernel"], shape, a["k"])
+        text = lower_fn(fn, shape)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        entries.append(
+            {
+                "name": name,
+                "kernel": a["kernel"],
+                "kind": a["kind"],
+                "tag": a["tag"],
+                "shape": list(shape),
+                "iters_fused": a["k"],
+                "flops_per_cell": common.FLOPS_PER_CELL[a["kernel"]],
+                "file": f"{name}.hlo.txt",
+                "sha256_16": digest,
+                "dtype": "f32",
+            }
+        )
+        print(f"  lowered {name}  ({len(text)} chars)", flush=True)
+    manifest = {
+        "format": 1,
+        "jax_version": jax.__version__,
+        "interchange": "hlo-text",
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    build(args.out, args.only)
+
+
+if __name__ == "__main__":
+    main()

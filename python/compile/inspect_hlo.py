@@ -1,0 +1,73 @@
+"""L2 perf tool: static analysis of the lowered HLO artifacts.
+
+Usage:  cd python && python -m compile.inspect_hlo [--dir ../artifacts]
+
+Reports, per artifact: op histogram, fusion count, estimated live-buffer
+footprint (the VMEM-budget proxy for the TPU mapping, DESIGN.md §8), and
+whether the donated-input alias survived lowering.  Used by the §Perf L2
+pass to confirm there is no redundant recompute and fusion happened.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+from collections import Counter
+
+
+# `name = type[shape]{layout} opname(args)` — the op name is the token
+# right before the argument list, after the result type.
+OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.-]+\s*=\s*\(?[a-z0-9]+\[[^=]*?\s([a-z][a-z0-9-]*)\("
+)
+SHAPE_RE = re.compile(r"\bf32\[([\d,]+)\]")
+
+
+def analyze_text(text: str) -> dict:
+    ops = Counter()
+    max_elems = 0
+    for line in text.splitlines():
+        m = OP_RE.match(line)
+        if m:
+            ops[m.group(1)] += 1
+        for s in SHAPE_RE.findall(line):
+            elems = 1
+            for d in s.split(","):
+                elems *= int(d)
+            max_elems = max(max_elems, elems)
+    return {
+        "ops": dict(ops),
+        "total_ops": sum(ops.values()),
+        "fusions": ops.get("fusion", 0),
+        "max_buffer_mib": max_elems * 4 / (1 << 20),
+        "aliased_io": "input_output_alias" in text,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default="../artifacts")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    manifest = json.load(open(os.path.join(args.dir, "manifest.json")))
+    rows = []
+    for e in manifest["artifacts"]:
+        text = open(os.path.join(args.dir, e["file"])).read()
+        a = analyze_text(text)
+        a["name"] = e["name"]
+        rows.append(a)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+        return
+    print(f"{'artifact':<42} {'ops':>5} {'fus':>4} {'maxbuf':>9} alias")
+    for a in rows:
+        print(
+            f"{a['name']:<42} {a['total_ops']:>5} {a['fusions']:>4} "
+            f"{a['max_buffer_mib']:>7.2f}Mi {a['aliased_io']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Stencil IP kernels (Pallas, L1) — importing this package registers all
+five Table-I kernels in :mod:`compile.kernels.common`."""
+
+from . import common, ref  # noqa: F401
+from . import laplace2d, diffusion2d, jacobi9pt, laplace3d, diffusion3d  # noqa: F401
+
+get = common.get
+names = common.names
+FLOPS_PER_CELL = common.FLOPS_PER_CELL

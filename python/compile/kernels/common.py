@@ -1,0 +1,182 @@
+"""Shared machinery for the five Table-I stencil IP kernels.
+
+Each paper IP is a shift-register + 8-PE datapath streaming a fp32 grid at
+8 cells/cycle.  The TPU re-think (DESIGN.md §Hardware-Adaptation): the
+temporal shift-register schedule becomes a spatial VMEM row-block schedule —
+each Pallas program produces one row-block of the output and reads the
+row-block plus a 1-cell halo from the (padded) input.  The 8 PEs become the
+VPU lane dimension.
+
+Boundary policy (identical in ref.py, the Rust golden model, and the FLOP
+accounting): border cells copy through unchanged, interior cells update.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# ---------------------------------------------------------------------------
+# Kernel coefficient sets (the C* constants "passed to the IPs", Table I).
+# Fixed at synthesis time in the paper; fixed at AOT-lowering time here.
+# ---------------------------------------------------------------------------
+
+#: Diffusion-2D: C1..C5 over (W, N, C, S, E) — diffusion-stable, sums to 1.
+DIFFUSION2D_C = (0.125, 0.125, 0.5, 0.125, 0.125)
+
+#: Jacobi 9-pt: C1..C9 row-major over the 3x3 window — corners .05,
+#: edges .1, centre .4 (sums to 1).
+JACOBI9PT_C = (0.05, 0.1, 0.05, 0.1, 0.4, 0.1, 0.05, 0.1, 0.05)
+
+#: Diffusion-3D: C1..C6 exactly as printed in Table I (six terms:
+#: (i,j-1,k), (i-1,j,k), (i,j,k-1), centre, (i+1,j,k), (i,j+1,k)).
+#: The printed formula omits (i,j,k+1); we reproduce it verbatim.
+DIFFUSION3D_C = (0.1, 0.1, 0.1, 0.5, 0.1, 0.1)
+
+#: Laplace-3D: the printed formula has duplicated neighbours and a 0.25
+#: factor (a typo); the standard 6-point Laplace relaxation is intended:
+#: mean of the six face neighbours.
+LAPLACE3D_C = 1.0 / 6.0
+
+# FLOPs per *interior* cell per iteration, from the Table-I formulas:
+#   laplace2d   3 add + 1 mul            =  4
+#   diffusion2d 4 add + 5 mul            =  9
+#   jacobi9pt   8 add + 9 mul            = 17
+#   laplace3d   5 add + 1 mul            =  6
+#   diffusion3d 5 add + 6 mul            = 11
+FLOPS_PER_CELL: Dict[str, int] = {
+    "laplace2d": 4,
+    "diffusion2d": 9,
+    "jacobi9pt": 17,
+    "laplace3d": 6,
+    "diffusion3d": 11,
+}
+
+#: Halo width (cells) on every side; all Table-I kernels are radius-1.
+HALO = 1
+
+
+def pick_block(n: int, cap: int = 64) -> int:
+    """Largest divisor of ``n`` that is <= cap.
+
+    The Pallas grid runs one program per row-block (2D) / plane-block (3D);
+    block sizes must divide the axis length.  Worst case (prime n) this
+    degenerates to 1-row blocks, which is still correct, just more programs.
+    """
+    if n <= 0:
+        raise ValueError(f"axis length must be positive, got {n}")
+    for cand in range(min(cap, n), 0, -1):
+        if n % cand == 0:
+            return cand
+    return 1
+
+
+@dataclass(frozen=True)
+class StencilSpec:
+    """Static description of one stencil IP kernel."""
+
+    name: str
+    ndim: int
+    flops_per_cell: int
+    #: tile -> block computation; tile has a 1-cell halo on every side of
+    #: every axis, block is the halo-stripped result.
+    compute: Callable[[jnp.ndarray], jnp.ndarray] = field(compare=False)
+
+
+def _boundary_mask(block_shape: Tuple[int, ...],
+                   full_shape: Tuple[int, ...],
+                   block_offsets: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+    """True where a cell of this block lies on the *global* grid boundary."""
+    mask = jnp.zeros(block_shape, dtype=jnp.bool_)
+    for axis, n in enumerate(full_shape):
+        idx = jax.lax.broadcasted_iota(jnp.int32, block_shape, axis)
+        idx = idx + block_offsets[axis]
+        mask = mask | (idx == 0) | (idx == n - 1)
+    return mask
+
+
+def pallas_step(spec: StencilSpec, shape: Tuple[int, ...],
+                block_cap: int = 64, interpret: bool = True):
+    """Build the single-iteration Pallas function for ``spec`` on ``shape``.
+
+    Returns ``f(x) -> y`` with x, y fp32 arrays of ``shape``.  The function
+    pads x by the halo, then launches one program per leading-axis block.
+    The *input* is presented to every program as a single full-array block
+    (constant index map) and each program slices its halo window with
+    ``pl.load`` — Pallas block specs cannot overlap, so the halo exchange
+    is expressed as explicit windowed loads (on real TPU this is the
+    HBM->VMEM DMA schedule; under interpret=True it is a numpy slice).
+    """
+    if len(shape) != spec.ndim:
+        raise ValueError(f"{spec.name} expects {spec.ndim}D, got {shape}")
+    lead = shape[0]
+    br = pick_block(lead, block_cap)
+    nblocks = lead // br
+    padded = tuple(n + 2 * HALO for n in shape)
+    trail = shape[1:]
+
+    def kernel(x_ref, o_ref):
+        b = pl.program_id(0)
+        # Halo-inclusive window for this block: leading axis [b*br, b*br+br+2)
+        # of the padded input; full extent of the trailing axes.
+        idx = (pl.dslice(b * br, br + 2 * HALO),) + tuple(
+            slice(None) for _ in trail
+        )
+        tile = pl.load(x_ref, idx)
+        res = spec.compute(tile)
+        centre = tile[tuple(slice(HALO, -HALO) for _ in shape)]
+        offs = (b * br,) + tuple(jnp.int32(0) for _ in trail)
+        mask = _boundary_mask(res.shape, shape, offs)
+        o_ref[...] = jnp.where(mask, centre, res).astype(o_ref.dtype)
+
+    grid = (nblocks,)
+    in_spec = pl.BlockSpec(padded, lambda b: tuple(0 for _ in padded))
+    out_spec = pl.BlockSpec(
+        (br,) + trail, lambda b: (b,) + tuple(0 for _ in trail)
+    )
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(shape, jnp.float32),
+        interpret=interpret,
+    )
+
+    def step(x):
+        x = x.astype(jnp.float32)
+        xpad = jnp.pad(x, HALO)  # halo values are masked out; content moot
+        return call(xpad)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Registry: kernels register themselves on import (see __init__.py).
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, StencilSpec] = {}
+
+
+def register(spec: StencilSpec) -> StencilSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"duplicate kernel {spec.name}")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> StencilSpec:
+    import compile.kernels  # noqa: F401  (trigger registration)
+
+    return _REGISTRY[name]
+
+
+def names() -> Sequence[str]:
+    import compile.kernels  # noqa: F401
+
+    return tuple(sorted(_REGISTRY))

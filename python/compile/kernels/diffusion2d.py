@@ -1,0 +1,29 @@
+"""Table I kernel 2 — Diffusion, 2-D (5-point weighted, radius 1).
+
+  V'[i,j] = C1*V[i,j-1] + C2*V[i-1,j] + C3*V[i,j] + C4*V[i+1,j] + C5*V[i,j+1]
+
+4 adds + 5 muls = 9 FLOPs per interior cell.
+"""
+
+from . import common
+
+C = common.DIFFUSION2D_C
+
+
+def _compute(t):
+    return (
+        C[0] * t[1:-1, :-2]
+        + C[1] * t[:-2, 1:-1]
+        + C[2] * t[1:-1, 1:-1]
+        + C[3] * t[2:, 1:-1]
+        + C[4] * t[1:-1, 2:]
+    )
+
+
+SPEC = common.register(
+    common.StencilSpec(
+        name="diffusion2d", ndim=2,
+        flops_per_cell=common.FLOPS_PER_CELL["diffusion2d"],
+        compute=_compute,
+    )
+)

@@ -1,0 +1,35 @@
+"""Table I kernel 5 — Diffusion, 3-D, exactly the six printed terms.
+
+  V'[i,j,k] = C1*V[i,j-1,k] + C2*V[i-1,j,k] + C3*V[i,j,k-1]
+              + C4*V[i,j,k]  + C5*V[i+1,j,k] + C6*V[i,j+1,k]
+
+(The printed formula omits the (i,j,k+1) neighbour; reproduced verbatim —
+see DESIGN.md.)  5 adds + 6 muls = 11 FLOPs per interior cell.
+
+Axis convention: tile axes are (i, j, k).
+"""
+
+from . import common
+
+C = common.DIFFUSION3D_C
+
+
+def _compute(t):
+    c = slice(1, -1)
+    return (
+        C[0] * t[c, :-2, c]    # V[i, j-1, k]
+        + C[1] * t[:-2, c, c]  # V[i-1, j, k]
+        + C[2] * t[c, c, :-2]  # V[i, j, k-1]
+        + C[3] * t[c, c, c]    # V[i, j, k]
+        + C[4] * t[2:, c, c]   # V[i+1, j, k]
+        + C[5] * t[c, 2:, c]   # V[i, j+1, k]
+    )
+
+
+SPEC = common.register(
+    common.StencilSpec(
+        name="diffusion3d", ndim=3,
+        flops_per_cell=common.FLOPS_PER_CELL["diffusion3d"],
+        compute=_compute,
+    )
+)

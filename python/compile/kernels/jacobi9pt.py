@@ -1,0 +1,32 @@
+"""Table I kernel 3 — Jacobi 9-point, 2-D (full 3x3 window, radius 1).
+
+  V'[i,j] = sum_{di,dj in {-1,0,1}} C[di,dj] * V[i+di, j+dj]
+
+8 adds + 9 muls = 17 FLOPs per interior cell.
+"""
+
+from . import common
+
+C = common.JACOBI9PT_C
+
+
+def _compute(t):
+    acc = None
+    k = 0
+    for di in range(3):  # row offset into the halo tile
+        for dj in range(3):
+            rows = slice(di, t.shape[0] - 2 + di)
+            cols = slice(dj, t.shape[1] - 2 + dj)
+            term = C[k] * t[rows, cols]
+            acc = term if acc is None else acc + term
+            k += 1
+    return acc
+
+
+SPEC = common.register(
+    common.StencilSpec(
+        name="jacobi9pt", ndim=2,
+        flops_per_cell=common.FLOPS_PER_CELL["jacobi9pt"],
+        compute=_compute,
+    )
+)

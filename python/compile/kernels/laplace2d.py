@@ -1,0 +1,24 @@
+"""Table I kernel 1 — Laplace equation, 2-D (4-point, radius 1).
+
+  V'[i,j] = 0.25 * (V[i,j-1] + V[i-1,j] + V[i+1,j] + V[i,j+1])
+
+3 adds + 1 mul = 4 FLOPs per interior cell.
+"""
+
+from . import common
+
+
+def _compute(t):
+    # t: (br+2, W+2) halo tile; result: (br, W)
+    return 0.25 * (
+        t[1:-1, :-2] + t[:-2, 1:-1] + t[2:, 1:-1] + t[1:-1, 2:]
+    )
+
+
+SPEC = common.register(
+    common.StencilSpec(
+        name="laplace2d", ndim=2,
+        flops_per_cell=common.FLOPS_PER_CELL["laplace2d"],
+        compute=_compute,
+    )
+)

@@ -1,0 +1,33 @@
+"""Table I kernel 4 — Laplace equation, 3-D (6-point, radius 1).
+
+The printed Table-I formula repeats two neighbours and keeps the 2-D 0.25
+factor (a typo); the intended 6-point relaxation is the mean of the six
+face neighbours:
+
+  V'[i,j,k] = (1/6) * (V[i-1,j,k] + V[i+1,j,k] + V[i,j-1,k]
+                       + V[i,j+1,k] + V[i,j,k-1] + V[i,j,k+1])
+
+5 adds + 1 mul = 6 FLOPs per interior cell.
+"""
+
+from . import common
+
+C = common.LAPLACE3D_C
+
+
+def _compute(t):
+    c = slice(1, -1)
+    return C * (
+        t[:-2, c, c] + t[2:, c, c]
+        + t[c, :-2, c] + t[c, 2:, c]
+        + t[c, c, :-2] + t[c, c, 2:]
+    )
+
+
+SPEC = common.register(
+    common.StencilSpec(
+        name="laplace3d", ndim=3,
+        flops_per_cell=common.FLOPS_PER_CELL["laplace3d"],
+        compute=_compute,
+    )
+)

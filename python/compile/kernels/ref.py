@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the five Table-I stencils.
+
+Deliberately written in a different style from the Pallas kernels (direct
+interior-slice assignment on the unpadded grid, no tiling, no masking) so
+that agreement between the two is a meaningful correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import common
+
+C2 = common.DIFFUSION2D_C
+C9 = common.JACOBI9PT_C
+C3D = common.DIFFUSION3D_C
+CL3 = common.LAPLACE3D_C
+
+
+def laplace2d(x):
+    x = x.astype(jnp.float32)
+    interior = 0.25 * (x[1:-1, :-2] + x[:-2, 1:-1] + x[2:, 1:-1] + x[1:-1, 2:])
+    return x.at[1:-1, 1:-1].set(interior)
+
+
+def diffusion2d(x):
+    x = x.astype(jnp.float32)
+    interior = (
+        C2[0] * x[1:-1, :-2]
+        + C2[1] * x[:-2, 1:-1]
+        + C2[2] * x[1:-1, 1:-1]
+        + C2[3] * x[2:, 1:-1]
+        + C2[4] * x[1:-1, 2:]
+    )
+    return x.at[1:-1, 1:-1].set(interior)
+
+
+def jacobi9pt(x):
+    x = x.astype(jnp.float32)
+    h, w = x.shape
+    acc = jnp.zeros((h - 2, w - 2), jnp.float32)
+    k = 0
+    for di in (-1, 0, 1):
+        for dj in (-1, 0, 1):
+            acc = acc + C9[k] * x[1 + di : h - 1 + di, 1 + dj : w - 1 + dj]
+            k += 1
+    return x.at[1:-1, 1:-1].set(acc)
+
+
+def laplace3d(x):
+    x = x.astype(jnp.float32)
+    c = slice(1, -1)
+    interior = CL3 * (
+        x[:-2, c, c] + x[2:, c, c]
+        + x[c, :-2, c] + x[c, 2:, c]
+        + x[c, c, :-2] + x[c, c, 2:]
+    )
+    return x.at[c, c, c].set(interior)
+
+
+def diffusion3d(x):
+    x = x.astype(jnp.float32)
+    c = slice(1, -1)
+    interior = (
+        C3D[0] * x[c, :-2, c]
+        + C3D[1] * x[:-2, c, c]
+        + C3D[2] * x[c, c, :-2]
+        + C3D[3] * x[c, c, c]
+        + C3D[4] * x[2:, c, c]
+        + C3D[5] * x[c, 2:, c]
+    )
+    return x.at[c, c, c].set(interior)
+
+
+REF = {
+    "laplace2d": laplace2d,
+    "diffusion2d": diffusion2d,
+    "jacobi9pt": jacobi9pt,
+    "laplace3d": laplace3d,
+    "diffusion3d": diffusion3d,
+}
+
+
+def step(name: str, x):
+    """Apply one iteration of kernel ``name`` to grid ``x``."""
+    return REF[name](x)
+
+
+def iterate(name: str, x, n: int):
+    """Apply ``n`` iterations (what a chain of n pipelined IPs computes)."""
+    for _ in range(n):
+        x = REF[name](x)
+    return x

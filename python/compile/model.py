@@ -1,0 +1,81 @@
+"""L2 — the JAX compute graph an IP (or a chain of IPs) executes.
+
+One *step* = one stencil iteration over a full grid = the work one paper IP
+performs per pass.  ``chain(spec, shape, k)`` composes k steps — what k
+pipelined IPs compute back-to-back; it is AOT-lowered as a fused artifact
+for the single-load fast path and used by tests to cross-check the Rust
+coordinator's step-by-step execution.
+
+Everything here is build-time only: :mod:`compile.aot` lowers these
+functions to HLO text once, and the Rust runtime replays the artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import common
+
+
+def step_fn(name: str, shape: Tuple[int, ...], interpret: bool = True):
+    """Single-iteration function for kernel ``name`` on static ``shape``."""
+    spec = common.get(name)
+    pallas = common.pallas_step(spec, shape, interpret=interpret)
+
+    def step(x):
+        # Returned as a 1-tuple: the AOT bridge lowers with
+        # return_tuple=True and the Rust side unwraps with to_tuple1().
+        return (pallas(x),)
+
+    return step
+
+
+def chain_fn(name: str, shape: Tuple[int, ...], k: int,
+             interpret: bool = True):
+    """k fused iterations (a k-IP pipeline segment) as one function."""
+    if k < 1:
+        raise ValueError(f"chain length must be >= 1, got {k}")
+    spec = common.get(name)
+    pallas = common.pallas_step(spec, shape, interpret=interpret)
+
+    def chain(x):
+        # Unrolled rather than scanned: k is small (<= IPs per FPGA, 4) and
+        # unrolling lets XLA fuse across iterations like the physical IP
+        # chain does; buffers are donated by the AOT wrapper.
+        for _ in range(k):
+            x = pallas(x)
+        return (x,)
+
+    return chain
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_step(name: str, shape: Tuple[int, ...]):
+    return jax.jit(step_fn(name, shape))
+
+
+# ---------------------------------------------------------------------------
+# Table II workload presets (mirrored by rust stencil::workload).
+# ---------------------------------------------------------------------------
+
+#: name -> (grid shape, iterations, IPs per FPGA) — Table II of the paper.
+TABLE_II = {
+    "laplace2d": ((4096, 512), 240, 4),
+    "laplace3d": ((512, 64, 64), 240, 2),
+    "diffusion2d": ((4096, 512), 240, 1),
+    "diffusion3d": ((256, 32, 32), 240, 1),
+    "jacobi9pt": ((1024, 128), 240, 1),
+}
+
+#: Small shapes used for fast validation artifacts and the quickstart.
+SMALL = {
+    "laplace2d": (64, 48),
+    "diffusion2d": (64, 48),
+    "jacobi9pt": (64, 48),
+    "laplace3d": (16, 12, 10),
+    "diffusion3d": (16, 12, 10),
+}

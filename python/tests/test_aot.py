@@ -1,0 +1,70 @@
+"""AOT bridge tests: HLO-text structure, manifest integrity, and that the
+shipped artifact set covers everything the Rust coordinator needs."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_lower_small_step_structure():
+    text = aot.lower_fn(model.step_fn("laplace2d", (8, 6)), (8, 6))
+    # Text interchange invariants the Rust loader relies on:
+    assert text.startswith("HloModule")
+    assert "f32[8,6]" in text                       # entry shape
+    assert "->(f32[8,6]" in text                    # tuple return (1-tuple)
+    # Donated input buffer lowered to an input/output alias:
+    assert "input_output_alias" in text
+
+
+def test_lower_is_deterministic():
+    f = lambda: aot.lower_fn(model.step_fn("diffusion2d", (8, 6)), (8, 6))
+    assert f() == f()
+
+
+def test_artifact_list_covers_table_ii():
+    arts = aot.artifact_list()
+    names = {aot.art_name(a) for a in arts}
+    assert len(names) == len(arts), "artifact names must be unique"
+    for kernel, (shape, _iters, ips) in model.TABLE_II.items():
+        s = "x".join(map(str, shape))
+        assert f"{kernel}_paper_{s}" in names
+        if ips > 1:
+            assert f"{kernel}_paper_{s}_chain{ips}" in names
+    for kernel, shape in model.SMALL.items():
+        s = "x".join(map(str, shape))
+        assert f"{kernel}_small_{s}" in names
+        assert f"{kernel}_small_{s}_chain4" in names
+
+
+def test_build_into_tmpdir(tmp_path):
+    aot.build(str(tmp_path), only="laplace2d_small")
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["format"] == 1
+    assert manifest["interchange"] == "hlo-text"
+    entries = manifest["artifacts"]
+    assert {e["name"] for e in entries} == {
+        "laplace2d_small_64x48", "laplace2d_small_64x48_chain4"
+    }
+    for e in entries:
+        p = tmp_path / e["file"]
+        assert p.exists()
+        text = p.read_text()
+        assert text.startswith("HloModule")
+        assert e["flops_per_cell"] == 4
+        assert e["dtype"] == "f32"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_shipped_manifest_consistent():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = json.load(open(os.path.join(root, "manifest.json")))
+    assert len(manifest["artifacts"]) == len(aot.artifact_list())
+    for e in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(root, e["file"])), e["name"]

@@ -1,0 +1,192 @@
+"""L1 correctness: every Pallas kernel == ref.py oracle (the CORE signal),
+plus independent numpy-float64 checks and stencil invariants.
+
+Hypothesis sweeps shapes (including primes and minimal grids) and value
+regimes; each Pallas call rebuilds the row-block schedule for that shape,
+so the block/halo indexing is exercised across block sizes 1..64.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import common, ref
+from compile import model
+
+KERNELS_2D = ["laplace2d", "diffusion2d", "jacobi9pt"]
+KERNELS_3D = ["laplace3d", "diffusion3d"]
+ALL = KERNELS_2D + KERNELS_3D
+
+# shapes >= 3 per axis so an interior exists; include primes (block=1 path)
+DIM_2D = st.tuples(st.integers(3, 97), st.integers(3, 33))
+DIM_3D = st.tuples(st.integers(3, 17), st.integers(3, 13), st.integers(3, 11))
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (scale * rng.standard_normal(shape)).astype(np.float32)
+
+
+def _run_pallas(name, x):
+    spec = common.get(name)
+    f = common.pallas_step(spec, x.shape)
+    return np.asarray(f(jnp.asarray(x)))
+
+
+# ---------------------------------------------------------------------------
+# Pallas vs ref oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", KERNELS_2D)
+@settings(max_examples=25, deadline=None)
+@given(shape=DIM_2D, seed=st.integers(0, 2**32 - 1))
+def test_pallas_matches_ref_2d(name, shape, seed):
+    x = _rand(shape, seed)
+    got = _run_pallas(name, x)
+    want = np.asarray(ref.step(name, jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", KERNELS_3D)
+@settings(max_examples=15, deadline=None)
+@given(shape=DIM_3D, seed=st.integers(0, 2**32 - 1))
+def test_pallas_matches_ref_3d(name, shape, seed):
+    x = _rand(shape, seed)
+    got = _run_pallas(name, x)
+    want = np.asarray(ref.step(name, jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ALL)
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1),
+       scale=st.sampled_from([1e-3, 1.0, 1e3]))
+def test_pallas_matches_ref_value_regimes(name, seed, scale):
+    shape = model.SMALL[name]
+    x = _rand(shape, seed, scale)
+    got = _run_pallas(name, x)
+    want = np.asarray(ref.step(name, jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6 * scale)
+
+
+# ---------------------------------------------------------------------------
+# Independent numpy-float64 oracles (catches a shared jnp mistake)
+# ---------------------------------------------------------------------------
+
+def _np64_step(name, x):
+    x = x.astype(np.float64)
+    out = x.copy()
+    if name == "laplace2d":
+        out[1:-1, 1:-1] = 0.25 * (
+            x[1:-1, :-2] + x[:-2, 1:-1] + x[2:, 1:-1] + x[1:-1, 2:]
+        )
+    elif name == "diffusion2d":
+        c = common.DIFFUSION2D_C
+        out[1:-1, 1:-1] = (
+            c[0] * x[1:-1, :-2] + c[1] * x[:-2, 1:-1] + c[2] * x[1:-1, 1:-1]
+            + c[3] * x[2:, 1:-1] + c[4] * x[1:-1, 2:]
+        )
+    elif name == "jacobi9pt":
+        c = common.JACOBI9PT_C
+        acc = np.zeros((x.shape[0] - 2, x.shape[1] - 2))
+        k = 0
+        for di in (-1, 0, 1):
+            for dj in (-1, 0, 1):
+                acc += c[k] * x[1 + di:x.shape[0] - 1 + di,
+                                1 + dj:x.shape[1] - 1 + dj]
+                k += 1
+        out[1:-1, 1:-1] = acc
+    elif name == "laplace3d":
+        s = slice(1, -1)
+        out[s, s, s] = (1.0 / 6.0) * (
+            x[:-2, s, s] + x[2:, s, s] + x[s, :-2, s]
+            + x[s, 2:, s] + x[s, s, :-2] + x[s, s, 2:]
+        )
+    elif name == "diffusion3d":
+        c = common.DIFFUSION3D_C
+        s = slice(1, -1)
+        out[s, s, s] = (
+            c[0] * x[s, :-2, s] + c[1] * x[:-2, s, s] + c[2] * x[s, s, :-2]
+            + c[3] * x[s, s, s] + c[4] * x[2:, s, s] + c[5] * x[s, 2:, s]
+        )
+    else:
+        raise KeyError(name)
+    return out
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_pallas_matches_numpy_float64(name):
+    x = _rand(model.SMALL[name], seed=7)
+    got = _run_pallas(name, x)
+    want = _np64_step(name, x)
+    # fp32 kernel vs fp64 oracle: tolerance is fp32 rounding of ~17 terms
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Stencil invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL)
+def test_boundary_cells_copy_through(name):
+    x = _rand(model.SMALL[name], seed=11)
+    got = _run_pallas(name, x)
+    if x.ndim == 2:
+        for sl in (np.s_[0, :], np.s_[-1, :], np.s_[:, 0], np.s_[:, -1]):
+            np.testing.assert_array_equal(got[sl], x[sl])
+    else:
+        for ax in range(3):
+            for edge in (0, -1):
+                sl = [slice(None)] * 3
+                sl[ax] = edge
+                np.testing.assert_array_equal(got[tuple(sl)], x[tuple(sl)])
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_constant_grid_is_fixed_point(name):
+    # All coefficient sets sum to 1 (laplace: 4*0.25, 6*(1/6)), except
+    # diffusion3d whose printed Table-I formula sums to 1 as configured.
+    x = np.full(model.SMALL[name], 3.25, np.float32)
+    got = _run_pallas(name, x)
+    np.testing.assert_allclose(got, x, rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_linearity(name):
+    # Every Table-I kernel is a linear operator: f(ax+by) = a f(x) + b f(y)
+    shape = model.SMALL[name]
+    x, y = _rand(shape, 1), _rand(shape, 2)
+    a, b = np.float32(0.5), np.float32(-2.0)
+    lhs = _run_pallas(name, a * x + b * y)
+    rhs = a * _run_pallas(name, x) + b * _run_pallas(name, y)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_locality_radius_one(name):
+    # Perturbing one interior cell changes only the radius-1 neighbourhood.
+    shape = model.SMALL[name]
+    x = _rand(shape, 3)
+    centre = tuple(d // 2 for d in shape)
+    x2 = x.copy()
+    x2[centre] += 1.0
+    d = np.abs(_run_pallas(name, x2) - _run_pallas(name, x))
+    changed = np.argwhere(d > 0)
+    assert len(changed) > 0
+    for idx in changed:
+        assert max(abs(int(i) - int(c)) for i, c in zip(idx, centre)) <= 1
+
+
+def test_flops_table_matches_registry():
+    for name in common.names():
+        assert common.get(name).flops_per_cell == common.FLOPS_PER_CELL[name]
+
+
+def test_pick_block():
+    assert common.pick_block(4096) == 64
+    assert common.pick_block(97) == 1          # prime
+    assert common.pick_block(48) == 48
+    assert common.pick_block(130, cap=64) == 26
+    with pytest.raises(ValueError):
+        common.pick_block(0)

@@ -1,0 +1,67 @@
+"""L2 correctness: chained/fused execution == iterated oracle, preset sanity."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import common, ref
+
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("name", sorted(model.TABLE_II))
+@settings(max_examples=8, deadline=None)
+@given(k=st.integers(1, 6), seed=st.integers(0, 2**32 - 1))
+def test_chain_equals_iterated_ref(name, k, seed):
+    shape = model.SMALL[name]
+    x = _rand(shape, seed)
+    chain = model.chain_fn(name, shape, k)
+    got = np.asarray(chain(jnp.asarray(x))[0])
+    want = np.asarray(ref.iterate(name, jnp.asarray(x), k))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", sorted(model.TABLE_II))
+def test_step_equals_chain1(name):
+    shape = model.SMALL[name]
+    x = jnp.asarray(_rand(shape, 1))
+    s = np.asarray(model.step_fn(name, shape)(x)[0])
+    c = np.asarray(model.chain_fn(name, shape, 1)(x)[0])
+    np.testing.assert_array_equal(s, c)
+
+
+def test_jitted_step_cache():
+    f1 = model.jitted_step("laplace2d", (8, 8))
+    f2 = model.jitted_step("laplace2d", (8, 8))
+    assert f1 is f2
+    x = jnp.ones((8, 8), jnp.float32)
+    np.testing.assert_allclose(np.asarray(f1(x)[0]), np.ones((8, 8)))
+
+
+def test_chain_rejects_bad_k():
+    with pytest.raises(ValueError):
+        model.chain_fn("laplace2d", (8, 8), 0)
+
+
+def test_table_ii_presets():
+    # Mirrors the paper's Table II; the Rust side hardcodes the same values
+    # (stencil::workload) and the figures depend on them.
+    assert model.TABLE_II["laplace2d"] == ((4096, 512), 240, 4)
+    assert model.TABLE_II["laplace3d"] == ((512, 64, 64), 240, 2)
+    assert model.TABLE_II["diffusion2d"] == ((4096, 512), 240, 1)
+    assert model.TABLE_II["diffusion3d"] == ((256, 32, 32), 240, 1)
+    assert model.TABLE_II["jacobi9pt"] == ((1024, 128), 240, 1)
+    for name, (shape, iters, ips) in model.TABLE_II.items():
+        assert iters == 240
+        assert common.get(name).ndim == len(shape)
+        assert 1 <= ips <= 4
+
+
+def test_small_shapes_have_interior():
+    for name, shape in model.SMALL.items():
+        assert all(d >= 3 for d in shape)
+        assert common.get(name).ndim == len(shape)

@@ -1,0 +1,26 @@
+//! Bench: regenerate Figure 6 (speedup vs #FPGAs, 5 kernels) and time the
+//! harness itself.  `cargo bench --bench fig6_speedup`.
+
+use omp_fpga::figures::fig6;
+use omp_fpga::util::bench;
+
+fn main() {
+    let fig = fig6::generate().expect("fig6");
+    fig.print();
+    let _ = fig.write_csv("results").map(|p| println!("-> {p}"));
+
+    // expected-shape summary (the paper's headline claim)
+    for s in &fig.series {
+        let s6 = s.points.last().unwrap().1;
+        println!(
+            "  {:<18} speedup@6 = {s6:.2} ({:.0}% of linear)",
+            s.label,
+            100.0 * s6 / 6.0
+        );
+        assert!(s6 > 6.0 * 0.85, "{} not close to linear", s.label);
+    }
+
+    bench::time("fig6::generate (30 timing-mode runs)", 1, 5, || {
+        fig6::generate().unwrap()
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Figure 7 (GFLOPS vs #FPGAs, 5 kernels).
+
+use omp_fpga::figures::fig7;
+use omp_fpga::util::bench;
+
+fn main() {
+    let fig = fig7::generate().expect("fig7");
+    fig.print();
+    let _ = fig.write_csv("results").map(|p| println!("-> {p}"));
+
+    // paper ordering at 6 FPGAs
+    let at6: Vec<(String, f64)> = fig
+        .series
+        .iter()
+        .map(|s| (s.label.clone(), s.points.last().unwrap().1))
+        .collect();
+    let mut sorted = at6.clone();
+    sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("ordering at 6 FPGAs:");
+    for (l, g) in &sorted {
+        println!("  {l:<18} {g:.2} GFLOPS");
+    }
+    assert_eq!(sorted[0].0, "Laplace 2D");
+    assert_eq!(sorted[1].0, "Laplace 3D");
+    assert_eq!(sorted.last().unwrap().0, "Jacobi 9-pt. 2-D");
+
+    bench::time("fig7::generate", 1, 5, || fig7::generate().unwrap());
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Figure 8 (Laplace-2D GFLOPS vs iterations, 1-4 IPs).
+
+use omp_fpga::figures::fig8;
+use omp_fpga::util::bench;
+
+fn main() {
+    let fig = fig8::generate().expect("fig8");
+    fig.print();
+    let _ = fig.write_csv("results").map(|p| println!("-> {p}"));
+
+    let one = &fig.series[0].points;
+    let four = &fig.series[3].points;
+    println!(
+        "1-IP flatness: {:.3}; 4-IP rise: {:.2}x; 4-IP/1-IP plateau: {:.2}x",
+        one.iter().map(|p| p.1).fold(0.0, f64::max)
+            / one.iter().map(|p| p.1).fold(f64::MAX, f64::min),
+        four.last().unwrap().1 / four[0].1,
+        four.last().unwrap().1 / one.last().unwrap().1
+    );
+
+    bench::time("fig8::generate", 1, 5, || fig8::generate().unwrap());
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Figure 9 (Laplace-2D GFLOPS vs #IPs, iteration lines).
+
+use omp_fpga::figures::fig9;
+use omp_fpga::util::bench;
+
+fn main() {
+    let fig = fig9::generate().expect("fig9");
+    fig.print();
+    let _ = fig.write_csv("results").map(|p| println!("-> {p}"));
+
+    let lo = &fig.series[0].points;
+    let hi = &fig.series[3].points;
+    println!(
+        "line gap at 1 IP: {:.3} GFLOPS; at 4 IPs: {:.3} GFLOPS (grows: {})",
+        hi[0].1 - lo[0].1,
+        hi[3].1 - lo[3].1,
+        hi[3].1 - lo[3].1 > hi[0].1 - lo[0].1
+    );
+
+    bench::time("fig9::generate", 1, 5, || fig9::generate().unwrap());
+}

@@ -1,0 +1,143 @@
+//! Micro-benchmarks of the coordinator hot paths (EXPERIMENTS.md §Perf):
+//! task-graph construction, mapper, MAC framing, switch forwarding, DES
+//! pass evaluation, golden kernels, and PJRT step execution.
+
+use omp_fpga::hw::axis::{ip_port, AxisSwitch, Burst, PORT_DMA};
+use omp_fpga::hw::mac::{cells_to_bytes, MacAddr, MacFrame, ETHERTYPE_STENCIL};
+use omp_fpga::hw::mfh::{MacFrameHandler, StreamConfig};
+use omp_fpga::omp::device::DeviceId;
+use omp_fpga::omp::task::{DepVar, MapDir, Task, TaskId};
+use omp_fpga::omp::TaskGraph;
+use omp_fpga::plugin::mapper;
+use omp_fpga::sim::{Pipeline, Server};
+use omp_fpga::stencil::{Grid, Kernel};
+use omp_fpga::util::bench;
+
+fn chain_task(i: usize) -> Task {
+    Task {
+        id: TaskId(0),
+        base_name: "f".into(),
+        fn_name: "hw_f".into(),
+        device: DeviceId(1),
+        maps: vec![(MapDir::ToFrom, "V".into())],
+        deps_in: vec![DepVar(i)],
+        deps_out: vec![DepVar(i + 1)],
+        nowait: true,
+    }
+}
+
+fn main() {
+    // -- task graph construction (240-task pipeline, the paper's size) ---
+    let m = bench::time("task-graph build (240-task chain)", 10, 200, || {
+        let mut g = TaskGraph::new();
+        for i in 0..240 {
+            g.add(chain_task(i));
+        }
+        g.topo_order().unwrap().len()
+    });
+    println!(
+        "    -> {:.0} tasks/s",
+        bench::per_second(&m, 240.0)
+    );
+
+    // -- mapper ----------------------------------------------------------
+    let boards = vec![vec![Kernel::Laplace2d; 4]; 6];
+    let kernels = vec![Kernel::Laplace2d; 240];
+    bench::time("mapper::assign (240 tasks, 24 IPs)", 10, 200, || {
+        mapper::assign(&boards, &kernels).unwrap().npasses()
+    });
+
+    // -- MAC framing throughput ------------------------------------------
+    let cells: Vec<f32> = (0..512 * 1024).map(|i| i as f32).collect(); // 2 MiB
+    let mut mfh = MacFrameHandler::new();
+    mfh.configure_stream(
+        0,
+        StreamConfig {
+            dst: MacAddr::for_port(1, 1),
+            src: MacAddr::for_port(0, 0),
+            ethertype: ETHERTYPE_STENCIL,
+        },
+    );
+    let m = bench::time("MFH pack (2 MiB burst)", 3, 30, || {
+        mfh.reset_tx(0);
+        let burst = Burst { cells: cells.clone(), stream_id: 0, last: true };
+        mfh.pack(&burst).unwrap().len()
+    });
+    println!(
+        "    -> {:.2} GB/s framed",
+        bench::per_second(&m, (cells.len() * 4) as f64) / 1e9
+    );
+
+    // -- frame wire roundtrip (pack+CRC+unpack) ---------------------------
+    let payload = cells_to_bytes(&cells[..2048]);
+    let frame = MacFrame {
+        dst: MacAddr::for_port(1, 1),
+        src: MacAddr::for_port(0, 0),
+        ethertype: ETHERTYPE_STENCIL,
+        stream_id: 0,
+        seq: 0,
+        payload,
+    };
+    let m = bench::time("MAC frame wire roundtrip (8 KiB)", 10, 500, || {
+        MacFrame::unpack(&frame.pack()).unwrap().payload.len()
+    });
+    println!(
+        "    -> {:.2} GB/s on the wire",
+        bench::per_second(&m, frame.wire_bytes() as f64) / 1e9
+    );
+
+    // -- switch forwarding -------------------------------------------------
+    let mut sw = AxisSwitch::new(7);
+    sw.set_route(PORT_DMA, Some(ip_port(0))).unwrap();
+    let burst = Burst { cells: vec![0.0; 4096], stream_id: 0, last: true };
+    bench::time("A-SWT forward (4096-cell burst)", 100, 1000, || {
+        sw.forward(PORT_DMA, &burst).unwrap()
+    });
+
+    // -- DES pass (paper-size laplace2d, 6 boards) -------------------------
+    bench::time("DES pass (512 chunks x 38 hops)", 5, 50, || {
+        let hops: Vec<Server> = (0..38)
+            .map(|i| Server::new("h", if i % 7 == 0 { 10e9 } else { 51.2e9 }, 1e-7))
+            .collect();
+        let mut p = Pipeline::new(hops);
+        p.stream(0.0, 8.39e6, 16384.0).makespan_s
+    });
+
+    // -- golden kernel (the functional hot loop) ---------------------------
+    let g = Grid::random(&[4096, 512], 1).unwrap();
+    let mut out = g.clone();
+    let m = bench::time("golden laplace2d apply_into (4096x512)", 2, 20, || {
+        Kernel::Laplace2d.apply_into(&g, &mut out).unwrap()
+    });
+    println!(
+        "    -> {:.2} Gcell/s",
+        bench::per_second(&m, g.cells() as f64) / 1e9
+    );
+
+    // -- PJRT step (if artifacts are present) ------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut rt =
+            omp_fpga::runtime::PjrtRuntime::from_dir("artifacts").unwrap();
+        let exe = rt.load_step(Kernel::Laplace2d, &[4096, 512]).unwrap();
+        let m = bench::time("PJRT step laplace2d (4096x512)", 2, 20, || {
+            exe.run(&g).unwrap().cells()
+        });
+        println!(
+            "    -> {:.2} Gcell/s through PJRT",
+            bench::per_second(&m, g.cells() as f64) / 1e9
+        );
+        let chain = rt
+            .load_chain(Kernel::Laplace2d, &[4096, 512], 4)
+            .unwrap()
+            .expect("chain4 artifact");
+        let m = bench::time("PJRT chain4 laplace2d (4096x512)", 2, 20, || {
+            chain.run(&g).unwrap().cells()
+        });
+        println!(
+            "    -> {:.2} Gcell/s (4 fused iterations)",
+            bench::per_second(&m, 4.0 * g.cells() as f64) / 1e9
+        );
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+    }
+}

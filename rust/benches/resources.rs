@@ -1,0 +1,57 @@
+//! Bench: Table III + Figure 10 via the synthesis estimator, with the
+//! paper's numbers printed side by side (measured-vs-paper deltas).
+
+use omp_fpga::figures::tables;
+use omp_fpga::hw::resources::{ip_resources, Resources};
+use omp_fpga::stencil::Kernel;
+use omp_fpga::util::bench;
+
+/// Paper Table III (kernel, shape, LUTs, BRAM, DSP).
+const PAPER: [(&str, &[usize], usize, usize, usize); 5] = [
+    ("laplace2d", &[4096, 512], 12_138, 8, 16),
+    ("diffusion2d", &[4096, 512], 25_024, 8, 80),
+    ("jacobi9pt", &[1024, 128], 45_733, 8, 144),
+    ("laplace3d", &[512, 64, 64], 21_790, 65, 17),
+    ("diffusion3d", &[256, 32, 32], 27_615, 23, 97),
+];
+
+fn main() {
+    for block in [tables::table3(), tables::fig10()] {
+        for line in block {
+            println!("{line}");
+        }
+        println!();
+    }
+
+    println!("== measured vs paper (Table III) ==");
+    println!(
+        "{:<14} {:>9} {:>9} {:>7} | {:>5} {:>5} | {:>5} {:>5}",
+        "kernel", "LUT est", "LUT ppr", "Δ%", "BRAM", "ppr", "DSP", "ppr"
+    );
+    for (name, shape, l, b, d) in PAPER {
+        let k = Kernel::from_name(name).unwrap();
+        let r: Resources = ip_resources(k, shape);
+        println!(
+            "{:<14} {:>9} {:>9} {:>6.1}% | {:>5} {:>5} | {:>5} {:>5}",
+            name,
+            r.luts,
+            l,
+            100.0 * (r.luts as f64 - l as f64) / l as f64,
+            r.bram36,
+            b,
+            r.dsp,
+            d
+        );
+        assert_eq!(r.bram36, b, "{name} BRAM");
+        assert_eq!(r.dsp, d, "{name} DSP");
+    }
+
+    bench::time("resource estimation (5 kernels)", 10, 100, || {
+        PAPER
+            .iter()
+            .map(|(n, s, ..)| {
+                ip_resources(Kernel::from_name(n).unwrap(), s).luts
+            })
+            .sum::<usize>()
+    });
+}

@@ -1,0 +1,294 @@
+//! `conf.json` — cluster description, parsed with `util::json`.
+//!
+//! ```json
+//! {
+//!   "bitstream_dir": "artifacts",
+//!   "fpgas": [
+//!     {"ips": ["laplace2d", "laplace2d"], "mac_base": "auto"},
+//!     {"ips": ["laplace2d", "laplace2d"]}
+//!   ],
+//!   "topology": "ring",
+//!   "host": {"pcie": "gen1", "pass_overhead_us": 1500.0},
+//!   "timing": {"net_gbps": 10.0, "ip_clock_mhz": 200.0}
+//! }
+//! ```
+//!
+//! `bitstream_dir` points at the AOT artifact directory (our "bitstreams"
+//! are HLO artifacts — the substitution table in DESIGN.md §2).
+
+use anyhow::{bail, Context, Result};
+
+use super::timing::TimingConfig;
+use crate::hw::pcie::PcieGen;
+use crate::stencil::Kernel;
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IpConfig {
+    pub kernel: Kernel,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct FpgaConfig {
+    pub ips: Vec<IpConfig>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub bitstream_dir: String,
+    pub fpgas: Vec<FpgaConfig>,
+    pub timing: TimingConfig,
+}
+
+impl ClusterConfig {
+    /// Homogeneous Table-II style cluster.
+    pub fn homogeneous(
+        nfpgas: usize,
+        ips_per_fpga: usize,
+        kernel: Kernel,
+    ) -> ClusterConfig {
+        ClusterConfig {
+            bitstream_dir: "artifacts".to_string(),
+            fpgas: (0..nfpgas)
+                .map(|_| FpgaConfig {
+                    ips: vec![IpConfig { kernel }; ips_per_fpga],
+                })
+                .collect(),
+            timing: TimingConfig::default(),
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<ClusterConfig> {
+        let v = Value::parse(text).context("conf.json parse error")?;
+        let bitstream_dir = v
+            .get("bitstream_dir")
+            .as_str()
+            .unwrap_or("artifacts")
+            .to_string();
+
+        let fpgas_v = v
+            .get("fpgas")
+            .as_arr()
+            .context("conf.json: missing 'fpgas' array")?;
+        if fpgas_v.is_empty() {
+            bail!("conf.json: 'fpgas' must not be empty");
+        }
+        let mut fpgas = Vec::new();
+        for (i, f) in fpgas_v.iter().enumerate() {
+            let ips_v = f
+                .get("ips")
+                .as_arr()
+                .with_context(|| format!("fpga[{i}]: missing 'ips'"))?;
+            if ips_v.is_empty() {
+                bail!("fpga[{i}]: needs at least one IP");
+            }
+            let mut ips = Vec::new();
+            for ip in ips_v {
+                let name = ip
+                    .as_str()
+                    .with_context(|| format!("fpga[{i}]: ip must be a kernel name"))?;
+                ips.push(IpConfig { kernel: Kernel::from_name(name)? });
+            }
+            fpgas.push(FpgaConfig { ips });
+        }
+
+        if let Some(t) = v.get("topology").as_str() {
+            if t != "ring" {
+                bail!("only 'ring' topology is supported, got '{t}'");
+            }
+        }
+
+        let mut timing = TimingConfig::default();
+        let host = v.get("host");
+        if let Some(p) = host.get("pcie").as_str() {
+            timing.pcie = PcieGen::from_name(p)?;
+        }
+        if let Some(us) = host.get("pass_overhead_us").as_f64() {
+            timing.pass_overhead_s = us * 1e-6;
+        }
+        if let Some(us) = host.get("dma_setup_us").as_f64() {
+            timing.dma_setup_s = us * 1e-6;
+        }
+        let tv = v.get("timing");
+        if let Some(g) = tv.get("net_gbps").as_f64() {
+            timing.net_bps = g * 1e9;
+        }
+        if let Some(g) = tv.get("vfifo_gbps").as_f64() {
+            timing.vfifo_bps = g * 1e9;
+        }
+        if let Some(m) = tv.get("ip_clock_mhz").as_f64() {
+            timing.ip_clock_hz = m * 1e6;
+        }
+        if let Some(c) = tv.get("chunk_cells").as_usize() {
+            if c == 0 {
+                bail!("timing.chunk_cells must be positive");
+            }
+            timing.chunk_cells = c;
+        }
+
+        let cfg = ClusterConfig { bitstream_dir, fpgas, timing };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<ClusterConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        ClusterConfig::parse(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.fpgas.is_empty() {
+            bail!("cluster has no FPGAs");
+        }
+        for (i, f) in self.fpgas.iter().enumerate() {
+            // Area check via the synthesis estimator: every board's IP
+            // complement must fit the free region (paper §V-C).
+            let mut used = crate::hw::resources::Resources::default();
+            for ip in &f.ips {
+                let w = crate::stencil::workload::paper_workload(ip.kernel);
+                used = used
+                    .add(&crate::hw::resources::ip_resources(ip.kernel, &w.shape));
+            }
+            let free = crate::hw::resources::free_region();
+            if used.luts > free.luts || used.bram36 > free.bram36
+                || used.dsp > free.dsp
+            {
+                bail!(
+                    "fpga[{i}]: IP complement exceeds the free region \
+                     ({used:?} vs {free:?})"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn nfpgas(&self) -> usize {
+        self.fpgas.len()
+    }
+
+    pub fn total_ips(&self) -> usize {
+        self.fpgas.iter().map(|f| f.ips.len()).sum()
+    }
+
+    /// Emit the conf.json text for this configuration.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{arr, num, obj, s};
+        let fpgas = self
+            .fpgas
+            .iter()
+            .map(|f| {
+                obj(vec![(
+                    "ips",
+                    arr(f.ips.iter().map(|ip| s(ip.kernel.name())).collect()),
+                )])
+            })
+            .collect();
+        obj(vec![
+            ("bitstream_dir", s(&self.bitstream_dir)),
+            ("fpgas", arr(fpgas)),
+            ("topology", s("ring")),
+            (
+                "host",
+                obj(vec![
+                    ("pcie", s(self.timing.pcie.name())),
+                    (
+                        "pass_overhead_us",
+                        num(self.timing.pass_overhead_s * 1e6),
+                    ),
+                    ("dma_setup_us", num(self.timing.dma_setup_s * 1e6)),
+                ]),
+            ),
+            (
+                "timing",
+                obj(vec![
+                    ("net_gbps", num(self.timing.net_bps / 1e9)),
+                    ("vfifo_gbps", num(self.timing.vfifo_bps / 1e9)),
+                    ("ip_clock_mhz", num(self.timing.ip_clock_hz / 1e6)),
+                    ("chunk_cells", num(self.timing.chunk_cells as f64)),
+                ]),
+            ),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let c = ClusterConfig::parse(
+            r#"{"fpgas": [{"ips": ["laplace2d", "laplace2d"]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.nfpgas(), 1);
+        assert_eq!(c.total_ips(), 2);
+        assert_eq!(c.fpgas[0].ips[0].kernel, Kernel::Laplace2d);
+        assert_eq!(c.timing, TimingConfig::default());
+    }
+
+    #[test]
+    fn parse_full_and_roundtrip() {
+        let c = ClusterConfig::homogeneous(6, 4, Kernel::Laplace2d);
+        let text = c.to_json();
+        let d = ClusterConfig::parse(&text).unwrap();
+        assert_eq!(c.fpgas, d.fpgas);
+        assert_eq!(c.bitstream_dir, d.bitstream_dir);
+        // timing fields roundtrip through us-scaled JSON: approx equality
+        let rel = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs());
+        assert!(rel(c.timing.pass_overhead_s, d.timing.pass_overhead_s));
+        assert!(rel(c.timing.dma_setup_s, d.timing.dma_setup_s));
+        assert!(rel(c.timing.net_bps, d.timing.net_bps));
+        assert_eq!(c.timing.chunk_cells, d.timing.chunk_cells);
+        assert_eq!(c.timing.pcie, d.timing.pcie);
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let c = ClusterConfig::parse(
+            r#"{
+              "fpgas": [{"ips": ["jacobi9pt"]}],
+              "host": {"pcie": "gen3", "pass_overhead_us": 50.0},
+              "timing": {"net_gbps": 40.0, "ip_clock_mhz": 300.0,
+                         "chunk_cells": 1024}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.timing.pcie, PcieGen::Gen3);
+        assert!((c.timing.pass_overhead_s - 50e-6).abs() < 1e-12);
+        assert_eq!(c.timing.net_bps, 40e9);
+        assert_eq!(c.timing.ip_clock_hz, 300e6);
+        assert_eq!(c.timing.chunk_cells, 1024);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(ClusterConfig::parse("{}").is_err());
+        assert!(ClusterConfig::parse(r#"{"fpgas": []}"#).is_err());
+        assert!(ClusterConfig::parse(r#"{"fpgas": [{"ips": []}]}"#).is_err());
+        assert!(ClusterConfig::parse(
+            r#"{"fpgas": [{"ips": ["nope"]}]}"#
+        )
+        .is_err());
+        assert!(ClusterConfig::parse(
+            r#"{"fpgas": [{"ips": ["laplace2d"]}], "topology": "mesh"}"#
+        )
+        .is_err());
+        assert!(ClusterConfig::parse(
+            r#"{"fpgas": [{"ips": ["laplace2d"]}],
+                "timing": {"chunk_cells": 0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn area_validation_rejects_overfull_board() {
+        // 64 Jacobi IPs cannot fit one board
+        let ips: Vec<String> =
+            (0..64).map(|_| "\"jacobi9pt\"".to_string()).collect();
+        let text = format!(r#"{{"fpgas": [{{"ips": [{}]}}]}}"#, ips.join(","));
+        assert!(ClusterConfig::parse(&text).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Cluster configuration: the `conf.json` the paper's plugin consumes
+//! ("the cluster configuration is passed through a conf.json file, which
+//! contains: (a) the location of the bitstream files, (b) the number of
+//! FPGAs, (c) the IPs available in each FPGA, and (d) the addresses of
+//! IPs and FPGAs") plus the timing-model parameters.
+
+pub mod cluster;
+pub mod timing;
+
+pub use cluster::{ClusterConfig, FpgaConfig, IpConfig};
+pub use timing::TimingConfig;

@@ -1,0 +1,132 @@
+//! Timing-model parameters (DESIGN.md §5).  Defaults model the paper's
+//! testbed: VC709 boards, 10 Gb/s SFP ring, DDR3 VFIFO multiplexed over
+//! four channels, and the "archaic" PCIe gen1 / Xeon E5410 host the paper
+//! blames for its overheads.  All overridable via `conf.json`.
+
+use crate::hw::pcie::PcieGen;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingConfig {
+    /// IP fabric clock (stream side). 200 MHz for the 256-bit datapath.
+    pub ip_clock_hz: f64,
+    /// fp32 cells per IP clock cycle (256-bit AXI4-Stream = 8 lanes).
+    pub cells_per_cycle: usize,
+    /// XGEMAC/SFP channel rate.
+    pub net_bps: f64,
+    /// one-way fiber + MAC latency per hop.
+    pub net_latency_s: f64,
+    /// Effective per-stream VFIFO rate: the DDR3 interface is multiplexed
+    /// across the four network channels in the TRD, capping a single
+    /// stream at ~1/4 of the raw DDR3 bandwidth.
+    pub vfifo_bps: f64,
+    pub vfifo_latency_s: f64,
+    /// host PCIe generation (gen1 on the paper's machines).
+    pub pcie: PcieGen,
+    /// DMA descriptor setup + doorbell per transfer (archaic host).
+    pub dma_setup_s: f64,
+    /// Host-side per-pass orchestration overhead: descriptor rings,
+    /// interrupts and task bookkeeping on the Xeon E5410 over PCIe gen1.
+    /// Calibrated to 5 ms so Fig-7's kernel ordering (Laplace-2D >
+    /// Laplace-3D > Diffusion-2D > Diffusion-3D > Jacobi) reproduces; the
+    /// paper attributes exactly this overhead class to its "archaic"
+    /// infrastructure (§V).  See EXPERIMENTS.md §Calibration.
+    pub pass_overhead_s: f64,
+    /// One-time offload startup per target region: task-graph handoff,
+    /// device/bitstream checks and first DMA descriptor programming on
+    /// the archaic host.  Amortizes over iterations — the cause of
+    /// Fig-8's rise-to-plateau shape.
+    pub offload_startup_s: f64,
+    /// A-SWT cut-through latency per traversal.
+    pub switch_latency_s: f64,
+    /// chunk size of the store-and-forward timing recurrence, in cells.
+    pub chunk_cells: usize,
+}
+
+impl Default for TimingConfig {
+    fn default() -> Self {
+        TimingConfig {
+            ip_clock_hz: 200e6,
+            cells_per_cycle: 8,
+            net_bps: 10e9,
+            net_latency_s: 1e-6,
+            vfifo_bps: 10e9,
+            vfifo_latency_s: 0.5e-6,
+            pcie: PcieGen::Gen1,
+            dma_setup_s: 10e-6,
+            pass_overhead_s: 5e-3,
+            offload_startup_s: 20e-3,
+            switch_latency_s: 0.1e-6,
+            chunk_cells: 4096,
+        }
+    }
+}
+
+impl TimingConfig {
+    /// A modern-host variant (PCIe gen3, negligible pass overhead) used by
+    /// the ablation bench to show what the paper predicts for U250/Vitis.
+    pub fn modern_host() -> TimingConfig {
+        TimingConfig {
+            pcie: PcieGen::Gen3,
+            dma_setup_s: 1e-6,
+            pass_overhead_s: 50e-6,
+            offload_startup_s: 1e-3,
+            ..TimingConfig::default()
+        }
+    }
+
+    /// IP streaming rate in bits/s (8 cells x 32 bit x clock).
+    pub fn ip_bps(&self) -> f64 {
+        self.ip_clock_hz * self.cells_per_cycle as f64 * 32.0
+    }
+
+    pub fn chunk_bytes(&self) -> f64 {
+        (self.chunk_cells * 4) as f64
+    }
+
+    /// IP pipeline-fill latency for a grid shape (shift-register depth).
+    pub fn ip_fill_s(&self, shape: &[usize]) -> f64 {
+        let fill_cells = match shape.len() {
+            2 => 2 * shape[1] + 3,
+            _ => 2 * shape[1] * shape[2] + 2 * shape[2] + 3,
+        };
+        fill_cells as f64 / (self.ip_clock_hz * self.cells_per_cycle as f64)
+    }
+
+    pub fn pcie_bps(&self) -> f64 {
+        self.pcie.effective_bps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_model_the_paper() {
+        let t = TimingConfig::default();
+        assert_eq!(t.ip_bps(), 51.2e9); // 256 bit @ 200 MHz
+        assert_eq!(t.pcie, PcieGen::Gen1);
+        assert_eq!(t.chunk_bytes(), 16384.0);
+        // the stated design point: net and vfifo are the 10 Gb/s
+        // bottleneck, the IP fabric is not
+        assert!(t.ip_bps() > t.net_bps);
+        assert!(t.ip_bps() > t.vfifo_bps);
+    }
+
+    #[test]
+    fn fill_latency() {
+        let t = TimingConfig::default();
+        let s2 = t.ip_fill_s(&[4096, 512]);
+        assert!((s2 - 1027.0 / 1.6e9).abs() < 1e-12);
+        let s3 = t.ip_fill_s(&[512, 64, 64]);
+        assert!(s3 > s2); // plane fill dwarfs row fill
+    }
+
+    #[test]
+    fn modern_host_is_faster() {
+        let m = TimingConfig::modern_host();
+        let d = TimingConfig::default();
+        assert!(m.pcie_bps() > d.pcie_bps());
+        assert!(m.pass_overhead_s < d.pass_overhead_s);
+    }
+}

@@ -1,0 +1,65 @@
+//! Figure 6 — "Speedup scaling with the number of FPGAs": speedup vs a
+//! single FPGA for all five Table-II kernels, 1..=6 boards.
+
+use anyhow::Result;
+
+use super::{Figure, Series};
+use crate::exec::{run_stencil_app, RunSpec};
+use crate::plugin::ExecBackend;
+use crate::stencil::workload::paper_workloads;
+
+pub const MAX_FPGAS: usize = 6;
+
+pub fn generate() -> Result<Figure> {
+    let mut series = Vec::new();
+    for w in paper_workloads() {
+        let mut base = None;
+        let mut points = Vec::new();
+        for f in 1..=MAX_FPGAS {
+            let spec = RunSpec::new(w.clone(), f, ExecBackend::TimingOnly);
+            let res = run_stencil_app(&spec)?;
+            let b = *base.get_or_insert(res.virtual_time_s);
+            points.push((f, b / res.virtual_time_s));
+        }
+        series.push(Series { label: w.kernel.paper_name().to_string(), points });
+    }
+    Ok(Figure {
+        name: "fig6".into(),
+        title: "Speedup scaling with the number of FPGAs".into(),
+        x_label: "FPGAs".into(),
+        y_label: "speedup vs 1 FPGA".into(),
+        series,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_close_to_linear() {
+        let fig = generate().unwrap();
+        assert_eq!(fig.series.len(), 5);
+        for s in &fig.series {
+            assert_eq!(s.points.len(), MAX_FPGAS);
+            // speedup at 1 FPGA is 1.0 by construction
+            assert!((s.points[0].1 - 1.0).abs() < 1e-9);
+            // monotone non-decreasing
+            for w in s.points.windows(2) {
+                assert!(
+                    w[1].1 >= w[0].1 - 1e-9,
+                    "{}: speedup not monotone: {:?}",
+                    s.label,
+                    s.points
+                );
+            }
+            // the paper's headline: close to linear at 6 FPGAs
+            let s6 = s.points[5].1;
+            assert!(
+                s6 > 6.0 * 0.85 && s6 <= 6.0 + 1e-6,
+                "{}: speedup at 6 FPGAs = {s6}, not close to linear",
+                s.label
+            );
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Figure 7 — "GFLOPS scaling with the number of FPGAs", all five
+//! Table-II kernels, 1..=6 boards.
+
+use anyhow::Result;
+
+use super::{Figure, Series};
+use crate::exec::{run_stencil_app, RunSpec};
+use crate::plugin::ExecBackend;
+use crate::stencil::workload::paper_workloads;
+
+pub fn generate() -> Result<Figure> {
+    let mut series = Vec::new();
+    for w in paper_workloads() {
+        let mut points = Vec::new();
+        for f in 1..=super::fig6::MAX_FPGAS {
+            let spec = RunSpec::new(w.clone(), f, ExecBackend::TimingOnly);
+            let res = run_stencil_app(&spec)?;
+            points.push((f, res.gflops));
+        }
+        series.push(Series { label: w.kernel.paper_name().to_string(), points });
+    }
+    Ok(Figure {
+        name: "fig7".into(),
+        title: "GFLOPS scaling with the number of FPGAs".into(),
+        x_label: "FPGAs".into(),
+        y_label: "GFLOPS".into(),
+        series,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gflops_at(fig: &Figure, label: &str, f: usize) -> f64 {
+        fig.series
+            .iter()
+            .find(|s| s.label == label)
+            .unwrap_or_else(|| panic!("missing series {label}"))
+            .points
+            .iter()
+            .find(|(x, _)| *x == f)
+            .unwrap()
+            .1
+    }
+
+    #[test]
+    fn kernel_ordering_matches_paper() {
+        let fig = generate().unwrap();
+        // paper §V-A: Laplace-2D on top (4 IPs), Laplace-3D second (2
+        // IPs); diffusions above Jacobi (which comes last)
+        let at6 = |l: &str| gflops_at(&fig, l, 6);
+        assert!(at6("Laplace 2D") > at6("Laplace 3D"));
+        assert!(at6("Laplace 3D") > at6("Diffusion 2D"));
+        assert!(at6("Diffusion 2D") > at6("Diffusion 3D"));
+        assert!(at6("Diffusion 3D") > at6("Jacobi 9-pt. 2-D"));
+    }
+
+    #[test]
+    fn gflops_grow_with_fpgas() {
+        let fig = generate().unwrap();
+        for s in &fig.series {
+            for w in s.points.windows(2) {
+                assert!(w[1].1 > w[0].1, "{}: {:?}", s.label, s.points);
+            }
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Figure 8 — "Laplace-2D scaling with the number of iterations": GFLOPS
+//! vs iteration count on one FPGA, one line per IP count (1..=4).
+
+use anyhow::Result;
+
+use super::{Figure, Series};
+use crate::exec::{run_stencil_app, RunSpec};
+use crate::plugin::ExecBackend;
+use crate::stencil::workload::paper_workload;
+use crate::stencil::Kernel;
+
+pub const ITERATIONS: [usize; 8] = [30, 60, 90, 120, 180, 240, 360, 480];
+
+pub fn generate() -> Result<Figure> {
+    let base = paper_workload(Kernel::Laplace2d);
+    let mut series = Vec::new();
+    for ips in 1..=4usize {
+        let mut points = Vec::new();
+        for iters in ITERATIONS {
+            let w = base.with_ips(ips).with_iterations(iters);
+            let spec = RunSpec::new(w, 1, ExecBackend::TimingOnly);
+            let res = run_stencil_app(&spec)?;
+            points.push((iters, res.gflops));
+        }
+        series.push(Series { label: format!("{ips} IP"), points });
+    }
+    Ok(Figure {
+        name: "fig8".into(),
+        title: "Laplace-2D scaling with the number of iterations (1 FPGA)"
+            .into(),
+        x_label: "iterations".into(),
+        y_label: "GFLOPS".into(),
+        series,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_ip_flat_four_ips_plateau() {
+        let fig = generate().unwrap();
+        let one = &fig.series[0].points;
+        let four = &fig.series[3].points;
+        // 1 IP: practically constant GFLOPS across iteration counts
+        let (min1, max1) = one.iter().fold((f64::MAX, 0.0f64), |(lo, hi), &(_, y)| {
+            (lo.min(y), hi.max(y))
+        });
+        assert!(max1 / min1 < 1.10, "1-IP series not flat: {one:?}");
+        // 4 IPs: rises towards a plateau ~4x the 1-IP level
+        let first4 = four[0].1;
+        let last4 = four.last().unwrap().1;
+        assert!(last4 > first4 * 1.2, "4-IP series does not rise: {four:?}");
+        let ratio = last4 / one.last().unwrap().1;
+        assert!(
+            ratio > 3.2 && ratio <= 4.2,
+            "4-IP plateau should approach 4x the 1-IP level, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn more_ips_never_slower() {
+        let fig = generate().unwrap();
+        for i in 1..fig.series.len() {
+            for (p_prev, p_cur) in
+                fig.series[i - 1].points.iter().zip(&fig.series[i].points)
+            {
+                assert!(p_cur.1 >= p_prev.1 * 0.999);
+            }
+        }
+    }
+}

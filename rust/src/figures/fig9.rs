@@ -1,0 +1,73 @@
+//! Figure 9 — "Laplace-2D scaling with the number of IPs": GFLOPS vs IP
+//! count on one FPGA, one line per iteration count.
+
+use anyhow::Result;
+
+use super::{Figure, Series};
+use crate::exec::{run_stencil_app, RunSpec};
+use crate::plugin::ExecBackend;
+use crate::stencil::workload::paper_workload;
+use crate::stencil::Kernel;
+
+pub const ITER_LINES: [usize; 4] = [60, 120, 180, 240];
+
+pub fn generate() -> Result<Figure> {
+    let base = paper_workload(Kernel::Laplace2d);
+    let mut series = Vec::new();
+    for iters in ITER_LINES {
+        let mut points = Vec::new();
+        for ips in 1..=4usize {
+            let w = base.with_ips(ips).with_iterations(iters);
+            let spec = RunSpec::new(w, 1, ExecBackend::TimingOnly);
+            let res = run_stencil_app(&spec)?;
+            points.push((ips, res.gflops));
+        }
+        series.push(Series { label: format!("{iters} iterations"), points });
+    }
+    Ok(Figure {
+        name: "fig9".into(),
+        title: "Laplace-2D scaling with the number of IPs (1 FPGA)".into(),
+        x_label: "IPs".into(),
+        y_label: "GFLOPS".into(),
+        series,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_spacing_grows_with_ips() {
+        // paper: "the distances between the lines grow larger as the
+        // number of IPs increase"
+        let fig = generate().unwrap();
+        let lo = &fig.series[0].points; // 60 iterations
+        let hi = &fig.series[3].points; // 240 iterations
+        let gap_at = |i: usize| hi[i].1 - lo[i].1;
+        assert!(
+            gap_at(3) > gap_at(0),
+            "gap at 4 IPs ({}) should exceed gap at 1 IP ({})",
+            gap_at(3),
+            gap_at(0)
+        );
+    }
+
+    #[test]
+    fn gflops_increase_with_ips() {
+        let fig = generate().unwrap();
+        for s in &fig.series {
+            for w in s.points.windows(2) {
+                assert!(w[1].1 >= w[0].1 * 0.999, "{}: {:?}", s.label, s.points);
+            }
+        }
+    }
+
+    #[test]
+    fn more_iterations_amortize_better() {
+        let fig = generate().unwrap();
+        // at 4 IPs, 240 iterations beats 60 iterations (ceil effects)
+        let at = |si: usize| fig.series[si].points[3].1;
+        assert!(at(3) >= at(0));
+    }
+}

@@ -1,0 +1,108 @@
+//! Figure/table regeneration harness — one module per experiment in the
+//! paper's §V (see DESIGN.md §4 for the experiment index).  Each function
+//! returns structured rows; `Series::print` renders the same rows the
+//! paper plots, and `write_csv` persists them for external plotting.
+
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod tables;
+
+use std::io::Write;
+
+use anyhow::{Context, Result};
+
+/// A labelled series over an integer x-axis (FPGAs, IPs or iterations).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(usize, f64)>,
+}
+
+/// One figure: several series over a shared axis.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub name: String,
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn print(&self) {
+        println!("== {}: {} ==", self.name, self.title);
+        print!("{:<22}", self.x_label);
+        if let Some(s) = self.series.first() {
+            for (x, _) in &s.points {
+                print!("{x:>9}");
+            }
+        }
+        println!();
+        for s in &self.series {
+            print!("{:<22}", s.label);
+            for (_, y) in &s.points {
+                print!("{y:>9.2}");
+            }
+            println!();
+        }
+        println!("({})", self.y_label);
+    }
+
+    pub fn write_csv(&self, dir: &str) -> Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.csv", self.name);
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("creating {path}"))?;
+        write!(f, "{}", self.x_label.replace(' ', "_"))?;
+        for s in &self.series {
+            write!(f, ",{}", s.label.replace(' ', "_"))?;
+        }
+        writeln!(f)?;
+        if let Some(first) = self.series.first() {
+            for (i, (x, _)) in first.points.iter().enumerate() {
+                write!(f, "{x}")?;
+                for s in &self.series {
+                    write!(f, ",{:.4}", s.points[i].1)?;
+                }
+                writeln!(f)?;
+            }
+        }
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig() -> Figure {
+        Figure {
+            name: "figX".into(),
+            title: "test".into(),
+            x_label: "n".into(),
+            y_label: "y".into(),
+            series: vec![
+                Series { label: "a".into(), points: vec![(1, 1.0), (2, 2.0)] },
+                Series { label: "b".into(), points: vec![(1, 3.0), (2, 4.0)] },
+            ],
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("ompfpga-figtest");
+        let path = fig().write_csv(dir.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "n,a,b");
+        assert_eq!(lines[1], "1,1.0000,3.0000");
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn print_does_not_panic() {
+        fig().print();
+    }
+}

@@ -1,0 +1,175 @@
+//! Tables I, II, III and Figure 10 — textual regeneration.
+
+use crate::hw::resources::{
+    self, infra_total, InfraComponent, INFRA_COMPONENTS, TOTAL_BRAM36,
+    TOTAL_DSP, TOTAL_LUTS,
+};
+use crate::stencil::workload::{paper_workload, paper_workloads};
+use crate::stencil::kernels::ALL_KERNELS;
+
+/// Table I: the five stencil kernels and their per-cell op counts.
+pub fn table1() -> Vec<String> {
+    let mut out = vec![
+        "== Table I: stencil kernels ==".to_string(),
+        format!(
+            "{:<18} {:>6} {:>6} {:>6} {:>12}",
+            "kernel", "adds", "muls", "flops", "dims"
+        ),
+    ];
+    for k in ALL_KERNELS {
+        let (a, m) = k.op_counts();
+        out.push(format!(
+            "{:<18} {:>6} {:>6} {:>6} {:>12}",
+            k.paper_name(),
+            a,
+            m,
+            k.flops_per_cell(),
+            format!("{}D", k.ndim())
+        ));
+    }
+    out
+}
+
+/// Table II: the experimental setup per kernel.
+pub fn table2() -> Vec<String> {
+    let mut out = vec![
+        "== Table II: stencil IP setup ==".to_string(),
+        format!(
+            "{:<18} {:>14} {:>10} {:>6}",
+            "stencil", "grid size", "iterations", "#IPs"
+        ),
+    ];
+    for w in paper_workloads() {
+        let shape = w
+            .shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        out.push(format!(
+            "{:<18} {:>14} {:>10} {:>6}",
+            w.kernel.paper_name(),
+            shape,
+            w.iterations,
+            w.ips_per_fpga
+        ));
+    }
+    out
+}
+
+/// Table III: per-IP resource usage at the Table-II grid sizes.
+pub fn table3() -> Vec<String> {
+    let mut out = vec![
+        "== Table III: IP resource usage (of the free region) ==".to_string(),
+        format!(
+            "{:<18} {:>8} {:>6} {:>6} {:>6} {:>5} {:>6}",
+            "stencil", "LUTs", "LUT%", "BRAM", "BRAM%", "DSP", "DSP%"
+        ),
+    ];
+    for k in ALL_KERNELS {
+        let w = paper_workload(k);
+        let rep = resources::ip_report(k, &w.shape);
+        out.push(format!(
+            "{:<18} {:>8} {:>5.1}% {:>6} {:>5.1}% {:>5} {:>5.1}%",
+            k.paper_name(),
+            rep.res.luts,
+            rep.pct_free.0,
+            rep.res.bram36,
+            rep.pct_free.1,
+            rep.res.dsp,
+            rep.pct_free.2
+        ));
+    }
+    out
+}
+
+/// Figure 10: resource distribution of the infrastructure.
+pub fn fig10() -> Vec<String> {
+    let mut out = vec![
+        "== Fig 10: infrastructure resource distribution (XC7VX690T) =="
+            .to_string(),
+        format!(
+            "{:<12} {:>9} {:>6} {:>7} {:>6} {:>6} {:>6}",
+            "component", "LUTs", "LUT%", "BRAM36", "BRAM%", "DSP", "DSP%"
+        ),
+    ];
+    for c in INFRA_COMPONENTS {
+        let r = c.resources();
+        let (l, b, d) = r.pct_of_total();
+        out.push(format!(
+            "{:<12} {:>9} {:>5.1}% {:>7} {:>5.1}% {:>6} {:>5.1}%",
+            c.name(),
+            r.luts,
+            l,
+            r.bram36,
+            b,
+            r.dsp,
+            d
+        ));
+    }
+    let infra = infra_total();
+    let free = resources::free_region();
+    let (l, b, d) = infra.pct_of_total();
+    out.push(format!(
+        "{:<12} {:>9} {:>5.1}% {:>7} {:>5.1}% {:>6} {:>5.1}%",
+        "infra total", infra.luts, l, infra.bram36, b, infra.dsp, d
+    ));
+    out.push(format!(
+        "{:<12} {:>9} {:>5.1}% {:>7} {:>5.1}% {:>6} {:>5.1}%",
+        "free",
+        free.luts,
+        100.0 * free.luts as f64 / TOTAL_LUTS as f64,
+        free.bram36,
+        100.0 * free.bram36 as f64 / TOTAL_BRAM36 as f64,
+        free.dsp,
+        100.0 * free.dsp as f64 / TOTAL_DSP as f64
+    ));
+    out
+}
+
+/// Which infrastructure component dominates each resource (paper §V-C).
+pub fn dominant_components() -> (InfraComponent, InfraComponent) {
+    let lut_max = INFRA_COMPONENTS
+        .into_iter()
+        .max_by(|a, b| {
+            a.fractions().0.partial_cmp(&b.fractions().0).unwrap()
+        })
+        .unwrap();
+    let bram_max = INFRA_COMPONENTS
+        .into_iter()
+        .max_by(|a, b| {
+            a.fractions().1.partial_cmp(&b.fractions().1).unwrap()
+        })
+        .unwrap();
+    (lut_max, bram_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_have_all_rows() {
+        assert_eq!(table1().len(), 2 + 5);
+        assert_eq!(table2().len(), 2 + 5);
+        assert_eq!(table3().len(), 2 + 5);
+        assert_eq!(fig10().len(), 2 + 5 + 2);
+    }
+
+    #[test]
+    fn table2_matches_paper_text() {
+        let t = table2().join("\n");
+        assert!(t.contains("4096x512"));
+        assert!(t.contains("512x64x64"));
+        assert!(t.contains("240"));
+    }
+
+    #[test]
+    fn fig10_dominants_match_paper() {
+        // "the DMA/PCIe component occupies 30.2% of the available LUTs";
+        // "the most significant usage of BRAMs comes from VFIFO"
+        let (lut, bram) = dominant_components();
+        assert_eq!(lut, InfraComponent::DmaPcie);
+        assert_eq!(bram, InfraComponent::Vfifo);
+    }
+}

@@ -1,0 +1,182 @@
+//! AXI4-Stream plumbing: bursts, ports, and the A-SWT packet switch.
+//!
+//! The A-SWT (an AXI4-Stream Interconnect, pg035) moves cell bursts
+//! between the board's endpoints according to a routing table the plugin
+//! programs through CONF registers.  Port numbering per board:
+//!
+//! ```text
+//!   0            DMA/PCIe endpoint
+//!   1            VFIFO endpoint (DDR3 loop-back path)
+//!   2            MFH/NET endpoint (to the optical ring)
+//!   3 + i        stencil IP i
+//! ```
+
+use anyhow::{bail, Result};
+
+pub const PORT_DMA: u8 = 0;
+pub const PORT_VFIFO: u8 = 1;
+pub const PORT_NET: u8 = 2;
+pub const PORT_IP0: u8 = 3;
+
+pub fn ip_port(ip_index: usize) -> u8 {
+    PORT_IP0 + ip_index as u8
+}
+
+/// A burst of cells moving through the switch fabric (one AXIS packet
+/// train; `last` marks TLAST of the containing transfer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Burst {
+    pub cells: Vec<f32>,
+    pub stream_id: u16,
+    pub last: bool,
+}
+
+impl Burst {
+    pub fn bytes(&self) -> usize {
+        self.cells.len() * 4
+    }
+}
+
+/// The A-SWT switch: ingress-port -> egress-port routing table.
+///
+/// State lives in CONF (the plugin writes registers); the switch holds a
+/// decoded copy refreshed by [`crate::hw::board::Fpga::apply_conf`] plus
+/// per-port traffic counters.
+#[derive(Debug, Clone)]
+pub struct AxisSwitch {
+    routes: Vec<Option<u8>>,
+    nports: usize,
+    /// bytes forwarded per ingress port
+    pub bytes_in: Vec<u64>,
+}
+
+impl AxisSwitch {
+    pub fn new(nports: usize) -> AxisSwitch {
+        AxisSwitch {
+            routes: vec![None; nports],
+            nports,
+            bytes_in: vec![0; nports],
+        }
+    }
+
+    pub fn nports(&self) -> usize {
+        self.nports
+    }
+
+    pub fn set_route(&mut self, ingress: u8, egress: Option<u8>) -> Result<()> {
+        if ingress as usize >= self.nports {
+            bail!("ingress port {ingress} out of range ({})", self.nports);
+        }
+        if let Some(e) = egress {
+            if e as usize >= self.nports {
+                bail!("egress port {e} out of range ({})", self.nports);
+            }
+            if e == ingress {
+                bail!("switch loop: port {ingress} routed to itself");
+            }
+        }
+        self.routes[ingress as usize] = egress;
+        Ok(())
+    }
+
+    pub fn route_of(&self, ingress: u8) -> Option<u8> {
+        self.routes.get(ingress as usize).copied().flatten()
+    }
+
+    /// Forward a burst entering at `ingress`; returns the egress port.
+    /// Errors if no route is programmed — the signature of a plugin bug.
+    pub fn forward(&mut self, ingress: u8, burst: &Burst) -> Result<u8> {
+        match self.route_of(ingress) {
+            Some(e) => {
+                self.bytes_in[ingress as usize] += burst.bytes() as u64;
+                Ok(e)
+            }
+            None => bail!(
+                "A-SWT: no route programmed for ingress port {ingress} \
+                 (stream {})",
+                burst.stream_id
+            ),
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.routes.iter_mut().for_each(|r| *r = None);
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_in.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn burst(n: usize) -> Burst {
+        Burst { cells: vec![1.0; n], stream_id: 1, last: false }
+    }
+
+    #[test]
+    fn port_numbering() {
+        assert_eq!(ip_port(0), 3);
+        assert_eq!(ip_port(3), 6);
+    }
+
+    #[test]
+    fn routes_deliver_only_when_programmed() {
+        let mut sw = AxisSwitch::new(7);
+        assert!(sw.forward(0, &burst(8)).is_err());
+        sw.set_route(0, Some(ip_port(0))).unwrap();
+        assert_eq!(sw.forward(0, &burst(8)).unwrap(), 3);
+        assert_eq!(sw.bytes_in[0], 32);
+        sw.set_route(0, None).unwrap();
+        assert!(sw.forward(0, &burst(8)).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_ports_and_self_loop() {
+        let mut sw = AxisSwitch::new(4);
+        assert!(sw.set_route(9, Some(0)).is_err());
+        assert!(sw.set_route(0, Some(9)).is_err());
+        assert!(sw.set_route(2, Some(2)).is_err());
+    }
+
+    #[test]
+    fn prop_forward_respects_table() {
+        check(
+            "switch-forward-respects-table",
+            40,
+            |rng| {
+                let nports = rng.range(2, 10);
+                // random partial routing table without self-loops
+                let mut table = vec![None; nports];
+                for (i, entry) in table.iter_mut().enumerate() {
+                    if rng.bool() {
+                        let mut e = rng.range(0, nports);
+                        if e == i {
+                            e = (e + 1) % nports;
+                        }
+                        *entry = Some(e as u8);
+                    }
+                }
+                (nports, table)
+            },
+            |(nports, table)| {
+                let mut sw = AxisSwitch::new(*nports);
+                for (i, e) in table.iter().enumerate() {
+                    sw.set_route(i as u8, *e).map_err(|e| e.to_string())?;
+                }
+                for (i, e) in table.iter().enumerate() {
+                    let got = sw.forward(i as u8, &burst(4)).ok();
+                    if got != *e {
+                        return Err(format!(
+                            "port {i}: got {got:?}, want {e:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,289 @@
+//! Board assembly (one VC709) and the ring cluster.
+//!
+//! A board owns the TRD modules (Fig. 2): CONF register file, A-SWT
+//! switch, MFH, VFIFO, NET subsystem, PCIe/DMA, and its stencil IPs.
+//! `apply_conf` is the hardware side of the CONF contract: it decodes the
+//! register file into switch routes, MFH stream table and IP enables —
+//! the plugin *only* communicates through registers.
+
+use anyhow::{bail, Context, Result};
+
+use super::axis::{ip_port, AxisSwitch, PORT_IP0};
+use super::conf::ConfSpace;
+use super::ip_core::IpCore;
+use super::mac::MacAddr;
+use super::mfh::{MacFrameHandler, StreamConfig};
+use super::net::{propagate_east, NetSubsystem, CHANNEL_WEST};
+use super::pcie::PcieDma;
+use super::vfifo::VirtualFifo;
+use crate::stencil::Kernel;
+
+/// Default VFIFO capacity: the TRD reserves 256 MiB of DDR3 per FIFO
+/// direction; plenty for any Table-II grid.
+pub const VFIFO_CAPACITY: usize = 256 << 20;
+
+#[derive(Debug, Clone)]
+pub struct Fpga {
+    pub id: usize,
+    pub conf: ConfSpace,
+    pub switch: AxisSwitch,
+    pub mfh: MacFrameHandler,
+    pub vfifo: VirtualFifo,
+    pub net: NetSubsystem,
+    pub dma: PcieDma,
+    pub ips: Vec<IpCore>,
+}
+
+impl Fpga {
+    pub fn new(id: usize, ip_kernels: &[Kernel]) -> Fpga {
+        let nports = PORT_IP0 as usize + ip_kernels.len();
+        Fpga {
+            id,
+            conf: ConfSpace::new(id as u32),
+            switch: AxisSwitch::new(nports),
+            mfh: MacFrameHandler::new(),
+            vfifo: VirtualFifo::new(VFIFO_CAPACITY),
+            net: NetSubsystem::default(),
+            dma: PcieDma::default(),
+            ips: ip_kernels
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| IpCore::new(i, k))
+                .collect(),
+        }
+    }
+
+    /// MAC address of this board's NET port `port`.
+    pub fn mac(&self, port: u8) -> MacAddr {
+        MacAddr::for_port(self.id as u8, port)
+    }
+
+    /// Decode the CONF register file into module state.  Called by the
+    /// plugin after programming; errors mean the plugin wrote an invalid
+    /// configuration (e.g. kernel id mismatching the synthesized IP).
+    pub fn apply_conf(&mut self) -> Result<()> {
+        self.conf.check_magic()?;
+        // switch routes
+        self.switch.clear();
+        for ingress in 0..self.switch.nports() as u8 {
+            if let Some(egress) = self.conf.route(ingress) {
+                self.switch
+                    .set_route(ingress, Some(egress))
+                    .with_context(|| {
+                        format!("board {}: bad route {ingress}->{egress}", self.id)
+                    })?;
+            }
+        }
+        // MFH stream table
+        self.mfh.clear();
+        for stream in 0..MAX_STREAMS {
+            if let Some((dst, src, ethertype, _cells)) =
+                self.conf.mfh_stream(stream)
+            {
+                self.mfh.configure_stream(
+                    stream,
+                    StreamConfig { dst, src, ethertype },
+                );
+            }
+        }
+        // IP enables
+        for ip in &mut self.ips {
+            match self.conf.ip_config(ip.index as u8) {
+                None => {
+                    ip.enabled = false;
+                }
+                Some((kernel_id, stream)) => {
+                    let want = IpCore::kernel_id(ip.kernel);
+                    if kernel_id != want {
+                        bail!(
+                            "board {} IP {}: CONF kernel id {} but the \
+                             synthesized IP is {} (id {})",
+                            self.id,
+                            ip.index,
+                            kernel_id,
+                            ip.kernel.name(),
+                            want
+                        );
+                    }
+                    ip.enabled = true;
+                    ip.stream = stream;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Switch port of IP `i` on this board.
+    pub fn ip_port(&self, i: usize) -> u8 {
+        ip_port(i)
+    }
+}
+
+/// How many MFH stream-table entries a board scans during decode.
+pub const MAX_STREAMS: u16 = 64;
+
+/// The Multi-FPGA ring: board b's east fiber feeds board (b+1) % n.
+#[derive(Debug)]
+pub struct Cluster {
+    pub boards: Vec<Fpga>,
+}
+
+impl Cluster {
+    /// Homogeneous cluster: `nboards` boards, each with `ips_per_board`
+    /// IPs of `kernel` (the Table-II configurations).
+    pub fn homogeneous(
+        nboards: usize,
+        ips_per_board: usize,
+        kernel: Kernel,
+    ) -> Result<Cluster> {
+        if nboards == 0 || ips_per_board == 0 {
+            bail!("cluster needs at least one board and one IP");
+        }
+        let kernels = vec![kernel; ips_per_board];
+        Ok(Cluster {
+            boards: (0..nboards).map(|id| Fpga::new(id, &kernels)).collect(),
+        })
+    }
+
+    pub fn nboards(&self) -> usize {
+        self.boards.len()
+    }
+
+    pub fn total_ips(&self) -> usize {
+        self.boards.iter().map(|b| b.ips.len()).sum()
+    }
+
+    /// Index of the next board around the ring.
+    pub fn east_of(&self, board: usize) -> usize {
+        (board + 1) % self.boards.len()
+    }
+
+    /// Ship all frames queued on `board`'s east TX fiber to its neighbour.
+    pub fn propagate(&mut self, board: usize) -> Result<()> {
+        let n = self.boards.len();
+        if n < 2 {
+            bail!("propagate on a single-board cluster (no ring)");
+        }
+        let dst = self.east_of(board);
+        let (a, b) = index_pair(&mut self.boards, board, dst);
+        propagate_east(&mut a.net, &mut b.net);
+        Ok(())
+    }
+
+    /// Deliver and unpack every frame waiting on `board`'s west RX.
+    pub fn drain_rx(&mut self, board: usize) -> Result<Vec<f32>> {
+        let local = self.boards[board].mac(CHANNEL_WEST as u8);
+        let mut cells = Vec::new();
+        loop {
+            let frame = match self.boards[board].net.recv(CHANNEL_WEST)? {
+                None => break,
+                Some(f) => f,
+            };
+            let got = self.boards[board].mfh.unpack(&frame, local)?;
+            cells.extend(got);
+        }
+        Ok(cells)
+    }
+}
+
+/// Two distinct mutable references into one slice.
+fn index_pair<T>(v: &mut [T], i: usize, j: usize) -> (&mut T, &mut T) {
+    assert_ne!(i, j, "ring of size 1 has no distinct neighbour");
+    if i < j {
+        let (a, b) = v.split_at_mut(j);
+        (&mut a[i], &mut b[0])
+    } else {
+        let (a, b) = v.split_at_mut(i);
+        (&mut b[0], &mut a[j])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::axis::{PORT_DMA, PORT_NET};
+    use crate::hw::mac::ETHERTYPE_STENCIL;
+
+    #[test]
+    fn conf_decode_routes_and_ips() {
+        let mut b = Fpga::new(0, &[Kernel::Laplace2d, Kernel::Laplace2d]);
+        b.conf.program_route(PORT_DMA, ip_port(0));
+        b.conf.program_route(ip_port(0), ip_port(1));
+        b.conf.program_route(ip_port(1), PORT_NET);
+        b.conf.program_ip(0, IpCore::kernel_id(Kernel::Laplace2d), 1);
+        b.apply_conf().unwrap();
+        assert_eq!(b.switch.route_of(PORT_DMA), Some(ip_port(0)));
+        assert_eq!(b.switch.route_of(ip_port(1)), Some(PORT_NET));
+        assert!(b.ips[0].enabled);
+        assert!(!b.ips[1].enabled);
+        assert_eq!(b.ips[0].stream, 1);
+    }
+
+    #[test]
+    fn conf_decode_rejects_wrong_kernel() {
+        let mut b = Fpga::new(0, &[Kernel::Laplace2d]);
+        b.conf.program_ip(0, IpCore::kernel_id(Kernel::Jacobi9pt), 0);
+        assert!(b.apply_conf().is_err());
+    }
+
+    #[test]
+    fn conf_decode_mfh_streams() {
+        let mut b = Fpga::new(2, &[Kernel::Jacobi9pt]);
+        let dst = MacAddr::for_port(3, 1);
+        let src = b.mac(0);
+        b.conf.program_mfh_stream(5, dst, src, ETHERTYPE_STENCIL, 2048);
+        b.apply_conf().unwrap();
+        let cfg = b.mfh.stream_config(5).unwrap();
+        assert_eq!(cfg.dst, dst);
+        assert_eq!(cfg.src, src);
+    }
+
+    #[test]
+    fn ring_topology() {
+        let c = Cluster::homogeneous(6, 4, Kernel::Laplace2d).unwrap();
+        assert_eq!(c.nboards(), 6);
+        assert_eq!(c.total_ips(), 24);
+        assert_eq!(c.east_of(0), 1);
+        assert_eq!(c.east_of(5), 0); // ring closes
+        assert!(Cluster::homogeneous(0, 1, Kernel::Laplace2d).is_err());
+    }
+
+    #[test]
+    fn cross_board_frame_flow() {
+        let mut c = Cluster::homogeneous(2, 1, Kernel::Laplace2d).unwrap();
+        // configure a stream 0 TX on board 0 targeting board 1's west port
+        let dst = c.boards[1].mac(CHANNEL_WEST as u8);
+        let src = c.boards[0].mac(0);
+        c.boards[0]
+            .conf
+            .program_mfh_stream(0, dst, src, ETHERTYPE_STENCIL, 1024);
+        c.boards[0].apply_conf().unwrap();
+        // ...and the RX side decode on board 1 (same stream table entry).
+        c.boards[1]
+            .conf
+            .program_mfh_stream(0, dst, src, ETHERTYPE_STENCIL, 1024);
+        c.boards[1].apply_conf().unwrap();
+
+        let burst = crate::hw::axis::Burst {
+            cells: vec![1.0, 2.0, 3.0],
+            stream_id: 0,
+            last: true,
+        };
+        let frames = c.boards[0].mfh.pack(&burst).unwrap();
+        for f in &frames {
+            c.boards[0].net.send(super::super::net::CHANNEL_EAST, f).unwrap();
+        }
+        c.propagate(0).unwrap();
+        let cells = c.drain_rx(1).unwrap();
+        assert_eq!(cells, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn index_pair_both_orders() {
+        let mut v = vec![1, 2, 3];
+        let (a, b) = index_pair(&mut v, 0, 2);
+        assert_eq!((*a, *b), (1, 3));
+        let (a, b) = index_pair(&mut v, 2, 0);
+        assert_eq!((*a, *b), (3, 1));
+    }
+}

@@ -1,0 +1,238 @@
+//! CONF register file — the control plane of each board.
+//!
+//! The VC709 plugin never touches switch/MFH/IP state directly: it *writes
+//! registers* here exactly like the real driver pokes BAR space, and the
+//! board modules *decode* this register file to configure themselves
+//! (`Fpga::apply_conf`).  Tests assert that decode(program(intent)) ==
+//! intent, which is the paper's CONF-register contract.
+//!
+//! Address map (per board, 32-bit registers, byte addresses):
+//! ```text
+//!   0x0000           BOARD_ID (read-only)
+//!   0x0004           MAGIC = 0x7609 (read-only)
+//!   0x1000 + 8*p     SWITCH route for ingress port p:
+//!                      [0] = egress port | ROUTE_VALID
+//!   0x2000 + 32*s    MFH stream-table entry s:
+//!                      [0] dst MAC high 16   [1] dst MAC low 32
+//!                      [2] src MAC high 16   [3] src MAC low 32
+//!                      [4] ethertype<<16 | flags(VALID)
+//!                      [5] expected payload cells per frame (len hint)
+//!   0x3000 + 16*i    IP control for IP i:
+//!                      [0] enable            [1] kernel id
+//!                      [2] stream id         [3] reserved
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+pub const REG_BOARD_ID: u32 = 0x0000;
+pub const REG_MAGIC: u32 = 0x0004;
+pub const MAGIC: u32 = 0x7609;
+
+pub const SWITCH_BASE: u32 = 0x1000;
+pub const SWITCH_STRIDE: u32 = 8;
+pub const ROUTE_VALID: u32 = 0x8000_0000;
+
+pub const MFH_BASE: u32 = 0x2000;
+pub const MFH_STRIDE: u32 = 32;
+pub const MFH_VALID: u32 = 0x1;
+
+pub const IP_BASE: u32 = 0x3000;
+pub const IP_STRIDE: u32 = 16;
+
+/// Register file with a write log (the log is how tests and the `inspect`
+/// subcommand audit exactly what the plugin programmed).
+#[derive(Debug, Clone, Default)]
+pub struct ConfSpace {
+    regs: BTreeMap<u32, u32>,
+    log: Vec<(u32, u32)>,
+}
+
+impl ConfSpace {
+    pub fn new(board_id: u32) -> ConfSpace {
+        let mut c = ConfSpace::default();
+        c.regs.insert(REG_BOARD_ID, board_id);
+        c.regs.insert(REG_MAGIC, MAGIC);
+        c
+    }
+
+    pub fn write(&mut self, addr: u32, value: u32) {
+        self.log.push((addr, value));
+        self.regs.insert(addr, value);
+    }
+
+    pub fn read(&self, addr: u32) -> u32 {
+        self.regs.get(&addr).copied().unwrap_or(0)
+    }
+
+    pub fn write_log(&self) -> &[(u32, u32)] {
+        &self.log
+    }
+
+    pub fn clear_log(&mut self) {
+        self.log.clear();
+    }
+
+    // -- typed helpers used by the plugin (encode) and board (decode) -----
+
+    pub fn program_route(&mut self, ingress: u8, egress: u8) {
+        self.write(
+            SWITCH_BASE + SWITCH_STRIDE * ingress as u32,
+            ROUTE_VALID | egress as u32,
+        );
+    }
+
+    pub fn clear_route(&mut self, ingress: u8) {
+        self.write(SWITCH_BASE + SWITCH_STRIDE * ingress as u32, 0);
+    }
+
+    pub fn route(&self, ingress: u8) -> Option<u8> {
+        let v = self.read(SWITCH_BASE + SWITCH_STRIDE * ingress as u32);
+        (v & ROUTE_VALID != 0).then_some((v & 0xFF) as u8)
+    }
+
+    pub fn program_mfh_stream(
+        &mut self,
+        stream: u16,
+        dst: crate::hw::mac::MacAddr,
+        src: crate::hw::mac::MacAddr,
+        ethertype: u16,
+        payload_cells: u32,
+    ) {
+        let base = MFH_BASE + MFH_STRIDE * stream as u32;
+        let d = dst.as_u64();
+        let s = src.as_u64();
+        self.write(base, (d >> 32) as u32);
+        self.write(base + 4, d as u32);
+        self.write(base + 8, (s >> 32) as u32);
+        self.write(base + 12, s as u32);
+        self.write(base + 16, (ethertype as u32) << 16 | MFH_VALID);
+        self.write(base + 20, payload_cells);
+    }
+
+    pub fn mfh_stream(
+        &self,
+        stream: u16,
+    ) -> Option<(crate::hw::mac::MacAddr, crate::hw::mac::MacAddr, u16, u32)>
+    {
+        let base = MFH_BASE + MFH_STRIDE * stream as u32;
+        let flags = self.read(base + 16);
+        if flags & MFH_VALID == 0 {
+            return None;
+        }
+        let dst = ((self.read(base) as u64) << 32) | self.read(base + 4) as u64;
+        let src =
+            ((self.read(base + 8) as u64) << 32) | self.read(base + 12) as u64;
+        Some((
+            crate::hw::mac::MacAddr::from_u64(dst),
+            crate::hw::mac::MacAddr::from_u64(src),
+            (flags >> 16) as u16,
+            self.read(base + 20),
+        ))
+    }
+
+    pub fn program_ip(&mut self, ip: u8, kernel_id: u32, stream: u16) {
+        let base = IP_BASE + IP_STRIDE * ip as u32;
+        self.write(base, 1);
+        self.write(base + 4, kernel_id);
+        self.write(base + 8, stream as u32);
+    }
+
+    pub fn ip_config(&self, ip: u8) -> Option<(u32, u16)> {
+        let base = IP_BASE + IP_STRIDE * ip as u32;
+        (self.read(base) == 1)
+            .then(|| (self.read(base + 4), self.read(base + 8) as u16))
+    }
+
+    pub fn board_id(&self) -> u32 {
+        self.read(REG_BOARD_ID)
+    }
+
+    pub fn check_magic(&self) -> Result<()> {
+        if self.read(REG_MAGIC) != MAGIC {
+            bail!("bad CONF magic on board {}", self.board_id());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::mac::MacAddr;
+    use crate::util::prop::check;
+
+    #[test]
+    fn identity_registers() {
+        let c = ConfSpace::new(3);
+        assert_eq!(c.board_id(), 3);
+        c.check_magic().unwrap();
+    }
+
+    #[test]
+    fn route_encode_decode() {
+        let mut c = ConfSpace::new(0);
+        assert_eq!(c.route(2), None);
+        c.program_route(2, 5);
+        assert_eq!(c.route(2), Some(5));
+        c.clear_route(2);
+        assert_eq!(c.route(2), None);
+        // egress 0 must still decode as a valid route
+        c.program_route(1, 0);
+        assert_eq!(c.route(1), Some(0));
+    }
+
+    #[test]
+    fn mfh_encode_decode() {
+        let mut c = ConfSpace::new(0);
+        assert_eq!(c.mfh_stream(9), None);
+        let dst = MacAddr::for_port(2, 1);
+        let src = MacAddr::for_port(0, 0);
+        c.program_mfh_stream(9, dst, src, 0x88B5, 2048);
+        assert_eq!(c.mfh_stream(9), Some((dst, src, 0x88B5, 2048)));
+    }
+
+    #[test]
+    fn ip_encode_decode() {
+        let mut c = ConfSpace::new(0);
+        assert_eq!(c.ip_config(1), None);
+        c.program_ip(1, 4, 17);
+        assert_eq!(c.ip_config(1), Some((4, 17)));
+    }
+
+    #[test]
+    fn write_log_audits_everything() {
+        let mut c = ConfSpace::new(0);
+        c.program_route(0, 3);
+        c.program_ip(0, 1, 2);
+        assert_eq!(c.write_log().len(), 1 + 3);
+        c.clear_log();
+        assert!(c.write_log().is_empty());
+    }
+
+    #[test]
+    fn prop_mfh_roundtrip_any_macs() {
+        check(
+            "conf-mfh-roundtrip",
+            40,
+            |rng| {
+                (
+                    rng.next_u64() as u16,
+                    MacAddr::from_u64(rng.next_u64() & 0xFFFF_FFFF_FFFF),
+                    MacAddr::from_u64(rng.next_u64() & 0xFFFF_FFFF_FFFF),
+                    rng.next_u64() as u16,
+                    rng.next_u64() as u32,
+                )
+            },
+            |(stream, dst, src, ety, cells)| {
+                let mut c = ConfSpace::new(1);
+                c.program_mfh_stream(*stream, *dst, *src, *ety, *cells);
+                match c.mfh_stream(*stream) {
+                    Some(got) if got == (*dst, *src, *ety, *cells) => Ok(()),
+                    other => Err(format!("decode mismatch: {other:?}")),
+                }
+            },
+        );
+    }
+}

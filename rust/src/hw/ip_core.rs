@@ -1,0 +1,174 @@
+//! Stencil IP cores — the OpenMP tasks of the FPGA device.
+//!
+//! Each IP is a shift-register + 8-PE pipeline in the paper; here the
+//! numeric step is delegated to a [`StepExecutor`] (the PJRT artifact
+//! executor or the Rust golden model — both must agree), while the IP
+//! keeps the *hardware-ish* state: enable/kernel/stream configuration
+//! decoded from CONF registers, plus cycle/cell accounting used by the
+//! resource and timing reports.
+
+use anyhow::{bail, Result};
+
+use crate::stencil::{Grid, Kernel};
+
+/// Number of processing elements per IP (fixed by the paper's design:
+/// 256-bit AXI4-Stream of fp32 cells = 8 lanes).
+pub const PES_PER_IP: usize = 8;
+
+/// Executes one stencil iteration; implemented by the PJRT runtime and by
+/// the golden model (plugin::exec_backend).
+pub trait StepExecutor {
+    fn step(&mut self, kernel: Kernel, grid: &Grid) -> Result<Grid>;
+    /// Executes k fused iterations if a fused artifact exists; default
+    /// falls back to k single steps.
+    fn step_k(&mut self, kernel: Kernel, grid: &Grid, k: usize) -> Result<Grid> {
+        let mut g = grid.clone();
+        for _ in 0..k {
+            g = self.step(kernel, &g)?;
+        }
+        Ok(g)
+    }
+    /// Human-readable backend name for reports.
+    fn backend_name(&self) -> &'static str;
+}
+
+/// One stencil IP instance on a board.
+#[derive(Debug, Clone)]
+pub struct IpCore {
+    pub index: usize,
+    pub kernel: Kernel,
+    /// decoded from CONF: enabled + (kernel id, stream id)
+    pub enabled: bool,
+    pub stream: u16,
+    pub invocations: u64,
+    pub cells_processed: u64,
+}
+
+impl IpCore {
+    pub fn new(index: usize, kernel: Kernel) -> IpCore {
+        IpCore {
+            index,
+            kernel,
+            enabled: false,
+            stream: 0,
+            invocations: 0,
+            cells_processed: 0,
+        }
+    }
+
+    /// Numeric kernel id used in CONF registers.
+    pub fn kernel_id(kernel: Kernel) -> u32 {
+        match kernel {
+            Kernel::Laplace2d => 1,
+            Kernel::Diffusion2d => 2,
+            Kernel::Jacobi9pt => 3,
+            Kernel::Laplace3d => 4,
+            Kernel::Diffusion3d => 5,
+        }
+    }
+
+    pub fn kernel_from_id(id: u32) -> Result<Kernel> {
+        Ok(match id {
+            1 => Kernel::Laplace2d,
+            2 => Kernel::Diffusion2d,
+            3 => Kernel::Jacobi9pt,
+            4 => Kernel::Laplace3d,
+            5 => Kernel::Diffusion3d,
+            _ => bail!("unknown kernel id {id}"),
+        })
+    }
+
+    /// Run one iteration through this IP.  Enforces the hardware contract:
+    /// the IP must be enabled and configured for the right kernel.
+    pub fn process(
+        &mut self,
+        exec: &mut dyn StepExecutor,
+        grid: &Grid,
+    ) -> Result<Grid> {
+        if !self.enabled {
+            bail!(
+                "IP {} not enabled (plugin forgot to program CONF)",
+                self.index
+            );
+        }
+        let out = exec.step(self.kernel, grid)?;
+        self.invocations += 1;
+        self.cells_processed += grid.cells() as u64;
+        Ok(out)
+    }
+
+    /// Streaming cycles to push one grid through this IP: cells/8 plus
+    /// the shift-register fill (2 rows + 3 cells in 2-D, 2 planes in 3-D —
+    /// the window depth of a radius-1 stencil in raster order).
+    pub fn stream_cycles(&self, shape: &[usize]) -> u64 {
+        let cells: usize = shape.iter().product();
+        let fill = match shape.len() {
+            2 => 2 * shape[1] + 3,
+            _ => 2 * shape[1] * shape[2] + 2 * shape[2] + 3,
+        };
+        (cells as u64).div_ceil(PES_PER_IP as u64) + fill as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal golden executor for unit tests.
+    struct Golden;
+    impl StepExecutor for Golden {
+        fn step(&mut self, kernel: Kernel, grid: &Grid) -> Result<Grid> {
+            kernel.apply(grid)
+        }
+        fn backend_name(&self) -> &'static str {
+            "golden-test"
+        }
+    }
+
+    #[test]
+    fn kernel_id_roundtrip() {
+        for k in crate::stencil::kernels::ALL_KERNELS {
+            assert_eq!(
+                IpCore::kernel_from_id(IpCore::kernel_id(k)).unwrap(),
+                k
+            );
+        }
+        assert!(IpCore::kernel_from_id(0).is_err());
+        assert!(IpCore::kernel_from_id(6).is_err());
+    }
+
+    #[test]
+    fn disabled_ip_refuses_work() {
+        let mut ip = IpCore::new(0, Kernel::Laplace2d);
+        let g = Grid::random(&[4, 4], 0).unwrap();
+        assert!(ip.process(&mut Golden, &g).is_err());
+        ip.enabled = true;
+        let out = ip.process(&mut Golden, &g).unwrap();
+        assert_eq!(out, Kernel::Laplace2d.apply(&g).unwrap());
+        assert_eq!(ip.invocations, 1);
+        assert_eq!(ip.cells_processed, 16);
+    }
+
+    #[test]
+    fn default_step_k_composes() {
+        let g = Grid::random(&[5, 5], 1).unwrap();
+        let got = Golden.step_k(Kernel::Diffusion2d, &g, 3).unwrap();
+        let want = Kernel::Diffusion2d.iterate(&g, 3).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn stream_cycles_model() {
+        let ip = IpCore::new(0, Kernel::Laplace2d);
+        // 2D: cells/8 + 2W+3
+        assert_eq!(ip.stream_cycles(&[4096, 512]), (4096 * 512 / 8 + 1027));
+        // non-multiple of 8 rounds up
+        assert_eq!(ip.stream_cycles(&[3, 3]), 2 + 9);
+        // 3D fill: 2*H*W + 2*W + 3
+        let ip3 = IpCore::new(0, Kernel::Laplace3d);
+        assert_eq!(
+            ip3.stream_cycles(&[8, 4, 4]),
+            (8 * 4 * 4) as u64 / 8 + (2 * 16 + 8 + 3) as u64
+        );
+    }
+}

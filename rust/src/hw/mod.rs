@@ -1,0 +1,21 @@
+//! Functional model of the VC709 Target-Reference-Design infrastructure
+//! (paper §II-B / §III-B): every module the plugin programs or data flows
+//! through.  This is a *functional* substrate — data really moves through
+//! register-programmed switches, MAC framing (with CRC), FIFOs and links,
+//! so mis-programming shows up as wrong numerics or routing errors — while
+//! [`crate::sim`] accounts virtual time for the same byte flow.
+
+pub mod axis;
+pub mod board;
+pub mod conf;
+pub mod ip_core;
+pub mod mac;
+pub mod mfh;
+pub mod net;
+pub mod pcie;
+pub mod resources;
+pub mod vfifo;
+
+pub use board::{Cluster, Fpga};
+pub use conf::ConfSpace;
+pub use mac::{MacAddr, MacFrame};

@@ -1,0 +1,144 @@
+//! Network subsystem: four XGEMAC/SFP channels per board and the optical
+//! links of the ring.  Channel use in this cluster: channel 0 transmits
+//! east (to the next board), channel 1 receives from the west — matching
+//! the paper's ring of fiber pairs; channels 2–3 are idle (kept in the
+//! resource model, as in the TRD).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use super::mac::MacFrame;
+
+pub const CHANNELS_PER_BOARD: usize = 4;
+pub const CHANNEL_EAST: usize = 0;
+pub const CHANNEL_WEST: usize = 1;
+
+/// One direction of one optical fiber: an in-flight frame queue.
+#[derive(Debug, Clone, Default)]
+pub struct Link {
+    queue: VecDeque<Vec<u8>>,
+    pub frames: u64,
+    pub bytes: u64,
+}
+
+impl Link {
+    pub fn send(&mut self, frame: &MacFrame) {
+        let wire = frame.pack();
+        self.frames += 1;
+        self.bytes += wire.len() as u64;
+        self.queue.push_back(wire);
+    }
+
+    pub fn recv(&mut self) -> Result<Option<MacFrame>> {
+        match self.queue.pop_front() {
+            None => Ok(None),
+            Some(wire) => Ok(Some(MacFrame::unpack(&wire)?)),
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// Per-board network subsystem: the four NET modules.
+#[derive(Debug, Clone)]
+pub struct NetSubsystem {
+    /// TX side of each channel; the cluster wiring connects TX(board b,
+    /// ch 0) to RX(board b+1, ch 1).
+    pub tx: Vec<Link>,
+    pub rx: Vec<Link>,
+}
+
+impl Default for NetSubsystem {
+    fn default() -> Self {
+        NetSubsystem {
+            tx: (0..CHANNELS_PER_BOARD).map(|_| Link::default()).collect(),
+            rx: (0..CHANNELS_PER_BOARD).map(|_| Link::default()).collect(),
+        }
+    }
+}
+
+impl NetSubsystem {
+    pub fn send(&mut self, channel: usize, frame: &MacFrame) -> Result<()> {
+        if channel >= CHANNELS_PER_BOARD {
+            bail!("NET channel {channel} out of range");
+        }
+        self.tx[channel].send(frame);
+        Ok(())
+    }
+
+    pub fn recv(&mut self, channel: usize) -> Result<Option<MacFrame>> {
+        if channel >= CHANNELS_PER_BOARD {
+            bail!("NET channel {channel} out of range");
+        }
+        self.rx[channel].recv()
+    }
+
+    pub fn total_tx_bytes(&self) -> u64 {
+        self.tx.iter().map(|l| l.bytes).sum()
+    }
+}
+
+/// Move every frame queued on `from`'s TX east channel to `to`'s RX west
+/// channel — the cluster's fiber between two adjacent boards.
+pub fn propagate_east(from: &mut NetSubsystem, to: &mut NetSubsystem) {
+    while let Some(wire) = from.tx[CHANNEL_EAST].queue.pop_front() {
+        to.rx[CHANNEL_WEST].queue.push_back(wire);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::mac::{MacAddr, ETHERTYPE_STENCIL};
+
+    fn frame(seq: u32) -> MacFrame {
+        MacFrame {
+            dst: MacAddr::for_port(1, 1),
+            src: MacAddr::for_port(0, 0),
+            ethertype: ETHERTYPE_STENCIL,
+            stream_id: 3,
+            seq,
+            payload: vec![seq as u8; 16],
+        }
+    }
+
+    #[test]
+    fn link_fifo_and_crc() {
+        let mut l = Link::default();
+        l.send(&frame(0));
+        l.send(&frame(1));
+        assert_eq!(l.in_flight(), 2);
+        assert_eq!(l.recv().unwrap().unwrap().seq, 0);
+        assert_eq!(l.recv().unwrap().unwrap().seq, 1);
+        assert!(l.recv().unwrap().is_none());
+        assert_eq!(l.frames, 2);
+    }
+
+    #[test]
+    fn link_detects_wire_corruption() {
+        let mut l = Link::default();
+        l.send(&frame(0));
+        l.queue[0][25] ^= 0x01; // corrupt a payload byte on the wire
+        assert!(l.recv().is_err());
+    }
+
+    #[test]
+    fn board_to_board_propagation() {
+        let mut a = NetSubsystem::default();
+        let mut b = NetSubsystem::default();
+        a.send(CHANNEL_EAST, &frame(7)).unwrap();
+        propagate_east(&mut a, &mut b);
+        assert_eq!(b.recv(CHANNEL_WEST).unwrap().unwrap().seq, 7);
+        assert!(a.tx[CHANNEL_EAST].in_flight() == 0);
+    }
+
+    #[test]
+    fn channel_bounds() {
+        let mut n = NetSubsystem::default();
+        assert!(n.send(4, &frame(0)).is_err());
+        assert!(n.recv(9).is_err());
+    }
+}

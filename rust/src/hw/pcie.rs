@@ -1,0 +1,91 @@
+//! PCIe/DMA endpoint — the host <-> board 0 path.
+//!
+//! Functionally a counted copy (host memory is just the coordinator's
+//! buffers); the interesting behaviour — gen1 vs gen3 bandwidth, per-DMA
+//! setup cost on the paper's archaic Xeon — lives in the timing model
+//! ([`crate::config::timing`]) keyed by [`PcieGen`].
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcieGen {
+    /// What the paper's hosts had ("archaic PCIe gen1").
+    Gen1,
+    /// What the VC709 supports (their stated headroom).
+    Gen3,
+}
+
+impl PcieGen {
+    pub fn from_name(s: &str) -> Result<PcieGen> {
+        match s {
+            "gen1" => Ok(PcieGen::Gen1),
+            "gen3" => Ok(PcieGen::Gen3),
+            _ => bail!("unknown PCIe generation '{s}' (gen1|gen3)"),
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            PcieGen::Gen1 => "gen1",
+            PcieGen::Gen3 => "gen3",
+        }
+    }
+    /// Effective x8 data bandwidth, bits/s (raw lane rate x 8b/10b or
+    /// 128b/130b coding x ~0.8 protocol efficiency).
+    pub fn effective_bps(self) -> f64 {
+        match self {
+            PcieGen::Gen1 => 12.8e9,
+            PcieGen::Gen3 => 50.4e9,
+        }
+    }
+}
+
+/// DMA engine stats for one board's PCIe endpoint.
+#[derive(Debug, Clone, Default)]
+pub struct PcieDma {
+    pub h2c_bytes: u64,
+    pub c2h_bytes: u64,
+    pub h2c_transfers: u64,
+    pub c2h_transfers: u64,
+}
+
+impl PcieDma {
+    /// Host-to-card: hand a host buffer to the fabric (counted move).
+    pub fn h2c(&mut self, data: Vec<f32>) -> Vec<f32> {
+        self.h2c_bytes += (data.len() * 4) as u64;
+        self.h2c_transfers += 1;
+        data
+    }
+
+    /// Card-to-host.
+    pub fn c2h(&mut self, data: Vec<f32>) -> Vec<f32> {
+        self.c2h_bytes += (data.len() * 4) as u64;
+        self.c2h_transfers += 1;
+        data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_parsing_and_rates() {
+        assert_eq!(PcieGen::from_name("gen1").unwrap(), PcieGen::Gen1);
+        assert_eq!(PcieGen::from_name("gen3").unwrap(), PcieGen::Gen3);
+        assert!(PcieGen::from_name("gen5").is_err());
+        assert!(PcieGen::Gen3.effective_bps() > PcieGen::Gen1.effective_bps());
+        assert_eq!(PcieGen::Gen1.name(), "gen1");
+    }
+
+    #[test]
+    fn dma_accounting() {
+        let mut dma = PcieDma::default();
+        let v = dma.h2c(vec![0.0; 100]);
+        assert_eq!(v.len(), 100);
+        let _ = dma.c2h(v);
+        assert_eq!(dma.h2c_bytes, 400);
+        assert_eq!(dma.c2h_bytes, 400);
+        assert_eq!(dma.h2c_transfers, 1);
+        assert_eq!(dma.c2h_transfers, 1);
+    }
+}

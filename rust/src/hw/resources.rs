@@ -1,0 +1,271 @@
+//! Synthesis estimator — reproduces Fig. 10 (infrastructure resource
+//! distribution) and Table III (per-IP LUT/BRAM/DSP) without Vivado.
+//!
+//! Calibration (see EXPERIMENTS.md for measured-vs-paper):
+//!
+//! * **DSP** — `16*muls + (3D ? 1 : 0)`: a fp32 multiplier consumes 2
+//!   DSP48s, times 8 PEs; 3-D kernels spend one extra DSP on plane-address
+//!   generation.  Matches all five Table-III rows **exactly**.
+//! * **BRAM-36** — per-PE window banking: 8 PEs each buffer a 2-row (2-D)
+//!   or 2-plane (3-D) window, `max(8, ceil(8*window_cells*32b / 36Kb))`,
+//!   plus 8 output-staging BRAMs for 3-D.  Matches all five rows exactly.
+//! * **LUT** — `1744 + 8*(326*adds + 321*muls) + (3D ? 13*plane_cells/12
+//!   : 0)`: solved from the three 2-D rows (exact) and the Laplace-3D row
+//!   (exact); Diffusion-3D predicts +13% vs the paper — the one row the
+//!   linear model misses (documented, asserted in tests).
+//!
+//! Infrastructure (Fig. 10) uses the paper's reported fractions of the
+//! XC7VX690T directly; Table-III percentages are of the *free region*
+//! (total minus infrastructure), which is how the paper's 7.5%–28.3%
+//! figures reconcile with the absolute LUT counts.
+
+use crate::stencil::Kernel;
+
+/// XC7VX690T device totals (Virtex-7 datasheet).
+pub const TOTAL_LUTS: usize = 433_200;
+pub const TOTAL_BRAM36: usize = 1_470;
+pub const TOTAL_DSP: usize = 3_600;
+
+/// Resource triple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    pub luts: usize,
+    pub bram36: usize,
+    pub dsp: usize,
+}
+
+impl Resources {
+    pub fn pct_of_total(&self) -> (f64, f64, f64) {
+        (
+            100.0 * self.luts as f64 / TOTAL_LUTS as f64,
+            100.0 * self.bram36 as f64 / TOTAL_BRAM36 as f64,
+            100.0 * self.dsp as f64 / TOTAL_DSP as f64,
+        )
+    }
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            luts: self.luts + o.luts,
+            bram36: self.bram36 + o.bram36,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+/// One infrastructure component of the TRD (Fig. 10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InfraComponent {
+    DmaPcie,
+    Mfh,
+    Switch,
+    Vfifo,
+    Network,
+}
+
+pub const INFRA_COMPONENTS: [InfraComponent; 5] = [
+    InfraComponent::DmaPcie,
+    InfraComponent::Mfh,
+    InfraComponent::Switch,
+    InfraComponent::Vfifo,
+    InfraComponent::Network,
+];
+
+impl InfraComponent {
+    pub fn name(self) -> &'static str {
+        match self {
+            InfraComponent::DmaPcie => "DMA/PCIe",
+            InfraComponent::Mfh => "MFH",
+            InfraComponent::Switch => "SWITCH",
+            InfraComponent::Vfifo => "VFIFO",
+            InfraComponent::Network => "Network",
+        }
+    }
+
+    /// (LUT %, BRAM %, DSP %) of the device, as reported in Fig. 10.
+    pub fn fractions(self) -> (f64, f64, f64) {
+        match self {
+            InfraComponent::DmaPcie => (30.2, 5.5, 0.6),
+            InfraComponent::Mfh => (1.7, 0.0, 0.0),
+            InfraComponent::Switch => (11.5, 0.0, 0.0),
+            InfraComponent::Vfifo => (13.2, 18.3, 0.0),
+            InfraComponent::Network => (6.1, 2.4, 0.4),
+        }
+    }
+
+    pub fn resources(self) -> Resources {
+        let (l, b, d) = self.fractions();
+        Resources {
+            luts: (l / 100.0 * TOTAL_LUTS as f64).round() as usize,
+            bram36: (b / 100.0 * TOTAL_BRAM36 as f64).round() as usize,
+            dsp: (d / 100.0 * TOTAL_DSP as f64).round() as usize,
+        }
+    }
+}
+
+/// Everything the TRD infrastructure occupies.
+pub fn infra_total() -> Resources {
+    INFRA_COMPONENTS
+        .iter()
+        .fold(Resources::default(), |acc, c| acc.add(&c.resources()))
+}
+
+/// The free region (gray area of Fig. 10) available to stencil IPs.
+pub fn free_region() -> Resources {
+    let infra = infra_total();
+    Resources {
+        luts: TOTAL_LUTS - infra.luts,
+        bram36: TOTAL_BRAM36 - infra.bram36,
+        dsp: TOTAL_DSP - infra.dsp,
+    }
+}
+
+/// Shift-register window cells for a kernel on a grid shape: two rows
+/// (2-D raster order) or two planes (3-D).
+pub fn window_cells(kernel: Kernel, shape: &[usize]) -> usize {
+    match kernel.ndim() {
+        2 => 2 * shape[1],
+        _ => 2 * shape[1] * shape[2],
+    }
+}
+
+/// Estimate one stencil IP's resources on `shape` (Table III model).
+pub fn ip_resources(kernel: Kernel, shape: &[usize]) -> Resources {
+    let (adds, muls) = kernel.op_counts();
+    let pes = crate::hw::ip_core::PES_PER_IP;
+    let is3d = kernel.ndim() == 3;
+
+    let mut luts = 1744 + pes * (326 * adds + 321 * muls);
+    if is3d {
+        let plane = shape[1] * shape[2];
+        luts += 13 * plane / 12;
+    }
+
+    let dsp = 2 * pes * muls + usize::from(is3d);
+
+    let window_bits = pes * window_cells(kernel, shape) * 32;
+    let mut bram = (window_bits).div_ceil(36 * 1024).max(pes);
+    if is3d {
+        bram += pes;
+    }
+
+    Resources { luts, bram36: bram, dsp }
+}
+
+/// Table-III style report row for one IP.
+#[derive(Debug, Clone)]
+pub struct IpReport {
+    pub kernel: Kernel,
+    pub res: Resources,
+    /// percentages of the free region, as Table III reports them
+    pub pct_free: (f64, f64, f64),
+}
+
+pub fn ip_report(kernel: Kernel, shape: &[usize]) -> IpReport {
+    let res = ip_resources(kernel, shape);
+    let free = free_region();
+    IpReport {
+        kernel,
+        res,
+        pct_free: (
+            100.0 * res.luts as f64 / free.luts as f64,
+            100.0 * res.bram36 as f64 / free.bram36 as f64,
+            100.0 * res.dsp as f64 / free.dsp as f64,
+        ),
+    }
+}
+
+/// Can `n_ips` IPs of `kernel` on `shape` fit in the free region?
+/// (This is the constraint that limited Table II's "# IPs" column —
+/// in the paper via synthesis timing closure; here via area.)
+pub fn fits(kernel: Kernel, shape: &[usize], n_ips: usize) -> bool {
+    let free = free_region();
+    let one = ip_resources(kernel, shape);
+    one.luts * n_ips <= free.luts
+        && one.bram36 * n_ips <= free.bram36
+        && one.dsp * n_ips <= free.dsp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table III rows: (kernel, shape, luts, bram, dsp).
+    fn table3() -> Vec<(Kernel, Vec<usize>, usize, usize, usize)> {
+        vec![
+            (Kernel::Laplace2d, vec![4096, 512], 12_138, 8, 16),
+            (Kernel::Diffusion2d, vec![4096, 512], 25_024, 8, 80),
+            (Kernel::Jacobi9pt, vec![1024, 128], 45_733, 8, 144),
+            (Kernel::Laplace3d, vec![512, 64, 64], 21_790, 65, 17),
+            // row 5 is labelled "Difussion-2D" in the paper — a typo for
+            // Diffusion-3D (BRAM/DSP counts only fit the 3-D model)
+            (Kernel::Diffusion3d, vec![256, 32, 32], 27_615, 23, 97),
+        ]
+    }
+
+    #[test]
+    fn dsp_matches_paper_exactly() {
+        for (k, shape, _, _, dsp) in table3() {
+            assert_eq!(ip_resources(k, &shape).dsp, dsp, "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn bram_matches_paper_exactly() {
+        for (k, shape, _, bram, _) in table3() {
+            assert_eq!(ip_resources(k, &shape).bram36, bram, "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn lut_within_model_tolerance() {
+        for (k, shape, luts, _, _) in table3() {
+            let got = ip_resources(k, &shape).luts as f64;
+            let rel = (got - luts as f64).abs() / luts as f64;
+            let tol = if k == Kernel::Diffusion3d { 0.15 } else { 0.01 };
+            assert!(
+                rel <= tol,
+                "{}: got {got}, paper {luts}, rel err {rel:.3}",
+                k.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fig10_infra_sums() {
+        let infra = infra_total();
+        let (l, b, d) = infra.pct_of_total();
+        // paper: LUT 30.2+1.7+11.5+13.2+6.1 = 62.7%, BRAM 26.2%, DSP ~1%
+        assert!((l - 62.7).abs() < 0.2, "infra LUT% {l}");
+        assert!((b - 26.2).abs() < 0.2, "infra BRAM% {b}");
+        assert!((d - 1.0).abs() < 0.3, "infra DSP% {d}");
+        let free = free_region();
+        assert_eq!(free.luts + infra.luts, TOTAL_LUTS);
+    }
+
+    #[test]
+    fn table3_free_region_percentages() {
+        // Laplace-2D: paper reports 7.5% of available LUTs
+        let rep = ip_report(Kernel::Laplace2d, &[4096, 512]);
+        assert!((rep.pct_free.0 - 7.5).abs() < 0.3, "{:?}", rep.pct_free);
+        // Jacobi: 28.3%
+        let rep = ip_report(Kernel::Jacobi9pt, &[1024, 128]);
+        assert!((rep.pct_free.0 - 28.3).abs() < 0.8, "{:?}", rep.pct_free);
+        // Laplace-3D BRAM: 6.0%
+        let rep = ip_report(Kernel::Laplace3d, &[512, 64, 64]);
+        assert!((rep.pct_free.1 - 6.0).abs() < 0.3, "{:?}", rep.pct_free);
+    }
+
+    #[test]
+    fn capacity_check() {
+        // Table II synthesized 4 Laplace-2D IPs; area-wise many more fit
+        assert!(fits(Kernel::Laplace2d, &[4096, 512], 4));
+        assert!(fits(Kernel::Jacobi9pt, &[1024, 128], 1));
+        // but not an absurd number
+        assert!(!fits(Kernel::Jacobi9pt, &[1024, 128], 64));
+    }
+
+    #[test]
+    fn window_model() {
+        assert_eq!(window_cells(Kernel::Laplace2d, &[4096, 512]), 1024);
+        assert_eq!(window_cells(Kernel::Laplace3d, &[512, 64, 64]), 8192);
+    }
+}

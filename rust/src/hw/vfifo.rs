@@ -1,0 +1,152 @@
+//! Virtual FIFO — the DDR3-backed elastic buffer of the TRD.
+//!
+//! The VFIFO absorbs rate mismatch between PCIe/DMA and the stream fabric
+//! and implements the board-internal loop-back path that lets the A-SWT
+//! re-feed a grid to the IP chain for another pass ("the A-SWT can be
+//! configured so that the IPs can be reused", §IV).  It multiplexes the
+//! DDR3 interface across the four network channels, which caps the
+//! per-stream effective rate at ~10 Gb/s (DESIGN.md §5).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use super::axis::Burst;
+
+#[derive(Debug, Clone)]
+pub struct VirtualFifo {
+    capacity_bytes: usize,
+    used_bytes: usize,
+    queue: VecDeque<Burst>,
+    /// high-water mark, for the utilization report
+    pub peak_bytes: usize,
+    pub total_in_bytes: u64,
+}
+
+impl VirtualFifo {
+    /// `capacity_bytes` models the DDR3 space the TRD reserves per FIFO.
+    pub fn new(capacity_bytes: usize) -> VirtualFifo {
+        VirtualFifo {
+            capacity_bytes,
+            used_bytes: 0,
+            queue: VecDeque::new(),
+            peak_bytes: 0,
+            total_in_bytes: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity_bytes
+    }
+    pub fn used(&self) -> usize {
+        self.used_bytes
+    }
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Would `bytes` more fit?  (The DMA engine checks this to apply
+    /// backpressure to the PCIe side instead of dropping.)
+    pub fn would_block(&self, bytes: usize) -> bool {
+        self.used_bytes + bytes > self.capacity_bytes
+    }
+
+    pub fn push(&mut self, burst: Burst) -> Result<()> {
+        let b = burst.bytes();
+        if self.would_block(b) {
+            bail!(
+                "VFIFO overflow: {} + {} > {} bytes (backpressure not \
+                 honoured upstream)",
+                self.used_bytes,
+                b,
+                self.capacity_bytes
+            );
+        }
+        self.used_bytes += b;
+        self.total_in_bytes += b as u64;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        self.queue.push_back(burst);
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<Burst> {
+        let b = self.queue.pop_front();
+        if let Some(ref burst) = b {
+            self.used_bytes -= burst.bytes();
+        }
+        b
+    }
+
+    /// Drain everything, in FIFO order.
+    pub fn drain(&mut self) -> Vec<Burst> {
+        let mut out = Vec::with_capacity(self.queue.len());
+        while let Some(b) = self.pop() {
+            out.push(b);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn burst(tag: f32, n: usize) -> Burst {
+        Burst { cells: vec![tag; n], stream_id: 0, last: false }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut f = VirtualFifo::new(1024);
+        f.push(burst(1.0, 4)).unwrap();
+        f.push(burst(2.0, 4)).unwrap();
+        assert_eq!(f.pop().unwrap().cells[0], 1.0);
+        assert_eq!(f.pop().unwrap().cells[0], 2.0);
+        assert!(f.pop().is_none());
+    }
+
+    #[test]
+    fn capacity_and_backpressure() {
+        let mut f = VirtualFifo::new(32); // 8 cells
+        assert!(!f.would_block(32));
+        f.push(burst(1.0, 8)).unwrap(); // exactly full
+        assert!(f.would_block(4));
+        assert!(f.push(burst(2.0, 1)).is_err());
+        f.pop();
+        assert_eq!(f.used(), 0);
+        f.push(burst(3.0, 8)).unwrap();
+        assert_eq!(f.peak_bytes, 32);
+        assert_eq!(f.total_in_bytes, 64);
+    }
+
+    #[test]
+    fn prop_fifo_preserves_order_and_bytes() {
+        check(
+            "vfifo-order",
+            30,
+            |rng| {
+                let n = rng.range(1, 30);
+                (0..n)
+                    .map(|i| burst(i as f32, rng.range(1, 16)))
+                    .collect::<Vec<_>>()
+            },
+            |bursts| {
+                let total: usize = bursts.iter().map(|b| b.bytes()).sum();
+                let mut f = VirtualFifo::new(total);
+                for b in bursts {
+                    f.push(b.clone()).map_err(|e| e.to_string())?;
+                }
+                let out = f.drain();
+                if out == *bursts && f.used() == 0 {
+                    Ok(())
+                } else {
+                    Err("order or accounting mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! # omp-fpga
+//!
+//! Reproduction of *Enabling OpenMP Task Parallelism on Multi-FPGAs*
+//! (Nepomuceno et al., 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's contribution: an OpenMP-style task
+//!   runtime ([`omp`]) with a libomptarget-like device-plugin interface,
+//!   the VC709 Multi-FPGA plugin ([`plugin`]), a functional model of the
+//!   VC709 board infrastructure ([`hw`]), and a discrete-event timing
+//!   model ([`sim`]).
+//! - **L2/L1 (build-time python)** — the five Table-I stencils as Pallas
+//!   kernels inside JAX step functions, AOT-lowered to HLO text and
+//!   executed from Rust through PJRT ([`runtime`]).
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment
+//! index, and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod config;
+pub mod exec;
+pub mod figures;
+pub mod hw;
+pub mod omp;
+pub mod plugin;
+pub mod runtime;
+pub mod sim;
+pub mod stencil;
+pub mod util;

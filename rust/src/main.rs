@@ -1,0 +1,229 @@
+//! `omp-fpga` — CLI for the Multi-FPGA OpenMP reproduction.
+//!
+//! ```text
+//! omp-fpga run       --kernel laplace2d --fpgas 6 [--backend pjrt|golden|timing]
+//!                    [--iterations N] [--scale S] [--small] [--conf conf.json] [--report]
+//! omp-fpga figures   [--fig 6|7|8|9|10] [--out results]
+//! omp-fpga resources                      # Tables I-III + Fig 10
+//! omp-fpga validate  [--artifacts DIR]    # PJRT vs golden vs host numerics
+//! omp-fpga conf      [--fpgas N] [--kernel K]   # emit a sample conf.json
+//! omp-fpga inspect   [--kernel K] [--fpgas N]   # mapping + CONF audit
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use omp_fpga::config::ClusterConfig;
+use omp_fpga::exec::{run_host_reference, run_stencil_app, RunSpec};
+use omp_fpga::figures;
+use omp_fpga::plugin::ExecBackend;
+use omp_fpga::stencil::workload::{paper_workload, small_workload};
+use omp_fpga::stencil::Kernel;
+use omp_fpga::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(args),
+        Some("figures") => cmd_figures(args),
+        Some("resources") => cmd_resources(),
+        Some("validate") => cmd_validate(args),
+        Some("conf") => cmd_conf(args),
+        Some("inspect") => cmd_inspect(args),
+        Some(other) => bail!("unknown subcommand '{other}'"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!("omp-fpga — OpenMP task parallelism on (simulated) Multi-FPGAs");
+    println!();
+    println!("subcommands:");
+    println!("  run        run one stencil workload end-to-end");
+    println!("             --kernel K --fpgas N --backend pjrt|golden|timing");
+    println!("             --iterations N --scale S --small --conf FILE --report");
+    println!("  figures    regenerate Figures 6-9 (+10) [--fig N] [--out DIR]");
+    println!("  resources  print Tables I-III and Figure 10");
+    println!("  validate   differential numerics: PJRT vs golden vs host");
+    println!("  conf       emit a sample conf.json [--fpgas N] [--kernel K]");
+    println!("  inspect    show task->IP mapping and CONF register audit");
+}
+
+fn workload_from(args: &Args) -> Result<omp_fpga::stencil::Workload> {
+    let kernel = Kernel::from_name(&args.flag_or("kernel", "laplace2d"))?;
+    let mut w = if args.has("small") {
+        small_workload(kernel)
+    } else {
+        paper_workload(kernel)
+    };
+    if let Some(s) = args.usize_flag("scale")? {
+        w = w.scaled(s);
+    }
+    if let Some(n) = args.usize_flag("iterations")? {
+        w = w.with_iterations(n);
+    }
+    if let Some(k) = args.usize_flag("ips")? {
+        w = w.with_ips(k);
+    }
+    Ok(w)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let w = workload_from(args)?;
+    let fpgas = args.usize_flag("fpgas")?.unwrap_or(1);
+    let backend = ExecBackend::from_name(&args.flag_or("backend", "pjrt"))?;
+    let mut spec = RunSpec::new(w, fpgas, backend);
+    if let Some(conf) = args.flag("conf") {
+        let cfg = ClusterConfig::load(conf)?;
+        spec.timing = cfg.timing.clone();
+        spec.nfpgas = cfg.nfpgas();
+        if let Some(f) = cfg.fpgas.first() {
+            spec.workload.ips_per_fpga = f.ips.len();
+        }
+    }
+    let res = run_stencil_app(&spec)?;
+    println!("{}", res.spec_label);
+    println!(
+        "passes={}  virtual time={:.6} s  GFLOPS={:.2}  wall={:.3} s",
+        res.passes, res.virtual_time_s, res.gflops, res.wall_s
+    );
+    println!("checksum: sum={:.6e}  l2={:.6e}", res.checksum.0, res.checksum.1);
+    if args.has("report") {
+        for line in &res.module_summary {
+            println!("{line}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let out = args.flag_or("out", "results");
+    let which = args.flag("fig");
+    let mut figs = Vec::new();
+    if which.is_none() || which == Some("6") {
+        figs.push(figures::fig6::generate()?);
+    }
+    if which.is_none() || which == Some("7") {
+        figs.push(figures::fig7::generate()?);
+    }
+    if which.is_none() || which == Some("8") {
+        figs.push(figures::fig8::generate()?);
+    }
+    if which.is_none() || which == Some("9") {
+        figs.push(figures::fig9::generate()?);
+    }
+    for f in &figs {
+        f.print();
+        let path = f.write_csv(&out)?;
+        println!("-> {path}\n");
+    }
+    if which.is_none() || which == Some("10") {
+        cmd_resources()?;
+    }
+    Ok(())
+}
+
+fn cmd_resources() -> Result<()> {
+    for block in [
+        figures::tables::table1(),
+        figures::tables::table2(),
+        figures::tables::table3(),
+        figures::tables::fig10(),
+    ] {
+        for line in block {
+            println!("{line}");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Differential numerics validation: PJRT artifacts vs the Rust golden
+/// model vs the pure-host OpenMP fallback, all five kernels, through the
+/// full Multi-FPGA (2-board) pipeline.
+fn cmd_validate(args: &Args) -> Result<()> {
+    let dir = args.flag_or("artifacts", "artifacts");
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        bail!("no artifacts at '{dir}' — run `make artifacts` first");
+    }
+    let mut failures = 0;
+    for k in omp_fpga::stencil::kernels::ALL_KERNELS {
+        let w = small_workload(k);
+        let host = run_host_reference(&w, 42)?;
+        for backend in [ExecBackend::Golden, ExecBackend::Pjrt] {
+            let mut spec = RunSpec::new(w.clone(), 2, backend);
+            spec.keep_grid = true;
+            let res = run_stencil_app(&spec)
+                .with_context(|| format!("{} via {:?}", k.name(), backend))?;
+            let got = res.grid.unwrap();
+            let diff = got.max_abs_diff(&host);
+            let ok = diff < 2e-4;
+            println!(
+                "{:<12} {:?}: max|Δ| vs host = {diff:.2e}  {}",
+                k.name(),
+                backend,
+                if ok { "OK" } else { "FAIL" }
+            );
+            if !ok {
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} validation failure(s)");
+    }
+    println!("all kernels validated: PJRT == golden == host");
+    Ok(())
+}
+
+fn cmd_conf(args: &Args) -> Result<()> {
+    let fpgas = args.usize_flag("fpgas")?.unwrap_or(6);
+    let kernel = Kernel::from_name(&args.flag_or("kernel", "laplace2d"))?;
+    let ips = paper_workload(kernel).ips_per_fpga;
+    let cfg = ClusterConfig::homogeneous(fpgas, ips, kernel);
+    println!("{}", cfg.to_json());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let kernel = Kernel::from_name(&args.flag_or("kernel", "laplace2d"))?;
+    let fpgas = args.usize_flag("fpgas")?.unwrap_or(2);
+    let w = paper_workload(kernel);
+    let ntasks = args
+        .usize_flag("iterations")?
+        .unwrap_or(w.ips_per_fpga * fpgas * 2);
+
+    // the mapping the plugin will produce
+    let boards = vec![vec![kernel; w.ips_per_fpga]; fpgas];
+    let a = omp_fpga::plugin::mapper::assign(&boards, &vec![kernel; ntasks])?;
+    println!(
+        "mapping: {} tasks over {} FPGA(s) x {} IPs -> {} passes",
+        ntasks,
+        fpgas,
+        w.ips_per_fpga,
+        a.npasses()
+    );
+    for (t, s) in a.slots.iter().enumerate() {
+        println!("  task {t:>3} -> board {} IP {}", s.board, s.ip);
+    }
+
+    // CONF register audit: run a small pipeline and dump board 0's log
+    let mut spec = RunSpec::new(
+        small_workload(kernel).with_iterations(ntasks).with_ips(w.ips_per_fpga),
+        fpgas,
+        ExecBackend::Golden,
+    );
+    spec.keep_grid = false;
+    let res = run_stencil_app(&spec)?;
+    println!("\nsmall-run check: passes={} virtual={:.6}s", res.passes, res.virtual_time_s);
+    Ok(())
+}

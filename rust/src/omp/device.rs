@@ -1,0 +1,175 @@
+//! The libomptarget-like device-plugin interface and the host data
+//! environment.
+//!
+//! libomptarget's job — "an agnostic offloading mechanism that allows the
+//! insertion of a new device" — maps to [`DevicePlugin`]: anything that
+//! can execute a subgraph of tasks registers under a device id.  Device 0
+//! is always the host ([`super::host::HostDevice`]).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::graph::TaskGraph;
+use super::task::TaskId;
+use crate::sim::stats::RunStats;
+use crate::stencil::{Grid, Kernel};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub usize);
+
+pub const HOST_DEVICE: DeviceId = DeviceId(0);
+
+/// Named buffers — the host view of all mapped data.  `take`/`put` model
+/// the `map` clause ownership transfer; a missing buffer at `take` time
+/// means two concurrent tasks mapped the same buffer without a dependence
+/// (a data race in the user program), which is reported, not ignored.
+#[derive(Debug, Default)]
+pub struct DataEnv {
+    bufs: BTreeMap<String, Grid>,
+}
+
+impl DataEnv {
+    pub fn new() -> DataEnv {
+        DataEnv::default()
+    }
+
+    pub fn insert(&mut self, name: &str, grid: Grid) {
+        self.bufs.insert(name.to_string(), grid);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Grid> {
+        self.bufs.get(name).ok_or_else(|| {
+            anyhow::anyhow!("buffer '{name}' not present in the data environment")
+        })
+    }
+
+    pub fn take(&mut self, name: &str) -> Result<Grid> {
+        self.bufs.remove(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "buffer '{name}' unavailable — either never mapped or \
+                 currently owned by a concurrent task (missing depend \
+                 clause = data race)"
+            )
+        })
+    }
+
+    pub fn put(&mut self, name: &str, grid: Grid) {
+        self.bufs.insert(name.to_string(), grid);
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.bufs.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// What a task body is, once variant-resolved.
+#[derive(Clone)]
+pub enum TaskFn {
+    /// Host software: runs on the worker pool against the buffers the
+    /// task mapped.
+    Software(Arc<dyn Fn(&mut DataEnv) -> Result<()> + Send + Sync>),
+    /// A hardware IP kernel (the `declare variant` target) — executed by
+    /// a device plugin.
+    HwKernel(Kernel),
+}
+
+impl std::fmt::Debug for TaskFn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TaskFn::Software(_) => write!(f, "Software(..)"),
+            TaskFn::HwKernel(k) => write!(f, "HwKernel({})", k.name()),
+        }
+    }
+}
+
+/// Function registry: resolved names -> bodies.
+#[derive(Debug, Default, Clone)]
+pub struct FnRegistry {
+    fns: BTreeMap<String, TaskFn>,
+}
+
+impl FnRegistry {
+    pub fn register(&mut self, name: &str, f: TaskFn) {
+        self.fns.insert(name.to_string(), f);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TaskFn> {
+        self.fns
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no function registered as '{name}'"))
+    }
+
+    pub fn kernel_of(&self, name: &str) -> Result<Kernel> {
+        match self.get(name)? {
+            TaskFn::HwKernel(k) => Ok(*k),
+            TaskFn::Software(_) => {
+                bail!("'{name}' is a software function, not a hardware IP")
+            }
+        }
+    }
+}
+
+/// Per-device execution report.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceReport {
+    pub tasks_run: usize,
+    /// modelled device time (virtual seconds) — 0 for the host device
+    pub virtual_time_s: f64,
+    /// wall-clock seconds spent executing numerics
+    pub wall_s: f64,
+    pub stats: RunStats,
+}
+
+/// A libomptarget-style device plugin.
+pub trait DevicePlugin {
+    /// Architecture string matched by `declare variant`
+    /// (`match(device=arch(...))`): e.g. "host", "vc709".
+    fn arch(&self) -> &'static str;
+
+    fn describe(&self) -> String;
+
+    /// Execute `tasks` (a device batch, in topological order, all on this
+    /// device; intra-batch dependences are edges of `graph`).  Mapped
+    /// input buffers are in `env` on entry; outputs must be back in `env`
+    /// on return.
+    fn run_batch(
+        &mut self,
+        graph: &TaskGraph,
+        tasks: &[TaskId],
+        env: &mut DataEnv,
+        fns: &FnRegistry,
+    ) -> Result<DeviceReport>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_take_put() {
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        assert!(env.get("V").is_ok());
+        let g = env.take("V").unwrap();
+        let err = env.take("V").unwrap_err();
+        assert!(err.to_string().contains("data race"));
+        env.put("V", g);
+        assert!(env.get("V").is_ok());
+        assert_eq!(env.names(), vec!["V"]);
+    }
+
+    #[test]
+    fn fn_registry() {
+        let mut r = FnRegistry::default();
+        r.register("soft", TaskFn::Software(Arc::new(|_| Ok(()))));
+        r.register("hw", TaskFn::HwKernel(Kernel::Laplace2d));
+        assert!(r.get("soft").is_ok());
+        assert!(r.get("missing").is_err());
+        assert_eq!(r.kernel_of("hw").unwrap(), Kernel::Laplace2d);
+        assert!(r.kernel_of("soft").is_err());
+        // Debug impls don't panic
+        let _ = format!("{:?}", r);
+    }
+}

@@ -1,0 +1,388 @@
+//! The task dependence graph, built with OpenMP 4.5 `depend` semantics.
+//!
+//! For each dependence address the runtime tracks the last writer and the
+//! readers since: a new `in` depends on the last `out`; a new `out`
+//! depends on the last `out` *and* every reader since it (flow, anti and
+//! output dependences).  In the current LLVM runtime this graph is
+//! consumed eagerly; the paper defers consumption to the sync point so
+//! the VC709 plugin sees whole pipelines — hence this is a standalone,
+//! inspectable structure.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::task::{DepVar, Task, TaskId};
+
+#[derive(Debug, Default, Clone)]
+struct AddrState {
+    last_out: Option<TaskId>,
+    readers_since: Vec<TaskId>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct TaskGraph {
+    pub tasks: Vec<Task>,
+    /// preds[i] = tasks that must complete before task i starts
+    preds: Vec<Vec<TaskId>>,
+    succs: Vec<Vec<TaskId>>,
+    addr: BTreeMap<DepVar, AddrState>,
+}
+
+impl TaskGraph {
+    pub fn new() -> TaskGraph {
+        TaskGraph::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id.0]
+    }
+    pub fn preds(&self, id: TaskId) -> &[TaskId] {
+        &self.preds[id.0]
+    }
+    pub fn succs(&self, id: TaskId) -> &[TaskId] {
+        &self.succs[id.0]
+    }
+
+    /// Add a task, deriving edges from its depend clauses.  Returns its id.
+    pub fn add(&mut self, mut task: Task) -> TaskId {
+        let id = TaskId(self.tasks.len());
+        task.id = id;
+        self.preds.push(Vec::new());
+        self.succs.push(Vec::new());
+
+        let add_edge = |from: TaskId, to: TaskId, preds: &mut Vec<Vec<TaskId>>, succs: &mut Vec<Vec<TaskId>>| {
+            // a task never depends on itself (e.g. the same address listed
+            // in both depend(in:) and depend(out:) of one task)
+            if from != to && !preds[to.0].contains(&from) {
+                preds[to.0].push(from);
+                succs[from.0].push(to);
+            }
+        };
+
+        for dv in &task.deps_in {
+            let st = self.addr.entry(*dv).or_default();
+            if let Some(w) = st.last_out {
+                add_edge(w, id, &mut self.preds, &mut self.succs);
+            }
+            st.readers_since.push(id);
+        }
+        for dv in &task.deps_out {
+            let st = self.addr.entry(*dv).or_default();
+            if let Some(w) = st.last_out {
+                add_edge(w, id, &mut self.preds, &mut self.succs);
+            }
+            for r in std::mem::take(&mut st.readers_since) {
+                if r != id {
+                    add_edge(r, id, &mut self.preds, &mut self.succs);
+                }
+            }
+            st.last_out = Some(id);
+        }
+
+        self.tasks.push(task);
+        id
+    }
+
+    /// Topological order (Kahn).  The construction cannot create cycles
+    /// (edges always point from earlier to later tasks), asserted anyway.
+    pub fn topo_order(&self) -> Result<Vec<TaskId>> {
+        let n = self.tasks.len();
+        let mut indeg: Vec<usize> = (0..n).map(|i| self.preds[i].len()).collect();
+        let mut queue: Vec<TaskId> =
+            (0..n).filter(|&i| indeg[i] == 0).map(TaskId).collect();
+        let mut out = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let id = queue[head];
+            head += 1;
+            out.push(id);
+            for &s in &self.succs[id.0] {
+                indeg[s.0] -= 1;
+                if indeg[s.0] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if out.len() != n {
+            bail!("task graph has a cycle (impossible by construction)");
+        }
+        Ok(out)
+    }
+
+    /// Topological levels: level[i] = 1 + max(level of preds).
+    pub fn levels(&self) -> Result<Vec<usize>> {
+        let order = self.topo_order()?;
+        let mut level = vec![0usize; self.tasks.len()];
+        for id in order {
+            for &p in &self.preds[id.0] {
+                level[id.0] = level[id.0].max(level[p.0] + 1);
+            }
+        }
+        Ok(level)
+    }
+
+    /// True if the graph is one linear chain t0 -> t1 -> ... -> tn-1 —
+    /// the pipeline shape of Listing 3, which the plugin maps to a
+    /// straight IP chain.
+    pub fn is_chain(&self) -> bool {
+        if self.tasks.is_empty() {
+            return false;
+        }
+        let starts = (0..self.tasks.len())
+            .filter(|&i| self.preds[i].is_empty())
+            .count();
+        if starts != 1 {
+            return false;
+        }
+        self.preds.iter().all(|p| p.len() <= 1)
+            && self.succs.iter().all(|s| s.len() <= 1)
+    }
+
+    /// Condense by device: the DAG of device groups, or None if tasks of
+    /// the same device are interleaved cyclically (A->B->A at group level).
+    pub fn device_batches(&self) -> Result<Vec<(super::device::DeviceId, Vec<TaskId>)>> {
+        let order = self.topo_order()?;
+        // Greedy condensation in topological order: extend the current
+        // batch while the next task is on the same device; afterwards,
+        // verify no edge goes backwards across batches.
+        let mut batches: Vec<(super::device::DeviceId, Vec<TaskId>)> = Vec::new();
+        for id in order {
+            let dev = self.tasks[id.0].device;
+            match batches.last_mut() {
+                Some((d, v)) if *d == dev => v.push(id),
+                _ => batches.push((dev, vec![id])),
+            }
+        }
+        // batch index per task
+        let mut bidx = vec![0usize; self.tasks.len()];
+        for (i, (_, v)) in batches.iter().enumerate() {
+            for id in v {
+                bidx[id.0] = i;
+            }
+        }
+        for t in &self.tasks {
+            for &p in self.preds(t.id) {
+                if bidx[p.0] > bidx[t.id.0] {
+                    bail!(
+                        "unsupported device interleaving: task {} (batch {}) \
+                         depends on task {} (batch {})",
+                        t.id.0,
+                        bidx[t.id.0],
+                        p.0,
+                        bidx[p.0]
+                    );
+                }
+            }
+        }
+        Ok(batches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::device::DeviceId;
+    use crate::omp::task::MapDir;
+    use crate::util::prop::check;
+
+    fn task(dev: usize, deps_in: &[usize], deps_out: &[usize]) -> Task {
+        Task {
+            id: TaskId(0),
+            base_name: "f".into(),
+            fn_name: "f".into(),
+            device: DeviceId(dev),
+            maps: vec![(MapDir::ToFrom, "V".into())],
+            deps_in: deps_in.iter().map(|&d| DepVar(d)).collect(),
+            deps_out: deps_out.iter().map(|&d| DepVar(d)).collect(),
+            nowait: true,
+        }
+    }
+
+    #[test]
+    fn listing3_pipeline_is_a_chain() {
+        // for i in 0..N: depend(in: deps[i]) depend(out: deps[i+1])
+        let mut g = TaskGraph::new();
+        for i in 0..8 {
+            g.add(task(1, &[i], &[i + 1]));
+        }
+        assert!(g.is_chain());
+        let topo = g.topo_order().unwrap();
+        assert_eq!(topo, (0..8).map(TaskId).collect::<Vec<_>>());
+        assert_eq!(g.levels().unwrap(), (0..8).collect::<Vec<_>>());
+        assert!(g.preds(TaskId(0)).is_empty());
+        assert_eq!(g.preds(TaskId(3)), &[TaskId(2)]);
+    }
+
+    #[test]
+    fn independent_tasks_have_no_edges() {
+        let mut g = TaskGraph::new();
+        g.add(task(1, &[0], &[1]));
+        g.add(task(1, &[2], &[3]));
+        assert!(g.preds(TaskId(1)).is_empty());
+        assert!(!g.is_chain()); // two roots
+    }
+
+    #[test]
+    fn anti_dependence_readers_before_writer() {
+        // two readers of addr 0, then a writer of addr 0:
+        // writer must wait for both readers (anti-dependence)
+        let mut g = TaskGraph::new();
+        let r1 = g.add(task(1, &[0], &[]));
+        let r2 = g.add(task(1, &[0], &[]));
+        let w = g.add(task(1, &[], &[0]));
+        let mut preds = g.preds(w).to_vec();
+        preds.sort();
+        assert_eq!(preds, vec![r1, r2]);
+        // and a subsequent reader depends only on the new writer
+        let r3 = g.add(task(1, &[0], &[]));
+        assert_eq!(g.preds(r3), &[w]);
+    }
+
+    #[test]
+    fn output_dependence_writer_after_writer() {
+        let mut g = TaskGraph::new();
+        let w1 = g.add(task(1, &[], &[0]));
+        let w2 = g.add(task(1, &[], &[0]));
+        assert_eq!(g.preds(w2), &[w1]);
+    }
+
+    #[test]
+    fn diamond() {
+        // a writes 0; b,c read 0 and write 1,2; d reads 1,2
+        let mut g = TaskGraph::new();
+        let a = g.add(task(1, &[], &[0]));
+        let b = g.add(task(1, &[0], &[1]));
+        let c = g.add(task(1, &[0], &[2]));
+        let d = g.add(task(1, &[1, 2], &[]));
+        assert_eq!(g.preds(b), &[a]);
+        assert_eq!(g.preds(c), &[a]);
+        let mut p = g.preds(d).to_vec();
+        p.sort();
+        assert_eq!(p, vec![b, c]);
+        assert!(!g.is_chain());
+        let lv = g.levels().unwrap();
+        assert_eq!(lv, vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn device_batches_groups_contiguous() {
+        let mut g = TaskGraph::new();
+        g.add(task(0, &[], &[0])); // host produce
+        g.add(task(1, &[0], &[1])); // fpga chain
+        g.add(task(1, &[1], &[2]));
+        g.add(task(0, &[2], &[3])); // host consume
+        let b = g.device_batches().unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].0, DeviceId(0));
+        assert_eq!(b[1].0, DeviceId(1));
+        assert_eq!(b[1].1.len(), 2);
+        assert_eq!(b[2].0, DeviceId(0));
+    }
+
+    #[test]
+    fn prop_topo_respects_all_edges() {
+        check(
+            "graph-topo-respects-edges",
+            40,
+            |rng| {
+                // random chains/diamonds over a small addr space
+                let n = rng.range(1, 30);
+                let mut specs = Vec::new();
+                for _ in 0..n {
+                    let din: Vec<usize> =
+                        (0..rng.range(0, 3)).map(|_| rng.range(0, 6)).collect();
+                    let dout: Vec<usize> =
+                        (0..rng.range(0, 3)).map(|_| rng.range(0, 6)).collect();
+                    specs.push((din, dout));
+                }
+                specs
+            },
+            |specs| {
+                let mut g = TaskGraph::new();
+                for (din, dout) in specs {
+                    g.add(task(1, din, dout));
+                }
+                let topo = g.topo_order().map_err(|e| e.to_string())?;
+                let pos: BTreeMap<usize, usize> =
+                    topo.iter().enumerate().map(|(i, t)| (t.0, i)).collect();
+                for t in &g.tasks {
+                    for p in g.preds(t.id) {
+                        if pos[&p.0] >= pos[&t.id.0] {
+                            return Err(format!(
+                                "edge {} -> {} violated",
+                                p.0, t.id.0
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_program_order_serializes_same_addr() {
+        // any two tasks touching the same addr with at least one writer
+        // must be ordered (transitively); we check direct pairs
+        check(
+            "graph-serialization",
+            30,
+            |rng| {
+                let n = rng.range(2, 15);
+                (0..n)
+                    .map(|_| {
+                        let addr = rng.range(0, 3);
+                        let write = rng.bool();
+                        (addr, write)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |specs| {
+                let mut g = TaskGraph::new();
+                for (addr, write) in specs {
+                    if *write {
+                        g.add(task(1, &[], &[*addr]));
+                    } else {
+                        g.add(task(1, &[*addr], &[]));
+                    }
+                }
+                // reachability via succs
+                let n = g.len();
+                let mut reach = vec![vec![false; n]; n];
+                for id in g.topo_order().unwrap().into_iter().rev() {
+                    let i = id.0;
+                    reach[i][i] = true;
+                    let succs = g.succs(id).to_vec();
+                    for s in succs {
+                        for j in 0..n {
+                            if reach[s.0][j] {
+                                reach[i][j] = true;
+                            }
+                        }
+                    }
+                }
+                for i in 0..n {
+                    for j in i + 1..n {
+                        let (ai, wi) = specs[i];
+                        let (aj, wj) = specs[j];
+                        if ai == aj && (wi || wj) && !(reach[i][j] || reach[j][i])
+                        {
+                            return Err(format!(
+                                "conflicting tasks {i},{j} unordered"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,341 @@
+//! Host device (device 0): a CPU worker-thread pool executing software
+//! tasks with dependence-driven scheduling — the OpenMP "pool of worker
+//! threads fed by a ready queue" of §II-A, and the fallback device of the
+//! paper's verification flow.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::device::{DataEnv, DevicePlugin, DeviceReport, FnRegistry, TaskFn};
+use super::graph::TaskGraph;
+use super::task::TaskId;
+
+pub struct HostDevice {
+    pub nthreads: usize,
+}
+
+impl HostDevice {
+    pub fn new(nthreads: usize) -> HostDevice {
+        HostDevice { nthreads: nthreads.max(1) }
+    }
+}
+
+struct SchedState {
+    ready: VecDeque<TaskId>,
+    /// remaining unfinished tasks in the batch
+    remaining: usize,
+    /// per-task count of unfinished intra-batch predecessors
+    indeg: Vec<usize>,
+    env: DataEnv,
+    error: Option<String>,
+}
+
+impl DevicePlugin for HostDevice {
+    fn arch(&self) -> &'static str {
+        "host"
+    }
+
+    fn describe(&self) -> String {
+        format!("host CPU pool ({} worker threads)", self.nthreads)
+    }
+
+    fn run_batch(
+        &mut self,
+        graph: &TaskGraph,
+        tasks: &[TaskId],
+        env: &mut DataEnv,
+        fns: &FnRegistry,
+    ) -> Result<DeviceReport> {
+        let t0 = Instant::now();
+        // map TaskId -> dense index within this batch
+        let mut dense = std::collections::BTreeMap::new();
+        for (i, id) in tasks.iter().enumerate() {
+            dense.insert(*id, i);
+        }
+        let mut indeg = vec![0usize; tasks.len()];
+        for (i, id) in tasks.iter().enumerate() {
+            indeg[i] = graph
+                .preds(*id)
+                .iter()
+                .filter(|p| dense.contains_key(p))
+                .count();
+        }
+        let ready: VecDeque<TaskId> = tasks
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| indeg[*i] == 0)
+            .map(|(_, id)| *id)
+            .collect();
+
+        let state = Mutex::new(SchedState {
+            ready,
+            remaining: tasks.len(),
+            indeg,
+            env: std::mem::take(env),
+            error: None,
+        });
+        let cv = Condvar::new();
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.nthreads.min(tasks.len().max(1)) {
+                scope.spawn(|| {
+                    worker(graph, &dense, fns, &state, &cv);
+                });
+            }
+        });
+
+        let mut st = state.into_inner().unwrap();
+        *env = std::mem::take(&mut st.env);
+        if let Some(e) = st.error {
+            return Err(anyhow!("host task failed: {e}"));
+        }
+        let mut report = DeviceReport {
+            tasks_run: tasks.len(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            ..DeviceReport::default()
+        };
+        report.stats.record("host-pool", 0.0, report.wall_s);
+        Ok(report)
+    }
+}
+
+fn worker(
+    graph: &TaskGraph,
+    dense: &std::collections::BTreeMap<TaskId, usize>,
+    fns: &FnRegistry,
+    state: &Mutex<SchedState>,
+    cv: &Condvar,
+) {
+    loop {
+        // -- claim a ready task and take its buffers ---------------------
+        let mut st = state.lock().unwrap();
+        let id = loop {
+            if st.remaining == 0 || st.error.is_some() {
+                cv.notify_all();
+                return;
+            }
+            if let Some(id) = st.ready.pop_front() {
+                break id;
+            }
+            st = cv.wait(st).unwrap();
+        };
+        let task = graph.task(id);
+        // private environment: ownership of the mapped buffers moves to
+        // the task (the map clause), and back when it completes
+        let mut private = DataEnv::new();
+        let mut take_err = None;
+        for (_, name) in &task.maps {
+            match st.env.take(name) {
+                Ok(g) => private.put(name, g),
+                Err(e) => {
+                    take_err = Some(e.to_string());
+                    break;
+                }
+            }
+        }
+        if let Some(e) = take_err {
+            st.error = Some(e);
+            st.remaining = 0;
+            cv.notify_all();
+            return;
+        }
+        drop(st);
+
+        // -- run the body outside the lock -------------------------------
+        let body = match fns.get(&task.fn_name) {
+            Ok(TaskFn::Software(f)) => f.clone(),
+            Ok(TaskFn::HwKernel(k)) => {
+                let mut st = state.lock().unwrap();
+                st.error = Some(format!(
+                    "task '{}' resolved to hardware kernel {} but was \
+                     scheduled on the host device",
+                    task.fn_name,
+                    k.name()
+                ));
+                st.remaining = 0;
+                cv.notify_all();
+                return;
+            }
+            Err(e) => {
+                let mut st = state.lock().unwrap();
+                st.error = Some(e.to_string());
+                st.remaining = 0;
+                cv.notify_all();
+                return;
+            }
+        };
+        let run_result = body(&mut private);
+
+        // -- return buffers, retire, release successors ------------------
+        let mut st = state.lock().unwrap();
+        for (_, name) in &task.maps {
+            if let Ok(g) = private.take(name) {
+                st.env.put(name, g);
+            }
+        }
+        if let Err(e) = run_result {
+            st.error = Some(e.to_string());
+            st.remaining = 0;
+            cv.notify_all();
+            return;
+        }
+        st.remaining -= 1;
+        for s in graph.succs(id) {
+            if let Some(&si) = dense.get(s) {
+                st.indeg[si] -= 1;
+                if st.indeg[si] == 0 {
+                    st.ready.push_back(*s);
+                }
+            }
+        }
+        cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::device::HOST_DEVICE;
+    use crate::omp::task::{DepVar, MapDir, Task};
+    use crate::stencil::Grid;
+    use std::sync::Arc;
+
+    fn add_one_task(g: &mut TaskGraph, buf: &str, din: &[usize], dout: &[usize]) -> TaskId {
+        g.add(Task {
+            id: TaskId(0),
+            base_name: "inc".into(),
+            fn_name: "inc".into(),
+            device: HOST_DEVICE,
+            maps: vec![(MapDir::ToFrom, buf.into())],
+            deps_in: din.iter().map(|&d| DepVar(d)).collect(),
+            deps_out: dout.iter().map(|&d| DepVar(d)).collect(),
+            nowait: true,
+        })
+    }
+
+    fn fns_with_inc(buf: &'static str) -> FnRegistry {
+        let mut fns = FnRegistry::default();
+        fns.register(
+            "inc",
+            TaskFn::Software(Arc::new(move |env: &mut DataEnv| {
+                let mut g = env.take(buf)?;
+                for v in g.data_mut() {
+                    *v += 1.0;
+                }
+                env.put(buf, g);
+                Ok(())
+            })),
+        );
+        fns
+    }
+
+    #[test]
+    fn chain_executes_in_order() {
+        let mut g = TaskGraph::new();
+        for i in 0..10 {
+            add_one_task(&mut g, "V", &[i], &[i + 1]);
+        }
+        let ids: Vec<TaskId> = (0..10).map(TaskId).collect();
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        let mut host = HostDevice::new(4);
+        let rep = host.run_batch(&g, &ids, &mut env, &fns_with_inc("V")).unwrap();
+        assert_eq!(rep.tasks_run, 10);
+        assert!(env.get("V").unwrap().data().iter().all(|&v| v == 10.0));
+    }
+
+    #[test]
+    fn independent_tasks_all_run() {
+        let mut g = TaskGraph::new();
+        // two independent chains on two buffers
+        for i in 0..5 {
+            add_one_task(&mut g, "A", &[i], &[i + 1]);
+        }
+        for i in 10..15 {
+            add_one_task(&mut g, "B", &[i], &[i + 1]);
+        }
+        let ids: Vec<TaskId> = (0..10).map(TaskId).collect();
+        let mut env = DataEnv::new();
+        env.insert("A", Grid::zeros(&[3, 3]).unwrap());
+        env.insert("B", Grid::zeros(&[3, 3]).unwrap());
+        let mut fns = fns_with_inc("A");
+        // second inc body for B
+        fns.register(
+            "incB",
+            TaskFn::Software(Arc::new(|env: &mut DataEnv| {
+                let mut g = env.take("B")?;
+                for v in g.data_mut() {
+                    *v += 1.0;
+                }
+                env.put("B", g);
+                Ok(())
+            })),
+        );
+        // patch the B-chain tasks to use incB
+        // (rebuild: simpler to use one fn keyed by map name)
+        let mut g2 = TaskGraph::new();
+        for i in 0..5 {
+            add_one_task(&mut g2, "A", &[i], &[i + 1]);
+        }
+        for i in 10..15 {
+            let id = add_one_task(&mut g2, "B", &[i], &[i + 1]);
+            // overwrite fn name
+            let t = &mut g2.tasks[id.0];
+            t.fn_name = "incB".into();
+        }
+        let mut host = HostDevice::new(4);
+        host.run_batch(&g2, &ids, &mut env, &fns).unwrap();
+        assert!(env.get("A").unwrap().data().iter().all(|&v| v == 5.0));
+        assert!(env.get("B").unwrap().data().iter().all(|&v| v == 5.0));
+    }
+
+    #[test]
+    fn task_error_propagates() {
+        let mut fns = FnRegistry::default();
+        fns.register(
+            "boom",
+            TaskFn::Software(Arc::new(|_| anyhow::bail!("kaboom"))),
+        );
+        let mut g = TaskGraph::new();
+        let id = g.add(Task {
+            id: TaskId(0),
+            base_name: "boom".into(),
+            fn_name: "boom".into(),
+            device: HOST_DEVICE,
+            maps: vec![],
+            deps_in: vec![],
+            deps_out: vec![],
+            nowait: true,
+        });
+        let mut env = DataEnv::new();
+        let mut host = HostDevice::new(2);
+        let err = host.run_batch(&g, &[id], &mut env, &fns).unwrap_err();
+        assert!(err.to_string().contains("kaboom"));
+    }
+
+    #[test]
+    fn hw_kernel_on_host_is_an_error() {
+        let mut fns = FnRegistry::default();
+        fns.register(
+            "hw",
+            TaskFn::HwKernel(crate::stencil::Kernel::Laplace2d),
+        );
+        let mut g = TaskGraph::new();
+        let id = g.add(Task {
+            id: TaskId(0),
+            base_name: "hw".into(),
+            fn_name: "hw".into(),
+            device: HOST_DEVICE,
+            maps: vec![],
+            deps_in: vec![],
+            deps_out: vec![],
+            nowait: true,
+        });
+        let mut env = DataEnv::new();
+        let mut host = HostDevice::new(1);
+        assert!(host.run_batch(&g, &[id], &mut env, &fns).is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! The OpenMP-style task runtime — the paper's §III-A contribution.
+//!
+//! Mirrors the LLVM OpenMP structure the paper extends:
+//!
+//! * [`task`] / [`graph`] — tasks with `depend(in/out)` clauses and the
+//!   dependence graph, built with OpenMP 4.5 semantics.  The paper's key
+//!   runtime modification is reproduced here: tasks bound for plugin
+//!   devices are **not** dispatched eagerly; the full graph is available
+//!   at the `single`-scope synchronization point.
+//! * [`variant`] — `declare variant`: a base C function name maps to a
+//!   hardware IP when the device arch matches (`match(device=arch(vc709))`).
+//! * [`device`] — the libomptarget-like plugin interface: anything that
+//!   can run a task subgraph registers as a device.  [`host`] is device 0
+//!   (a CPU worker pool, the OpenMP fallback).
+//! * [`runtime`] — `parallel` / `single` / `target` entry points and the
+//!   deferred-dispatch scheduler that hands each device its subgraph.
+
+pub mod device;
+pub mod graph;
+pub mod host;
+pub mod runtime;
+pub mod task;
+pub mod variant;
+
+pub use device::{DataEnv, DeviceId, DevicePlugin, DeviceReport, FnRegistry, TaskFn};
+pub use graph::TaskGraph;
+pub use runtime::{OmpReport, OmpRuntime, TargetBuilder};
+pub use task::{DepVar, MapDir, Task, TaskId};
+pub use variant::VariantRegistry;

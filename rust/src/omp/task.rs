@@ -1,0 +1,93 @@
+//! Task descriptors: what `#pragma omp target ... depend(...) map(...)`
+//! compiles to.
+
+/// Index into the program's dependence array (the paper's `bool deps[N+1]`
+//  — Listing 1/3).  Dependences are named addresses, not values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DepVar(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub usize);
+
+/// `map` clause direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapDir {
+    To,
+    From,
+    ToFrom,
+}
+
+impl MapDir {
+    pub fn to_device(self) -> bool {
+        matches!(self, MapDir::To | MapDir::ToFrom)
+    }
+    pub fn from_device(self) -> bool {
+        matches!(self, MapDir::From | MapDir::ToFrom)
+    }
+}
+
+/// One created task (a `target` region instance).
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    /// base function name as written in the source
+    pub base_name: String,
+    /// variant the runtime resolved for the executing device's arch
+    pub fn_name: String,
+    pub device: super::device::DeviceId,
+    /// `map` clauses: (direction, buffer name in the data environment)
+    pub maps: Vec<(MapDir, String)>,
+    pub deps_in: Vec<DepVar>,
+    pub deps_out: Vec<DepVar>,
+    pub nowait: bool,
+}
+
+impl Task {
+    /// Buffer names this task reads from the host view.
+    pub fn inputs(&self) -> impl Iterator<Item = &str> {
+        self.maps
+            .iter()
+            .filter(|(d, _)| d.to_device())
+            .map(|(_, n)| n.as_str())
+    }
+
+    /// Buffer names this task writes back to the host view.
+    pub fn outputs(&self) -> impl Iterator<Item = &str> {
+        self.maps
+            .iter()
+            .filter(|(d, _)| d.from_device())
+            .map(|(_, n)| n.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_directions() {
+        assert!(MapDir::To.to_device() && !MapDir::To.from_device());
+        assert!(!MapDir::From.to_device() && MapDir::From.from_device());
+        assert!(MapDir::ToFrom.to_device() && MapDir::ToFrom.from_device());
+    }
+
+    #[test]
+    fn task_io_views() {
+        let t = Task {
+            id: TaskId(0),
+            base_name: "f".into(),
+            fn_name: "hw_f".into(),
+            device: super::super::device::DeviceId(1),
+            maps: vec![
+                (MapDir::To, "a".into()),
+                (MapDir::From, "b".into()),
+                (MapDir::ToFrom, "c".into()),
+            ],
+            deps_in: vec![DepVar(0)],
+            deps_out: vec![DepVar(1)],
+            nowait: true,
+        };
+        assert_eq!(t.inputs().collect::<Vec<_>>(), vec!["a", "c"]);
+        assert_eq!(t.outputs().collect::<Vec<_>>(), vec!["b", "c"]);
+    }
+}

@@ -1,0 +1,78 @@
+//! `declare variant` — the OpenMP 5 directive the paper uses to bind a C
+//! function to a hardware IP:
+//!
+//! ```c
+//! #pragma omp declare variant (void do_laplace2d(int*,int,int)) \
+//!         match (device=arch(vc709))
+//! extern void hw_laplace2d(int*,int,int);
+//! ```
+//!
+//! Here: `declare(base, arch, variant)` + `resolve(base, arch)`.  When no
+//! variant matches the executing device's arch, the base (software)
+//! function runs — the paper's verification flow, where dropping the
+//! `vc709` compiler flag falls back to software.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct VariantRegistry {
+    /// base name -> [(arch, variant name)]
+    variants: BTreeMap<String, Vec<(String, String)>>,
+}
+
+impl VariantRegistry {
+    pub fn declare(&mut self, base: &str, arch: &str, variant: &str) {
+        self.variants
+            .entry(base.to_string())
+            .or_default()
+            .push((arch.to_string(), variant.to_string()));
+    }
+
+    /// Resolve `base` for a device of `arch`; falls back to `base`.
+    pub fn resolve(&self, base: &str, arch: &str) -> String {
+        self.variants
+            .get(base)
+            .and_then(|vs| {
+                vs.iter().find(|(a, _)| a == arch).map(|(_, v)| v.clone())
+            })
+            .unwrap_or_else(|| base.to_string())
+    }
+
+    pub fn has_variant_for(&self, base: &str, arch: &str) -> bool {
+        self.variants
+            .get(base)
+            .is_some_and(|vs| vs.iter().any(|(a, _)| a == arch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolves_matching_arch() {
+        let mut r = VariantRegistry::default();
+        r.declare("do_laplace2d", "vc709", "hw_laplace2d");
+        assert_eq!(r.resolve("do_laplace2d", "vc709"), "hw_laplace2d");
+        assert!(r.has_variant_for("do_laplace2d", "vc709"));
+    }
+
+    #[test]
+    fn falls_back_to_base() {
+        let mut r = VariantRegistry::default();
+        r.declare("do_laplace2d", "vc709", "hw_laplace2d");
+        // host device: software verification flow
+        assert_eq!(r.resolve("do_laplace2d", "host"), "do_laplace2d");
+        assert_eq!(r.resolve("unknown_fn", "vc709"), "unknown_fn");
+        assert!(!r.has_variant_for("do_laplace2d", "host"));
+    }
+
+    #[test]
+    fn multiple_archs() {
+        let mut r = VariantRegistry::default();
+        r.declare("f", "vc709", "hw_f");
+        r.declare("f", "u250", "hw_f_hbm");
+        assert_eq!(r.resolve("f", "vc709"), "hw_f");
+        assert_eq!(r.resolve("f", "u250"), "hw_f_hbm");
+    }
+}

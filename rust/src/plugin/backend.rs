@@ -1,0 +1,164 @@
+//! Numeric step backends for the IP cores.
+//!
+//! * [`PjrtExec`] — the shipped configuration: each IP invocation runs
+//!   the AOT-compiled Pallas artifact through PJRT (Python is long gone).
+//! * [`GoldenExec`] — the Rust golden model, for differential testing and
+//!   environments without artifacts.
+//! * [`TimingOnlyExec`] — identity numerics, for figure sweeps where only
+//!   the DES timing matters (explicitly *not* a semantics-preserving
+//!   mode; the figure harness never reads grid values).
+
+use anyhow::Result;
+
+use crate::hw::ip_core::StepExecutor;
+use crate::runtime::PjrtRuntime;
+use crate::stencil::{Grid, Kernel};
+
+/// Backend selector used by configuration/CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecBackend {
+    Pjrt,
+    Golden,
+    TimingOnly,
+}
+
+impl ExecBackend {
+    pub fn from_name(s: &str) -> Result<ExecBackend> {
+        Ok(match s {
+            "pjrt" => ExecBackend::Pjrt,
+            "golden" => ExecBackend::Golden,
+            "timing" | "timing-only" => ExecBackend::TimingOnly,
+            _ => anyhow::bail!("unknown backend '{s}' (pjrt|golden|timing)"),
+        })
+    }
+}
+
+/// Rust golden model backend.
+#[derive(Debug, Default)]
+pub struct GoldenExec {
+    pub steps: u64,
+}
+
+impl StepExecutor for GoldenExec {
+    fn step(&mut self, kernel: Kernel, grid: &Grid) -> Result<Grid> {
+        self.steps += 1;
+        kernel.apply(grid)
+    }
+    fn backend_name(&self) -> &'static str {
+        "golden"
+    }
+}
+
+/// PJRT backend over the AOT artifact registry.
+pub struct PjrtExec {
+    pub rt: PjrtRuntime,
+    pub steps: u64,
+}
+
+impl PjrtExec {
+    pub fn new(rt: PjrtRuntime) -> PjrtExec {
+        PjrtExec { rt, steps: 0 }
+    }
+
+    pub fn from_dir(dir: &str) -> Result<PjrtExec> {
+        Ok(PjrtExec::new(PjrtRuntime::from_dir(dir)?))
+    }
+}
+
+impl StepExecutor for PjrtExec {
+    fn step(&mut self, kernel: Kernel, grid: &Grid) -> Result<Grid> {
+        self.steps += 1;
+        let exe = self.rt.load_step(kernel, grid.shape())?;
+        exe.run(grid)
+    }
+
+    fn step_k(&mut self, kernel: Kernel, grid: &Grid, k: usize) -> Result<Grid> {
+        // use the fused chain artifact when one was AOT-shipped (the
+        // single-load fast path; see EXPERIMENTS.md §Perf)
+        if k > 1 {
+            if let Some(exe) = self.rt.load_chain(kernel, grid.shape(), k)? {
+                self.steps += 1;
+                return exe.run(grid);
+            }
+        }
+        let mut g = grid.clone();
+        for _ in 0..k {
+            g = self.step(kernel, &g)?;
+        }
+        Ok(g)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Timing-only backend: numerics are the identity.
+#[derive(Debug, Default)]
+pub struct TimingOnlyExec {
+    pub steps: u64,
+}
+
+impl StepExecutor for TimingOnlyExec {
+    fn step(&mut self, _kernel: Kernel, grid: &Grid) -> Result<Grid> {
+        self.steps += 1;
+        Ok(grid.clone())
+    }
+    fn backend_name(&self) -> &'static str {
+        "timing-only"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_parse() {
+        assert_eq!(ExecBackend::from_name("pjrt").unwrap(), ExecBackend::Pjrt);
+        assert_eq!(
+            ExecBackend::from_name("golden").unwrap(),
+            ExecBackend::Golden
+        );
+        assert_eq!(
+            ExecBackend::from_name("timing").unwrap(),
+            ExecBackend::TimingOnly
+        );
+        assert!(ExecBackend::from_name("cuda").is_err());
+    }
+
+    #[test]
+    fn golden_counts_steps() {
+        let mut b = GoldenExec::default();
+        let g = Grid::random(&[4, 4], 0).unwrap();
+        let out = b.step(Kernel::Laplace2d, &g).unwrap();
+        assert_eq!(out, Kernel::Laplace2d.apply(&g).unwrap());
+        assert_eq!(b.steps, 1);
+        assert_eq!(b.backend_name(), "golden");
+    }
+
+    #[test]
+    fn timing_only_is_identity() {
+        let mut b = TimingOnlyExec::default();
+        let g = Grid::random(&[4, 4], 0).unwrap();
+        assert_eq!(b.step(Kernel::Jacobi9pt, &g).unwrap(), g);
+    }
+
+    #[test]
+    fn pjrt_backend_matches_golden() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut p = PjrtExec::from_dir("artifacts").unwrap();
+        let mut g = GoldenExec::default();
+        let grid = Grid::random(&[64, 48], 5).unwrap();
+        let a = p.step(Kernel::Diffusion2d, &grid).unwrap();
+        let b = g.step(Kernel::Diffusion2d, &grid).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-5);
+        // fused chain artifact path
+        let a4 = p.step_k(Kernel::Diffusion2d, &grid, 4).unwrap();
+        let b4 = Kernel::Diffusion2d.iterate(&grid, 4).unwrap();
+        assert!(a4.max_abs_diff(&b4) < 1e-4);
+    }
+}

@@ -1,0 +1,122 @@
+//! `map`-clause coalescing.
+//!
+//! Listing 3 maps `V` `tofrom` on *every* task, which naively means a
+//! host round-trip per iteration.  "The implemented mapping algorithm
+//! concludes that vector V is sent to the IP from the host memory and its
+//! output forwarded to the next IP in the following iteration" (§III-A):
+//! with the whole graph visible at the sync point, interior transfers
+//! collapse into IP->IP streams.
+
+use anyhow::{bail, Result};
+
+use crate::omp::graph::TaskGraph;
+use crate::omp::task::TaskId;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MovePlan {
+    /// the pipelined buffer
+    pub buffer: String,
+    /// host -> device before the first task (it maps `to`/`tofrom`)
+    pub h2d: bool,
+    /// device -> host after the last task (it maps `from`/`tofrom`)
+    pub d2h: bool,
+    /// host round-trips eliminated by coalescing
+    pub saved_roundtrips: usize,
+}
+
+/// Plan data movement for a chain batch.  Every task must map exactly one
+/// buffer and it must be the same buffer (the paper's pipelines; richer
+/// layouts would extend this analysis, not the mechanism).
+pub fn coalesce(graph: &TaskGraph, tasks: &[TaskId]) -> Result<MovePlan> {
+    if tasks.is_empty() {
+        bail!("empty device batch");
+    }
+    let first = graph.task(tasks[0]);
+    if first.maps.len() != 1 {
+        bail!(
+            "task {} maps {} buffers; the VC709 plugin streams exactly one \
+             grid per pipeline",
+            first.id.0,
+            first.maps.len()
+        );
+    }
+    let buffer = first.maps[0].1.clone();
+    for id in tasks {
+        let t = graph.task(*id);
+        if t.maps.len() != 1 || t.maps[0].1 != buffer {
+            bail!(
+                "task {} maps '{}' but the pipeline streams '{}' — \
+                 mixed-buffer pipelines are not supported",
+                id.0,
+                t.maps.first().map(|(_, n)| n.as_str()).unwrap_or("<none>"),
+                buffer
+            );
+        }
+    }
+    let h2d = graph.task(tasks[0]).maps[0].0.to_device();
+    let d2h = graph.task(*tasks.last().unwrap()).maps[0].0.from_device();
+    // every interior tofrom would have been a d2h+h2d round-trip
+    let saved = tasks.len().saturating_sub(1);
+    Ok(MovePlan { buffer, h2d, d2h, saved_roundtrips: saved })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::device::DeviceId;
+    use crate::omp::task::{DepVar, MapDir, Task};
+
+    fn chain(n: usize, dir: MapDir, buf: &str) -> (TaskGraph, Vec<TaskId>) {
+        let mut g = TaskGraph::new();
+        let mut ids = Vec::new();
+        for i in 0..n {
+            ids.push(g.add(Task {
+                id: TaskId(0),
+                base_name: "f".into(),
+                fn_name: "hw_f".into(),
+                device: DeviceId(1),
+                maps: vec![(dir, buf.into())],
+                deps_in: vec![DepVar(i)],
+                deps_out: vec![DepVar(i + 1)],
+                nowait: true,
+            }));
+        }
+        (g, ids)
+    }
+
+    #[test]
+    fn listing3_tofrom_chain() {
+        let (g, ids) = chain(240, MapDir::ToFrom, "V");
+        let plan = coalesce(&g, &ids).unwrap();
+        assert_eq!(plan.buffer, "V");
+        assert!(plan.h2d && plan.d2h);
+        assert_eq!(plan.saved_roundtrips, 239);
+    }
+
+    #[test]
+    fn directions_respected() {
+        let (g, ids) = chain(4, MapDir::To, "V");
+        let plan = coalesce(&g, &ids).unwrap();
+        assert!(plan.h2d && !plan.d2h);
+        let (g, ids) = chain(4, MapDir::From, "V");
+        let plan = coalesce(&g, &ids).unwrap();
+        assert!(!plan.h2d && plan.d2h);
+    }
+
+    #[test]
+    fn mixed_buffers_rejected() {
+        let (mut g, mut ids) = chain(2, MapDir::ToFrom, "V");
+        ids.push(g.add(Task {
+            id: TaskId(0),
+            base_name: "f".into(),
+            fn_name: "hw_f".into(),
+            device: DeviceId(1),
+            maps: vec![(MapDir::ToFrom, "W".into())],
+            deps_in: vec![DepVar(2)],
+            deps_out: vec![DepVar(3)],
+            nowait: true,
+        }));
+        assert!(coalesce(&g, &ids).is_err());
+        assert!(coalesce(&g, &[]).is_err());
+    }
+}

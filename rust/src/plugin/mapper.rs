@@ -1,0 +1,237 @@
+//! Task -> IP mapping: "as in our experiments, the FPGAs are connected in
+//! a ring topology, a round-robin algorithm is used to map tasks to IPs.
+//! Each task is mapped in a circular order to the free IP that is closest
+//! to the host computer." (§III-A)
+//!
+//! Tasks arrive in chain order.  IPs are enumerated board 0 first (the
+//! board on the host's PCIe), then eastwards around the ring.  A task
+//! takes the next *matching* free IP (kernel must equal the IP's
+//! synthesized kernel — heterogeneous boards are supported by skipping);
+//! when no free IP remains, the pass closes, all IPs become free again
+//! and mapping restarts at board 0.
+
+use anyhow::{bail, Result};
+
+use crate::stencil::Kernel;
+
+/// A physical IP position in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IpSlot {
+    pub board: usize,
+    pub ip: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// slot per task, in task order
+    pub slots: Vec<IpSlot>,
+    /// pass -> indices into the task order (each pass is a contiguous
+    /// prefix-to-suffix chunk of the chain)
+    pub passes: Vec<Vec<usize>>,
+}
+
+impl Assignment {
+    pub fn total_tasks(&self) -> usize {
+        self.slots.len()
+    }
+    pub fn npasses(&self) -> usize {
+        self.passes.len()
+    }
+    /// Slots of one pass, in stream order.
+    pub fn pass_slots(&self, p: usize) -> Vec<IpSlot> {
+        self.passes[p].iter().map(|&t| self.slots[t]).collect()
+    }
+}
+
+/// `cluster_ips[b][i]` = kernel synthesized into IP i of board b.
+pub fn assign(
+    cluster_ips: &[Vec<Kernel>],
+    task_kernels: &[Kernel],
+) -> Result<Assignment> {
+    if cluster_ips.is_empty() || cluster_ips.iter().any(|b| b.is_empty()) {
+        bail!("cluster has no IPs");
+    }
+    // flatten in ring order: board 0 IPs first (closest to the host)
+    let flat: Vec<(IpSlot, Kernel)> = cluster_ips
+        .iter()
+        .enumerate()
+        .flat_map(|(b, ips)| {
+            ips.iter()
+                .enumerate()
+                .map(move |(i, &k)| (IpSlot { board: b, ip: i }, k))
+        })
+        .collect();
+    let total = flat.len();
+
+    let mut slots = Vec::with_capacity(task_kernels.len());
+    let mut passes: Vec<Vec<usize>> = vec![Vec::new()];
+    let mut used = vec![false; total];
+    let mut cursor = 0usize;
+
+    for (t, &k) in task_kernels.iter().enumerate() {
+        // find the next free matching IP at or after the cursor
+        let found = (0..total)
+            .map(|off| (cursor + off) % total)
+            .find(|&j| !used[j] && flat[j].1 == k);
+        let j = match found {
+            Some(j) if j >= cursor => j, // stays in this pass
+            _ => {
+                // either nothing free, or the only matches are behind the
+                // cursor (stream cannot flow backwards through the ring in
+                // one pass): close the pass
+                if passes.last().unwrap().is_empty() {
+                    bail!(
+                        "no IP in the cluster implements kernel {} \
+                         (task {t})",
+                        k.name()
+                    );
+                }
+                passes.push(Vec::new());
+                used.iter_mut().for_each(|u| *u = false);
+                match (0..total).find(|&j| flat[j].1 == k) {
+                    Some(j) => j,
+                    None => bail!(
+                        "no IP in the cluster implements kernel {} \
+                         (task {t})",
+                        k.name()
+                    ),
+                }
+            }
+        };
+        used[j] = true;
+        cursor = j + 1;
+        slots.push(flat[j].0);
+        passes.last_mut().unwrap().push(t);
+        if cursor >= total {
+            // ring exhausted: next task starts a new pass
+            if t + 1 < task_kernels.len() {
+                passes.push(Vec::new());
+                used.iter_mut().for_each(|u| *u = false);
+                cursor = 0;
+            }
+        }
+    }
+    Ok(Assignment { slots, passes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn homog(nboards: usize, ips: usize, k: Kernel) -> Vec<Vec<Kernel>> {
+        vec![vec![k; ips]; nboards]
+    }
+
+    #[test]
+    fn paper_configuration_laplace2d() {
+        // 6 boards x 4 IPs, 240 tasks -> 10 passes of 24
+        let cluster = homog(6, 4, Kernel::Laplace2d);
+        let a = assign(&cluster, &vec![Kernel::Laplace2d; 240]).unwrap();
+        assert_eq!(a.npasses(), 10);
+        assert!(a.passes.iter().all(|p| p.len() == 24));
+        // first pass: board 0 IPs 0..3, board 1 IPs 0..3, ...
+        let s = a.pass_slots(0);
+        assert_eq!(s[0], IpSlot { board: 0, ip: 0 });
+        assert_eq!(s[3], IpSlot { board: 0, ip: 3 });
+        assert_eq!(s[4], IpSlot { board: 1, ip: 0 });
+        assert_eq!(s[23], IpSlot { board: 5, ip: 3 });
+        // round-robin: task 24 wraps back to board 0 IP 0
+        assert_eq!(a.slots[24], IpSlot { board: 0, ip: 0 });
+    }
+
+    #[test]
+    fn partial_last_pass() {
+        let cluster = homog(2, 2, Kernel::Jacobi9pt);
+        let a = assign(&cluster, &vec![Kernel::Jacobi9pt; 10]).unwrap();
+        assert_eq!(a.npasses(), 3);
+        assert_eq!(a.passes[2].len(), 2);
+        assert_eq!(a.pass_slots(2)[1], IpSlot { board: 0, ip: 1 });
+    }
+
+    #[test]
+    fn heterogeneous_boards_skip_mismatched() {
+        // board 0: [laplace2d, jacobi9pt], board 1: [laplace2d]
+        let cluster = vec![
+            vec![Kernel::Laplace2d, Kernel::Jacobi9pt],
+            vec![Kernel::Laplace2d],
+        ];
+        let a = assign(
+            &cluster,
+            &[Kernel::Laplace2d, Kernel::Laplace2d, Kernel::Laplace2d],
+        )
+        .unwrap();
+        // two laplace IPs per pass: (b0,0) then skip jacobi -> (b1,0)
+        assert_eq!(a.slots[0], IpSlot { board: 0, ip: 0 });
+        assert_eq!(a.slots[1], IpSlot { board: 1, ip: 0 });
+        assert_eq!(a.slots[2], IpSlot { board: 0, ip: 0 }); // pass 2
+        assert_eq!(a.npasses(), 2);
+    }
+
+    #[test]
+    fn missing_kernel_is_an_error() {
+        let cluster = homog(2, 2, Kernel::Laplace2d);
+        assert!(assign(&cluster, &[Kernel::Jacobi9pt]).is_err());
+        assert!(assign(&[], &[Kernel::Laplace2d]).is_err());
+    }
+
+    #[test]
+    fn prop_mapping_invariants() {
+        check(
+            "mapper-invariants",
+            50,
+            |rng| {
+                let boards = rng.range(1, 7);
+                let ips = rng.range(1, 5);
+                let tasks = rng.range(1, 100);
+                (boards, ips, tasks)
+            },
+            |&(boards, ips, tasks)| {
+                let cluster = homog(boards, ips, Kernel::Diffusion2d);
+                let a = assign(&cluster, &vec![Kernel::Diffusion2d; tasks])
+                    .map_err(|e| e.to_string())?;
+                // every task mapped exactly once
+                if a.slots.len() != tasks {
+                    return Err("not all tasks mapped".into());
+                }
+                let total = boards * ips;
+                // pass count = ceil(tasks / total)
+                let want = tasks.div_ceil(total);
+                if a.npasses() != want {
+                    return Err(format!(
+                        "expected {want} passes, got {}",
+                        a.npasses()
+                    ));
+                }
+                for (p, pass) in a.passes.iter().enumerate() {
+                    // no IP double-booked within a pass
+                    let mut seen = std::collections::BTreeSet::new();
+                    for &t in pass {
+                        if !seen.insert((a.slots[t].board, a.slots[t].ip)) {
+                            return Err(format!("pass {p}: IP reused"));
+                        }
+                    }
+                    // circular (monotone ring position) order within pass
+                    let pos: Vec<usize> = pass
+                        .iter()
+                        .map(|&t| a.slots[t].board * ips + a.slots[t].ip)
+                        .collect();
+                    if pos.windows(2).any(|w| w[0] >= w[1]) {
+                        return Err(format!("pass {p}: not ring-ordered"));
+                    }
+                    // closest-to-host first: each full pass starts at 0
+                    if pass.len() == total && pos[0] != 0 {
+                        return Err(format!("pass {p}: does not start at 0"));
+                    }
+                }
+                // chain order preserved across passes
+                let flat: Vec<usize> =
+                    a.passes.iter().flatten().copied().collect();
+                if flat != (0..tasks).collect::<Vec<_>>() {
+                    return Err("pass schedule permutes the chain".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! The VC709 libomptarget plugin — the paper's §III-B contribution.
+//!
+//! Receives the deferred task graph from the OpenMP runtime and:
+//! 1. maps tasks to the cluster's IPs round-robin over the ring, closest
+//!    free IP to the host first ([`mapper`]);
+//! 2. coalesces `map` clauses so data moves host->FPGA once, IP->IP in
+//!    between, FPGA->host once ([`datamap`]);
+//! 3. programs every board's CONF registers (switch routes from the
+//!    dependence edges, MFH MAC pairs for board crossings) and executes
+//!    the pass schedule, functionally (data really flows through the
+//!    switch/MFH/NET models) and in virtual time ([`vc709`]).
+//!
+//! The numeric step itself is pluggable ([`backend`]): the PJRT executor
+//! running the AOT Pallas artifacts (the shipped configuration), the Rust
+//! golden model (differential testing), or a timing-only null backend for
+//! figure sweeps.
+
+pub mod backend;
+pub mod datamap;
+pub mod mapper;
+pub mod vc709;
+
+pub use backend::{ExecBackend, GoldenExec, PjrtExec, TimingOnlyExec};
+pub use mapper::{Assignment, IpSlot};
+pub use vc709::Vc709Plugin;

@@ -1,0 +1,182 @@
+//! PJRT CPU client wrapper: HLO text -> compiled executable -> run.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`, with
+//! the 1-tuple unwrap matching aot.py's `return_tuple=True` lowering.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::registry::{ArtifactInfo, ArtifactRegistry};
+use crate::stencil::{Grid, Kernel};
+
+/// One compiled artifact, ready to execute.
+pub struct CompiledArtifact {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledArtifact {
+    /// Execute on a grid; shape must match the artifact exactly (AOT
+    /// lowering is shape-static, like a synthesized bitstream).
+    pub fn run(&self, grid: &Grid) -> Result<Grid> {
+        if grid.shape() != self.info.shape.as_slice() {
+            bail!(
+                "artifact {} is lowered for {:?}, got {:?} — AOT shapes are \
+                 static",
+                self.info.name,
+                self.info.shape,
+                grid.shape()
+            );
+        }
+        let dims: Vec<i64> = grid.shape().iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(grid.data()).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        Grid::from_vec(grid.shape(), data)
+    }
+}
+
+/// The PJRT client plus a compile cache (one compile per artifact per
+/// process, like one bitstream load per FPGA).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub registry: ArtifactRegistry,
+    cache: HashMap<String, std::rc::Rc<CompiledArtifact>>,
+    pub compile_count: usize,
+}
+
+impl PjrtRuntime {
+    pub fn new(registry: ArtifactRegistry) -> Result<PjrtRuntime> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, registry, cache: HashMap::new(), compile_count: 0 })
+    }
+
+    pub fn from_dir(dir: &str) -> Result<PjrtRuntime> {
+        PjrtRuntime::new(ArtifactRegistry::load(dir)?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<CompiledArtifact>> {
+        if let Some(c) = self.cache.get(name) {
+            return Ok(c.clone());
+        }
+        let info = self
+            .registry
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.registry.path_of(&info);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.compile_count += 1;
+        let c = std::rc::Rc::new(CompiledArtifact { info, exe });
+        self.cache.insert(name.to_string(), c.clone());
+        Ok(c)
+    }
+
+    /// Load the single-step executable for (kernel, shape).
+    pub fn load_step(
+        &mut self,
+        kernel: Kernel,
+        shape: &[usize],
+    ) -> Result<std::rc::Rc<CompiledArtifact>> {
+        let name = self.registry.find_step(kernel, shape)?.name.clone();
+        self.load(&name)
+    }
+
+    /// Load the fused k-chain executable if it was shipped.
+    pub fn load_chain(
+        &mut self,
+        kernel: Kernel,
+        shape: &[usize],
+        k: usize,
+    ) -> Result<Option<std::rc::Rc<CompiledArtifact>>> {
+        match self.registry.find_chain(kernel, shape, k) {
+            None => Ok(None),
+            Some(a) => {
+                let name = a.name.clone();
+                Ok(Some(self.load(&name)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::workload::small_workload;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some(PjrtRuntime::from_dir("artifacts").unwrap())
+    }
+
+    #[test]
+    fn pjrt_step_matches_golden_all_kernels() {
+        let Some(mut rt) = runtime() else { return };
+        for k in crate::stencil::kernels::ALL_KERNELS {
+            let w = small_workload(k);
+            let exe = rt.load_step(k, &w.shape).unwrap();
+            let g = Grid::random(&w.shape, 7).unwrap();
+            let got = exe.run(&g).unwrap();
+            let want = k.apply(&g).unwrap();
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-5, "{}: pjrt vs golden diff {diff}", k.name());
+        }
+    }
+
+    #[test]
+    fn pjrt_chain_matches_iterated_golden() {
+        let Some(mut rt) = runtime() else { return };
+        let k = Kernel::Diffusion2d;
+        let w = small_workload(k);
+        let exe = rt.load_chain(k, &w.shape, 4).unwrap().unwrap();
+        let g = Grid::random(&w.shape, 3).unwrap();
+        let got = exe.run(&g).unwrap();
+        let want = k.iterate(&g, 4).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn compile_cache_hits() {
+        let Some(mut rt) = runtime() else { return };
+        let k = Kernel::Laplace2d;
+        let w = small_workload(k);
+        rt.load_step(k, &w.shape).unwrap();
+        let n = rt.compile_count;
+        rt.load_step(k, &w.shape).unwrap();
+        assert_eq!(rt.compile_count, n, "second load must hit the cache");
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let Some(mut rt) = runtime() else { return };
+        let k = Kernel::Laplace2d;
+        let w = small_workload(k);
+        let exe = rt.load_step(k, &w.shape).unwrap();
+        let wrong = Grid::zeros(&[8, 8]).unwrap();
+        assert!(exe.run(&wrong).is_err());
+    }
+}

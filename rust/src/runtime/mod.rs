@@ -1,0 +1,13 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt` produced
+//! by `make artifacts`) and executes them on the request path.
+//!
+//! Python never runs here: the interchange is HLO **text** (see
+//! `python/compile/aot.py` for why text and not serialized protos), parsed
+//! and compiled by the `xla` crate's PJRT CPU client once per artifact and
+//! cached.
+
+pub mod client;
+pub mod registry;
+
+pub use client::{CompiledArtifact, PjrtRuntime};
+pub use registry::{ArtifactInfo, ArtifactRegistry};

@@ -1,0 +1,210 @@
+//! Artifact manifest: the index `aot.py` writes next to the HLO files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::stencil::Kernel;
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kernel: Kernel,
+    /// "step" (one iteration) or "chain" (iters_fused iterations fused).
+    pub kind: String,
+    pub tag: String,
+    pub shape: Vec<usize>,
+    pub iters_fused: usize,
+    pub flops_per_cell: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl ArtifactRegistry {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRegistry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let v = Value::parse(&text).context("manifest.json parse error")?;
+        if v.get("format").as_u64() != Some(1) {
+            bail!("unsupported manifest format {:?}", v.get("format"));
+        }
+        if v.get("interchange").as_str() != Some("hlo-text") {
+            bail!("manifest interchange must be hlo-text");
+        }
+        let mut artifacts = Vec::new();
+        for e in v
+            .get("artifacts")
+            .as_arr()
+            .context("manifest: missing artifacts")?
+        {
+            let name = e
+                .get("name")
+                .as_str()
+                .context("artifact missing name")?
+                .to_string();
+            let shape: Vec<usize> = e
+                .get("shape")
+                .as_arr()
+                .context("artifact missing shape")?
+                .iter()
+                .map(|d| d.as_usize().context("bad shape dim"))
+                .collect::<Result<_>>()?;
+            artifacts.push(ArtifactInfo {
+                kernel: Kernel::from_name(
+                    e.get("kernel").as_str().context("missing kernel")?,
+                )?,
+                kind: e
+                    .get("kind")
+                    .as_str()
+                    .context("missing kind")?
+                    .to_string(),
+                tag: e.get("tag").as_str().unwrap_or("").to_string(),
+                iters_fused: e.get("iters_fused").as_usize().unwrap_or(1),
+                flops_per_cell: e
+                    .get("flops_per_cell")
+                    .as_usize()
+                    .context("missing flops_per_cell")?,
+                file: e
+                    .get("file")
+                    .as_str()
+                    .context("missing file")?
+                    .to_string(),
+                name,
+                shape,
+            });
+        }
+        let reg = ArtifactRegistry { dir, artifacts };
+        reg.validate()?;
+        Ok(reg)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for a in &self.artifacts {
+            if a.shape.len() != a.kernel.ndim() {
+                bail!("artifact {}: shape/kernel ndim mismatch", a.name);
+            }
+            if a.flops_per_cell != a.kernel.flops_per_cell() {
+                bail!(
+                    "artifact {}: manifest flops_per_cell {} disagrees with \
+                     the Rust kernel table {} — python/rust drifted",
+                    a.name,
+                    a.flops_per_cell,
+                    a.kernel.flops_per_cell()
+                );
+            }
+            if !self.path_of(a).exists() {
+                bail!("artifact file missing: {}", self.path_of(a).display());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn path_of(&self, a: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// Single-step artifact for (kernel, shape).
+    pub fn find_step(&self, kernel: Kernel, shape: &[usize]) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.kernel == kernel && a.kind == "step" && a.shape == shape
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no step artifact for {} {:?}; available: {}",
+                    kernel.name(),
+                    shape,
+                    self.names().join(", ")
+                )
+            })
+    }
+
+    /// Fused chain artifact of exactly `k` iterations, if shipped.
+    pub fn find_chain(
+        &self,
+        kernel: Kernel,
+        shape: &[usize],
+        k: usize,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.kernel == kernel
+                && a.kind == "chain"
+                && a.shape == shape
+                && a.iters_fused == k
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_shipped_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let reg = ArtifactRegistry::load("artifacts").unwrap();
+        assert!(reg.artifacts.len() >= 10);
+        // every kernel has paper + small step artifacts
+        for k in crate::stencil::kernels::ALL_KERNELS {
+            let w = crate::stencil::workload::paper_workload(k);
+            assert!(reg.find_step(k, &w.shape).is_ok(), "{}", k.name());
+            let s = crate::stencil::workload::small_workload(k);
+            assert!(reg.find_step(k, &s.shape).is_ok());
+            assert!(reg.find_chain(k, &s.shape, 4).is_some());
+        }
+        // laplace2d ships a paper-shape chain4 (4 IPs per FPGA)
+        assert!(reg
+            .find_chain(Kernel::Laplace2d, &[4096, 512], 4)
+            .is_some());
+        assert!(reg.find_chain(Kernel::Laplace2d, &[4096, 512], 7).is_none());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = ArtifactRegistry::load("/nonexistent").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join("ompfpga-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"format\": 2}").unwrap();
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":1,"interchange":"hlo-text","artifacts":
+                [{"name":"x","kernel":"laplace2d","kind":"step",
+                  "shape":[4,4],"flops_per_cell":9,"file":"x.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        // flops_per_cell disagrees with the kernel table -> drift error
+        let err = ArtifactRegistry::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("drifted"), "{err}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event timing model (DESIGN.md §5).
+//!
+//! Virtual time is `f64` seconds.  Every hardware hop (PCIe DMA, VFIFO,
+//! A-SWT, IP stream, MFH, optical link) is a [`server::Server`] — a
+//! rate+latency resource processing chunks in FIFO order — and a pass
+//! through the pipeline is evaluated with a store-and-forward max-plus
+//! recurrence over chunks ([`pipeline`]).  The same byte counts that the
+//! functional model moves are what get timed, so functional and timing
+//! views cannot drift apart.
+
+pub mod pipeline;
+pub mod server;
+pub mod stats;
+
+pub use pipeline::{PassTiming, Pipeline};
+pub use server::Server;

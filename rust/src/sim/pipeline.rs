@@ -1,0 +1,197 @@
+//! Chunked max-plus pipeline: the per-pass timing recurrence.
+//!
+//! A pass streams `total_bytes` of grid through an ordered list of hops
+//! (servers) in `chunk_bytes` units.  Store-and-forward at chunk
+//! granularity:
+//!
+//! ```text
+//!   done[c][h] = offer(h, done[c][h-1]) ,  done[c][-1] = release time
+//! ```
+//!
+//! which, with each server's FIFO state, is exactly
+//! `max(done[c][h-1], done[c-1][h]) + ser + lat`.  The pass completes at
+//! `done[last chunk][last hop]`.
+
+use super::server::Server;
+
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    pub hops: Vec<Server>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PassTiming {
+    /// time the last chunk leaves the last hop (relative to pass start)
+    pub makespan_s: f64,
+    pub chunks: usize,
+}
+
+impl Pipeline {
+    pub fn new(hops: Vec<Server>) -> Pipeline {
+        assert!(!hops.is_empty(), "pipeline needs at least one hop");
+        Pipeline { hops }
+    }
+
+    /// Evaluate one pass starting at `start_s`; returns absolute finish.
+    pub fn stream(
+        &mut self,
+        start_s: f64,
+        total_bytes: f64,
+        chunk_bytes: f64,
+    ) -> PassTiming {
+        assert!(chunk_bytes > 0.0);
+        let chunks = (total_bytes / chunk_bytes).ceil().max(1.0) as usize;
+        let mut finish = start_s;
+        let mut remaining = total_bytes;
+        for _ in 0..chunks {
+            let b = remaining.min(chunk_bytes);
+            remaining -= b;
+            let mut t = start_s;
+            for hop in &mut self.hops {
+                t = hop.offer(t, b);
+            }
+            finish = finish.max(t);
+        }
+        PassTiming { makespan_s: finish - start_s, chunks }
+    }
+
+    /// Sum of per-hop serialization for `bytes` — the no-pipelining lower
+    /// bound sanity check used in tests.
+    pub fn serial_time(&self, bytes: f64) -> f64 {
+        self.hops
+            .iter()
+            .map(|h| {
+                if h.rate_bps.is_finite() {
+                    bytes * 8.0 / h.rate_bps
+                } else {
+                    0.0
+                }
+            })
+            .sum::<f64>()
+            + self.hops.iter().map(|h| h.latency_s).sum::<f64>()
+    }
+
+    pub fn reset(&mut self) {
+        for h in &mut self.hops {
+            h.reset();
+        }
+    }
+
+    /// The slowest finite-rate hop — the steady-state bottleneck.
+    pub fn bottleneck_bps(&self) -> f64 {
+        self.hops
+            .iter()
+            .map(|h| h.rate_bps)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn pipe(rates: &[f64]) -> Pipeline {
+        Pipeline::new(
+            rates.iter().map(|&r| Server::new("h", r, 0.0)).collect(),
+        )
+    }
+
+    #[test]
+    fn single_hop_equals_serialization() {
+        let mut p = pipe(&[8e9]);
+        let t = p.stream(0.0, 8_000_000.0, 4096.0);
+        // 8 MB at 8 Gb/s = 8 ms
+        assert!((t.makespan_s - 8e-3).abs() < 1e-9, "{t:?}");
+    }
+
+    #[test]
+    fn pipelined_beats_serial() {
+        let mut p = pipe(&[10e9, 10e9, 10e9]);
+        let bytes = 1_000_000.0;
+        let t = p.stream(0.0, bytes, 1000.0);
+        let serial = p.serial_time(bytes);
+        // 3 equal hops pipelined: ~1x serialization, not 3x
+        assert!(t.makespan_s < 0.5 * serial, "{} vs {serial}", t.makespan_s);
+    }
+
+    #[test]
+    fn bottleneck_dominates() {
+        // fast-slow-fast: throughput set by the slow hop
+        let mut p = pipe(&[40e9, 10e9, 40e9]);
+        let bytes = 4_000_000.0;
+        let t = p.stream(0.0, bytes, 4096.0);
+        let ideal = bytes * 8.0 / 10e9;
+        assert!(t.makespan_s >= ideal);
+        assert!(t.makespan_s < ideal * 1.05, "{} vs {ideal}", t.makespan_s);
+        assert_eq!(p.bottleneck_bps(), 10e9);
+    }
+
+    #[test]
+    fn sequential_passes_queue() {
+        let mut p = pipe(&[10e9]);
+        let t1 = p.stream(0.0, 1e6, 4096.0);
+        let f1 = t1.makespan_s;
+        let t2 = p.stream(f1, 1e6, 4096.0);
+        assert!((t2.makespan_s - f1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_monotone_and_bounded() {
+        check(
+            "pipeline-monotone-bounded",
+            30,
+            |rng| {
+                let hops = rng.range(1, 8);
+                let rates: Vec<f64> = (0..hops)
+                    .map(|_| (1 + rng.range(1, 50)) as f64 * 1e9)
+                    .collect();
+                let bytes = (rng.range(1, 2000) * 1024) as f64;
+                let chunk = (rng.range(1, 32) * 512) as f64;
+                (rates, bytes, chunk)
+            },
+            |(rates, bytes, chunk)| {
+                let mut p = pipe(rates);
+                let t = p.stream(0.0, *bytes, *chunk);
+                // lower bound: serialization at the bottleneck
+                let lb = bytes * 8.0 / p.bottleneck_bps();
+                // upper bound: full store-and-forward of every chunk
+                let ub = p.serial_time(*bytes) + rates.len() as f64 * 1e-3;
+                if t.makespan_s < lb * 0.999 {
+                    return Err(format!("below bound: {} < {lb}", t.makespan_s));
+                }
+                if t.makespan_s > ub * 1.001 {
+                    return Err(format!("above bound: {} > {ub}", t.makespan_s));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_more_chunks_never_slower_throughput() {
+        // halving the chunk size must not increase makespan by more than
+        // one chunk's worth (finer pipelining only helps)
+        check(
+            "pipeline-chunking-helps",
+            20,
+            |rng| {
+                let rates: Vec<f64> =
+                    (0..rng.range(2, 6)).map(|_| 10e9).collect();
+                ((rng.range(64, 4096) * 256) as f64, rates)
+            },
+            |(bytes, rates)| {
+                let coarse = pipe(rates).stream(0.0, *bytes, 65536.0);
+                let fine = pipe(rates).stream(0.0, *bytes, 4096.0);
+                if fine.makespan_s <= coarse.makespan_s * 1.001 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "fine {} > coarse {}",
+                        fine.makespan_s, coarse.makespan_s
+                    ))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! A rate + latency resource: the building block of the timing model.
+
+/// FIFO resource with a serialization rate and a fixed per-chunk latency.
+///
+/// `offer(arrive, bytes)` returns the completion time of a chunk that
+/// arrives at `arrive`: the server starts when both it and the chunk are
+/// free, spends `bytes*8/rate_bps` serializing, and the chunk pops out
+/// `latency_s` after serialization starts.
+#[derive(Debug, Clone)]
+pub struct Server {
+    pub name: &'static str,
+    pub rate_bps: f64,
+    pub latency_s: f64,
+    next_free: f64,
+    pub busy_s: f64,
+    pub bytes: f64,
+}
+
+impl Server {
+    pub fn new(name: &'static str, rate_bps: f64, latency_s: f64) -> Server {
+        assert!(rate_bps > 0.0, "{name}: rate must be positive");
+        assert!(latency_s >= 0.0);
+        Server { name, rate_bps, latency_s, next_free: 0.0, busy_s: 0.0, bytes: 0.0 }
+    }
+
+    /// Infinite-rate pass-through with only latency (e.g. the switch hop).
+    pub fn latency_only(name: &'static str, latency_s: f64) -> Server {
+        Server::new(name, f64::INFINITY, latency_s)
+    }
+
+    pub fn offer(&mut self, arrive: f64, bytes: f64) -> f64 {
+        let start = arrive.max(self.next_free);
+        let ser = if self.rate_bps.is_finite() {
+            bytes * 8.0 / self.rate_bps
+        } else {
+            0.0
+        };
+        self.next_free = start + ser;
+        self.busy_s += ser;
+        self.bytes += bytes;
+        start + ser + self.latency_s
+    }
+
+    /// Utilization over a horizon (for the per-module report).
+    pub fn utilization(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            0.0
+        } else {
+            (self.busy_s / horizon_s).min(1.0)
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.next_free = 0.0;
+        self.busy_s = 0.0;
+        self.bytes = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialization_time() {
+        let mut s = Server::new("net", 10e9, 0.0);
+        // 1250 bytes = 10000 bits at 10 Gb/s = 1 us
+        let done = s.offer(0.0, 1250.0);
+        assert!((done - 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fifo_backlog() {
+        let mut s = Server::new("x", 8e9, 0.0);
+        // each 1000-byte chunk takes 1 us to serialize
+        let d1 = s.offer(0.0, 1000.0);
+        let d2 = s.offer(0.0, 1000.0); // queues behind the first
+        assert!((d1 - 1e-6).abs() < 1e-12);
+        assert!((d2 - 2e-6).abs() < 1e-12);
+        // a chunk arriving later than the backlog start waits only itself
+        let d3 = s.offer(10e-6, 1000.0);
+        assert!((d3 - 11e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_pipelines() {
+        let mut s = Server::new("link", 8e9, 5e-6);
+        let d1 = s.offer(0.0, 1000.0);
+        let d2 = s.offer(0.0, 1000.0);
+        // latency adds to each, but does not serialize
+        assert!((d1 - 6e-6).abs() < 1e-12);
+        assert!((d2 - 7e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_only_server() {
+        let mut s = Server::latency_only("swt", 2e-6);
+        let d = s.offer(1e-6, 1e9);
+        assert!((d - 3e-6).abs() < 1e-12);
+        assert_eq!(s.busy_s, 0.0);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let mut s = Server::new("x", 8e9, 0.0);
+        s.offer(0.0, 1000.0);
+        assert!((s.utilization(2e-6) - 0.5).abs() < 1e-9);
+        assert_eq!(s.utilization(0.0), 0.0);
+        s.reset();
+        assert_eq!(s.busy_s, 0.0);
+    }
+}

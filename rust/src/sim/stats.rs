@@ -1,0 +1,98 @@
+//! Per-module accounting rolled up across a run, for the utilization
+//! report (`omp-fpga run --report`) and EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct ModuleStats {
+    pub bytes: f64,
+    pub busy_s: f64,
+    pub operations: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub modules: BTreeMap<String, ModuleStats>,
+    pub virtual_time_s: f64,
+    pub passes: usize,
+}
+
+impl RunStats {
+    pub fn record(&mut self, module: &str, bytes: f64, busy_s: f64) {
+        let m = self.modules.entry(module.to_string()).or_default();
+        m.bytes += bytes;
+        m.busy_s += busy_s;
+        m.operations += 1;
+    }
+
+    pub fn absorb_server(&mut self, s: &crate::sim::Server) {
+        let m = self.modules.entry(s.name.to_string()).or_default();
+        m.bytes += s.bytes;
+        m.busy_s += s.busy_s;
+        m.operations += 1;
+    }
+
+    pub fn utilization(&self, module: &str) -> f64 {
+        match self.modules.get(module) {
+            Some(m) if self.virtual_time_s > 0.0 => {
+                (m.busy_s / self.virtual_time_s).min(1.0)
+            }
+            _ => 0.0,
+        }
+    }
+
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut out = vec![format!(
+            "virtual time {:.6} s over {} passes",
+            self.virtual_time_s, self.passes
+        )];
+        for (name, m) in &self.modules {
+            out.push(format!(
+                "  {:<14} {:>12.0} bytes  busy {:>10.6} s  util {:>5.1}%",
+                name,
+                m.bytes,
+                m.busy_s,
+                100.0 * self.utilization(name)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut st = RunStats::default();
+        st.record("net", 100.0, 1.0);
+        st.record("net", 50.0, 0.5);
+        st.virtual_time_s = 3.0;
+        assert_eq!(st.modules["net"].bytes, 150.0);
+        assert_eq!(st.modules["net"].operations, 2);
+        assert!((st.utilization("net") - 0.5).abs() < 1e-12);
+        assert_eq!(st.utilization("missing"), 0.0);
+    }
+
+    #[test]
+    fn absorbs_server() {
+        let mut s = crate::sim::Server::new("pcie", 8e9, 0.0);
+        s.offer(0.0, 1000.0);
+        let mut st = RunStats::default();
+        st.absorb_server(&s);
+        assert_eq!(st.modules["pcie"].bytes, 1000.0);
+    }
+
+    #[test]
+    fn summary_shape() {
+        let mut st = RunStats::default();
+        st.record("ip0", 10.0, 0.1);
+        st.virtual_time_s = 1.0;
+        st.passes = 2;
+        let lines = st.summary_lines();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("2 passes"));
+        assert!(lines[1].contains("ip0"));
+    }
+}

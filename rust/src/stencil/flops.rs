@@ -1,0 +1,52 @@
+//! FLOP accounting — the basis of every GFLOPS number in Figures 7–9.
+//!
+//! Convention (documented, consistent across paper reproductions here):
+//! only *interior* cells perform FLOPs (boundary cells copy through), and
+//! one iteration costs `flops_per_cell` per interior cell.
+
+use super::kernels::Kernel;
+
+/// Interior cell count for a radius-1 stencil on `shape`.
+pub fn interior_cells(shape: &[usize]) -> usize {
+    shape.iter().map(|&d| d.saturating_sub(2)).product()
+}
+
+/// FLOPs for `iterations` of `kernel` over `shape`.
+pub fn total_flops(kernel: Kernel, shape: &[usize], iterations: usize) -> f64 {
+    interior_cells(shape) as f64
+        * kernel.flops_per_cell() as f64
+        * iterations as f64
+}
+
+/// GFLOPS given total FLOPs and elapsed seconds.
+pub fn gflops(flops: f64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    flops / seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_count() {
+        assert_eq!(interior_cells(&[4, 5]), 2 * 3);
+        assert_eq!(interior_cells(&[3, 3, 3]), 1);
+        assert_eq!(interior_cells(&[2, 10]), 0);
+    }
+
+    #[test]
+    fn totals() {
+        // laplace2d on 4x5, 10 iters: 6 interior * 4 flops * 10
+        assert_eq!(total_flops(Kernel::Laplace2d, &[4, 5], 10), 240.0);
+    }
+
+    #[test]
+    fn gflops_math() {
+        assert_eq!(gflops(2e9, 1.0), 2.0);
+        assert_eq!(gflops(1e9, 0.5), 2.0);
+        assert_eq!(gflops(1.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Dense fp32 grids (2-D or 3-D), the unit of data every OpenMP task maps.
+
+use anyhow::{bail, Result};
+
+use crate::util::prop::Rng;
+
+/// A dense row-major fp32 grid; `shape.len()` is 2 or 3.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grid {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Grid {
+    pub fn zeros(shape: &[usize]) -> Result<Grid> {
+        if !(shape.len() == 2 || shape.len() == 3) {
+            bail!("grid must be 2-D or 3-D, got {}D", shape.len());
+        }
+        if shape.iter().any(|&d| d == 0) {
+            bail!("grid axes must be non-zero: {shape:?}");
+        }
+        Ok(Grid {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        })
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Grid> {
+        let mut g = Grid::zeros(shape)?;
+        if data.len() != g.data.len() {
+            bail!(
+                "data length {} does not match shape {:?} ({})",
+                data.len(),
+                shape,
+                g.data.len()
+            );
+        }
+        g.data = data;
+        Ok(g)
+    }
+
+    /// Random grid (splitmix64-seeded, reproducible across the test suite
+    /// and the benches).
+    pub fn random(shape: &[usize], seed: u64) -> Result<Grid> {
+        let mut g = Grid::zeros(shape)?;
+        let mut rng = Rng::with_seed(seed);
+        rng.fill_f32(&mut g.data);
+        Ok(g)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+    pub fn cells(&self) -> usize {
+        self.data.len()
+    }
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn idx2(&self, i: usize, j: usize) -> usize {
+        debug_assert_eq!(self.ndim(), 2);
+        i * self.shape[1] + j
+    }
+
+    #[inline]
+    pub fn idx3(&self, i: usize, j: usize, k: usize) -> usize {
+        debug_assert_eq!(self.ndim(), 3);
+        (i * self.shape[1] + j) * self.shape[2] + k
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[self.idx2(i, j)]
+    }
+
+    #[inline]
+    pub fn at3(&self, i: usize, j: usize, k: usize) -> f32 {
+        self.data[self.idx3(i, j, k)]
+    }
+
+    /// Largest absolute difference, for numerics comparison.
+    pub fn max_abs_diff(&self, other: &Grid) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Grid, tol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= tol
+    }
+
+    /// Order-independent fingerprint (sum + L2) used in reports/logs.
+    pub fn checksum(&self) -> (f64, f64) {
+        let mut sum = 0f64;
+        let mut sq = 0f64;
+        for &v in &self.data {
+            sum += v as f64;
+            sq += (v as f64) * (v as f64);
+        }
+        (sum, sq.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape_checks() {
+        let g = Grid::zeros(&[4, 6]).unwrap();
+        assert_eq!(g.cells(), 24);
+        assert_eq!(g.bytes(), 96);
+        assert!(Grid::zeros(&[4]).is_err());
+        assert!(Grid::zeros(&[2, 0]).is_err());
+        assert!(Grid::zeros(&[1, 2, 3, 4]).is_err());
+        assert!(Grid::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let g = Grid::from_vec(&[2, 3], (0..6).map(|v| v as f32).collect())
+            .unwrap();
+        assert_eq!(g.at2(0, 0), 0.0);
+        assert_eq!(g.at2(0, 2), 2.0);
+        assert_eq!(g.at2(1, 0), 3.0);
+        let g3 =
+            Grid::from_vec(&[2, 2, 2], (0..8).map(|v| v as f32).collect())
+                .unwrap();
+        assert_eq!(g3.at3(1, 0, 1), 5.0);
+    }
+
+    #[test]
+    fn random_reproducible() {
+        let a = Grid::random(&[5, 5], 42).unwrap();
+        let b = Grid::random(&[5, 5], 42).unwrap();
+        let c = Grid::random(&[5, 5], 43).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn diff_and_checksum() {
+        let a = Grid::random(&[4, 4], 1).unwrap();
+        let mut b = a.clone();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        assert!(a.allclose(&b, 0.0));
+        b.data_mut()[5] += 0.5;
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+        assert!(!a.allclose(&b, 0.1));
+        assert_ne!(a.checksum(), b.checksum());
+    }
+}

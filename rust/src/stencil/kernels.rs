@@ -1,0 +1,417 @@
+//! The five Table-I stencil kernels — Rust golden model.
+//!
+//! Coefficients mirror `python/compile/kernels/common.py` exactly; the
+//! golden model, ref.py, and the Pallas/PJRT artifacts must agree to fp32
+//! tolerance (asserted by integration tests).  Boundary cells copy through
+//! unchanged; interior cells update.
+
+use anyhow::{bail, Result};
+
+use super::grid::Grid;
+
+/// Diffusion-2D C1..C5 over (W, N, C, S, E).
+pub const DIFFUSION2D_C: [f32; 5] = [0.125, 0.125, 0.5, 0.125, 0.125];
+/// Jacobi 9-pt C1..C9, row-major over the 3x3 window.
+pub const JACOBI9PT_C: [f32; 9] =
+    [0.05, 0.1, 0.05, 0.1, 0.4, 0.1, 0.05, 0.1, 0.05];
+/// Diffusion-3D C1..C6, the six printed Table-I terms.
+pub const DIFFUSION3D_C: [f32; 6] = [0.1, 0.1, 0.1, 0.5, 0.1, 0.1];
+/// Laplace-3D: mean of the six face neighbours.
+pub const LAPLACE3D_C: f32 = 1.0 / 6.0;
+
+/// A Table-I stencil IP kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kernel {
+    Laplace2d,
+    Diffusion2d,
+    Jacobi9pt,
+    Laplace3d,
+    Diffusion3d,
+}
+
+pub const ALL_KERNELS: [Kernel; 5] = [
+    Kernel::Laplace2d,
+    Kernel::Diffusion2d,
+    Kernel::Jacobi9pt,
+    Kernel::Laplace3d,
+    Kernel::Diffusion3d,
+];
+
+impl Kernel {
+    /// Canonical name, matching the python registry and artifact names.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Laplace2d => "laplace2d",
+            Kernel::Diffusion2d => "diffusion2d",
+            Kernel::Jacobi9pt => "jacobi9pt",
+            Kernel::Laplace3d => "laplace3d",
+            Kernel::Diffusion3d => "diffusion3d",
+        }
+    }
+
+    /// Display name as printed in the paper's tables/figures.
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            Kernel::Laplace2d => "Laplace 2D",
+            Kernel::Diffusion2d => "Diffusion 2D",
+            Kernel::Jacobi9pt => "Jacobi 9-pt. 2-D",
+            Kernel::Laplace3d => "Laplace 3D",
+            Kernel::Diffusion3d => "Diffusion 3D",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Kernel> {
+        for k in ALL_KERNELS {
+            if k.name() == name {
+                return Ok(k);
+            }
+        }
+        bail!("unknown kernel '{name}'")
+    }
+
+    pub fn ndim(self) -> usize {
+        match self {
+            Kernel::Laplace2d | Kernel::Diffusion2d | Kernel::Jacobi9pt => 2,
+            Kernel::Laplace3d | Kernel::Diffusion3d => 3,
+        }
+    }
+
+    /// FLOPs per interior cell per iteration (Table-I op counts; mirrors
+    /// `FLOPS_PER_CELL` in python).
+    pub fn flops_per_cell(self) -> usize {
+        match self {
+            Kernel::Laplace2d => 4,
+            Kernel::Diffusion2d => 9,
+            Kernel::Jacobi9pt => 17,
+            Kernel::Laplace3d => 6,
+            Kernel::Diffusion3d => 11,
+        }
+    }
+
+    /// (adds, muls) per interior cell — feeds the DSP/LUT resource model.
+    pub fn op_counts(self) -> (usize, usize) {
+        match self {
+            Kernel::Laplace2d => (3, 1),
+            Kernel::Diffusion2d => (4, 5),
+            Kernel::Jacobi9pt => (8, 9),
+            Kernel::Laplace3d => (5, 1),
+            Kernel::Diffusion3d => (5, 6),
+        }
+    }
+
+    /// Apply one iteration out-of-place.
+    pub fn apply(self, src: &Grid) -> Result<Grid> {
+        let mut dst = src.clone();
+        self.apply_into(src, &mut dst)?;
+        Ok(dst)
+    }
+
+    /// Apply one iteration into an existing buffer (hot-path variant: no
+    /// allocation).  `dst` must have the same shape as `src`; boundary
+    /// cells are copied from `src`.
+    pub fn apply_into(self, src: &Grid, dst: &mut Grid) -> Result<()> {
+        if src.shape() != dst.shape() {
+            bail!("src/dst shape mismatch");
+        }
+        if src.ndim() != self.ndim() {
+            bail!(
+                "{} expects {}D grid, got {}D",
+                self.name(),
+                self.ndim(),
+                src.ndim()
+            );
+        }
+        if src.shape().iter().any(|&d| d < 3) {
+            bail!("grid too small for radius-1 stencil: {:?}", src.shape());
+        }
+        match self {
+            Kernel::Laplace2d => apply2(src, dst, |w, n, c, s, e| {
+                let _ = c;
+                0.25 * (w + n + s + e)
+            }),
+            Kernel::Diffusion2d => apply2(src, dst, |w, n, c, s, e| {
+                DIFFUSION2D_C[0] * w
+                    + DIFFUSION2D_C[1] * n
+                    + DIFFUSION2D_C[2] * c
+                    + DIFFUSION2D_C[3] * s
+                    + DIFFUSION2D_C[4] * e
+            }),
+            Kernel::Jacobi9pt => apply_jacobi9(src, dst),
+            Kernel::Laplace3d => apply3_laplace(src, dst),
+            Kernel::Diffusion3d => apply3_diffusion(src, dst),
+        }
+        Ok(())
+    }
+
+    /// Apply `n` iterations, ping-ponging two buffers.
+    pub fn iterate(self, src: &Grid, n: usize) -> Result<Grid> {
+        let mut a = src.clone();
+        let mut b = src.clone();
+        for _ in 0..n {
+            self.apply_into(&a, &mut b)?;
+            std::mem::swap(&mut a, &mut b);
+        }
+        Ok(a)
+    }
+}
+
+/// Shared 2-D driver: f(west, north, centre, south, east).
+fn apply2(src: &Grid, dst: &mut Grid, f: impl Fn(f32, f32, f32, f32, f32) -> f32) {
+    let (h, w) = (src.shape()[0], src.shape()[1]);
+    let s = src.data();
+    let d = dst.data_mut();
+    // boundary rows/cols copy through
+    d[..w].copy_from_slice(&s[..w]);
+    d[(h - 1) * w..].copy_from_slice(&s[(h - 1) * w..]);
+    for i in 1..h - 1 {
+        let row = i * w;
+        d[row] = s[row];
+        d[row + w - 1] = s[row + w - 1];
+        for j in 1..w - 1 {
+            let c = row + j;
+            d[c] = f(s[c - 1], s[c - w], s[c], s[c + w], s[c + 1]);
+        }
+    }
+}
+
+fn apply_jacobi9(src: &Grid, dst: &mut Grid) {
+    let (h, w) = (src.shape()[0], src.shape()[1]);
+    let s = src.data();
+    let d = dst.data_mut();
+    d[..w].copy_from_slice(&s[..w]);
+    d[(h - 1) * w..].copy_from_slice(&s[(h - 1) * w..]);
+    let c = JACOBI9PT_C;
+    for i in 1..h - 1 {
+        let row = i * w;
+        d[row] = s[row];
+        d[row + w - 1] = s[row + w - 1];
+        for j in 1..w - 1 {
+            let p = row + j;
+            d[p] = c[0] * s[p - w - 1]
+                + c[1] * s[p - w]
+                + c[2] * s[p - w + 1]
+                + c[3] * s[p - 1]
+                + c[4] * s[p]
+                + c[5] * s[p + 1]
+                + c[6] * s[p + w - 1]
+                + c[7] * s[p + w]
+                + c[8] * s[p + w + 1];
+        }
+    }
+}
+
+fn apply3_laplace(src: &Grid, dst: &mut Grid) {
+    let (ni, nj, nk) = (src.shape()[0], src.shape()[1], src.shape()[2]);
+    let s = src.data();
+    let d = dst.data_mut();
+    d.copy_from_slice(s);
+    let (sj, si) = (nk, nj * nk);
+    for i in 1..ni - 1 {
+        for j in 1..nj - 1 {
+            let base = i * si + j * sj;
+            for k in 1..nk - 1 {
+                let p = base + k;
+                d[p] = LAPLACE3D_C
+                    * (s[p - si] + s[p + si] + s[p - sj] + s[p + sj]
+                        + s[p - 1] + s[p + 1]);
+            }
+        }
+    }
+}
+
+fn apply3_diffusion(src: &Grid, dst: &mut Grid) {
+    let (ni, nj, nk) = (src.shape()[0], src.shape()[1], src.shape()[2]);
+    let s = src.data();
+    let d = dst.data_mut();
+    d.copy_from_slice(s);
+    let (sj, si) = (nk, nj * nk);
+    let c = DIFFUSION3D_C;
+    // Table-I order: C1*V[i,j-1,k] + C2*V[i-1,j,k] + C3*V[i,j,k-1]
+    //              + C4*V[i,j,k]  + C5*V[i+1,j,k] + C6*V[i,j+1,k]
+    for i in 1..ni - 1 {
+        for j in 1..nj - 1 {
+            let base = i * si + j * sj;
+            for k in 1..nk - 1 {
+                let p = base + k;
+                d[p] = c[0] * s[p - sj]
+                    + c[1] * s[p - si]
+                    + c[2] * s[p - 1]
+                    + c[3] * s[p]
+                    + c[4] * s[p + si]
+                    + c[5] * s[p + sj];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Rng};
+
+    #[test]
+    fn names_roundtrip() {
+        for k in ALL_KERNELS {
+            assert_eq!(Kernel::from_name(k.name()).unwrap(), k);
+        }
+        assert!(Kernel::from_name("nope").is_err());
+    }
+
+    #[test]
+    fn shape_validation() {
+        let g2 = Grid::zeros(&[4, 4]).unwrap();
+        let g3 = Grid::zeros(&[4, 4, 4]).unwrap();
+        assert!(Kernel::Laplace2d.apply(&g3).is_err());
+        assert!(Kernel::Laplace3d.apply(&g2).is_err());
+        let tiny = Grid::zeros(&[2, 5]).unwrap();
+        assert!(Kernel::Laplace2d.apply(&tiny).is_err());
+    }
+
+    #[test]
+    fn laplace2d_hand_computed() {
+        // 3x3: only the centre updates; mean of the 4 edge-midpoints.
+        let g = Grid::from_vec(
+            &[3, 3],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0],
+        )
+        .unwrap();
+        let out = Kernel::Laplace2d.apply(&g).unwrap();
+        assert_eq!(out.at2(1, 1), 0.25 * (4.0 + 2.0 + 8.0 + 6.0));
+        for (i, j) in [(0, 0), (0, 2), (2, 0), (2, 2), (0, 1), (1, 0)] {
+            assert_eq!(out.at2(i, j), g.at2(i, j));
+        }
+    }
+
+    #[test]
+    fn jacobi9_hand_computed() {
+        let g = Grid::from_vec(&[3, 3], (1..=9).map(|v| v as f32).collect())
+            .unwrap();
+        let out = Kernel::Jacobi9pt.apply(&g).unwrap();
+        let c = JACOBI9PT_C;
+        let want: f32 = (1..=9)
+            .zip(c.iter())
+            .map(|(v, ci)| ci * v as f32)
+            .sum();
+        assert!((out.at2(1, 1) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn laplace3d_hand_computed() {
+        let mut g = Grid::zeros(&[3, 3, 3]).unwrap();
+        // set the six face neighbours of the centre to 6.0 each
+        let centre = g.idx3(1, 1, 1);
+        for p in [
+            g.idx3(0, 1, 1),
+            g.idx3(2, 1, 1),
+            g.idx3(1, 0, 1),
+            g.idx3(1, 2, 1),
+            g.idx3(1, 1, 0),
+            g.idx3(1, 1, 2),
+        ] {
+            g.data_mut()[p] = 6.0;
+        }
+        g.data_mut()[centre] = 99.0; // centre value unused by laplace
+        let out = Kernel::Laplace3d.apply(&g).unwrap();
+        assert!((out.at3(1, 1, 1) - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_grid_fixed_point_all_kernels() {
+        for k in ALL_KERNELS {
+            let shape: &[usize] = if k.ndim() == 2 { &[6, 7] } else { &[5, 6, 7] };
+            let mut g = Grid::zeros(shape).unwrap();
+            g.data_mut().fill(2.5);
+            let out = k.apply(&g).unwrap();
+            assert!(out.allclose(&g, 1e-6), "{} not a fixed point", k.name());
+        }
+    }
+
+    #[test]
+    fn prop_linearity() {
+        // f(a*x + b*y) == a*f(x) + b*f(y) for all five (linear) kernels
+        check(
+            "kernel-linearity",
+            40,
+            |rng| {
+                let k = *rng.choose(&ALL_KERNELS);
+                let shape: Vec<usize> = if k.ndim() == 2 {
+                    vec![rng.range(3, 12), rng.range(3, 12)]
+                } else {
+                    vec![rng.range(3, 8), rng.range(3, 8), rng.range(3, 8)]
+                };
+                let x = Grid::random(&shape, rng.next_u64()).unwrap();
+                let y = Grid::random(&shape, rng.next_u64()).unwrap();
+                (k, x, y)
+            },
+            |(k, x, y)| {
+                let (a, b) = (0.5f32, -2.0f32);
+                let mut mix = x.clone();
+                for (m, (xv, yv)) in mix
+                    .data_mut()
+                    .iter_mut()
+                    .zip(x.data().iter().zip(y.data()))
+                {
+                    *m = a * xv + b * yv;
+                }
+                let lhs = k.apply(&mix).unwrap();
+                let fx = k.apply(x).unwrap();
+                let fy = k.apply(y).unwrap();
+                let mut rhs = fx.clone();
+                for (r, (fxv, fyv)) in rhs
+                    .data_mut()
+                    .iter_mut()
+                    .zip(fx.data().iter().zip(fy.data()))
+                {
+                    *r = a * fxv + b * fyv;
+                }
+                if lhs.allclose(&rhs, 1e-4) {
+                    Ok(())
+                } else {
+                    Err(format!("maxdiff {}", lhs.max_abs_diff(&rhs)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_iterate_matches_repeated_apply() {
+        check(
+            "iterate-consistency",
+            20,
+            |rng| {
+                let k = *rng.choose(&ALL_KERNELS);
+                let shape: Vec<usize> = if k.ndim() == 2 {
+                    vec![rng.range(3, 10), rng.range(3, 10)]
+                } else {
+                    vec![rng.range(3, 6), rng.range(3, 6), rng.range(3, 6)]
+                };
+                let n = rng.range(0, 5);
+                (k, Grid::random(&shape, rng.next_u64()).unwrap(), n)
+            },
+            |(k, g, n)| {
+                let fast = k.iterate(g, *n).unwrap();
+                let mut slow = g.clone();
+                for _ in 0..*n {
+                    slow = k.apply(&slow).unwrap();
+                }
+                if fast == slow {
+                    Ok(())
+                } else {
+                    Err("iterate != repeated apply".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn apply_into_no_alias_of_boundary() {
+        let mut rng = Rng::with_seed(9);
+        let mut g = Grid::zeros(&[5, 5]).unwrap();
+        rng.fill_f32(g.data_mut());
+        let out = Kernel::Diffusion2d.apply(&g).unwrap();
+        for j in 0..5 {
+            assert_eq!(out.at2(0, j), g.at2(0, j));
+            assert_eq!(out.at2(4, j), g.at2(4, j));
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Stencil substrate: grids, the five Table-I kernels (Rust golden model,
+//! bit-comparable to the Pallas/PJRT path), FLOP accounting, and the
+//! Table-II workload presets.
+
+pub mod flops;
+pub mod grid;
+pub mod kernels;
+pub mod workload;
+
+pub use grid::Grid;
+pub use kernels::Kernel;
+pub use workload::Workload;

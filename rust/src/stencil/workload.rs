@@ -1,0 +1,133 @@
+//! Table-II workload presets (mirrors `model.TABLE_II` / `model.SMALL` in
+//! python — the pytest suite and `config::validate` cross-check them).
+
+use anyhow::Result;
+
+use super::kernels::Kernel;
+#[cfg(test)]
+use super::kernels::ALL_KERNELS;
+
+/// One row of Table II: a stencil application configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Workload {
+    pub kernel: Kernel,
+    pub shape: Vec<usize>,
+    pub iterations: usize,
+    /// IPs of this kernel instantiated per FPGA (Table II "# IPs").
+    pub ips_per_fpga: usize,
+}
+
+impl Workload {
+    pub fn cells(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn bytes(&self) -> usize {
+        self.cells() * 4
+    }
+    /// Total FLOPs for the full run (all iterations, interior cells).
+    pub fn total_flops(&self) -> f64 {
+        super::flops::total_flops(self.kernel, &self.shape, self.iterations)
+    }
+    /// Scale the grid down by `factor` on the leading axis (used by fast
+    /// tests and the quickstart; keeps the Table-II aspect elsewhere).
+    pub fn scaled(&self, factor: usize) -> Workload {
+        let mut shape = self.shape.clone();
+        shape[0] = (shape[0] / factor).max(3);
+        Workload { shape, ..self.clone() }
+    }
+    pub fn with_iterations(&self, iterations: usize) -> Workload {
+        Workload { iterations, ..self.clone() }
+    }
+    pub fn with_ips(&self, ips_per_fpga: usize) -> Workload {
+        Workload { ips_per_fpga, ..self.clone() }
+    }
+}
+
+/// The Table-II setup for `kernel`.
+pub fn paper_workload(kernel: Kernel) -> Workload {
+    let (shape, ips): (Vec<usize>, usize) = match kernel {
+        Kernel::Laplace2d => (vec![4096, 512], 4),
+        Kernel::Laplace3d => (vec![512, 64, 64], 2),
+        Kernel::Diffusion2d => (vec![4096, 512], 1),
+        Kernel::Diffusion3d => (vec![256, 32, 32], 1),
+        Kernel::Jacobi9pt => (vec![1024, 128], 1),
+    };
+    Workload { kernel, shape, iterations: 240, ips_per_fpga: ips }
+}
+
+/// All five Table-II rows, in the paper's order.
+pub fn paper_workloads() -> Vec<Workload> {
+    [
+        Kernel::Laplace2d,
+        Kernel::Laplace3d,
+        Kernel::Diffusion2d,
+        Kernel::Diffusion3d,
+        Kernel::Jacobi9pt,
+    ]
+    .into_iter()
+    .map(paper_workload)
+    .collect()
+}
+
+/// Small validation workload (matches `model.SMALL` artifact shapes).
+pub fn small_workload(kernel: Kernel) -> Workload {
+    let shape: Vec<usize> = match kernel.ndim() {
+        2 => vec![64, 48],
+        _ => vec![16, 12, 10],
+    };
+    Workload {
+        kernel,
+        shape,
+        iterations: 16,
+        ips_per_fpga: paper_workload(kernel).ips_per_fpga,
+    }
+}
+
+pub fn by_name(name: &str) -> Result<Workload> {
+    Ok(paper_workload(Kernel::from_name(name)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_ii_values() {
+        let w = paper_workload(Kernel::Laplace2d);
+        assert_eq!(w.shape, vec![4096, 512]);
+        assert_eq!(w.iterations, 240);
+        assert_eq!(w.ips_per_fpga, 4);
+        assert_eq!(w.cells(), 4096 * 512);
+        assert_eq!(paper_workload(Kernel::Laplace3d).ips_per_fpga, 2);
+        for k in ALL_KERNELS {
+            let w = paper_workload(k);
+            assert_eq!(w.shape.len(), k.ndim());
+            assert_eq!(w.iterations, 240);
+        }
+    }
+
+    #[test]
+    fn small_matches_python_small() {
+        assert_eq!(small_workload(Kernel::Laplace2d).shape, vec![64, 48]);
+        assert_eq!(
+            small_workload(Kernel::Diffusion3d).shape,
+            vec![16, 12, 10]
+        );
+    }
+
+    #[test]
+    fn scaling_helpers() {
+        let w = paper_workload(Kernel::Laplace2d).scaled(64);
+        assert_eq!(w.shape, vec![64, 512]);
+        assert_eq!(w.with_iterations(60).iterations, 60);
+        assert_eq!(w.with_ips(2).ips_per_fpga, 2);
+        // scaled never collapses below a valid stencil grid
+        assert_eq!(paper_workload(Kernel::Jacobi9pt).scaled(10_000).shape[0], 3);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(by_name("jacobi9pt").unwrap().kernel, Kernel::Jacobi9pt);
+        assert!(by_name("bogus").is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! Measurement harness (criterion substitute): warmup + N timed iterations,
+//! reporting min/median/mean. Used by `rust/benches/*` (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl Measurement {
+    pub fn print(&self) {
+        println!(
+            "{:<48} iters={:<4} min={:>10.3?} median={:>10.3?} mean={:>10.3?}",
+            self.name, self.iters, self.min, self.median, self.mean
+        );
+    }
+}
+
+/// Time `f` with `iters` measured runs after `warmup` runs.
+pub fn time<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        min: samples[0],
+        median: samples[iters / 2],
+        mean,
+    };
+    m.print();
+    m
+}
+
+/// Throughput helper: report items/second based on the median.
+pub fn per_second(m: &Measurement, items: f64) -> f64 {
+    items / m.median.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sanity() {
+        let m = time("noop", 1, 5, || 1 + 1);
+        assert_eq!(m.iters, 5);
+        assert!(m.min <= m.median && m.median <= m.mean * 2);
+    }
+
+    #[test]
+    fn per_second_positive() {
+        let m = time("spin", 0, 3, || {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        assert!(per_second(&m, 100.0) > 0.0);
+    }
+}

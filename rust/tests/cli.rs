@@ -1,0 +1,93 @@
+//! CLI integration: drive the `omp-fpga` binary like a user would.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_omp-fpga"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = bin().args(args).output().expect("spawn omp-fpga");
+    assert!(
+        out.status.success(),
+        "omp-fpga {args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = run_ok(&[]);
+    for sub in ["run", "figures", "resources", "validate", "conf", "inspect"] {
+        assert!(out.contains(sub), "help missing '{sub}'");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn resources_prints_tables() {
+    let out = run_ok(&["resources"]);
+    assert!(out.contains("Table I"));
+    assert!(out.contains("Table II"));
+    assert!(out.contains("Table III"));
+    assert!(out.contains("Fig 10"));
+    assert!(out.contains("DMA/PCIe"));
+    assert!(out.contains("4096x512"));
+}
+
+#[test]
+fn conf_emits_parseable_json() {
+    let out = run_ok(&["conf", "--fpgas", "3", "--kernel", "jacobi9pt"]);
+    let cfg = omp_fpga::config::ClusterConfig::parse(&out).unwrap();
+    assert_eq!(cfg.nfpgas(), 3);
+    assert_eq!(
+        cfg.fpgas[0].ips[0].kernel,
+        omp_fpga::stencil::Kernel::Jacobi9pt
+    );
+}
+
+#[test]
+fn run_golden_small() {
+    let out = run_ok(&[
+        "run", "--kernel", "laplace2d", "--small", "--fpgas", "2",
+        "--ips", "2", "--backend", "golden", "--iterations", "12",
+        "--report",
+    ]);
+    assert!(out.contains("passes=3"), "{out}");
+    assert!(out.contains("GFLOPS"));
+    assert!(out.contains("checksum"));
+    assert!(out.contains("vfifo") || out.contains("net"), "{out}");
+}
+
+#[test]
+fn run_timing_paper_size() {
+    let out = run_ok(&[
+        "run", "--kernel", "diffusion2d", "--fpgas", "6",
+        "--backend", "timing",
+    ]);
+    assert!(out.contains("passes=40"), "{out}");
+}
+
+#[test]
+fn inspect_shows_round_robin() {
+    let out = run_ok(&["inspect", "--kernel", "laplace2d", "--fpgas", "2"]);
+    assert!(out.contains("task   0 -> board 0 IP 0"), "{out}");
+    assert!(out.contains("board 1 IP 0"), "{out}");
+    assert!(out.contains("passes"));
+}
+
+#[test]
+fn validate_if_artifacts_present() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let out = run_ok(&["validate"]);
+    assert!(out.contains("all kernels validated"), "{out}");
+}

@@ -1,0 +1,204 @@
+//! System-level randomized property tests (util::prop, proptest
+//! substitute): whole-stack invariants over random cluster shapes,
+//! workloads and seeds.
+
+use omp_fpga::exec::{run_host_reference, run_stencil_app, RunSpec};
+use omp_fpga::plugin::ExecBackend;
+use omp_fpga::stencil::kernels::ALL_KERNELS;
+use omp_fpga::stencil::{Kernel, Workload};
+use omp_fpga::util::prop::{check, Rng};
+
+fn random_workload(rng: &mut Rng) -> Workload {
+    let k = *rng.choose(&ALL_KERNELS);
+    let shape: Vec<usize> = if k.ndim() == 2 {
+        vec![rng.range(3, 24), rng.range(3, 20)]
+    } else {
+        vec![rng.range(3, 10), rng.range(3, 8), rng.range(3, 8)]
+    };
+    Workload {
+        kernel: k,
+        shape,
+        iterations: rng.range(1, 20),
+        ips_per_fpga: rng.range(1, 4),
+    }
+}
+
+#[test]
+fn prop_any_cluster_preserves_numerics() {
+    // THE OpenMP contract: offloading must be transparent.  Any cluster
+    // geometry, any workload: result == host reference.
+    check(
+        "cluster-numerics-transparent",
+        25,
+        |rng| {
+            let w = random_workload(rng);
+            let fpgas = rng.range(1, 7);
+            let seed = rng.next_u64();
+            (w, fpgas, seed)
+        },
+        |(w, fpgas, seed)| {
+            let mut spec = RunSpec::new(w.clone(), *fpgas, ExecBackend::Golden);
+            spec.seed = *seed;
+            spec.keep_grid = true;
+            let res = run_stencil_app(&spec).map_err(|e| format!("{e:#}"))?;
+            let want =
+                run_host_reference(w, *seed).map_err(|e| e.to_string())?;
+            let got = res.grid.as_ref().unwrap();
+            if !got.allclose(&want, 1e-5) {
+                return Err(format!(
+                    "numerics diverged: max|Δ| {}",
+                    got.max_abs_diff(&want)
+                ));
+            }
+            // pass accounting
+            let total_ips = fpgas * w.ips_per_fpga;
+            let want_passes = w.iterations.div_ceil(total_ips);
+            if res.passes != want_passes {
+                return Err(format!(
+                    "expected {want_passes} passes, got {}",
+                    res.passes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_virtual_time_monotone_in_iterations() {
+    check(
+        "vtime-monotone-iterations",
+        10,
+        |rng| {
+            let w = random_workload(rng).with_ips(rng.range(1, 3));
+            let fpgas = rng.range(1, 4);
+            (w, fpgas)
+        },
+        |(w, fpgas)| {
+            let t = |iters: usize| {
+                let spec = RunSpec::new(
+                    w.with_iterations(iters),
+                    *fpgas,
+                    ExecBackend::TimingOnly,
+                );
+                run_stencil_app(&spec).unwrap().virtual_time_s
+            };
+            let (t1, t2, t3) = (t(2), t(8), t(16));
+            if t1 <= t2 && t2 <= t3 {
+                Ok(())
+            } else {
+                Err(format!("not monotone: {t1} {t2} {t3}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_speedup_bounded_by_resources() {
+    // virtual-time speedup from F boards can never exceed F (no
+    // superlinear artifacts in the model)
+    check(
+        "speedup-bounded",
+        10,
+        |rng| {
+            let mut w = random_workload(rng);
+            w.iterations = rng.range(8, 48);
+            let f = rng.range(2, 7);
+            (w, f)
+        },
+        |(w, f)| {
+            let run = |fpgas: usize| {
+                let spec =
+                    RunSpec::new(w.clone(), fpgas, ExecBackend::TimingOnly);
+                run_stencil_app(&spec).unwrap().virtual_time_s
+            };
+            let s = run(1) / run(*f);
+            if s <= *f as f64 + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("superlinear speedup {s} on {f} boards"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_conf_json_roundtrip() {
+    use omp_fpga::config::ClusterConfig;
+    check(
+        "conf-json-roundtrip",
+        30,
+        |rng| {
+            let fpgas = rng.range(1, 8);
+            let ips = rng.range(1, 4);
+            let k = *rng.choose(&ALL_KERNELS);
+            ClusterConfig::homogeneous(fpgas, ips, k)
+        },
+        |cfg| {
+            let text = cfg.to_json();
+            let back =
+                ClusterConfig::parse(&text).map_err(|e| e.to_string())?;
+            if back.fpgas == cfg.fpgas {
+                Ok(())
+            } else {
+                Err("fpga layout did not roundtrip".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_backend_equivalence_golden_vs_timing_passes() {
+    // the two backends must produce identical schedules (pass counts and
+    // virtual time) — numerics are the only difference
+    check(
+        "backend-schedule-equivalence",
+        10,
+        |rng| (random_workload(rng), rng.range(1, 5)),
+        |(w, f)| {
+            let golden =
+                run_stencil_app(&RunSpec::new(w.clone(), *f, ExecBackend::Golden))
+                    .map_err(|e| format!("{e:#}"))?;
+            let timing = run_stencil_app(&RunSpec::new(
+                w.clone(),
+                *f,
+                ExecBackend::TimingOnly,
+            ))
+            .map_err(|e| format!("{e:#}"))?;
+            if golden.passes != timing.passes {
+                return Err("pass counts differ".into());
+            }
+            if (golden.virtual_time_s - timing.virtual_time_s).abs() > 1e-12 {
+                return Err("virtual time differs between backends".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ip_scaling_never_hurts() {
+    // more IPs per FPGA => virtual time never increases
+    check(
+        "ips-never-hurt",
+        8,
+        |rng| {
+            let mut w = random_workload(rng);
+            w.iterations = rng.range(8, 32);
+            w
+        },
+        |w| {
+            let t = |ips: usize| {
+                let spec =
+                    RunSpec::new(w.with_ips(ips), 1, ExecBackend::TimingOnly);
+                run_stencil_app(&spec).unwrap().virtual_time_s
+            };
+            let (t1, t2, t4) = (t(1), t(2), t(4));
+            if t2 <= t1 * 1.0001 && t4 <= t2 * 1.0001 {
+                Ok(())
+            } else {
+                Err(format!("IP scaling hurt: {t1} {t2} {t4}"))
+            }
+        },
+    );
+}
