@@ -1,0 +1,19 @@
+# Entry points the docs and test skip-messages refer to.
+
+.PHONY: artifacts test clean
+
+# AOT-lower the five Table-I stencils to HLO-text artifacts + manifest.
+# Written to ./artifacts (where the examples, run from the repo root,
+# look) and symlinked at rust/artifacts (where `cargo test`, whose cwd
+# is the rust/ package root, looks) so every consumer agrees.
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+	ln -sfn ../artifacts rust/artifacts
+
+# Tier-1 verification.
+test:
+	cargo build --release
+	cargo test -q
+
+clean:
+	rm -rf target artifacts rust/artifacts results

@@ -1,25 +1,30 @@
-//! Heterogeneous pipeline: CPU tasks and FPGA tasks in ONE dependence
-//! graph — the paper's third contribution ("a single programming model to
-//! run its application on a truly heterogeneous architecture").
+//! Heterogeneous *interleaved* pipeline: CPU tasks and FPGA tasks in ONE
+//! dependence graph — the paper's third contribution ("a single
+//! programming model to run its application on a truly heterogeneous
+//! architecture") — in a shape the old batch executor rejected outright:
 //!
-//! The program: host pre-processing (scale the grid), a 12-iteration
-//! Diffusion-2D pipeline on a 3-board FPGA cluster, then host
-//! post-processing (accumulate a residual) — all expressed as OpenMP
-//! tasks with depend clauses; the runtime splits the graph into host and
-//! vc709 batches automatically.
+//! ```text
+//! host preprocess -> FPGA chain -> host renormalize -> FPGA chain -> host post
+//! ```
+//!
+//! The dependence-aware scheduler condenses this into five device runs
+//! (host/vc709/host/vc709/host), dispatches each as its predecessors
+//! complete, and reports the modelled makespan over the batch DAG.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example heterogeneous
+//! cargo run --release --example heterogeneous
+//! # uses the PJRT artifacts when present (make artifacts), golden model otherwise
 //! ```
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use omp_fpga::config::ClusterConfig;
 use omp_fpga::omp::{DataEnv, MapDir, OmpRuntime};
 use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
 use omp_fpga::stencil::{Grid, Kernel};
 
-const FPGA_ITERS: usize = 12;
+/// FPGA iterations per pipeline stage (two stages total).
+const STAGE_ITERS: usize = 6;
 
 fn main() -> Result<()> {
     let kernel = Kernel::Diffusion2d;
@@ -31,6 +36,14 @@ fn main() -> Result<()> {
         let mut g = env.take("V")?;
         for v in g.data_mut() {
             *v *= 0.5; // normalize input
+        }
+        env.put("V", g);
+        Ok(())
+    });
+    rt.register_software("renormalize", |env| {
+        let mut g = env.take("V")?;
+        for v in g.data_mut() {
+            *v *= 2.0; // mid-pipeline host stage between the FPGA chains
         }
         env.put("V", g);
         Ok(())
@@ -50,16 +63,18 @@ fn main() -> Result<()> {
     });
     rt.declare_hw_variant("do_diffusion2d", "vc709", "hw_diffusion2d", kernel);
 
+    let backend = if omp_fpga::runtime::artifacts_present("artifacts") {
+        ExecBackend::Pjrt
+    } else {
+        ExecBackend::Golden // no artifacts: fall back to the golden model
+    };
     let cfg = ClusterConfig::homogeneous(3, 1, kernel);
-    let fpga = rt.register_device(Box::new(
-        Vc709Plugin::new(&cfg, ExecBackend::Pjrt)
-            .context("run `make artifacts` first")?,
-    ));
+    let fpga = rt.register_device(Box::new(Vc709Plugin::new(&cfg, backend)?));
 
     let input = Grid::random(&shape, 11)?;
     let mut env = DataEnv::new();
     env.insert("V", input.clone());
-    let deps = rt.dep_vars(FPGA_ITERS + 3);
+    let deps = rt.dep_vars(2 * STAGE_ITERS + 4);
 
     let report = rt.parallel(&mut env, |ctx| {
         // host pre-processing task
@@ -68,8 +83,8 @@ fn main() -> Result<()> {
             .depend_out(deps[0])
             .nowait()
             .submit()?;
-        // FPGA pipeline (device clause selects the vc709 plugin)
-        for i in 0..FPGA_ITERS {
+        // first FPGA pipeline (device clause selects the vc709 plugin)
+        for i in 0..STAGE_ITERS {
             ctx.target("do_diffusion2d")
                 .device(fpga)
                 .map(MapDir::ToFrom, "V")
@@ -78,36 +93,67 @@ fn main() -> Result<()> {
                 .nowait()
                 .submit()?;
         }
+        // host mid-pipeline task BETWEEN two FPGA chains — the
+        // interleaving the old executor crashed on
+        let mid = STAGE_ITERS;
+        ctx.task("renormalize")
+            .map(MapDir::ToFrom, "V")
+            .depend_in(deps[mid])
+            .depend_out(deps[mid + 1])
+            .nowait()
+            .submit()?;
+        // second FPGA pipeline
+        for i in 0..STAGE_ITERS {
+            ctx.target("do_diffusion2d")
+                .device(fpga)
+                .map(MapDir::ToFrom, "V")
+                .depend_in(deps[mid + 1 + i])
+                .depend_out(deps[mid + 2 + i])
+                .nowait()
+                .submit()?;
+        }
         // host post-processing task
         ctx.task("postprocess")
             .map(MapDir::ToFrom, "V")
-            .depend_in(deps[FPGA_ITERS])
-            .depend_out(deps[FPGA_ITERS + 1])
+            .depend_in(deps[2 * STAGE_ITERS + 1])
+            .depend_out(deps[2 * STAGE_ITERS + 2])
             .nowait()
             .submit()?;
         Ok(())
     })?;
 
-    // the runtime must have split the graph host -> vc709 -> host
-    println!(
-        "device batches: {:?}",
-        report
-            .batches
-            .iter()
-            .map(|(d, r)| format!("device{}:{} tasks", d.0, r.tasks_run))
-            .collect::<Vec<_>>()
+    // the scheduler must have split the graph host/vc709/host/vc709/host
+    println!("batch timeline (virtual seconds):");
+    for (dev, rep) in &report.batches {
+        println!(
+            "  device {} [{:>2} tasks]  release {:.6}  finish {:.6}",
+            dev.0, rep.tasks_run, rep.release_s, rep.finish_s
+        );
+    }
+    anyhow::ensure!(
+        report.batches.len() == 5,
+        "expected 5 batches (host/fpga/host/fpga/host), got {}",
+        report.batches.len()
     );
-    anyhow::ensure!(report.batches.len() == 3, "expected 3 device batches");
+    println!(
+        "modelled makespan {:.6} s over {} tasks",
+        report.virtual_time_s(),
+        report.tasks
+    );
 
     // verify against the all-software composition
     let mut expected = input.clone();
     for v in expected.data_mut() {
         *v *= 0.5;
     }
-    let expected = kernel.iterate(&expected, FPGA_ITERS)?;
+    let mut expected = kernel.iterate(&expected, STAGE_ITERS)?;
+    for v in expected.data_mut() {
+        *v *= 2.0;
+    }
+    let expected = kernel.iterate(&expected, STAGE_ITERS)?;
     let got = env.take("V")?;
     let diff = got.max_abs_diff(&expected);
-    println!("heterogeneous pipeline vs software max|Δ| = {diff:.3e}");
+    println!("heterogeneous interleaved pipeline vs software max|Δ| = {diff:.3e}");
     anyhow::ensure!(diff < 1e-4, "verification failed");
     println!("heterogeneous OK");
     Ok(())

@@ -1,4 +1,4 @@
-//! End-to-end driver (EXPERIMENTS.md §E2E): the full Table-II Laplace-2D
+//! End-to-end driver (DESIGN.md §4): the full Table-II Laplace-2D
 //! workload — 4096x512 grid, 240 pipelined iterations — on the simulated
 //! 6-board ring, with real numerics through the PJRT-compiled Pallas
 //! artifacts, cross-checked against the pure-host software run.

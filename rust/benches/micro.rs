@@ -1,4 +1,4 @@
-//! Micro-benchmarks of the coordinator hot paths (EXPERIMENTS.md §Perf):
+//! Micro-benchmarks of the coordinator hot paths (DESIGN.md §6):
 //! task-graph construction, mapper, MAC framing, switch forwarding, DES
 //! pass evaluation, golden kernels, and PJRT step execution.
 

@@ -29,7 +29,7 @@ pub struct TimingConfig {
     /// Calibrated to 5 ms so Fig-7's kernel ordering (Laplace-2D >
     /// Laplace-3D > Diffusion-2D > Diffusion-3D > Jacobi) reproduces; the
     /// paper attributes exactly this overhead class to its "archaic"
-    /// infrastructure (§V).  See EXPERIMENTS.md §Calibration.
+    /// infrastructure (§V).  See DESIGN.md §5.
     pub pass_overhead_s: f64,
     /// One-time offload startup per target region: task-graph handoff,
     /// device/bitstream checks and first DMA descriptor programming on

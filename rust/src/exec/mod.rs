@@ -104,12 +104,20 @@ pub fn run_stencil_app(spec: &RunSpec) -> Result<RunResult> {
 
     let grid = env.take("V")?;
     let vtime = report.virtual_time_s();
-    let (passes, module_summary) = report
-        .batches
-        .iter()
-        .find(|(d, _)| *d == fpga)
-        .map(|(_, r)| (r.stats.passes, r.stats.summary_lines()))
-        .unwrap_or_default();
+    // aggregate over ALL of the FPGA device's batches: interleaved
+    // host/FPGA programs produce several, and each contributes its
+    // passes and module accounting — merged into ONE coherent summary
+    let mut fpga_stats = crate::sim::stats::RunStats::default();
+    let mut saw_fpga = false;
+    for (d, r) in &report.batches {
+        if *d == fpga {
+            fpga_stats.merge(&r.stats);
+            saw_fpga = true;
+        }
+    }
+    let passes = fpga_stats.passes;
+    let module_summary =
+        if saw_fpga { fpga_stats.summary_lines() } else { Vec::new() };
     Ok(RunResult {
         spec_label: format!(
             "{} {:?} x{} iters on {} FPGA(s) x {} IPs [{:?}]",

@@ -33,15 +33,26 @@ mod tests {
     use super::*;
 
     fn gflops_at(fig: &Figure, label: &str, f: usize) -> f64 {
-        fig.series
-            .iter()
-            .find(|s| s.label == label)
-            .unwrap_or_else(|| panic!("missing series {label}"))
+        fig.series_named(label)
+            .expect("series lookup")
             .points
             .iter()
             .find(|(x, _)| *x == f)
             .unwrap()
             .1
+    }
+
+    #[test]
+    fn missing_series_is_an_error_not_a_panic() {
+        let fig = Figure {
+            name: "fig7".into(),
+            title: String::new(),
+            x_label: String::new(),
+            y_label: String::new(),
+            series: vec![],
+        };
+        let err = fig.series_named("Laplace 2D").unwrap_err();
+        assert!(err.to_string().contains("no series"), "{err}");
     }
 
     #[test]

@@ -31,6 +31,23 @@ pub struct Figure {
 }
 
 impl Figure {
+    /// Series lookup by label.  Returns a proper error (not a panic) when
+    /// the series is absent, so a partial bench/figure run degrades to a
+    /// reported failure instead of a crash.
+    pub fn series_named(&self, label: &str) -> Result<&Series> {
+        self.series.iter().find(|s| s.label == label).ok_or_else(|| {
+            anyhow::anyhow!(
+                "figure '{}' has no series '{label}' (partial run? available: {})",
+                self.name,
+                self.series
+                    .iter()
+                    .map(|s| s.label.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
     pub fn print(&self) {
         println!("== {}: {} ==", self.name, self.title);
         print!("{:<22}", self.x_label);

@@ -1,7 +1,7 @@
 //! Synthesis estimator — reproduces Fig. 10 (infrastructure resource
 //! distribution) and Table III (per-IP LUT/BRAM/DSP) without Vivado.
 //!
-//! Calibration (see EXPERIMENTS.md for measured-vs-paper):
+//! Calibration (measured-vs-paper deltas: `cargo bench --bench resources`):
 //!
 //! * **DSP** — `16*muls + (3D ? 1 : 0)`: a fp32 multiplier consumes 2
 //!   DSP48s, times 8 PEs; 3-D kernels spend one extra DSP on plane-address

@@ -4,16 +4,18 @@
 //! (Nepomuceno et al., 2021) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! - **L3 (this crate)** — the paper's contribution: an OpenMP-style task
-//!   runtime ([`omp`]) with a libomptarget-like device-plugin interface,
-//!   the VC709 Multi-FPGA plugin ([`plugin`]), a functional model of the
+//!   runtime ([`omp`]) with a libomptarget-like device-plugin interface
+//!   and a dependence-aware batch-DAG scheduler ([`omp::sched`]), the
+//!   VC709 Multi-FPGA plugin ([`plugin`]), a functional model of the
 //!   VC709 board infrastructure ([`hw`]), and a discrete-event timing
 //!   model ([`sim`]).
 //! - **L2/L1 (build-time python)** — the five Table-I stencils as Pallas
 //!   kernels inside JAX step functions, AOT-lowered to HLO text and
 //!   executed from Rust through PJRT ([`runtime`]).
 //!
-//! See DESIGN.md for the full system inventory and the per-experiment
-//! index, and EXPERIMENTS.md for paper-vs-measured results.
+//! See `DESIGN.md` at the repository root for the full system inventory,
+//! the batch-DAG scheduler and its makespan semantics, the timing-model
+//! calibration notes, and the per-experiment index (Figures 6-10).
 
 pub mod config;
 pub mod exec;

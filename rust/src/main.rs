@@ -152,7 +152,7 @@ fn cmd_resources() -> Result<()> {
 /// full Multi-FPGA (2-board) pipeline.
 fn cmd_validate(args: &Args) -> Result<()> {
     let dir = args.flag_or("artifacts", "artifacts");
-    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+    if !omp_fpga::runtime::artifacts_present(&dir) {
         bail!("no artifacts at '{dir}' — run `make artifacts` first");
     }
     let mut failures = 0;

@@ -111,12 +111,20 @@ impl FnRegistry {
     }
 }
 
-/// Per-device execution report.
+/// Per-device execution report for one batch (one scheduler run).
 #[derive(Debug, Clone, Default)]
 pub struct DeviceReport {
     pub tasks_run: usize,
-    /// modelled device time (virtual seconds) — 0 for the host device
+    /// modelled device time spent on this batch (virtual seconds of
+    /// work) — 0 for the host device
     pub virtual_time_s: f64,
+    /// virtual time at which the batch was released to the device (the
+    /// max finish over its predecessor batches in the batch DAG)
+    pub release_s: f64,
+    /// virtual time at which the batch completes:
+    /// `release_s + virtual_time_s`.  `OmpReport::virtual_time_s` is the
+    /// max of these — the modelled makespan.
+    pub finish_s: f64,
     /// wall-clock seconds spent executing numerics
     pub wall_s: f64,
     pub stats: RunStats,
@@ -134,12 +142,19 @@ pub trait DevicePlugin {
     /// device; intra-batch dependences are edges of `graph`).  Mapped
     /// input buffers are in `env` on entry; outputs must be back in `env`
     /// on return.
+    ///
+    /// `release_s` is the virtual time at which the batch becomes
+    /// runnable (its predecessors' max finish).  The plugin's timing
+    /// model must position the batch at or after that instant and report
+    /// `release_s`/`finish_s` accordingly, so the scheduler can overlap
+    /// independent batches on different devices in virtual time.
     fn run_batch(
         &mut self,
         graph: &TaskGraph,
         tasks: &[TaskId],
         env: &mut DataEnv,
         fns: &FnRegistry,
+        release_s: f64,
     ) -> Result<DeviceReport>;
 }
 

@@ -145,45 +145,6 @@ impl TaskGraph {
         self.preds.iter().all(|p| p.len() <= 1)
             && self.succs.iter().all(|s| s.len() <= 1)
     }
-
-    /// Condense by device: the DAG of device groups, or None if tasks of
-    /// the same device are interleaved cyclically (A->B->A at group level).
-    pub fn device_batches(&self) -> Result<Vec<(super::device::DeviceId, Vec<TaskId>)>> {
-        let order = self.topo_order()?;
-        // Greedy condensation in topological order: extend the current
-        // batch while the next task is on the same device; afterwards,
-        // verify no edge goes backwards across batches.
-        let mut batches: Vec<(super::device::DeviceId, Vec<TaskId>)> = Vec::new();
-        for id in order {
-            let dev = self.tasks[id.0].device;
-            match batches.last_mut() {
-                Some((d, v)) if *d == dev => v.push(id),
-                _ => batches.push((dev, vec![id])),
-            }
-        }
-        // batch index per task
-        let mut bidx = vec![0usize; self.tasks.len()];
-        for (i, (_, v)) in batches.iter().enumerate() {
-            for id in v {
-                bidx[id.0] = i;
-            }
-        }
-        for t in &self.tasks {
-            for &p in self.preds(t.id) {
-                if bidx[p.0] > bidx[t.id.0] {
-                    bail!(
-                        "unsupported device interleaving: task {} (batch {}) \
-                         depends on task {} (batch {})",
-                        t.id.0,
-                        bidx[t.id.0],
-                        p.0,
-                        bidx[p.0]
-                    );
-                }
-            }
-        }
-        Ok(batches)
-    }
 }
 
 #[cfg(test)]
@@ -273,18 +234,18 @@ mod tests {
     }
 
     #[test]
-    fn device_batches_groups_contiguous() {
+    fn mixed_device_chain_builds_clean_edges() {
+        // host -> fpga -> fpga -> host: condensation into device runs is
+        // sched::BatchDag's job now; the graph just carries the edges.
         let mut g = TaskGraph::new();
         g.add(task(0, &[], &[0])); // host produce
         g.add(task(1, &[0], &[1])); // fpga chain
         g.add(task(1, &[1], &[2]));
         g.add(task(0, &[2], &[3])); // host consume
-        let b = g.device_batches().unwrap();
-        assert_eq!(b.len(), 3);
-        assert_eq!(b[0].0, DeviceId(0));
-        assert_eq!(b[1].0, DeviceId(1));
-        assert_eq!(b[1].1.len(), 2);
-        assert_eq!(b[2].0, DeviceId(0));
+        assert_eq!(g.task(TaskId(1)).device, DeviceId(1));
+        assert_eq!(g.topo_order().unwrap().len(), 4);
+        assert_eq!(g.levels().unwrap(), vec![0, 1, 2, 3]);
+        assert!(g.is_chain());
     }
 
     #[test]

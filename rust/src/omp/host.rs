@@ -48,6 +48,7 @@ impl DevicePlugin for HostDevice {
         tasks: &[TaskId],
         env: &mut DataEnv,
         fns: &FnRegistry,
+        release_s: f64,
     ) -> Result<DeviceReport> {
         let t0 = Instant::now();
         // map TaskId -> dense index within this batch
@@ -95,6 +96,10 @@ impl DevicePlugin for HostDevice {
         let mut report = DeviceReport {
             tasks_run: tasks.len(),
             wall_s: t0.elapsed().as_secs_f64(),
+            // host software time does not advance the modelled device
+            // timeline: the batch finishes the instant it is released
+            release_s,
+            finish_s: release_s,
             ..DeviceReport::default()
         };
         report.stats.record("host-pool", 0.0, report.wall_s);
@@ -242,8 +247,10 @@ mod tests {
         let mut env = DataEnv::new();
         env.insert("V", Grid::zeros(&[3, 3]).unwrap());
         let mut host = HostDevice::new(4);
-        let rep = host.run_batch(&g, &ids, &mut env, &fns_with_inc("V")).unwrap();
+        let rep =
+            host.run_batch(&g, &ids, &mut env, &fns_with_inc("V"), 0.0).unwrap();
         assert_eq!(rep.tasks_run, 10);
+        assert_eq!(rep.finish_s, 0.0); // host work is free in virtual time
         assert!(env.get("V").unwrap().data().iter().all(|&v| v == 10.0));
     }
 
@@ -287,7 +294,7 @@ mod tests {
             t.fn_name = "incB".into();
         }
         let mut host = HostDevice::new(4);
-        host.run_batch(&g2, &ids, &mut env, &fns).unwrap();
+        host.run_batch(&g2, &ids, &mut env, &fns, 0.0).unwrap();
         assert!(env.get("A").unwrap().data().iter().all(|&v| v == 5.0));
         assert!(env.get("B").unwrap().data().iter().all(|&v| v == 5.0));
     }
@@ -312,7 +319,7 @@ mod tests {
         });
         let mut env = DataEnv::new();
         let mut host = HostDevice::new(2);
-        let err = host.run_batch(&g, &[id], &mut env, &fns).unwrap_err();
+        let err = host.run_batch(&g, &[id], &mut env, &fns, 0.0).unwrap_err();
         assert!(err.to_string().contains("kaboom"));
     }
 
@@ -336,6 +343,6 @@ mod tests {
         });
         let mut env = DataEnv::new();
         let mut host = HostDevice::new(1);
-        assert!(host.run_batch(&g, &[id], &mut env, &fns).is_err());
+        assert!(host.run_batch(&g, &[id], &mut env, &fns, 0.0).is_err());
     }
 }

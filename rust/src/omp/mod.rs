@@ -12,18 +12,24 @@
 //! * [`device`] — the libomptarget-like plugin interface: anything that
 //!   can run a task subgraph registers as a device.  [`host`] is device 0
 //!   (a CPU worker pool, the OpenMP fallback).
+//! * [`sched`] — the dependence-aware device scheduler: the task DAG
+//!   condensed into an acyclic DAG of per-device runs, dispatched to the
+//!   devices as predecessors complete, with critical-path (makespan)
+//!   virtual-time semantics.  Host and device batches interleave freely.
 //! * [`runtime`] — `parallel` / `single` / `target` entry points and the
-//!   deferred-dispatch scheduler that hands each device its subgraph.
+//!   deferred-dispatch executor driving [`sched`] at the barrier.
 
 pub mod device;
 pub mod graph;
 pub mod host;
 pub mod runtime;
+pub mod sched;
 pub mod task;
 pub mod variant;
 
 pub use device::{DataEnv, DeviceId, DevicePlugin, DeviceReport, FnRegistry, TaskFn};
 pub use graph::TaskGraph;
 pub use runtime::{OmpReport, OmpRuntime, TargetBuilder};
+pub use sched::{BatchDag, Dispatcher, Run};
 pub use task::{DepVar, MapDir, Task, TaskId};
 pub use variant::VariantRegistry;

@@ -1,0 +1,549 @@
+//! Dependence-aware device scheduler: the batch DAG and its dispatcher.
+//!
+//! The old executor condensed the task graph greedily in topological
+//! order and hard-errored whenever a dependence pointed backwards across
+//! the condensation — so a perfectly valid host → FPGA → host → FPGA
+//! program crashed with an interleaving error, and two independent
+//! device pipelines were modelled as if they ran back to back.
+//!
+//! This module replaces that with two pieces:
+//!
+//! * [`BatchDag`] — the task DAG condensed into *runs*: maximal
+//!   single-device dependence chains.  A run is exactly what a device
+//!   plugin wants to see in one `run_batch` call (the VC709 plugin maps a
+//!   run onto a whole IP pipeline), and because every run is a path in
+//!   the task DAG the condensed graph is acyclic **by construction** —
+//!   any topologically valid task graph schedules.
+//! * [`Dispatcher`] — an event-driven list scheduler over the batch DAG.
+//!   A run is released when all its predecessor runs have finished; each
+//!   device is a serial resource with its own virtual-time availability
+//!   clock, so independent runs on *different* devices overlap in virtual
+//!   time while runs contending for one device queue behind each other.
+//!   The resulting [`Dispatcher::makespan_s`] is the critical-path length
+//!   of the batch DAG — the number `OmpReport::virtual_time_s` reports.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::device::DeviceId;
+use super::graph::TaskGraph;
+use super::task::TaskId;
+
+/// A maximal single-device dependence chain — one `run_batch` call.
+#[derive(Debug, Clone)]
+pub struct Run {
+    pub device: DeviceId,
+    /// tasks in chain order: `tasks[i]` is the sole predecessor of
+    /// `tasks[i + 1]` and `tasks[i + 1]` the sole successor of
+    /// `tasks[i]` — no task in a run's interior has edges leaving the
+    /// run, so a cross-run edge always anchors at a run boundary and
+    /// release times equal true predecessor finishes
+    pub tasks: Vec<TaskId>,
+}
+
+/// The task DAG condensed by device into an acyclic DAG of [`Run`]s.
+#[derive(Debug, Clone, Default)]
+pub struct BatchDag {
+    runs: Vec<Run>,
+    preds: Vec<Vec<usize>>,
+    succs: Vec<Vec<usize>>,
+}
+
+impl BatchDag {
+    /// Condense `graph` into per-device runs.  A task extends its
+    /// predecessor's run iff it is that predecessor's *only* successor,
+    /// the predecessor is its *only* predecessor and the current tail of
+    /// its run, and both are bound to the same device; otherwise it
+    /// starts a new run.  The only-successor condition breaks chains at
+    /// fan-out points, so a cross-device consumer of a mid-pipeline
+    /// value is released when its actual predecessor finishes, not when
+    /// the rest of the pipeline does — keeping the makespan an honest
+    /// critical path.  Since every run is a path in the task DAG, an
+    /// inter-run cycle would imply a cycle between tasks — impossible —
+    /// so this never fails on a valid DAG.
+    pub fn build(graph: &TaskGraph) -> Result<BatchDag> {
+        let order = graph.topo_order()?;
+        let mut run_of = vec![usize::MAX; graph.len()];
+        let mut runs: Vec<Run> = Vec::new();
+        let mut tails: Vec<TaskId> = Vec::new();
+
+        for id in order {
+            let dev = graph.task(id).device;
+            let extend = if let [p] = graph.preds(id) {
+                let r = run_of[p.0];
+                (graph.task(*p).device == dev
+                    && tails[r] == *p
+                    && graph.succs(*p).len() == 1)
+                    .then_some(r)
+            } else {
+                None
+            };
+            match extend {
+                Some(r) => {
+                    runs[r].tasks.push(id);
+                    tails[r] = id;
+                    run_of[id.0] = r;
+                }
+                None => {
+                    run_of[id.0] = runs.len();
+                    runs.push(Run { device: dev, tasks: vec![id] });
+                    tails.push(id);
+                }
+            }
+        }
+
+        let m = runs.len();
+        let mut preds = vec![Vec::new(); m];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); m];
+        for t in &graph.tasks {
+            let b = run_of[t.id.0];
+            for p in graph.preds(t.id) {
+                let a = run_of[p.0];
+                if a != b && !succs[a].contains(&b) {
+                    succs[a].push(b);
+                    preds[b].push(a);
+                }
+            }
+        }
+        Ok(BatchDag { runs, preds, succs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.runs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+    pub fn run(&self, r: usize) -> &Run {
+        &self.runs[r]
+    }
+    pub fn runs(&self) -> &[Run] {
+        &self.runs
+    }
+    /// Runs that must finish before run `r` is released.
+    pub fn preds(&self, r: usize) -> &[usize] {
+        &self.preds[r]
+    }
+    pub fn succs(&self, r: usize) -> &[usize] {
+        &self.succs[r]
+    }
+}
+
+/// Event-driven list scheduler over a [`BatchDag`].
+///
+/// Usage is strictly alternating: [`Dispatcher::next`] hands out the
+/// ready run with the earliest modelled start time (its *release*), the
+/// caller executes it and reports the batch's virtual finish time via
+/// [`Dispatcher::complete`], which in turn releases successor runs.
+/// Execution is sequential in wall-clock; concurrency between devices is
+/// modelled in virtual time through the per-device availability clocks.
+#[derive(Debug)]
+pub struct Dispatcher {
+    dag: BatchDag,
+    /// unfinished predecessor count per run
+    indeg: Vec<usize>,
+    /// max finish over a run's completed DAG predecessors
+    release: Vec<f64>,
+    /// virtual time at which each device becomes free again
+    dev_free: BTreeMap<usize, f64>,
+    ready: Vec<usize>,
+    /// runs handed out by `next`/`next_ready_on` but not yet completed
+    /// (several at once when the executor coalesces host runs)
+    in_flight: Vec<usize>,
+    completed: usize,
+    makespan: f64,
+}
+
+impl Dispatcher {
+    pub fn new(dag: BatchDag) -> Dispatcher {
+        let m = dag.len();
+        let indeg: Vec<usize> = (0..m).map(|r| dag.preds(r).len()).collect();
+        let ready = (0..m).filter(|&r| indeg[r] == 0).collect();
+        Dispatcher {
+            dag,
+            indeg,
+            release: vec![0.0; m],
+            dev_free: BTreeMap::new(),
+            ready,
+            in_flight: Vec::new(),
+            completed: 0,
+            makespan: 0.0,
+        }
+    }
+
+    pub fn dag(&self) -> &BatchDag {
+        &self.dag
+    }
+
+    /// Pop the ready run with the earliest modelled start time
+    /// (ties broken by run index, so dispatch is deterministic).
+    /// Returns `(run, release_s)`; `None` when nothing is ready.
+    pub fn next(&mut self) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, usize, f64)> = None; // (pos, run, start)
+        for (i, &r) in self.ready.iter().enumerate() {
+            let free = self
+                .dev_free
+                .get(&self.dag.runs[r].device.0)
+                .copied()
+                .unwrap_or(0.0);
+            let start = self.release[r].max(free);
+            let better = match best {
+                None => true,
+                Some((_, br, bs)) => start < bs || (start == bs && r < br),
+            };
+            if better {
+                best = Some((i, r, start));
+            }
+        }
+        let (i, r, start) = best?;
+        self.ready.swap_remove(i);
+        self.in_flight.push(r);
+        Some((r, start))
+    }
+
+    /// Pop a further ready run bound to `dev` whose release is not after
+    /// `release_cap` (lowest index first), returning it with its raw
+    /// release time.  Two simultaneously-ready runs can share no
+    /// dependence path, so the executor may coalesce such runs into one
+    /// `run_batch` call — used for the host device, whose worker pool
+    /// then executes dependence-free tasks truly concurrently instead of
+    /// one zero-duration batch at a time.  The cap keeps the merged
+    /// batch's report honest: every member was released by the batch's
+    /// own release instant.
+    pub fn next_ready_on(&mut self, dev: DeviceId, release_cap: f64) -> Option<(usize, f64)> {
+        let mut cand: Option<(usize, usize)> = None; // (pos, run)
+        for (i, &r) in self.ready.iter().enumerate() {
+            if self.dag.runs[r].device == dev
+                && self.release[r] <= release_cap
+                && cand.map_or(true, |(_, br)| r < br)
+            {
+                cand = Some((i, r));
+            }
+        }
+        let (i, r) = cand?;
+        self.ready.swap_remove(i);
+        self.in_flight.push(r);
+        Some((r, self.release[r]))
+    }
+
+    /// Retire run `run` at virtual time `finish_s`: advance its device's
+    /// availability clock and release any successor whose predecessors
+    /// have now all finished.
+    pub fn complete(&mut self, run: usize, finish_s: f64) {
+        let pos = self
+            .in_flight
+            .iter()
+            .position(|&r| r == run)
+            .expect("complete() for a run that was never dispatched");
+        self.in_flight.swap_remove(pos);
+        self.completed += 1;
+        // only a batch that actually spent device time occupies the
+        // device's clock; zero-duration batches (the host pool) never
+        // delay later batches on the same device
+        if finish_s > self.release[run] {
+            let dev = self.dag.runs[run].device.0;
+            let free = self.dev_free.entry(dev).or_insert(0.0);
+            if finish_s > *free {
+                *free = finish_s;
+            }
+        }
+        if finish_s > self.makespan {
+            self.makespan = finish_s;
+        }
+        for s in self.dag.succs(run).to_vec() {
+            if finish_s > self.release[s] {
+                self.release[s] = finish_s;
+            }
+            self.indeg[s] -= 1;
+            if self.indeg[s] == 0 {
+                self.ready.push(s);
+            }
+        }
+    }
+
+    /// True once every run has been dispatched and completed.
+    pub fn is_complete(&self) -> bool {
+        self.completed == self.dag.len()
+    }
+
+    /// Critical-path length over the completed runs: the max finish time.
+    pub fn makespan_s(&self) -> f64 {
+        self.makespan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::task::{DepVar, MapDir, Task};
+    use crate::util::prop::check;
+
+    fn task(dev: usize, deps_in: &[usize], deps_out: &[usize]) -> Task {
+        Task {
+            id: TaskId(0),
+            base_name: "f".into(),
+            fn_name: "f".into(),
+            device: DeviceId(dev),
+            maps: vec![(MapDir::ToFrom, "V".into())],
+            deps_in: deps_in.iter().map(|&d| DepVar(d)).collect(),
+            deps_out: deps_out.iter().map(|&d| DepVar(d)).collect(),
+            nowait: true,
+        }
+    }
+
+    /// Drain a dispatcher, modelling `dur(run)` virtual seconds per run.
+    /// Returns the dispatch order.
+    fn drain(d: &mut Dispatcher, dur: impl Fn(&Run) -> f64) -> Vec<usize> {
+        let mut order = Vec::new();
+        while let Some((r, release)) = d.next() {
+            let finish = release + dur(d.dag().run(r));
+            order.push(r);
+            d.complete(r, finish);
+        }
+        assert!(d.is_complete(), "scheduler stalled");
+        order
+    }
+
+    #[test]
+    fn host_fpga_host_condenses_to_three_runs() {
+        let mut g = TaskGraph::new();
+        g.add(task(0, &[], &[0])); // host produce
+        g.add(task(1, &[0], &[1])); // fpga chain
+        g.add(task(1, &[1], &[2]));
+        g.add(task(0, &[2], &[3])); // host consume
+        let dag = BatchDag::build(&g).unwrap();
+        assert_eq!(dag.len(), 3);
+        assert_eq!(dag.run(0).device, DeviceId(0));
+        assert_eq!(dag.run(1).device, DeviceId(1));
+        assert_eq!(dag.run(1).tasks.len(), 2);
+        assert_eq!(dag.run(2).device, DeviceId(0));
+        assert_eq!(dag.preds(1), &[0]);
+        assert_eq!(dag.preds(2), &[1]);
+    }
+
+    #[test]
+    fn interleaved_host_fpga_chain_schedules() {
+        // host -> fpga -> host -> fpga: the shape the old condensation
+        // rejected as unschedulable interleaving
+        let mut g = TaskGraph::new();
+        for (i, dev) in [0usize, 1, 0, 1].into_iter().enumerate() {
+            g.add(task(dev, &[i], &[i + 1]));
+        }
+        let dag = BatchDag::build(&g).unwrap();
+        assert_eq!(dag.len(), 4);
+        let mut d = Dispatcher::new(dag);
+        let order = drain(&mut d, |r| {
+            if r.device == DeviceId(1) {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        // two device batches of 1.0 s on the critical path
+        assert!((d.makespan_s() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_chains_on_two_devices_overlap() {
+        let mut g = TaskGraph::new();
+        for i in 0..3 {
+            g.add(task(1, &[i], &[i + 1])); // chain A, device 1
+        }
+        for i in 10..12 {
+            g.add(task(2, &[i], &[i + 1])); // chain B, device 2
+        }
+        let dag = BatchDag::build(&g).unwrap();
+        assert_eq!(dag.len(), 2);
+        let mut d = Dispatcher::new(dag);
+        drain(&mut d, |r| r.tasks.len() as f64);
+        // makespan = max(3, 2), NOT 3 + 2: the devices run concurrently
+        assert!((d.makespan_s() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_device_chains_serialize() {
+        let mut g = TaskGraph::new();
+        for i in 0..3 {
+            g.add(task(1, &[i], &[i + 1]));
+        }
+        for i in 10..12 {
+            g.add(task(1, &[i], &[i + 1]));
+        }
+        let dag = BatchDag::build(&g).unwrap();
+        assert_eq!(dag.len(), 2);
+        let mut d = Dispatcher::new(dag);
+        drain(&mut d, |r| r.tasks.len() as f64);
+        // one physical device: the second chain queues behind the first
+        assert!((d.makespan_s() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diamond_splits_at_fan_out() {
+        // a writes 0; b,c read 0 and write 1,2; d reads 1,2 — one device
+        let mut g = TaskGraph::new();
+        g.add(task(1, &[], &[0]));
+        g.add(task(1, &[0], &[1]));
+        g.add(task(1, &[0], &[2]));
+        g.add(task(1, &[1, 2], &[]));
+        let dag = BatchDag::build(&g).unwrap();
+        // a has two successors (fan-out) and d two predecessors, so no
+        // chain forms: four single-task runs
+        assert_eq!(dag.len(), 4);
+        assert!(dag.runs().iter().all(|r| r.tasks.len() == 1));
+        let mut d = Dispatcher::new(dag);
+        let order = drain(&mut d, |r| r.tasks.len() as f64);
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        // serial device: 1 + 1 + 1 + 1
+        assert!((d.makespan_s() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mid_chain_consumer_releases_at_predecessor_finish() {
+        // dev-1 pipeline t0 -> t1 -> t2, and a dev-2 task x that reads
+        // t0's output: the chain must break after t0 so x is released at
+        // finish(t0), not finish(t0..t2) — the makespan stays an honest
+        // critical path
+        let mut g = TaskGraph::new();
+        g.add(task(1, &[], &[0])); // t0
+        g.add(task(1, &[0], &[1])); // t1
+        g.add(task(1, &[1], &[2])); // t2
+        g.add(task(2, &[0], &[])); // x on device 2, reads t0's value
+        let dag = BatchDag::build(&g).unwrap();
+        assert_eq!(dag.len(), 3); // [t0], [t1, t2], [x]
+        let mut d = Dispatcher::new(dag);
+        drain(&mut d, |r| r.tasks.len() as f64);
+        // critical path = t0 (1) + t1,t2 (2) = 3; x overlaps (1 + 1 = 2)
+        assert!((d.makespan_s() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ready_runs_on_a_device_can_be_drained_for_coalescing() {
+        let mut g = TaskGraph::new();
+        g.add(task(0, &[0], &[1])); // host run, independent
+        g.add(task(0, &[2], &[3])); // host run, independent
+        g.add(task(1, &[4], &[5])); // fpga run, independent
+        let dag = BatchDag::build(&g).unwrap();
+        assert_eq!(dag.len(), 3);
+        let mut d = Dispatcher::new(dag);
+        let (r0, start) = d.next().unwrap();
+        assert_eq!((r0, start), (0, 0.0));
+        // the other ready host run can be drained into the same batch...
+        let (r1, rel) = d.next_ready_on(DeviceId(0), start).unwrap();
+        assert_eq!((r1, rel), (1, 0.0));
+        // ...but the fpga run is not a host candidate
+        assert!(d.next_ready_on(DeviceId(0), start).is_none());
+        d.complete(r0, 0.0);
+        d.complete(r1, 0.0);
+        let (r2, _) = d.next().unwrap();
+        assert_eq!(r2, 2);
+        d.complete(r2, 1.0);
+        assert!(d.is_complete());
+        assert!((d.makespan_s() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_graph_has_no_runs() {
+        let dag = BatchDag::build(&TaskGraph::new()).unwrap();
+        assert!(dag.is_empty());
+        let mut d = Dispatcher::new(dag);
+        assert!(d.next().is_none());
+        assert!(d.is_complete());
+    }
+
+    #[test]
+    fn prop_dispatch_respects_every_edge() {
+        // random mixed-device DAGs: every run is a single-device chain,
+        // every task is dispatched exactly once, dispatch order respects
+        // every dependence edge, and cross-run releases never precede
+        // their predecessors' finishes
+        check(
+            "sched-respects-edges",
+            40,
+            |rng| {
+                let n = rng.range(1, 25);
+                (0..n)
+                    .map(|_| {
+                        let dev = rng.range(0, 3);
+                        let din: Vec<usize> =
+                            (0..rng.range(0, 3)).map(|_| rng.range(0, 5)).collect();
+                        let dout: Vec<usize> =
+                            (0..rng.range(0, 3)).map(|_| rng.range(0, 5)).collect();
+                        (dev, din, dout)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |specs| {
+                let mut g = TaskGraph::new();
+                for (dev, din, dout) in specs {
+                    g.add(task(*dev, din, dout));
+                }
+                let dag = BatchDag::build(&g).map_err(|e| e.to_string())?;
+                let mut seen = vec![false; g.len()];
+                for r in 0..dag.len() {
+                    let run = dag.run(r);
+                    for id in &run.tasks {
+                        if seen[id.0] {
+                            return Err(format!("task {} in two runs", id.0));
+                        }
+                        seen[id.0] = true;
+                        if g.task(*id).device != run.device {
+                            return Err(format!("run {r} mixes devices"));
+                        }
+                    }
+                    for w in run.tasks.windows(2) {
+                        if g.preds(w[1]) != &[w[0]] {
+                            return Err(format!("run {r} is not a chain"));
+                        }
+                    }
+                }
+                if seen.iter().any(|s| !s) {
+                    return Err("scheduler dropped a task".into());
+                }
+
+                let mut d = Dispatcher::new(dag);
+                let mut pos = vec![usize::MAX; g.len()];
+                let mut run_of = vec![usize::MAX; g.len()];
+                let mut t_release = vec![0.0f64; g.len()];
+                let mut t_finish = vec![0.0f64; g.len()];
+                let mut next_pos = 0usize;
+                while let Some((r, release)) = d.next() {
+                    let tasks = d.dag().run(r).tasks.clone();
+                    let finish = release + tasks.len() as f64;
+                    for id in &tasks {
+                        pos[id.0] = next_pos;
+                        next_pos += 1;
+                        run_of[id.0] = r;
+                        t_release[id.0] = release;
+                        t_finish[id.0] = finish;
+                    }
+                    d.complete(r, finish);
+                }
+                if !d.is_complete() {
+                    return Err("scheduler stalled before completion".into());
+                }
+                for t in &g.tasks {
+                    for p in g.preds(t.id) {
+                        if pos[p.0] >= pos[t.id.0] {
+                            return Err(format!(
+                                "edge {} -> {} dispatched out of order",
+                                p.0, t.id.0
+                            ));
+                        }
+                        if run_of[p.0] != run_of[t.id.0]
+                            && t_finish[p.0] > t_release[t.id.0] + 1e-9
+                        {
+                            return Err(format!(
+                                "run of task {} released before predecessor \
+                                 {} finished",
+                                t.id.0, p.0
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -74,7 +74,7 @@ impl StepExecutor for PjrtExec {
 
     fn step_k(&mut self, kernel: Kernel, grid: &Grid, k: usize) -> Result<Grid> {
         // use the fused chain artifact when one was AOT-shipped (the
-        // single-load fast path; see EXPERIMENTS.md §Perf)
+        // single-load fast path; see DESIGN.md §6)
         if k > 1 {
             if let Some(exe) = self.rt.load_chain(kernel, grid.shape(), k)? {
                 self.steps += 1;
@@ -146,7 +146,7 @@ mod tests {
 
     #[test]
     fn pjrt_backend_matches_golden() {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
+        if !crate::runtime::artifacts_present("artifacts") {
             eprintln!("skipping: run `make artifacts`");
             return;
         }

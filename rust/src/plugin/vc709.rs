@@ -41,7 +41,7 @@ pub struct Vc709Plugin {
     backend_kind: ExecBackend,
     timing: TimingConfig,
     /// Fuse same-kernel IP chains on one board into one backend `step_k`
-    /// call (numerics identical — tested).  §Perf A/B (EXPERIMENTS.md):
+    /// call (numerics identical — tested).  §Perf A/B (DESIGN.md §6):
     /// in isolation the interpret-lowered chain4 artifact is ~35% slower
     /// than 4 cached single steps, but at system level fusing still wins
     /// by ~10% because it quarters the Grid<->Literal marshalling copies
@@ -606,10 +606,15 @@ impl DevicePlugin for Vc709Plugin {
         tasks: &[TaskId],
         env: &mut DataEnv,
         fns: &FnRegistry,
+        release_s: f64,
     ) -> Result<DeviceReport> {
         let t0 = std::time::Instant::now();
         if tasks.is_empty() {
-            return Ok(DeviceReport::default());
+            return Ok(DeviceReport {
+                release_s,
+                finish_s: release_s,
+                ..DeviceReport::default()
+            });
         }
         // -- validate the batch is a chain in the given order ------------
         for pair in tasks.windows(2) {
@@ -649,8 +654,10 @@ impl DevicePlugin for Vc709Plugin {
         // -- execute the pass schedule ------------------------------------
         let mut servers = self.build_servers();
         let bytes = grid_in.bytes() as f64;
-        // one-time offload startup (graph handoff + device init)
-        let mut vtime = self.timing.offload_startup_s;
+        // the batch DAG's release time positions this batch on the global
+        // virtual timeline, then the one-time offload startup (graph
+        // handoff + device init) applies per offload episode
+        let mut vtime = release_s + self.timing.offload_startup_s;
         let mut grid = grid_in;
         let npasses = assignment.npasses();
         for p in 0..npasses {
@@ -678,14 +685,17 @@ impl DevicePlugin for Vc709Plugin {
         env.put(&plan.buffer, grid);
         self.last_assignment = Some(assignment);
 
+        let duration_s = vtime - release_s;
         let mut report = DeviceReport {
             tasks_run: tasks.len(),
-            virtual_time_s: vtime,
+            virtual_time_s: duration_s,
+            release_s,
+            finish_s: vtime,
             wall_s: t0.elapsed().as_secs_f64(),
             ..DeviceReport::default()
         };
         servers.absorb_into(&mut report.stats);
-        report.stats.virtual_time_s = vtime;
+        report.stats.virtual_time_s = duration_s;
         report.stats.passes = npasses;
         Ok(report)
     }

@@ -126,7 +126,7 @@ mod tests {
     use crate::stencil::workload::small_workload;
 
     fn runtime() -> Option<PjrtRuntime> {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
+        if !crate::runtime::artifacts_present("artifacts") {
             eprintln!("skipping: run `make artifacts`");
             return None;
         }

@@ -11,3 +11,11 @@ pub mod registry;
 
 pub use client::{CompiledArtifact, PjrtRuntime};
 pub use registry::{ArtifactInfo, ArtifactRegistry};
+
+/// True when the AOT artifact set is present under `dir` (the probe the
+/// examples and artifact-gated tests share).  The path is resolved
+/// against the process cwd — the same resolution `PjrtRuntime::from_dir`
+/// applies — so the gate and the loader always agree.
+pub fn artifacts_present(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

@@ -1,5 +1,5 @@
 //! Per-module accounting rolled up across a run, for the utilization
-//! report (`omp-fpga run --report`) and EXPERIMENTS.md.
+//! report (`omp-fpga run --report`, DESIGN.md §5).
 
 use std::collections::BTreeMap;
 
@@ -30,6 +30,21 @@ impl RunStats {
         m.bytes += s.bytes;
         m.busy_s += s.busy_s;
         m.operations += 1;
+    }
+
+    /// Fold another run's accounting into this one: module counters add,
+    /// passes add, and the busy windows (`virtual_time_s`) add — for
+    /// aggregating the several batches one device runs in an interleaved
+    /// program into a single coherent report.
+    pub fn merge(&mut self, other: &RunStats) {
+        for (name, m) in &other.modules {
+            let e = self.modules.entry(name.clone()).or_default();
+            e.bytes += m.bytes;
+            e.busy_s += m.busy_s;
+            e.operations += m.operations;
+        }
+        self.virtual_time_s += other.virtual_time_s;
+        self.passes += other.passes;
     }
 
     pub fn utilization(&self, module: &str) -> f64 {
@@ -82,6 +97,27 @@ mod tests {
         let mut st = RunStats::default();
         st.absorb_server(&s);
         assert_eq!(st.modules["pcie"].bytes, 1000.0);
+    }
+
+    #[test]
+    fn merge_adds_modules_and_passes() {
+        let mut a = RunStats::default();
+        a.record("net", 100.0, 1.0);
+        a.virtual_time_s = 2.0;
+        a.passes = 3;
+        let mut b = RunStats::default();
+        b.record("net", 50.0, 0.5);
+        b.record("pcie", 10.0, 0.1);
+        b.virtual_time_s = 1.0;
+        b.passes = 2;
+        a.merge(&b);
+        assert_eq!(a.passes, 5);
+        assert_eq!(a.virtual_time_s, 3.0);
+        assert_eq!(a.modules["net"].bytes, 150.0);
+        assert_eq!(a.modules["net"].operations, 2);
+        assert_eq!(a.modules["pcie"].bytes, 10.0);
+        // a single summary header, no duplicated module rows
+        assert_eq!(a.summary_lines().len(), 1 + 2);
     }
 
     #[test]
