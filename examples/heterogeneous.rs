@@ -7,9 +7,13 @@
 //! host preprocess -> FPGA chain -> host renormalize -> FPGA chain -> host post
 //! ```
 //!
-//! The dependence-aware scheduler condenses this into five device runs
-//! (host/vc709/host/vc709/host), dispatches each as its predecessors
-//! complete, and reports the modelled makespan over the batch DAG.
+//! New in this revision: the FPGA stages are submitted with
+//! `device(any)` instead of a hand-picked device id.  TWO vc709
+//! clusters are registered — a 3-board ring and a single board — and
+//! the scheduler's communication-aware placer (DESIGN.md §3) prices
+//! each unbound chain on both clusters and commits the earliest
+//! modelled finish: the 3-board ring wins (6 tasks in 2 passes instead
+//! of 6), with no placement code in the application.
 //!
 //! ```sh
 //! cargo run --release --example heterogeneous
@@ -55,7 +59,8 @@ fn main() -> Result<()> {
         env.put("V", g);
         Ok(())
     });
-    // FPGA task (declare variant)
+    // FPGA task (declare variant); the base body doubles as the host
+    // fallback the placer would use if no cluster carried the kernel
     rt.register_software("do_diffusion2d", move |env| {
         let g = env.take("V")?;
         env.put("V", kernel.apply(&g)?);
@@ -68,8 +73,15 @@ fn main() -> Result<()> {
     } else {
         ExecBackend::Golden // no artifacts: fall back to the golden model
     };
-    let cfg = ClusterConfig::homogeneous(3, 1, kernel);
-    let fpga = rt.register_device(Box::new(Vc709Plugin::new(&cfg, backend)?));
+    // two clusters of different sizes — the placer must prefer the ring
+    let big = rt.register_device(Box::new(Vc709Plugin::new(
+        &ClusterConfig::homogeneous(3, 1, kernel),
+        backend,
+    )?));
+    let small = rt.register_device(Box::new(Vc709Plugin::new(
+        &ClusterConfig::homogeneous(1, 1, kernel),
+        backend,
+    )?));
 
     let input = Grid::random(&shape, 11)?;
     let mut env = DataEnv::new();
@@ -83,10 +95,10 @@ fn main() -> Result<()> {
             .depend_out(deps[0])
             .nowait()
             .submit()?;
-        // first FPGA pipeline (device clause selects the vc709 plugin)
+        // first FPGA pipeline — device(any): the scheduler places it
         for i in 0..STAGE_ITERS {
             ctx.target("do_diffusion2d")
-                .device(fpga)
+                .device_any()
                 .map(MapDir::ToFrom, "V")
                 .depend_in(deps[i])
                 .depend_out(deps[i + 1])
@@ -102,10 +114,10 @@ fn main() -> Result<()> {
             .depend_out(deps[mid + 1])
             .nowait()
             .submit()?;
-        // second FPGA pipeline
+        // second FPGA pipeline, also unbound
         for i in 0..STAGE_ITERS {
             ctx.target("do_diffusion2d")
-                .device(fpga)
+                .device_any()
                 .map(MapDir::ToFrom, "V")
                 .depend_in(deps[mid + 1 + i])
                 .depend_out(deps[mid + 2 + i])
@@ -122,7 +134,7 @@ fn main() -> Result<()> {
         Ok(())
     })?;
 
-    // the scheduler must have split the graph host/vc709/host/vc709/host
+    // the scheduler must have split the graph host/fpga/host/fpga/host
     println!("batch timeline (virtual seconds):");
     for (dev, rep) in &report.batches {
         println!(
@@ -134,6 +146,25 @@ fn main() -> Result<()> {
         report.batches.len() == 5,
         "expected 5 batches (host/fpga/host/fpga/host), got {}",
         report.batches.len()
+    );
+    // placement check: both unbound chains went to the 3-board ring —
+    // its 2-pass schedule beats the single board's 6 passes even after
+    // paying the extra ring crossings
+    for (dev, rep) in &report.batches {
+        if rep.virtual_time_s > 0.0 {
+            anyhow::ensure!(
+                *dev == big,
+                "placer chose device {} for an FPGA chain; expected the \
+                 3-board ring (device {})",
+                dev.0,
+                big.0
+            );
+        }
+    }
+    println!(
+        "device(any) placed both FPGA chains on device {} (3-board ring); \
+         device {} (single board) stayed idle",
+        big.0, small.0
     );
     println!(
         "modelled makespan {:.6} s over {} tasks",

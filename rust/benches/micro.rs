@@ -18,7 +18,7 @@ fn chain_task(i: usize) -> Task {
         id: TaskId(0),
         base_name: "f".into(),
         fn_name: "hw_f".into(),
-        device: DeviceId(1),
+        device: DeviceId(1).into(),
         maps: vec![(MapDir::ToFrom, "V".into())],
         deps_in: vec![DepVar(i)],
         deps_out: vec![DepVar(i + 1)],

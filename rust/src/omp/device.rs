@@ -21,6 +21,45 @@ pub struct DeviceId(pub usize);
 
 pub const HOST_DEVICE: DeviceId = DeviceId(0);
 
+/// The `device` clause value: a concrete device, or `device(any)`.
+///
+/// ```
+/// use omp_fpga::omp::{DeviceId, DeviceSel};
+/// let bound: DeviceSel = DeviceId(1).into();
+/// assert_eq!(bound.bound(), Some(DeviceId(1)));
+/// assert!(DeviceSel::Any.is_any() && DeviceSel::Any.bound().is_none());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceSel {
+    /// `device(n)` — statically bound to one device.
+    Bound(DeviceId),
+    /// `device(any)` — unbound: at the synchronization point the
+    /// scheduler places the task's run on the compatible device with
+    /// the earliest modelled finish time, falling back to the host
+    /// base function when no device volunteers (DESIGN.md §3).
+    Any,
+}
+
+impl DeviceSel {
+    /// The concrete device, if statically bound.
+    pub fn bound(self) -> Option<DeviceId> {
+        match self {
+            DeviceSel::Bound(d) => Some(d),
+            DeviceSel::Any => None,
+        }
+    }
+
+    pub fn is_any(self) -> bool {
+        matches!(self, DeviceSel::Any)
+    }
+}
+
+impl From<DeviceId> for DeviceSel {
+    fn from(d: DeviceId) -> DeviceSel {
+        DeviceSel::Bound(d)
+    }
+}
+
 /// Named buffers — the host view of all mapped data.  `take`/`put` model
 /// the `map` clause ownership transfer; a missing buffer at `take` time
 /// means two concurrent tasks mapped the same buffer without a dependence
@@ -156,6 +195,29 @@ pub trait DevicePlugin {
         fns: &FnRegistry,
         release_s: f64,
     ) -> Result<DeviceReport>;
+
+    /// Placement cost model for `device(any)` runs (DESIGN.md §3).
+    ///
+    /// `fn_names[i]` is the function `tasks[i]` would execute on THIS
+    /// device (its `declare variant` resolution for [`DevicePlugin::arch`]).
+    /// Return the modelled virtual seconds the device would spend on the
+    /// batch — compute plus the communication cost of moving the batch's
+    /// mapped bytes to and around the device — or `None` when the device
+    /// cannot execute it (no cost model, or no IP implements a required
+    /// kernel).  Abstaining devices are skipped by automatic placement;
+    /// when every device abstains the run falls back to the host base
+    /// function (the paper's verification flow).  The default abstains.
+    fn estimate_batch_s(
+        &self,
+        graph: &TaskGraph,
+        tasks: &[TaskId],
+        fn_names: &[String],
+        fns: &FnRegistry,
+        env: &DataEnv,
+    ) -> Option<f64> {
+        let _ = (graph, tasks, fn_names, fns, env);
+        None
+    }
 }
 
 #[cfg(test)]

@@ -23,7 +23,7 @@ struct AddrState {
 #[derive(Debug, Default, Clone)]
 pub struct TaskGraph {
     pub tasks: Vec<Task>,
-    /// preds[i] = tasks that must complete before task i starts
+    /// `preds[i]` = tasks that must complete before task i starts
     preds: Vec<Vec<TaskId>>,
     succs: Vec<Vec<TaskId>>,
     addr: BTreeMap<DepVar, AddrState>,
@@ -117,7 +117,7 @@ impl TaskGraph {
         Ok(out)
     }
 
-    /// Topological levels: level[i] = 1 + max(level of preds).
+    /// Topological levels: `level[i]` = 1 + max(level of preds).
     pub fn levels(&self) -> Result<Vec<usize>> {
         let order = self.topo_order()?;
         let mut level = vec![0usize; self.tasks.len()];
@@ -159,7 +159,7 @@ mod tests {
             id: TaskId(0),
             base_name: "f".into(),
             fn_name: "f".into(),
-            device: DeviceId(dev),
+            device: DeviceId(dev).into(),
             maps: vec![(MapDir::ToFrom, "V".into())],
             deps_in: deps_in.iter().map(|&d| DepVar(d)).collect(),
             deps_out: deps_out.iter().map(|&d| DepVar(d)).collect(),
@@ -242,7 +242,7 @@ mod tests {
         g.add(task(1, &[0], &[1])); // fpga chain
         g.add(task(1, &[1], &[2]));
         g.add(task(0, &[2], &[3])); // host consume
-        assert_eq!(g.task(TaskId(1)).device, DeviceId(1));
+        assert_eq!(g.task(TaskId(1)).device, DeviceId(1).into());
         assert_eq!(g.topo_order().unwrap().len(), 4);
         assert_eq!(g.levels().unwrap(), vec![0, 1, 2, 3]);
         assert!(g.is_chain());

@@ -213,7 +213,7 @@ mod tests {
             id: TaskId(0),
             base_name: "inc".into(),
             fn_name: "inc".into(),
-            device: HOST_DEVICE,
+            device: HOST_DEVICE.into(),
             maps: vec![(MapDir::ToFrom, buf.into())],
             deps_in: din.iter().map(|&d| DepVar(d)).collect(),
             deps_out: dout.iter().map(|&d| DepVar(d)).collect(),
@@ -311,7 +311,7 @@ mod tests {
             id: TaskId(0),
             base_name: "boom".into(),
             fn_name: "boom".into(),
-            device: HOST_DEVICE,
+            device: HOST_DEVICE.into(),
             maps: vec![],
             deps_in: vec![],
             deps_out: vec![],
@@ -335,7 +335,7 @@ mod tests {
             id: TaskId(0),
             base_name: "hw".into(),
             fn_name: "hw".into(),
-            device: HOST_DEVICE,
+            device: HOST_DEVICE.into(),
             maps: vec![],
             deps_in: vec![],
             deps_out: vec![],

@@ -16,6 +16,11 @@
 //!   condensed into an acyclic DAG of per-device runs, dispatched to the
 //!   devices as predecessors complete, with critical-path (makespan)
 //!   virtual-time semantics.  Host and device batches interleave freely.
+//!   Runs submitted with `device(any)` ([`DeviceSel::Any`]) are *placed*
+//!   at dispatch time on the compatible device with the earliest
+//!   modelled finish, pricing communication through each plugin's cost
+//!   model ([`DevicePlugin::estimate_batch_s`]) and falling back to the
+//!   host base function when no device matches.
 //! * [`runtime`] — `parallel` / `single` / `target` entry points and the
 //!   deferred-dispatch executor driving [`sched`] at the barrier.
 
@@ -27,7 +32,10 @@ pub mod sched;
 pub mod task;
 pub mod variant;
 
-pub use device::{DataEnv, DeviceId, DevicePlugin, DeviceReport, FnRegistry, TaskFn};
+pub use device::{
+    DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel, FnRegistry,
+    TaskFn,
+};
 pub use graph::TaskGraph;
 pub use runtime::{OmpReport, OmpRuntime, TargetBuilder};
 pub use sched::{BatchDag, Dispatcher, Run};

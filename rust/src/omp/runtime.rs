@@ -1,23 +1,36 @@
 //! The runtime facade: `parallel` / `single` / `target`, deferred
 //! dispatch, and the device scheduler.
 //!
-//! Usage (the Rust rendering of the paper's Listing 3):
+//! Usage (the Rust rendering of the paper's Listing 1/3 — a pipelined
+//! `depend` chain built inside `parallel`+`single` and executed at the
+//! closing barrier):
 //!
-//! ```no_run
+//! ```
 //! use omp_fpga::omp::*;
-//! use omp_fpga::stencil::{Grid, Kernel};
+//! use omp_fpga::stencil::Grid;
 //!
 //! let mut rt = OmpRuntime::new(4);
-//! // #pragma omp declare variant match(device=arch(vc709))
-//! rt.declare_hw_variant("do_laplace2d", "vc709", "hw_laplace2d",
-//!                       Kernel::Laplace2d);
-//! // ... register the vc709 device plugin, then:
+//! rt.register_software("do_inc", |env| {
+//!     let mut g = env.take("V")?;
+//!     for v in g.data_mut() {
+//!         *v += 1.0;
+//!     }
+//!     env.put("V", g);
+//!     Ok(())
+//! });
+//! // #pragma omp declare variant match(device=arch(vc709)): without a
+//! // vc709 device registered, the base software function runs instead
+//! // (the paper's verification flow)
+//! rt.declare_hw_variant("do_inc", "vc709", "hw_inc",
+//!                       omp_fpga::stencil::Kernel::Laplace2d);
 //! let mut env = DataEnv::new();
-//! env.insert("V", Grid::random(&[64, 48], 1).unwrap());
-//! let deps = rt.dep_vars(9);
+//! env.insert("V", Grid::zeros(&[4, 4]).unwrap());
+//! let deps = rt.dep_vars(9); // the paper's `bool deps[N+1]`
 //! let report = rt.parallel(&mut env, |ctx| {
 //!     for i in 0..8 {
-//!         ctx.target("do_laplace2d")
+//!         // #pragma omp target map(tofrom: V) \
+//!         //         depend(in: deps[i]) depend(out: deps[i+1]) nowait
+//!         ctx.target("do_inc")
 //!             .map(MapDir::ToFrom, "V")
 //!             .depend_in(deps[i])
 //!             .depend_out(deps[i + 1])
@@ -25,8 +38,15 @@
 //!             .submit()?;
 //!     }
 //!     Ok(())
-//! });
+//! }).unwrap();
+//! assert_eq!(report.tasks, 8);
+//! assert!(env.get("V").unwrap().data().iter().all(|&v| v == 8.0));
 //! ```
+//!
+//! Tasks may also be left unbound with [`TargetBuilder::device_any`]
+//! (`device(any)`): at the barrier the scheduler places each unbound run
+//! on the compatible device with the earliest modelled finish time,
+//! falling back to the host base function when no device volunteers.
 //!
 //! Scheduling semantics: tasks accumulate into the graph during the
 //! `single` region and execute at its closing barrier.  (Real OpenMP
@@ -47,8 +67,8 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::device::{
-    DataEnv, DeviceId, DevicePlugin, DeviceReport, FnRegistry, TaskFn,
-    HOST_DEVICE,
+    DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel, FnRegistry,
+    TaskFn, HOST_DEVICE,
 };
 use super::graph::TaskGraph;
 use super::host::HostDevice;
@@ -177,19 +197,70 @@ impl OmpRuntime {
     /// dispatch each run as its dependence predecessors complete (the
     /// paper's deferred dispatch, made concurrency-aware).  Any
     /// topologically valid DAG schedules — host and device batches may
-    /// interleave arbitrarily.
-    fn execute(&mut self, graph: TaskGraph, env: &mut DataEnv) -> Result<OmpReport> {
+    /// interleave arbitrarily.  `device(any)` runs are placed here: each
+    /// accelerator prices the run through its communication-aware cost
+    /// model and the dispatcher commits the earliest-finish candidate.
+    fn execute(&mut self, mut graph: TaskGraph, env: &mut DataEnv) -> Result<OmpReport> {
         let t0 = Instant::now();
         let mut report = OmpReport { tasks: graph.len(), ..Default::default() };
         if graph.is_empty() {
             return Ok(report);
         }
         let mut disp = Dispatcher::new(BatchDag::build(&graph)?);
-        while let Some((run, release_s)) = disp.next() {
-            let (dev, mut ids) = {
-                let r = disp.dag().run(run);
-                (r.device, r.tasks.clone())
+        loop {
+            // Placement candidates for the *ready* unbound runs (their
+            // predecessors have finished, so the buffers they map are in
+            // the environment at their true sizes): every accelerator
+            // that can execute a run (kernel↔IP compatibility included —
+            // the vc709 model reuses the mapper's skip logic) advertises
+            // its modelled batch duration.  Abstainers are skipped; with
+            // no candidates at all the dispatcher falls back to the host
+            // base function (the paper's verification flow).  Bound-only
+            // graphs (all the figure sweeps) price nothing here.
+            for r in disp.ready_unplaced() {
+                let tasks = disp.dag().run(r).tasks.clone();
+                let mut cands: Vec<(DeviceId, f64)> = Vec::new();
+                for (i, plugin) in self.devices.iter().enumerate().skip(1) {
+                    let arch = plugin.arch();
+                    let names: Vec<String> = tasks
+                        .iter()
+                        .map(|id| {
+                            self.variants
+                                .resolve(&graph.task(*id).base_name, arch)
+                        })
+                        .collect();
+                    if let Some(est) = plugin
+                        .estimate_batch_s(&graph, &tasks, &names, &self.fns, env)
+                    {
+                        cands.push((DeviceId(i), est));
+                    }
+                }
+                disp.set_candidates(r, cands);
+            }
+            let Some((run, release_s)) = disp.next() else {
+                break;
             };
+            let dev = disp.device_of(run).ok_or_else(|| {
+                anyhow::anyhow!("dispatched run has no device (scheduler bug)")
+            })?;
+            let mut ids = disp.dag().run(run).tasks.clone();
+            // bind placed tasks and resolve their `declare variant`
+            // against the chosen device's arch (deferred resolution —
+            // the arch was unknown at submit time)
+            let arch = self
+                .devices
+                .get(dev.0)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("task bound to unknown device {}", dev.0)
+                })?
+                .arch();
+            for id in &ids {
+                let t = &mut graph.tasks[id.0];
+                if t.device.is_any() {
+                    t.device = DeviceSel::Bound(dev);
+                    t.fn_name = self.variants.resolve(&t.base_name, arch);
+                }
+            }
             // Coalesce every ready host run released by the same instant
             // into this batch: ready runs share no dependence path, the
             // host plugin schedules arbitrary subgraphs on its worker
@@ -258,7 +329,7 @@ impl<'rt> SingleCtx<'rt> {
     /// `#pragma omp task` — a host task (no offload).
     pub fn task(&mut self, fn_name: &str) -> TargetBuilder<'_, 'rt> {
         let mut b = self.target(fn_name);
-        b.device = Some(HOST_DEVICE);
+        b.device = Some(DeviceSel::Bound(HOST_DEVICE));
         b
     }
 
@@ -270,7 +341,7 @@ impl<'rt> SingleCtx<'rt> {
 pub struct TargetBuilder<'a, 'rt> {
     ctx: &'a mut SingleCtx<'rt>,
     base_name: String,
-    device: Option<DeviceId>,
+    device: Option<DeviceSel>,
     maps: Vec<(MapDir, String)>,
     deps_in: Vec<DepVar>,
     deps_out: Vec<DepVar>,
@@ -280,7 +351,44 @@ pub struct TargetBuilder<'a, 'rt> {
 impl<'a, 'rt> TargetBuilder<'a, 'rt> {
     /// `device(n)` clause.
     pub fn device(mut self, dev: DeviceId) -> Self {
-        self.device = Some(dev);
+        self.device = Some(DeviceSel::Bound(dev));
+        self
+    }
+    /// `device(any)` clause: leave the task unbound — at the barrier the
+    /// scheduler places its run on the compatible device with the
+    /// earliest modelled finish (communication cost included), or on
+    /// the host base function when no device matches:
+    ///
+    /// ```
+    /// use omp_fpga::omp::*;
+    /// use omp_fpga::stencil::Grid;
+    /// let mut rt = OmpRuntime::new(1);
+    /// rt.register_software("work", |env| {
+    ///     let mut g = env.take("V")?;
+    ///     for v in g.data_mut() {
+    ///         *v += 1.0;
+    ///     }
+    ///     env.put("V", g);
+    ///     Ok(())
+    /// });
+    /// let mut env = DataEnv::new();
+    /// env.insert("V", Grid::zeros(&[2, 2]).unwrap());
+    /// let d = rt.dep_vars(2);
+    /// rt.parallel(&mut env, |ctx| {
+    ///     // no accelerator registered: the run falls back to the host
+    ///     ctx.target("work")
+    ///         .device_any()
+    ///         .map(MapDir::ToFrom, "V")
+    ///         .depend_in(d[0])
+    ///         .depend_out(d[1])
+    ///         .nowait()
+    ///         .submit()?;
+    ///     Ok(())
+    /// }).unwrap();
+    /// assert!(env.get("V").unwrap().data().iter().all(|&v| v == 1.0));
+    /// ```
+    pub fn device_any(mut self) -> Self {
+        self.device = Some(DeviceSel::Any);
         self
     }
     /// `map(dir: name)` clause.
@@ -305,16 +413,22 @@ impl<'a, 'rt> TargetBuilder<'a, 'rt> {
     }
 
     /// Create the task (the `target` region is reached by the control
-    /// thread).  Variant resolution happens now, against the arch of the
-    /// executing device.
+    /// thread).  For a bound task, variant resolution happens now,
+    /// against the arch of the executing device; a `device(any)` task
+    /// keeps its base name until placement chooses the arch.
     pub fn submit(self) -> Result<TaskId> {
-        let device = self.device.unwrap_or(self.ctx.default_device);
-        let arch = *self
-            .ctx
-            .device_archs
-            .get(device.0)
-            .ok_or_else(|| anyhow::anyhow!("device({}) does not exist", device.0))?;
-        let fn_name = self.ctx.variants.resolve(&self.base_name, arch);
+        let device = self
+            .device
+            .unwrap_or(DeviceSel::Bound(self.ctx.default_device));
+        let fn_name = match device {
+            DeviceSel::Bound(d) => {
+                let arch = *self.ctx.device_archs.get(d.0).ok_or_else(|| {
+                    anyhow::anyhow!("device({}) does not exist", d.0)
+                })?;
+                self.ctx.variants.resolve(&self.base_name, arch)
+            }
+            DeviceSel::Any => self.base_name.clone(),
+        };
         if !self.nowait && !self.deps_out.is_empty() {
             // A blocking target with out-deps would serialize the whole
             // pipeline; the paper's listings always use nowait.  Allowed,
@@ -484,6 +598,185 @@ mod tests {
                 ..DeviceReport::default()
             })
         }
+        fn estimate_batch_s(
+            &self,
+            _graph: &TaskGraph,
+            tasks: &[TaskId],
+            fn_names: &[String],
+            fns: &FnRegistry,
+            _env: &DataEnv,
+        ) -> Option<f64> {
+            // software-capable accelerator: competes for device(any)
+            // runs at its fixed per-task cost
+            for n in fn_names {
+                match fns.get(n) {
+                    Ok(TaskFn::Software(_)) => {}
+                    _ => return None,
+                }
+            }
+            Some(self.per_task_s * tasks.len() as f64)
+        }
+    }
+
+    /// Accelerator without a placement model (the trait default
+    /// abstains): `device(any)` must never target it.
+    struct NoModelAccel;
+
+    impl DevicePlugin for NoModelAccel {
+        fn arch(&self) -> &'static str {
+            "opaque"
+        }
+        fn describe(&self) -> String {
+            "accelerator without a cost model".into()
+        }
+        fn run_batch(
+            &mut self,
+            _graph: &TaskGraph,
+            _tasks: &[TaskId],
+            _env: &mut DataEnv,
+            _fns: &FnRegistry,
+            _release_s: f64,
+        ) -> Result<DeviceReport> {
+            anyhow::bail!("device(any) placed a run on a model-less device")
+        }
+    }
+
+    fn two_buf_runtime() -> OmpRuntime {
+        let mut rt = OmpRuntime::new(2);
+        for buf in ["A", "B"] {
+            rt.register_software(&format!("inc_{buf}"), move |env| {
+                let mut g = env.take(buf)?;
+                for v in g.data_mut() {
+                    *v += 1.0;
+                }
+                env.put(buf, g);
+                Ok(())
+            });
+        }
+        rt
+    }
+
+    /// Submit two unbound chains (3 tasks on "A", 2 on "B").
+    fn submit_two_any_chains(
+        ctx: &mut SingleCtx,
+        deps: &[crate::omp::task::DepVar],
+    ) -> Result<()> {
+        for i in 0..3 {
+            ctx.target("inc_A")
+                .device_any()
+                .map(MapDir::ToFrom, "A")
+                .depend_in(deps[i])
+                .depend_out(deps[i + 1])
+                .nowait()
+                .submit()?;
+        }
+        for i in 10..12 {
+            ctx.target("inc_B")
+                .device_any()
+                .map(MapDir::ToFrom, "B")
+                .depend_in(deps[i])
+                .depend_out(deps[i + 1])
+                .nowait()
+                .submit()?;
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn device_any_chains_balance_across_accelerators() {
+        let mut rt = two_buf_runtime();
+        let d1 = rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
+        let d2 = rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
+        let deps = rt.dep_vars(20);
+        let mut env = DataEnv::new();
+        env.insert("A", Grid::zeros(&[3, 3]).unwrap());
+        env.insert("B", Grid::zeros(&[3, 3]).unwrap());
+        let rep = rt
+            .parallel(&mut env, |ctx| submit_two_any_chains(ctx, &deps))
+            .unwrap();
+        assert_eq!(rep.batches.len(), 2);
+        let devs: Vec<DeviceId> =
+            rep.batches.iter().map(|(d, _)| *d).collect();
+        assert_eq!(devs, vec![d1, d2], "EFT spreads the unbound chains");
+        assert!(env.get("A").unwrap().data().iter().all(|&v| v == 3.0));
+        assert!(env.get("B").unwrap().data().iter().all(|&v| v == 2.0));
+        // makespan = max(3, 2): the chains overlap on two accelerators
+        assert!((rep.virtual_time_s() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_any_prefers_a_compatible_accelerator_over_host() {
+        let mut rt = inc_runtime();
+        let acc = rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
+        let deps = rt.dep_vars(3);
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        let rep = rt
+            .parallel(&mut env, |ctx| {
+                for i in 0..2 {
+                    ctx.target("inc_v")
+                        .device_any()
+                        .map(MapDir::ToFrom, "V")
+                        .depend_in(deps[i])
+                        .depend_out(deps[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(rep.batches.len(), 1);
+        assert_eq!(rep.batches[0].0, acc);
+        assert!((rep.virtual_time_s() - 2.0).abs() < 1e-12);
+        assert!(env.get("V").unwrap().data().iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn device_any_falls_back_to_host_when_no_device_volunteers() {
+        let mut rt = inc_runtime();
+        rt.register_device(Box::new(NoModelAccel));
+        let deps = rt.dep_vars(3);
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        let rep = rt
+            .parallel(&mut env, |ctx| {
+                for i in 0..2 {
+                    ctx.target("inc_v")
+                        .device_any()
+                        .map(MapDir::ToFrom, "V")
+                        .depend_in(deps[i])
+                        .depend_out(deps[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(rep.batches.len(), 1);
+        assert_eq!(rep.batches[0].0, HOST_DEVICE);
+        assert_eq!(rep.virtual_time_s(), 0.0); // host fallback is free
+        assert!(env.get("V").unwrap().data().iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn device_any_schedule_is_deterministic() {
+        let run_once = || {
+            let mut rt = two_buf_runtime();
+            rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
+            rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
+            let deps = rt.dep_vars(20);
+            let mut env = DataEnv::new();
+            env.insert("A", Grid::zeros(&[3, 3]).unwrap());
+            env.insert("B", Grid::zeros(&[3, 3]).unwrap());
+            let rep = rt
+                .parallel(&mut env, |ctx| submit_two_any_chains(ctx, &deps))
+                .unwrap();
+            rep.batches
+                .iter()
+                .map(|(d, r)| (d.0, r.release_s, r.finish_s))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run_once(), run_once(), "same DAG, same placement");
     }
 
     #[test]

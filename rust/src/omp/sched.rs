@@ -21,19 +21,32 @@
 //!   time while runs contending for one device queue behind each other.
 //!   The resulting [`Dispatcher::makespan_s`] is the critical-path length
 //!   of the batch DAG — the number `OmpReport::virtual_time_s` reports.
+//!
+//! Runs whose tasks carry `device(any)` ([`DeviceSel::Any`]) are placed
+//! at dispatch time: the executor supplies per-run *candidates* —
+//! `(device, modelled batch duration)` pairs from each plugin's
+//! communication-aware cost model ([`DevicePlugin::estimate_batch_s`]) —
+//! and [`Dispatcher::next`] commits the candidate with the earliest
+//! modelled **finish** (release ⊔ device-free + estimated duration),
+//! HEFT-style, with ties broken by device index so placement is
+//! deterministic.  Bound runs schedule exactly as before.
+//!
+//! [`DevicePlugin::estimate_batch_s`]: super::device::DevicePlugin::estimate_batch_s
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use super::device::DeviceId;
+use super::device::{DeviceId, DeviceSel, HOST_DEVICE};
 use super::graph::TaskGraph;
 use super::task::TaskId;
 
-/// A maximal single-device dependence chain — one `run_batch` call.
+/// A maximal single-binding dependence chain — one `run_batch` call.
 #[derive(Debug, Clone)]
 pub struct Run {
-    pub device: DeviceId,
+    /// shared `device` clause of the run's tasks: a concrete device, or
+    /// [`DeviceSel::Any`] for a run the dispatcher places
+    pub device: DeviceSel,
     /// tasks in chain order: `tasks[i]` is the sole predecessor of
     /// `tasks[i + 1]` and `tasks[i + 1]` the sole successor of
     /// `tasks[i]` — no task in a run's interior has edges leaving the
@@ -61,7 +74,9 @@ impl BatchDag {
     /// the rest of the pipeline does — keeping the makespan an honest
     /// critical path.  Since every run is a path in the task DAG, an
     /// inter-run cycle would imply a cycle between tasks — impossible —
-    /// so this never fails on a valid DAG.
+    /// so this never fails on a valid DAG.  `device(any)` tasks chain
+    /// with each other (`Any == Any`), never with bound tasks, so an
+    /// unbound pipeline stays one run and is placed as a whole.
     pub fn build(graph: &TaskGraph) -> Result<BatchDag> {
         let order = graph.topo_order()?;
         let mut run_of = vec![usize::MAX; graph.len()];
@@ -151,6 +166,12 @@ pub struct Dispatcher {
     /// runs handed out by `next`/`next_ready_on` but not yet completed
     /// (several at once when the executor coalesces host runs)
     in_flight: Vec<usize>,
+    /// placement candidates per run: `(device, modelled duration)`,
+    /// consulted for `device(any)` runs only
+    cands: Vec<Vec<(DeviceId, f64)>>,
+    /// resolved device per run: the static binding, or the placement
+    /// committed when the run was handed out
+    binding: Vec<Option<DeviceId>>,
     completed: usize,
     makespan: f64,
 }
@@ -160,6 +181,7 @@ impl Dispatcher {
         let m = dag.len();
         let indeg: Vec<usize> = (0..m).map(|r| dag.preds(r).len()).collect();
         let ready = (0..m).filter(|&r| indeg[r] == 0).collect();
+        let binding = dag.runs().iter().map(|r| r.device.bound()).collect();
         Dispatcher {
             dag,
             indeg,
@@ -167,6 +189,8 @@ impl Dispatcher {
             dev_free: BTreeMap::new(),
             ready,
             in_flight: Vec::new(),
+            cands: vec![Vec::new(); m],
+            binding,
             completed: 0,
             makespan: 0.0,
         }
@@ -176,27 +200,101 @@ impl Dispatcher {
         &self.dag
     }
 
-    /// Pop the ready run with the earliest modelled start time
-    /// (ties broken by run index, so dispatch is deterministic).
-    /// Returns `(run, release_s)`; `None` when nothing is ready.
-    pub fn next(&mut self) -> Option<(usize, f64)> {
-        let mut best: Option<(usize, usize, f64)> = None; // (pos, run, start)
-        for (i, &r) in self.ready.iter().enumerate() {
-            let free = self
-                .dev_free
-                .get(&self.dag.runs[r].device.0)
-                .copied()
-                .unwrap_or(0.0);
-            let start = self.release[r].max(free);
+    /// Provide placement candidates for a `device(any)` run: `(device,
+    /// modelled batch duration on that device)` pairs.  Sorted by device
+    /// index here so placement is independent of caller order.  A run
+    /// dispatched with no candidates falls back to the host (device 0).
+    pub fn set_candidates(&mut self, run: usize, mut cands: Vec<(DeviceId, f64)>) {
+        cands.sort_by_key(|(d, _)| d.0);
+        self.cands[run] = cands;
+    }
+
+    /// Ready `device(any)` runs not yet dispatched — exactly the runs
+    /// the executor should (re-)price via [`Dispatcher::set_candidates`]
+    /// before the next [`Dispatcher::next`] call.  A ready run's
+    /// predecessors have all finished, so the buffers it maps are
+    /// present in the data environment at their true sizes.  Sorted for
+    /// deterministic pricing order.
+    pub fn ready_unplaced(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .ready
+            .iter()
+            .copied()
+            .filter(|&r| self.dag.runs[r].device.is_any())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The device run `run` executes on: its static binding, or the
+    /// placement committed when [`Dispatcher::next`] handed it out.
+    /// `None` for a `device(any)` run not yet dispatched.
+    pub fn device_of(&self, run: usize) -> Option<DeviceId> {
+        self.binding[run]
+    }
+
+    fn free_of(&self, d: DeviceId) -> f64 {
+        self.dev_free.get(&d.0).copied().unwrap_or(0.0)
+    }
+
+    /// Modelled `(device, start)` for ready run `r` under the current
+    /// clocks.  Bound runs start at `release ⊔ device-free`.  For a
+    /// `device(any)` run every candidate is priced and the earliest
+    /// modelled *finish* wins (`release ⊔ free + estimated duration`),
+    /// ties broken by device index — deterministic HEFT-style placement
+    /// that weighs communication cost (in the estimate) against queueing
+    /// (in the availability clock).
+    fn placement_of(&self, r: usize) -> (DeviceId, f64) {
+        if let Some(d) = self.dag.runs[r].device.bound() {
+            return (d, self.release[r].max(self.free_of(d)));
+        }
+        let cands = &self.cands[r];
+        if cands.is_empty() {
+            // no device volunteered (or the executor never priced the
+            // run): fall back to the host, which executes base
+            // functions free in virtual time
+            return (
+                HOST_DEVICE,
+                self.release[r].max(self.free_of(HOST_DEVICE)),
+            );
+        }
+        let mut best: Option<(DeviceId, f64, f64)> = None; // (dev, start, fin)
+        for &(d, est) in cands {
+            let start = self.release[r].max(self.free_of(d));
+            let finish = start + est;
             let better = match best {
                 None => true,
-                Some((_, br, bs)) => start < bs || (start == bs && r < br),
+                Some((bd, _, bf)) => {
+                    finish < bf || (finish == bf && d.0 < bd.0)
+                }
             };
             if better {
-                best = Some((i, r, start));
+                best = Some((d, start, finish));
             }
         }
-        let (i, r, start) = best?;
+        let (d, start, _) = best.expect("non-empty candidates");
+        (d, start)
+    }
+
+    /// Pop the ready run with the earliest modelled start time
+    /// (ties broken by run index, so dispatch is deterministic),
+    /// committing the placement of `device(any)` runs as a side effect
+    /// (readable via [`Dispatcher::device_of`]).
+    /// Returns `(run, release_s)`; `None` when nothing is ready.
+    pub fn next(&mut self) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, usize, DeviceId, f64)> = None;
+        for (i, &r) in self.ready.iter().enumerate() {
+            let (dev, start) = self.placement_of(r);
+            let better = match best {
+                None => true,
+                Some((_, br, _, bs)) => start < bs || (start == bs && r < br),
+            };
+            if better {
+                best = Some((i, r, dev, start));
+            }
+        }
+        let (i, r, dev, start) = best?;
+        self.binding[r] = Some(dev);
         self.ready.swap_remove(i);
         self.in_flight.push(r);
         Some((r, start))
@@ -214,7 +312,7 @@ impl Dispatcher {
     pub fn next_ready_on(&mut self, dev: DeviceId, release_cap: f64) -> Option<(usize, f64)> {
         let mut cand: Option<(usize, usize)> = None; // (pos, run)
         for (i, &r) in self.ready.iter().enumerate() {
-            if self.dag.runs[r].device == dev
+            if self.dag.runs[r].device == DeviceSel::Bound(dev)
                 && self.release[r] <= release_cap
                 && cand.map_or(true, |(_, br)| r < br)
             {
@@ -242,7 +340,9 @@ impl Dispatcher {
         // device's clock; zero-duration batches (the host pool) never
         // delay later batches on the same device
         if finish_s > self.release[run] {
-            let dev = self.dag.runs[run].device.0;
+            let dev = self.binding[run]
+                .expect("complete() for a run that was never bound")
+                .0;
             let free = self.dev_free.entry(dev).or_insert(0.0);
             if finish_s > *free {
                 *free = finish_s;
@@ -279,17 +379,25 @@ mod tests {
     use crate::omp::task::{DepVar, MapDir, Task};
     use crate::util::prop::check;
 
-    fn task(dev: usize, deps_in: &[usize], deps_out: &[usize]) -> Task {
+    fn sel_task(sel: DeviceSel, deps_in: &[usize], deps_out: &[usize]) -> Task {
         Task {
             id: TaskId(0),
             base_name: "f".into(),
             fn_name: "f".into(),
-            device: DeviceId(dev),
+            device: sel,
             maps: vec![(MapDir::ToFrom, "V".into())],
             deps_in: deps_in.iter().map(|&d| DepVar(d)).collect(),
             deps_out: deps_out.iter().map(|&d| DepVar(d)).collect(),
             nowait: true,
         }
+    }
+
+    fn task(dev: usize, deps_in: &[usize], deps_out: &[usize]) -> Task {
+        sel_task(DeviceSel::Bound(DeviceId(dev)), deps_in, deps_out)
+    }
+
+    fn any_task(deps_in: &[usize], deps_out: &[usize]) -> Task {
+        sel_task(DeviceSel::Any, deps_in, deps_out)
     }
 
     /// Drain a dispatcher, modelling `dur(run)` virtual seconds per run.
@@ -314,10 +422,10 @@ mod tests {
         g.add(task(0, &[2], &[3])); // host consume
         let dag = BatchDag::build(&g).unwrap();
         assert_eq!(dag.len(), 3);
-        assert_eq!(dag.run(0).device, DeviceId(0));
-        assert_eq!(dag.run(1).device, DeviceId(1));
+        assert_eq!(dag.run(0).device, DeviceId(0).into());
+        assert_eq!(dag.run(1).device, DeviceId(1).into());
         assert_eq!(dag.run(1).tasks.len(), 2);
-        assert_eq!(dag.run(2).device, DeviceId(0));
+        assert_eq!(dag.run(2).device, DeviceId(0).into());
         assert_eq!(dag.preds(1), &[0]);
         assert_eq!(dag.preds(2), &[1]);
     }
@@ -334,7 +442,7 @@ mod tests {
         assert_eq!(dag.len(), 4);
         let mut d = Dispatcher::new(dag);
         let order = drain(&mut d, |r| {
-            if r.device == DeviceId(1) {
+            if r.device == DeviceId(1).into() {
                 1.0
             } else {
                 0.0
@@ -441,6 +549,199 @@ mod tests {
         d.complete(r2, 1.0);
         assert!(d.is_complete());
         assert!((d.makespan_s() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn any_chain_condenses_to_one_unbound_run() {
+        let mut g = TaskGraph::new();
+        for i in 0..3 {
+            g.add(any_task(&[i], &[i + 1]));
+        }
+        let dag = BatchDag::build(&g).unwrap();
+        assert_eq!(dag.len(), 1);
+        assert_eq!(dag.run(0).device, DeviceSel::Any);
+        assert_eq!(dag.run(0).tasks.len(), 3);
+        // ...and an unbound task never chains with a bound one
+        let mut g2 = TaskGraph::new();
+        g2.add(task(1, &[], &[0]));
+        g2.add(any_task(&[0], &[1]));
+        let dag2 = BatchDag::build(&g2).unwrap();
+        assert_eq!(dag2.len(), 2);
+    }
+
+    #[test]
+    fn any_runs_balance_across_devices_by_earliest_finish() {
+        // two independent unbound chains (3 and 2 tasks), two equal
+        // devices: EFT placement spreads them — makespan max(3, 2)
+        let mut g = TaskGraph::new();
+        for i in 0..3 {
+            g.add(any_task(&[i], &[i + 1]));
+        }
+        for i in 10..12 {
+            g.add(any_task(&[i], &[i + 1]));
+        }
+        let dag = BatchDag::build(&g).unwrap();
+        assert_eq!(dag.len(), 2);
+        let mut d = Dispatcher::new(dag);
+        assert_eq!(d.ready_unplaced(), vec![0, 1]);
+        d.set_candidates(0, vec![(DeviceId(1), 3.0), (DeviceId(2), 3.0)]);
+        d.set_candidates(1, vec![(DeviceId(1), 2.0), (DeviceId(2), 2.0)]);
+        let durs = [3.0f64, 2.0];
+        while let Some((r, release)) = d.next() {
+            d.complete(r, release + durs[r]);
+        }
+        assert!(d.is_complete());
+        // the t=0 tie broke to device 1 for the first run; the second
+        // run then prefers the idle device 2 (finish 2) over queueing
+        // behind the first chain (3 + 2)
+        assert_eq!(d.device_of(0), Some(DeviceId(1)));
+        assert_eq!(d.device_of(1), Some(DeviceId(2)));
+        assert!((d.makespan_s() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn any_avoids_busy_device_despite_higher_estimate() {
+        // a bound 5 s run occupies device 1; an unbound run estimated at
+        // 1 s on device 1 but 4 s on device 2 still picks device 2 — EFT
+        // weighs the availability clock, not the raw estimate alone
+        let mut g = TaskGraph::new();
+        g.add(task(1, &[], &[0]));
+        g.add(any_task(&[10], &[11]));
+        let dag = BatchDag::build(&g).unwrap();
+        assert_eq!(dag.len(), 2);
+        let mut d = Dispatcher::new(dag);
+        d.set_candidates(1, vec![(DeviceId(1), 1.0), (DeviceId(2), 4.0)]);
+        let (r0, rel0) = d.next().unwrap();
+        assert_eq!(r0, 0); // t=0 tie breaks by run index
+        d.complete(r0, rel0 + 5.0);
+        let (r1, rel1) = d.next().unwrap();
+        assert_eq!((r1, rel1), (1, 0.0));
+        d.complete(r1, rel1 + 4.0);
+        assert_eq!(d.device_of(1), Some(DeviceId(2)));
+        assert!((d.makespan_s() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn any_placement_ties_break_by_device_index() {
+        let mut g = TaskGraph::new();
+        g.add(any_task(&[], &[0]));
+        let dag = BatchDag::build(&g).unwrap();
+        let mut d = Dispatcher::new(dag);
+        // deliberately unsorted: set_candidates normalizes by device
+        d.set_candidates(0, vec![(DeviceId(3), 2.0), (DeviceId(1), 2.0)]);
+        let (r, rel) = d.next().unwrap();
+        assert_eq!(d.device_of(0), Some(DeviceId(1)));
+        d.complete(r, rel + 2.0);
+        assert!(d.is_complete());
+    }
+
+    #[test]
+    fn any_host_fallback_candidate_is_honored() {
+        let mut g = TaskGraph::new();
+        g.add(any_task(&[], &[0]));
+        let mut d = Dispatcher::new(BatchDag::build(&g).unwrap());
+        d.set_candidates(0, vec![(DeviceId(0), 0.0)]);
+        let (r, rel) = d.next().unwrap();
+        assert_eq!((r, rel), (0, 0.0));
+        d.complete(r, 0.0);
+        assert_eq!(d.device_of(0), Some(DeviceId(0)));
+        assert!(d.is_complete());
+        assert_eq!(d.makespan_s(), 0.0);
+    }
+
+    #[test]
+    fn any_run_with_no_candidates_falls_back_to_host() {
+        let mut g = TaskGraph::new();
+        g.add(any_task(&[], &[0]));
+        let mut d = Dispatcher::new(BatchDag::build(&g).unwrap());
+        // set_candidates never called: the dispatcher places on the host
+        let (r, rel) = d.next().unwrap();
+        assert_eq!((r, rel), (0, 0.0));
+        assert_eq!(d.device_of(0), Some(HOST_DEVICE));
+        d.complete(r, 0.0);
+        assert!(d.is_complete());
+    }
+
+    #[test]
+    fn prop_any_placement_is_deterministic_and_valid() {
+        // random DAGs mixing bound and unbound tasks: every device(any)
+        // run is placed on one of its candidates, every edge is
+        // respected, and scheduling the same DAG twice yields the exact
+        // same (run, device, release) sequence and makespan
+        check(
+            "sched-any-placement",
+            30,
+            |rng| {
+                let n = rng.range(1, 20);
+                (0..n)
+                    .map(|_| {
+                        let dev = rng.range(0, 4); // 3 encodes device(any)
+                        let din: Vec<usize> =
+                            (0..rng.range(0, 3)).map(|_| rng.range(0, 5)).collect();
+                        let dout: Vec<usize> =
+                            (0..rng.range(0, 3)).map(|_| rng.range(0, 5)).collect();
+                        (dev, din, dout)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |specs| {
+                let schedule = || -> Result<(Vec<(usize, DeviceId, f64)>, f64), String> {
+                    let mut g = TaskGraph::new();
+                    for (dev, din, dout) in specs {
+                        if *dev == 3 {
+                            g.add(any_task(din, dout));
+                        } else {
+                            g.add(task(*dev, din, dout));
+                        }
+                    }
+                    let dag = BatchDag::build(&g).map_err(|e| e.to_string())?;
+                    let mut d = Dispatcher::new(dag);
+                    for r in 0..d.dag().len() {
+                        if d.dag().run(r).device.is_any() {
+                            let n = d.dag().run(r).tasks.len() as f64;
+                            d.set_candidates(
+                                r,
+                                vec![(DeviceId(1), n), (DeviceId(2), 0.5 * n)],
+                            );
+                        }
+                    }
+                    let mut log = Vec::new();
+                    while let Some((r, rel)) = d.next() {
+                        let dev =
+                            d.device_of(r).ok_or("dispatched run unbound")?;
+                        let dur = if dev == DeviceId(0) {
+                            0.0
+                        } else {
+                            d.dag().run(r).tasks.len() as f64
+                        };
+                        log.push((r, dev, rel));
+                        d.complete(r, rel + dur);
+                    }
+                    if !d.is_complete() {
+                        return Err("stalled".into());
+                    }
+                    for r in 0..d.dag().len() {
+                        if d.dag().run(r).device.is_any() {
+                            let dev = d.device_of(r).unwrap();
+                            if dev != DeviceId(1) && dev != DeviceId(2) {
+                                return Err(format!(
+                                    "run {r} placed on non-candidate {dev:?}"
+                                ));
+                            }
+                        }
+                    }
+                    Ok((log, d.makespan_s()))
+                };
+                let (a, ma) = schedule()?;
+                let (b, mb) = schedule()?;
+                if a != b || ma != mb {
+                    return Err(
+                        "same DAG produced two different schedules".into()
+                    );
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -32,9 +32,12 @@ pub struct Task {
     pub id: TaskId,
     /// base function name as written in the source
     pub base_name: String,
-    /// variant the runtime resolved for the executing device's arch
+    /// variant the runtime resolved for the executing device's arch.
+    /// For a `device(any)` task this is the base name until placement
+    /// binds the task and re-resolves it against the chosen arch.
     pub fn_name: String,
-    pub device: super::device::DeviceId,
+    /// `device` clause: statically bound, or `Any` for scheduler-placed
+    pub device: super::device::DeviceSel,
     /// `map` clauses: (direction, buffer name in the data environment)
     pub maps: Vec<(MapDir, String)>,
     pub deps_in: Vec<DepVar>,
@@ -77,7 +80,7 @@ mod tests {
             id: TaskId(0),
             base_name: "f".into(),
             fn_name: "hw_f".into(),
-            device: super::super::device::DeviceId(1),
+            device: super::super::device::DeviceId(1).into(),
             maps: vec![
                 (MapDir::To, "a".into()),
                 (MapDir::From, "b".into()),

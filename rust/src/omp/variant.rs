@@ -11,6 +11,15 @@
 //! variant matches the executing device's arch, the base (software)
 //! function runs — the paper's verification flow, where dropping the
 //! `vc709` compiler flag falls back to software.
+//!
+//! ```
+//! use omp_fpga::omp::VariantRegistry;
+//! let mut vr = VariantRegistry::default();
+//! vr.declare("do_laplace2d", "vc709", "hw_laplace2d");
+//! assert_eq!(vr.resolve("do_laplace2d", "vc709"), "hw_laplace2d");
+//! // no variant for the host arch: the base function runs
+//! assert_eq!(vr.resolve("do_laplace2d", "host"), "do_laplace2d");
+//! ```
 
 use std::collections::BTreeMap;
 

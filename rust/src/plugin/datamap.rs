@@ -74,7 +74,7 @@ mod tests {
                 id: TaskId(0),
                 base_name: "f".into(),
                 fn_name: "hw_f".into(),
-                device: DeviceId(1),
+                device: DeviceId(1).into(),
                 maps: vec![(dir, buf.into())],
                 deps_in: vec![DepVar(i)],
                 deps_out: vec![DepVar(i + 1)],
@@ -110,7 +110,7 @@ mod tests {
             id: TaskId(0),
             base_name: "f".into(),
             fn_name: "hw_f".into(),
-            device: DeviceId(1),
+            device: DeviceId(1).into(),
             maps: vec![(MapDir::ToFrom, "W".into())],
             deps_in: vec![DepVar(2)],
             deps_out: vec![DepVar(3)],

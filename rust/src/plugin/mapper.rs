@@ -62,6 +62,19 @@ pub fn assign(
         })
         .collect();
     let total = flat.len();
+    // unmappable-kernel error naming the kernel and what the cluster
+    // actually carries, so misconfigured conf.json files are diagnosable
+    let no_ip = |t: usize, k: Kernel| {
+        let mut names: Vec<&str> = flat.iter().map(|(_, k)| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        anyhow::anyhow!(
+            "no IP in the cluster implements kernel '{}' (task {t}); \
+             synthesized IP kernels: [{}]",
+            k.name(),
+            names.join(", ")
+        )
+    };
 
     let mut slots = Vec::with_capacity(task_kernels.len());
     let mut passes: Vec<Vec<usize>> = vec![Vec::new()];
@@ -80,21 +93,13 @@ pub fn assign(
                 // cursor (stream cannot flow backwards through the ring in
                 // one pass): close the pass
                 if passes.last().unwrap().is_empty() {
-                    bail!(
-                        "no IP in the cluster implements kernel {} \
-                         (task {t})",
-                        k.name()
-                    );
+                    return Err(no_ip(t, k));
                 }
                 passes.push(Vec::new());
                 used.iter_mut().for_each(|u| *u = false);
                 match (0..total).find(|&j| flat[j].1 == k) {
                     Some(j) => j,
-                    None => bail!(
-                        "no IP in the cluster implements kernel {} \
-                         (task {t})",
-                        k.name()
-                    ),
+                    None => return Err(no_ip(t, k)),
                 }
             }
         };
@@ -173,6 +178,30 @@ mod tests {
         let cluster = homog(2, 2, Kernel::Laplace2d);
         assert!(assign(&cluster, &[Kernel::Jacobi9pt]).is_err());
         assert!(assign(&[], &[Kernel::Laplace2d]).is_err());
+    }
+
+    #[test]
+    fn missing_kernel_error_names_kernel_and_cluster_ips() {
+        // the message must name both the offending kernel and what the
+        // cluster actually synthesizes, so misconfigured conf.json files
+        // are diagnosable without reading the mapper
+        let cluster = vec![
+            vec![Kernel::Laplace2d, Kernel::Diffusion2d],
+            vec![Kernel::Laplace2d],
+        ];
+        let err = assign(&cluster, &[Kernel::Jacobi9pt]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("'jacobi9pt'"), "{msg}");
+        assert!(msg.contains("diffusion2d"), "{msg}");
+        assert!(msg.contains("laplace2d"), "{msg}");
+        assert!(msg.contains("task 0"), "{msg}");
+        // mid-chain miss reports the right task index
+        let err2 = assign(
+            &cluster,
+            &[Kernel::Laplace2d, Kernel::Laplace2d, Kernel::Jacobi9pt],
+        )
+        .unwrap_err();
+        assert!(err2.to_string().contains("task 2"), "{err2}");
     }
 
     #[test]

@@ -111,14 +111,7 @@ impl Vc709Plugin {
         final_pass: bool,
         kernels: &[Kernel],
     ) -> Result<Vec<(usize, Vec<usize>)>> {
-        // group consecutive slots by board
-        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
-        for s in slots {
-            match groups.last_mut() {
-                Some((b, v)) if *b == s.board => v.push(s.ip),
-                _ => groups.push((s.board, vec![s.ip])),
-            }
-        }
+        let groups = group_slots(slots);
         let nboards = self.cluster.nboards();
         let last_board = groups.last().unwrap().0;
 
@@ -548,6 +541,19 @@ impl Vc709Plugin {
     }
 }
 
+/// Group consecutive pass slots by board: one group = one contiguous IP
+/// chain on a board between ring crossings.
+fn group_slots(slots: &[IpSlot]) -> Vec<(usize, Vec<usize>)> {
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+    for s in slots {
+        match groups.last_mut() {
+            Some((b, v)) if *b == s.board => v.push(s.ip),
+            _ => groups.push((s.board, vec![s.ip])),
+        }
+    }
+    groups
+}
+
 enum Hop {
     Pcie,
     VfifoWrite(usize),
@@ -699,14 +705,166 @@ impl DevicePlugin for Vc709Plugin {
         report.stats.passes = npasses;
         Ok(report)
     }
+
+    /// Communication-aware placement model for `device(any)`: the exact
+    /// DES this cluster would time the batch with — same mapper (so the
+    /// kernel↔IP skip logic decides compatibility), same pass hop
+    /// sequences across the ring, same byte counts the functional model
+    /// moves — evaluated against fresh servers starting at 0.  `None`
+    /// when any task resolves to software on this arch (no `declare
+    /// variant` for vc709) or when no IP in this cluster implements a
+    /// required kernel: such runs fall back to other devices or the
+    /// host.
+    fn estimate_batch_s(
+        &self,
+        graph: &TaskGraph,
+        tasks: &[TaskId],
+        fn_names: &[String],
+        fns: &FnRegistry,
+        env: &DataEnv,
+    ) -> Option<f64> {
+        if tasks.is_empty() {
+            return Some(0.0);
+        }
+        let kernels: Vec<Kernel> = fn_names
+            .iter()
+            .map(|n| fns.kernel_of(n).ok())
+            .collect::<Option<_>>()?;
+        let assignment = mapper::assign(&self.board_kernels(), &kernels).ok()?;
+        // admission mirrors run_batch exactly: a chain the map-clause
+        // coalescer rejects (e.g. mixed buffers) must make this plugin
+        // abstain rather than win placement and fail at execution
+        let plan = datamap::coalesce(graph, tasks).ok()?;
+        // the bytes the batch moves: the coalesced buffer, priced at the
+        // size currently in the data environment — the same bytes
+        // run_batch will stream.  The executor re-prices pending runs
+        // each dispatch round, so the buffer is present by the time a
+        // placement is committed (upstream producers have run).
+        let (bytes, shape) = match env.get(&plan.buffer) {
+            Ok(g) => (g.bytes() as f64, g.shape().to_vec()),
+            Err(_) => (0.0, vec![1, 1]),
+        };
+        if bytes > 0.0 && kernels.iter().any(|k| k.ndim() != shape.len()) {
+            // run_batch would reject the dimension mismatch
+            return None;
+        }
+        let mut servers = self.build_servers();
+        let mut vtime = self.timing.offload_startup_s;
+        let npasses = assignment.npasses();
+        for p in 0..npasses {
+            let groups = group_slots(&assignment.pass_slots(p));
+            let hops =
+                self.pass_hops(&groups, p == 0, p + 1 == npasses, &shape);
+            vtime += self.timing.pass_overhead_s;
+            vtime = self.stream_pass_virtual(&mut servers, &hops, vtime, bytes);
+        }
+        Some(vtime)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::omp::task::{DepVar, Task};
 
     #[test]
     fn frame_overhead_is_small() {
         assert!(FRAME_OVERHEAD > 1.0 && FRAME_OVERHEAD < 1.01);
+    }
+
+    #[test]
+    fn group_slots_splits_at_board_crossings() {
+        let slots = [
+            IpSlot { board: 0, ip: 0 },
+            IpSlot { board: 0, ip: 1 },
+            IpSlot { board: 2, ip: 0 },
+            IpSlot { board: 0, ip: 3 },
+        ];
+        let g = group_slots(&slots);
+        assert_eq!(
+            g,
+            vec![(0, vec![0, 1]), (2, vec![0]), (0, vec![3])]
+        );
+        assert!(group_slots(&[]).is_empty());
+    }
+
+    #[test]
+    fn placement_estimate_matches_run_batch_duration() {
+        // the cost model and the executed batch share one DES: the
+        // estimate must equal the reported duration exactly, regardless
+        // of the batch's release time
+        let cfg = ClusterConfig::homogeneous(2, 1, Kernel::Laplace2d);
+        let mut plugin = Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap();
+        let mut graph = TaskGraph::new();
+        let mut fns = FnRegistry::default();
+        fns.register("hw_f", crate::omp::TaskFn::HwKernel(Kernel::Laplace2d));
+        let mut ids = Vec::new();
+        for i in 0..4 {
+            ids.push(graph.add(Task {
+                id: TaskId(0),
+                base_name: "f".into(),
+                fn_name: "hw_f".into(),
+                device: crate::omp::DeviceId(1).into(),
+                maps: vec![(crate::omp::MapDir::ToFrom, "V".into())],
+                deps_in: vec![DepVar(i)],
+                deps_out: vec![DepVar(i + 1)],
+                nowait: true,
+            }));
+        }
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::random(&[16, 12], 2).unwrap());
+        let names: Vec<String> = vec!["hw_f".into(); 4];
+        let est = plugin
+            .estimate_batch_s(&graph, &ids, &names, &fns, &env)
+            .expect("compatible batch must be priced");
+        let rep = plugin.run_batch(&graph, &ids, &mut env, &fns, 0.5).unwrap();
+        assert!(
+            (est - rep.virtual_time_s).abs() < 1e-12,
+            "estimate {est} != executed duration {}",
+            rep.virtual_time_s
+        );
+        // a kernel the cluster does not implement makes the plugin
+        // abstain (mapper skip logic), as does a software resolution
+        fns.register("hw_j", crate::omp::TaskFn::HwKernel(Kernel::Jacobi9pt));
+        let bad: Vec<String> = vec!["hw_j".into(); 4];
+        assert!(plugin
+            .estimate_batch_s(&graph, &ids, &bad, &fns, &env)
+            .is_none());
+        let soft: Vec<String> = vec!["f".into(); 4];
+        assert!(plugin
+            .estimate_batch_s(&graph, &ids, &soft, &fns, &env)
+            .is_none());
+    }
+
+    #[test]
+    fn estimate_abstains_on_mixed_buffer_chain() {
+        // run_batch's coalescer rejects a chain mapping two different
+        // buffers, so the cost model must abstain rather than win
+        // placement and fail at execution
+        let cfg = ClusterConfig::homogeneous(1, 2, Kernel::Laplace2d);
+        let plugin = Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap();
+        let mut fns = FnRegistry::default();
+        fns.register("hw_f", crate::omp::TaskFn::HwKernel(Kernel::Laplace2d));
+        let mut graph = TaskGraph::new();
+        let mut ids = Vec::new();
+        for (i, buf) in ["A", "B"].iter().enumerate() {
+            ids.push(graph.add(Task {
+                id: TaskId(0),
+                base_name: "f".into(),
+                fn_name: "hw_f".into(),
+                device: crate::omp::DeviceSel::Any,
+                maps: vec![(crate::omp::MapDir::ToFrom, (*buf).into())],
+                deps_in: vec![DepVar(i)],
+                deps_out: vec![DepVar(i + 1)],
+                nowait: true,
+            }));
+        }
+        let mut env = DataEnv::new();
+        env.insert("A", Grid::random(&[8, 8], 1).unwrap());
+        env.insert("B", Grid::random(&[8, 8], 2).unwrap());
+        let names: Vec<String> = vec!["hw_f".into(); 2];
+        assert!(plugin
+            .estimate_batch_s(&graph, &ids, &names, &fns, &env)
+            .is_none());
     }
 }

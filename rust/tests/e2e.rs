@@ -5,7 +5,7 @@
 use omp_fpga::config::ClusterConfig;
 use omp_fpga::exec::{run_host_reference, run_stencil_app, RunSpec};
 use omp_fpga::hw::ip_core::IpCore;
-use omp_fpga::omp::device::DevicePlugin;
+use omp_fpga::omp::device::{DevicePlugin, HOST_DEVICE};
 use omp_fpga::omp::{DataEnv, MapDir, OmpRuntime};
 use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
 use omp_fpga::stencil::kernels::ALL_KERNELS;
@@ -106,7 +106,7 @@ fn vfifo_drained_after_run() {
             id: omp_fpga::omp::TaskId(0),
             base_name: "f".into(),
             fn_name: "hw_f".into(),
-            device: omp_fpga::omp::DeviceId(1),
+            device: omp_fpga::omp::DeviceId(1).into(),
             maps: vec![(MapDir::ToFrom, "V".into())],
             deps_in: vec![omp_fpga::omp::DepVar(i)],
             deps_out: vec![omp_fpga::omp::DepVar(i + 1)],
@@ -144,7 +144,7 @@ fn frame_stats_accumulate_on_multi_board_runs() {
             id: omp_fpga::omp::TaskId(0),
             base_name: "f".into(),
             fn_name: "hw_f".into(),
-            device: omp_fpga::omp::DeviceId(1),
+            device: omp_fpga::omp::DeviceId(1).into(),
             maps: vec![(MapDir::ToFrom, "V".into())],
             deps_in: vec![omp_fpga::omp::DepVar(i)],
             deps_out: vec![omp_fpga::omp::DepVar(i + 1)],
@@ -178,7 +178,7 @@ fn wrong_buffer_count_is_rejected() {
         id: omp_fpga::omp::TaskId(0),
         base_name: "f".into(),
         fn_name: "hw_f".into(),
-        device: omp_fpga::omp::DeviceId(1),
+        device: omp_fpga::omp::DeviceId(1).into(),
         maps: vec![], // no map clause: nothing to stream
         deps_in: vec![],
         deps_out: vec![],
@@ -418,6 +418,216 @@ fn independent_fpga_chains_report_makespan_not_sum() {
         "makespan {} should be far below the serial sum {sum}",
         report.virtual_time_s()
     );
+}
+
+#[test]
+fn device_any_places_each_chain_on_the_compatible_cluster() {
+    // two vc709 clusters with different kernel complements; unbound
+    // laplace and jacobi chains must land on their matching clusters.
+    // The jacobi cluster is heterogeneous — only one of its IPs carries
+    // the kernel — so compatibility flows through the mapper's skip
+    // logic, not a cluster-level equality check.
+    let kl = Kernel::Laplace2d;
+    let kj = Kernel::Jacobi9pt;
+    let mut rt = OmpRuntime::new(2);
+    rt.declare_hw_variant("fl", "vc709", "hw_l", kl);
+    rt.declare_hw_variant("fj", "vc709", "hw_j", kj);
+    let cl = ClusterConfig::homogeneous(1, 2, kl);
+    let cj = ClusterConfig::parse(
+        r#"{"fpgas": [{"ips": ["jacobi9pt", "diffusion2d"]}]}"#,
+    )
+    .unwrap();
+    let dl = rt
+        .register_device(Box::new(Vc709Plugin::new(&cl, ExecBackend::Golden).unwrap()));
+    let dj = rt
+        .register_device(Box::new(Vc709Plugin::new(&cj, ExecBackend::Golden).unwrap()));
+    let ga = Grid::random(&[12, 10], 4).unwrap();
+    let gb = Grid::random(&[12, 10], 5).unwrap();
+    let mut env = DataEnv::new();
+    env.insert("A", ga.clone());
+    env.insert("B", gb.clone());
+    let deps = rt.dep_vars(20);
+    let report = rt
+        .parallel(&mut env, |ctx| {
+            for i in 0..4 {
+                ctx.target("fl")
+                    .device_any()
+                    .map(MapDir::ToFrom, "A")
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            for i in 10..13 {
+                ctx.target("fj")
+                    .device_any()
+                    .map(MapDir::ToFrom, "B")
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(report.batches.len(), 2);
+    assert_eq!(report.batches[0].0, dl, "laplace chain -> laplace cluster");
+    assert_eq!(report.batches[1].0, dj, "jacobi chain -> jacobi cluster");
+    // offloading stays transparent under automatic placement
+    assert_eq!(env.take("A").unwrap(), kl.iterate(&ga, 4).unwrap());
+    assert_eq!(env.take("B").unwrap(), kj.iterate(&gb, 3).unwrap());
+    // independent chains on two clusters overlap in virtual time
+    let (a, b) = (&report.batches[0].1, &report.batches[1].1);
+    assert!(
+        (report.virtual_time_s() - a.finish_s.max(b.finish_s)).abs() < 1e-12
+    );
+}
+
+#[test]
+fn device_any_falls_back_to_host_when_cluster_lacks_kernel() {
+    // laplace-only cluster; unbound jacobi tasks: no IP matches, so the
+    // base software function runs on the host (the verification flow)
+    let kj = Kernel::Jacobi9pt;
+    let mut rt = OmpRuntime::new(2);
+    rt.register_software("fj", move |env| {
+        let g = env.take("V")?;
+        env.put("V", kj.apply(&g)?);
+        Ok(())
+    });
+    rt.declare_hw_variant("fj", "vc709", "hw_j", kj);
+    let cfg = ClusterConfig::homogeneous(2, 2, Kernel::Laplace2d);
+    let _fpga = rt
+        .register_device(Box::new(Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap()));
+    let input = Grid::random(&[10, 8], 6).unwrap();
+    let mut env = DataEnv::new();
+    env.insert("V", input.clone());
+    let deps = rt.dep_vars(4);
+    let report = rt
+        .parallel(&mut env, |ctx| {
+            for i in 0..3 {
+                ctx.target("fj")
+                    .device_any()
+                    .map(MapDir::ToFrom, "V")
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(report.batches.len(), 1);
+    assert_eq!(report.batches[0].0, HOST_DEVICE);
+    assert_eq!(report.virtual_time_s(), 0.0, "host fallback is free");
+    let want = kj.iterate(&input, 3).unwrap();
+    assert!(env.take("V").unwrap().allclose(&want, 1e-5));
+}
+
+#[test]
+fn device_any_mixed_buffer_chain_falls_back_to_host() {
+    // a dependence chains two unbound tasks that map different buffers:
+    // the VC709 coalescer cannot execute that as one pipeline, so the
+    // plugin abstains from placement and the run lands on the host base
+    // functions instead of failing at execution
+    let k = Kernel::Laplace2d;
+    let mut rt = OmpRuntime::new(2);
+    rt.register_software("fa", move |env| {
+        let g = env.take("A")?;
+        env.put("A", k.apply(&g)?);
+        Ok(())
+    });
+    rt.register_software("fb", move |env| {
+        let g = env.take("B")?;
+        env.put("B", k.apply(&g)?);
+        Ok(())
+    });
+    rt.declare_hw_variant("fa", "vc709", "hw_a", k);
+    rt.declare_hw_variant("fb", "vc709", "hw_b", k);
+    let cfg = ClusterConfig::homogeneous(1, 2, k);
+    rt.register_device(Box::new(
+        Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+    ));
+    let ga = Grid::random(&[8, 8], 3).unwrap();
+    let gb = Grid::random(&[8, 8], 4).unwrap();
+    let mut env = DataEnv::new();
+    env.insert("A", ga.clone());
+    env.insert("B", gb.clone());
+    let deps = rt.dep_vars(3);
+    let report = rt
+        .parallel(&mut env, |ctx| {
+            ctx.target("fa")
+                .device_any()
+                .map(MapDir::ToFrom, "A")
+                .depend_out(deps[0])
+                .nowait()
+                .submit()?;
+            ctx.target("fb")
+                .device_any()
+                .map(MapDir::ToFrom, "B")
+                .depend_in(deps[0])
+                .depend_out(deps[1])
+                .nowait()
+                .submit()?;
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(report.batches.len(), 1);
+    assert_eq!(report.batches[0].0, HOST_DEVICE);
+    assert_eq!(env.take("A").unwrap(), k.apply(&ga).unwrap());
+    assert_eq!(env.take("B").unwrap(), k.apply(&gb).unwrap());
+}
+
+#[test]
+fn device_any_placement_deterministic_with_vc709_clusters() {
+    let run_once = || {
+        let kernel = Kernel::Diffusion2d;
+        let mut rt = OmpRuntime::new(2);
+        rt.declare_hw_variant("f", "vc709", "hw_f", kernel);
+        let cfg = ClusterConfig::homogeneous(1, 1, kernel);
+        for _ in 0..2 {
+            rt.register_device(Box::new(
+                Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+            ));
+        }
+        let mut env = DataEnv::new();
+        env.insert("A", Grid::random(&[12, 10], 7).unwrap());
+        env.insert("B", Grid::random(&[12, 10], 8).unwrap());
+        let deps = rt.dep_vars(20);
+        let report = rt
+            .parallel(&mut env, |ctx| {
+                for i in 0..5 {
+                    ctx.target("f")
+                        .device_any()
+                        .map(MapDir::ToFrom, "A")
+                        .depend_in(deps[i])
+                        .depend_out(deps[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+                for i in 10..12 {
+                    ctx.target("f")
+                        .device_any()
+                        .map(MapDir::ToFrom, "B")
+                        .depend_in(deps[i])
+                        .depend_out(deps[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+                Ok(())
+            })
+            .unwrap();
+        report
+            .batches
+            .iter()
+            .map(|(d, r)| (d.0, r.release_s, r.finish_s))
+            .collect::<Vec<_>>()
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(a, b, "same DAG, same placement and timeline");
+    // the two unbound chains spread across the two identical clusters
+    assert_eq!(a.len(), 2);
+    assert_ne!(a[0].0, a[1].0);
 }
 
 #[test]
