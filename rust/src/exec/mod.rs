@@ -46,6 +46,17 @@ impl RunSpec {
     }
 }
 
+/// One dispatched batch of a run's schedule, in dispatch order — the
+/// (device, tasks, release, finish) trace the golden-schedule snapshot
+/// tests pin down (`rust/tests/golden_schedules.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleEvent {
+    pub device: usize,
+    pub tasks: usize,
+    pub release_s: f64,
+    pub finish_s: f64,
+}
+
 /// Result of one end-to-end run.
 #[derive(Debug)]
 pub struct RunResult {
@@ -60,6 +71,8 @@ pub struct RunResult {
     pub checksum: (f64, f64),
     pub grid: Option<Grid>,
     pub module_summary: Vec<String>,
+    /// the dispatcher's batch trace
+    pub schedule: Vec<ScheduleEvent>,
 }
 
 /// Run the paper's stencil pipeline (Listing 3) for `spec`.
@@ -118,6 +131,16 @@ pub fn run_stencil_app(spec: &RunSpec) -> Result<RunResult> {
     let passes = fpga_stats.passes;
     let module_summary =
         if saw_fpga { fpga_stats.summary_lines() } else { Vec::new() };
+    let schedule = report
+        .batches
+        .iter()
+        .map(|(d, r)| ScheduleEvent {
+            device: d.0,
+            tasks: r.tasks_run,
+            release_s: r.release_s,
+            finish_s: r.finish_s,
+        })
+        .collect();
     Ok(RunResult {
         spec_label: format!(
             "{} {:?} x{} iters on {} FPGA(s) x {} IPs [{:?}]",
@@ -136,6 +159,7 @@ pub fn run_stencil_app(spec: &RunSpec) -> Result<RunResult> {
         checksum: grid.checksum(),
         grid: spec.keep_grid.then_some(grid),
         module_summary,
+        schedule,
     })
 }
 

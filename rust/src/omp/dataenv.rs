@@ -1,0 +1,381 @@
+//! The device-resident data environment: OpenMP 4.5 `target data`
+//! semantics over the host [`super::device::DataEnv`].
+//!
+//! The paper's transfer-avoidance trick (§III-A) elides host round-trips
+//! *inside* one batch; this module extends it *across* batches.  A
+//! [`PresentTable`] tracks, per device, which buffers the application has
+//! mapped into the device data environment (`target enter data` /
+//! `target exit data` / scoped `target data`), with OpenMP's dynamic
+//! reference counts.  The executor derives a [`Residency`] view per
+//! dispatched batch; the VC709 plugin uses it to skip the H2D DMA for a
+//! buffer whose device copy is current and to defer the D2H writeback of
+//! a buffer that stays resident, and the placement cost model prices a
+//! `device(any)` run cheaper on the cluster already holding its inputs.
+//!
+//! **Functional truth always lives in the host [`DataEnv`]**: plugins
+//! stream every batch's grids functionally regardless of residency, so
+//! resident and always-stream executions are bit-identical by
+//! construction (property-tested in `tests/props_dataenv.rs`).  The
+//! present table governs the *timing* plane only — which PCIe transfers
+//! the DES model charges — plus the bookkeeping of who holds the newest
+//! copy (`host_stale`), which forces a modelled writeback when a host
+//! task's flow dependence needs the buffer.
+//!
+//! [`DataEnv`]: super::device::DataEnv
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use super::device::DeviceId;
+
+/// `target enter data` map kinds.  In this model both behave the same:
+/// the entry is created device-invalid and the first batch that uses the
+/// buffer pays the H2D (after which it is elided) — `to`'s eager copy is
+/// charged lazily at first use, which moves the same bytes at the same
+/// place on the critical path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnterMap {
+    /// `map(alloc: ...)` — make space, no host copy implied.
+    Alloc,
+    /// `map(to: ...)` — the device copy is initialized from the host.
+    To,
+}
+
+/// `target exit data` map kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitMap {
+    /// `map(from: ...)` — decrement; when the count reaches zero, write
+    /// the device copy back to the host (charged iff the host copy is
+    /// stale).
+    From,
+    /// `map(release: ...)` — decrement only; no writeback even at zero.
+    Release,
+    /// `map(delete: ...)` — force the count to zero and drop the device
+    /// copy immediately, outstanding references notwithstanding.
+    Delete,
+}
+
+/// What a [`PresentTable::exit`] did, for the caller to act on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExitEffect {
+    /// the entry's refcount reached zero and it was removed
+    pub removed: bool,
+    /// bytes to write back to the host (the device held the newest copy
+    /// and the exit map was `from`)
+    pub writeback_bytes: Option<usize>,
+}
+
+/// One buffer's residency state on one device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PresentEntry {
+    /// OpenMP dynamic reference count: enters minus exits
+    pub refcount: usize,
+    /// bumped every time a device batch writes the buffer
+    pub generation: u64,
+    /// the device copy is current — a batch mapping the buffer `to` can
+    /// skip the H2D
+    pub device_valid: bool,
+    /// the device holds a newer copy than the host — a host consumer (or
+    /// region exit with `from`) forces a writeback
+    pub host_stale: bool,
+    /// buffer size at enter time, for pricing the deferred writeback
+    pub bytes: usize,
+}
+
+/// Per-device reference-counted present table (buffer → resident
+/// generation + refcount), the OpenMP device data environments.
+#[derive(Debug, Clone, Default)]
+pub struct PresentTable {
+    entries: BTreeMap<(DeviceId, String), PresentEntry>,
+}
+
+impl PresentTable {
+    pub fn new() -> PresentTable {
+        PresentTable::default()
+    }
+
+    /// `target enter data map(to|alloc: name)` on `dev`.
+    pub fn enter(&mut self, dev: DeviceId, name: &str, bytes: usize, _map: EnterMap) {
+        let e = self
+            .entries
+            .entry((dev, name.to_string()))
+            .or_insert(PresentEntry {
+                refcount: 0,
+                generation: 0,
+                device_valid: false,
+                host_stale: false,
+                bytes,
+            });
+        e.refcount += 1;
+        e.bytes = bytes;
+    }
+
+    /// `target exit data map(from|release|delete: name)` on `dev`.  An
+    /// exit without a matching enter is a named error, never a panic.
+    pub fn exit(&mut self, dev: DeviceId, name: &str, map: ExitMap) -> Result<ExitEffect> {
+        let key = (dev, name.to_string());
+        let Some(e) = self.entries.get_mut(&key) else {
+            bail!(
+                "target exit data: buffer '{name}' is not present on \
+                 device {} (no matching target enter data)",
+                dev.0
+            );
+        };
+        if map == ExitMap::Delete {
+            let stale = e.host_stale;
+            self.entries.remove(&key);
+            // delete drops the device copy without copyout; the host
+            // DataEnv still holds the functional truth, so nothing is
+            // charged and nothing is lost
+            let _ = stale;
+            return Ok(ExitEffect { removed: true, writeback_bytes: None });
+        }
+        e.refcount -= 1;
+        if e.refcount > 0 {
+            return Ok(ExitEffect { removed: false, writeback_bytes: None });
+        }
+        let wb = (map == ExitMap::From && e.host_stale).then_some(e.bytes);
+        self.entries.remove(&key);
+        Ok(ExitEffect { removed: true, writeback_bytes: wb })
+    }
+
+    pub fn entry(&self, dev: DeviceId, name: &str) -> Option<&PresentEntry> {
+        self.entries.get(&(dev, name.to_string()))
+    }
+
+    pub fn refcount(&self, dev: DeviceId, name: &str) -> usize {
+        self.entry(dev, name).map_or(0, |e| e.refcount)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// The [`Residency`] view of `dev` — what a batch dispatched there
+    /// may elide and defer.
+    pub fn residency(&self, dev: DeviceId) -> Residency {
+        let mut r = Residency::default();
+        for ((d, name), e) in &self.entries {
+            if *d == dev {
+                r.resident.insert(name.clone());
+                if e.device_valid {
+                    r.device_valid.insert(name.clone());
+                }
+            }
+        }
+        r
+    }
+
+    /// The device (and byte count) holding a newer copy of `name` than
+    /// the host, if any.  At most one device can be stale-holder at a
+    /// time: every device write invalidates the other devices' copies.
+    pub fn dirty_holder(&self, name: &str) -> Option<(DeviceId, usize)> {
+        self.entries
+            .iter()
+            .find(|((_, n), e)| n == name && e.host_stale)
+            .map(|((d, _), e)| (*d, e.bytes))
+    }
+
+    /// A batch on `dev` streamed (or elided) the buffer in: the device
+    /// copy is now current.
+    pub fn mark_device_current(&mut self, dev: DeviceId, name: &str) {
+        if let Some(e) = self.entries.get_mut(&(dev, name.to_string())) {
+            e.device_valid = true;
+        }
+    }
+
+    /// A batch on `dev` wrote the buffer and deferred the D2H: bump the
+    /// resident generation and mark the host copy stale.
+    pub fn mark_device_write(&mut self, dev: DeviceId, name: &str) {
+        if let Some(e) = self.entries.get_mut(&(dev, name.to_string())) {
+            e.device_valid = true;
+            e.host_stale = true;
+            e.generation += 1;
+        }
+    }
+
+    /// The deferred writeback of `name` on `dev` has been charged: the
+    /// host copy is current again (the device copy stays valid).
+    pub fn mark_flushed(&mut self, dev: DeviceId, name: &str) {
+        if let Some(e) = self.entries.get_mut(&(dev, name.to_string())) {
+            e.host_stale = false;
+        }
+    }
+
+    /// `writer` produced a new value of `name`: every *other* device's
+    /// copy is now out of date — it must re-stream before use, and any
+    /// pending writeback of it is cancelled (a stale copy is never the
+    /// newest, so flushing it would model a transfer that helps nobody).
+    pub fn invalidate_others(&mut self, name: &str, writer: DeviceId) {
+        for ((d, n), e) in self.entries.iter_mut() {
+            if n == name && *d != writer {
+                e.device_valid = false;
+                e.host_stale = false;
+            }
+        }
+    }
+}
+
+/// One device's residency view for one batch, derived from the
+/// [`PresentTable`] by the executor and consumed by
+/// [`super::device::DevicePlugin::run_batch`] /
+/// [`super::device::DevicePlugin::estimate_batch_s`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Residency {
+    /// buffers whose device copy is current: the H2D DMA is elided
+    /// (the batch enters from device memory, not over PCIe)
+    pub device_valid: BTreeSet<String>,
+    /// buffers mapped in this device's data environment: the D2H is
+    /// deferred (the result parks on the device instead of streaming
+    /// back) — a superset of `device_valid`
+    pub resident: BTreeSet<String>,
+}
+
+impl Residency {
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+}
+
+/// Everything a device plugin needs to position one batch: the virtual
+/// release instant plus the residency view of the executing device.
+#[derive(Debug, Clone, Default)]
+pub struct BatchCtx {
+    /// virtual time at which the batch becomes runnable (max finish over
+    /// its predecessor runs, plus any forced writebacks)
+    pub release_s: f64,
+    pub residency: Residency,
+}
+
+impl BatchCtx {
+    /// A context with no residency — the always-stream behaviour every
+    /// region-free program gets.
+    pub fn at(release_s: f64) -> BatchCtx {
+        BatchCtx { release_s, ..BatchCtx::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D1: DeviceId = DeviceId(1);
+    const D2: DeviceId = DeviceId(2);
+
+    #[test]
+    fn enter_exit_roundtrip() {
+        let mut t = PresentTable::new();
+        t.enter(D1, "V", 64, EnterMap::To);
+        assert_eq!(t.refcount(D1, "V"), 1);
+        assert!(!t.entry(D1, "V").unwrap().device_valid);
+        let eff = t.exit(D1, "V", ExitMap::From).unwrap();
+        assert!(eff.removed);
+        assert_eq!(eff.writeback_bytes, None, "host never went stale");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn nested_regions_refcount() {
+        let mut t = PresentTable::new();
+        t.enter(D1, "V", 64, EnterMap::To);
+        t.enter(D1, "V", 64, EnterMap::Alloc); // nested target data
+        assert_eq!(t.refcount(D1, "V"), 2);
+        let inner = t.exit(D1, "V", ExitMap::From).unwrap();
+        assert!(!inner.removed, "outer region still holds a reference");
+        assert_eq!(inner.writeback_bytes, None);
+        assert_eq!(t.refcount(D1, "V"), 1);
+        let outer = t.exit(D1, "V", ExitMap::From).unwrap();
+        assert!(outer.removed);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn exit_without_enter_is_a_named_error() {
+        let mut t = PresentTable::new();
+        let err = t.exit(D1, "V", ExitMap::From).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("'V'"), "{msg}");
+        assert!(msg.contains("enter"), "{msg}");
+        // and entering on another device does not satisfy this device
+        t.enter(D2, "V", 64, EnterMap::To);
+        assert!(t.exit(D1, "V", ExitMap::From).is_err());
+    }
+
+    #[test]
+    fn delete_vs_release_semantics() {
+        // release decrements by one; delete zeroes the count outright
+        let mut t = PresentTable::new();
+        t.enter(D1, "V", 64, EnterMap::To);
+        t.enter(D1, "V", 64, EnterMap::To);
+        let eff = t.exit(D1, "V", ExitMap::Release).unwrap();
+        assert!(!eff.removed);
+        assert_eq!(t.refcount(D1, "V"), 1);
+        t.enter(D1, "V", 64, EnterMap::To);
+        assert_eq!(t.refcount(D1, "V"), 2);
+        let eff = t.exit(D1, "V", ExitMap::Delete).unwrap();
+        assert!(eff.removed, "delete ignores the outstanding references");
+        assert!(t.is_empty());
+        // release down to zero never asks for a writeback
+        t.enter(D1, "W", 16, EnterMap::To);
+        t.mark_device_write(D1, "W");
+        let eff = t.exit(D1, "W", ExitMap::Release).unwrap();
+        assert!(eff.removed);
+        assert_eq!(eff.writeback_bytes, None, "release discards, never copies out");
+    }
+
+    #[test]
+    fn writeback_only_when_host_stale_and_from() {
+        let mut t = PresentTable::new();
+        t.enter(D1, "V", 128, EnterMap::To);
+        t.mark_device_current(D1, "V");
+        t.mark_device_write(D1, "V");
+        assert_eq!(t.entry(D1, "V").unwrap().generation, 1);
+        assert_eq!(t.dirty_holder("V"), Some((D1, 128)));
+        let eff = t.exit(D1, "V", ExitMap::From).unwrap();
+        assert_eq!(eff.writeback_bytes, Some(128));
+        assert!(t.dirty_holder("V").is_none());
+    }
+
+    #[test]
+    fn residency_view_and_invalidation() {
+        let mut t = PresentTable::new();
+        t.enter(D1, "A", 64, EnterMap::To);
+        t.enter(D1, "B", 64, EnterMap::To);
+        t.enter(D2, "A", 64, EnterMap::To);
+        t.mark_device_current(D1, "A");
+        let r = t.residency(D1);
+        assert!(r.device_valid.contains("A"));
+        assert!(!r.device_valid.contains("B"), "B never streamed");
+        assert!(r.resident.contains("A") && r.resident.contains("B"));
+        assert!(t.residency(D2).device_valid.is_empty());
+        // D2 writes A: D1's copy is now stale — and any writeback D1 had
+        // pending is cancelled (its copy is no longer the newest)
+        t.mark_device_write(D1, "A");
+        t.mark_device_current(D2, "A");
+        t.invalidate_others("A", D2);
+        assert!(!t.residency(D1).device_valid.contains("A"));
+        assert!(t.residency(D2).device_valid.contains("A"));
+        assert!(
+            t.dirty_holder("A").is_none(),
+            "superseded copies never write back"
+        );
+        // flushing clears host staleness but keeps the device copy valid
+        t.mark_device_write(D2, "A");
+        t.mark_flushed(D2, "A");
+        assert!(t.dirty_holder("A").is_none());
+        assert!(t.residency(D2).device_valid.contains("A"));
+    }
+
+    #[test]
+    fn batch_ctx_default_is_stream_everything() {
+        let ctx = BatchCtx::at(1.5);
+        assert_eq!(ctx.release_s, 1.5);
+        assert!(ctx.residency.is_empty());
+        assert!(ctx.residency.device_valid.is_empty());
+    }
+}

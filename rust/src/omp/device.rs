@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use super::dataenv::{BatchCtx, Residency};
 use super::graph::TaskGraph;
 use super::task::TaskId;
 use crate::sim::stats::RunStats;
@@ -180,20 +181,25 @@ pub trait DevicePlugin {
     /// Execute `tasks` (a device batch, in topological order, all on this
     /// device; intra-batch dependences are edges of `graph`).  Mapped
     /// input buffers are in `env` on entry; outputs must be back in `env`
-    /// on return.
+    /// on return — the host environment is the functional truth even for
+    /// device-resident buffers (residency governs the timing plane only).
     ///
-    /// `release_s` is the virtual time at which the batch becomes
-    /// runnable (its predecessors' max finish).  The plugin's timing
-    /// model must position the batch at or after that instant and report
-    /// `release_s`/`finish_s` accordingly, so the scheduler can overlap
-    /// independent batches on different devices in virtual time.
+    /// `ctx.release_s` is the virtual time at which the batch becomes
+    /// runnable (its predecessors' max finish, plus any forced
+    /// writebacks).  The plugin's timing model must position the batch at
+    /// or after that instant and report `release_s`/`finish_s`
+    /// accordingly, so the scheduler can overlap independent batches on
+    /// different devices in virtual time.  `ctx.residency` says which
+    /// mapped buffers may skip their H2D (`device_valid`) and which must
+    /// defer their D2H and stay parked on the device (`resident`); a
+    /// plugin with no transfer model may ignore it.
     fn run_batch(
         &mut self,
         graph: &TaskGraph,
         tasks: &[TaskId],
         env: &mut DataEnv,
         fns: &FnRegistry,
-        release_s: f64,
+        ctx: &BatchCtx,
     ) -> Result<DeviceReport>;
 
     /// Placement cost model for `device(any)` runs (DESIGN.md §3).
@@ -202,7 +208,9 @@ pub trait DevicePlugin {
     /// device (its `declare variant` resolution for [`DevicePlugin::arch`]).
     /// Return the modelled virtual seconds the device would spend on the
     /// batch — compute plus the communication cost of moving the batch's
-    /// mapped bytes to and around the device — or `None` when the device
+    /// mapped bytes to and around the device, under `residency` (a
+    /// buffer already held by this device prices without its H2D, which
+    /// is what makes placement data-affine) — or `None` when the device
     /// cannot execute it (no cost model, or no IP implements a required
     /// kernel).  Abstaining devices are skipped by automatic placement;
     /// when every device abstains the run falls back to the host base
@@ -214,9 +222,19 @@ pub trait DevicePlugin {
         fn_names: &[String],
         fns: &FnRegistry,
         env: &DataEnv,
+        residency: &Residency,
     ) -> Option<f64> {
-        let _ = (graph, tasks, fn_names, fns, env);
+        let _ = (graph, tasks, fn_names, fns, env, residency);
         None
+    }
+
+    /// Modelled virtual seconds to write `bytes` of a device-resident
+    /// buffer back to host memory — the deferred D2H charged when a host
+    /// task's flow dependence (or a `target exit data map(from:)`) forces
+    /// the writeback.  Devices without a transfer model flush for free.
+    fn writeback_s(&self, bytes: f64) -> f64 {
+        let _ = bytes;
+        0.0
     }
 }
 

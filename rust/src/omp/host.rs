@@ -9,6 +9,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::dataenv::BatchCtx;
 use super::device::{DataEnv, DevicePlugin, DeviceReport, FnRegistry, TaskFn};
 use super::graph::TaskGraph;
 use super::task::TaskId;
@@ -48,9 +49,10 @@ impl DevicePlugin for HostDevice {
         tasks: &[TaskId],
         env: &mut DataEnv,
         fns: &FnRegistry,
-        release_s: f64,
+        ctx: &BatchCtx,
     ) -> Result<DeviceReport> {
         let t0 = Instant::now();
+        let release_s = ctx.release_s;
         // map TaskId -> dense index within this batch
         let mut dense = std::collections::BTreeMap::new();
         for (i, id) in tasks.iter().enumerate() {
@@ -248,7 +250,7 @@ mod tests {
         env.insert("V", Grid::zeros(&[3, 3]).unwrap());
         let mut host = HostDevice::new(4);
         let rep =
-            host.run_batch(&g, &ids, &mut env, &fns_with_inc("V"), 0.0).unwrap();
+            host.run_batch(&g, &ids, &mut env, &fns_with_inc("V"), &BatchCtx::at(0.0)).unwrap();
         assert_eq!(rep.tasks_run, 10);
         assert_eq!(rep.finish_s, 0.0); // host work is free in virtual time
         assert!(env.get("V").unwrap().data().iter().all(|&v| v == 10.0));
@@ -294,7 +296,7 @@ mod tests {
             t.fn_name = "incB".into();
         }
         let mut host = HostDevice::new(4);
-        host.run_batch(&g2, &ids, &mut env, &fns, 0.0).unwrap();
+        host.run_batch(&g2, &ids, &mut env, &fns, &BatchCtx::at(0.0)).unwrap();
         assert!(env.get("A").unwrap().data().iter().all(|&v| v == 5.0));
         assert!(env.get("B").unwrap().data().iter().all(|&v| v == 5.0));
     }
@@ -319,7 +321,7 @@ mod tests {
         });
         let mut env = DataEnv::new();
         let mut host = HostDevice::new(2);
-        let err = host.run_batch(&g, &[id], &mut env, &fns, 0.0).unwrap_err();
+        let err = host.run_batch(&g, &[id], &mut env, &fns, &BatchCtx::at(0.0)).unwrap_err();
         assert!(err.to_string().contains("kaboom"));
     }
 
@@ -343,6 +345,6 @@ mod tests {
         });
         let mut env = DataEnv::new();
         let mut host = HostDevice::new(1);
-        assert!(host.run_batch(&g, &[id], &mut env, &fns, 0.0).is_err());
+        assert!(host.run_batch(&g, &[id], &mut env, &fns, &BatchCtx::at(0.0)).is_err());
     }
 }

@@ -12,6 +12,13 @@
 //! * [`device`] — the libomptarget-like plugin interface: anything that
 //!   can run a task subgraph registers as a device.  [`host`] is device 0
 //!   (a CPU worker pool, the OpenMP fallback).
+//! * [`dataenv`] — the device-resident data environment: OpenMP 4.5
+//!   `target enter data` / `target exit data` / scoped `target data`
+//!   semantics over a reference-counted per-device present table.  A
+//!   resident buffer's H2D is elided once its device copy is current,
+//!   its D2H deferred until region exit or a host flow dependence forces
+//!   the writeback — the across-batch generalization of the paper's
+//!   §III-A transfer avoidance.
 //! * [`sched`] — the dependence-aware device scheduler: the task DAG
 //!   condensed into an acyclic DAG of per-device runs, dispatched to the
 //!   devices as predecessors complete, with critical-path (makespan)
@@ -24,6 +31,7 @@
 //! * [`runtime`] — `parallel` / `single` / `target` entry points and the
 //!   deferred-dispatch executor driving [`sched`] at the barrier.
 
+pub mod dataenv;
 pub mod device;
 pub mod graph;
 pub mod host;
@@ -32,12 +40,15 @@ pub mod sched;
 pub mod task;
 pub mod variant;
 
+pub use dataenv::{
+    BatchCtx, EnterMap, ExitMap, PresentTable, Residency,
+};
 pub use device::{
     DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel, FnRegistry,
-    TaskFn,
+    TaskFn, HOST_DEVICE,
 };
 pub use graph::TaskGraph;
-pub use runtime::{OmpReport, OmpRuntime, TargetBuilder};
+pub use runtime::{OmpReport, OmpRuntime, TargetBuilder, WritebackEvent};
 pub use sched::{BatchDag, Dispatcher, Run};
 pub use task::{DepVar, MapDir, Task, TaskId};
 pub use variant::VariantRegistry;

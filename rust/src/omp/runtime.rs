@@ -66,6 +66,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::dataenv::{BatchCtx, EnterMap, ExitMap, PresentTable};
 use super::device::{
     DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel, FnRegistry,
     TaskFn, HOST_DEVICE,
@@ -82,6 +83,26 @@ pub struct OmpRuntime {
     devices: Vec<Box<dyn DevicePlugin>>,
     default_device: DeviceId,
     next_dep: usize,
+    /// the device data environments (`target data` regions), persisting
+    /// across parallel regions until the matching exit-data
+    present: PresentTable,
+}
+
+/// One forced writeback of a device-resident buffer, charged inside a
+/// parallel region when a consumer on another device (usually a host
+/// task's flow dependence) needed the host copy current.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WritebackEvent {
+    /// the device that held the newest copy
+    pub device: DeviceId,
+    /// the flushed buffer
+    pub buffer: String,
+    /// virtual time at which the flush started (the consumer's
+    /// dependence release)
+    pub at_s: f64,
+    /// modelled flush duration; the consuming batch's release is pushed
+    /// back by this much
+    pub seconds: f64,
 }
 
 /// Report of one parallel region.
@@ -90,6 +111,8 @@ pub struct OmpReport {
     /// one entry per dispatched batch, in dispatch order (ready host
     /// runs released at the same instant coalesce into a single batch)
     pub batches: Vec<(DeviceId, DeviceReport)>,
+    /// forced writebacks of resident buffers, in charge order
+    pub writebacks: Vec<WritebackEvent>,
     pub wall_s: f64,
     pub tasks: usize,
 }
@@ -114,6 +137,7 @@ impl OmpRuntime {
             devices: vec![Box::new(HostDevice::new(nthreads))],
             default_device: HOST_DEVICE,
             next_dep: 0,
+            present: PresentTable::new(),
         }
     }
 
@@ -174,6 +198,188 @@ impl OmpRuntime {
         (start..start + n).map(DepVar).collect()
     }
 
+    /// The present table: which buffers are resident in which device
+    /// data environment, with their reference counts and generations.
+    pub fn present(&self) -> &PresentTable {
+        &self.present
+    }
+
+    /// `#pragma omp target enter data map(to|alloc: ...) device(dev)`:
+    /// make buffers resident on `dev` until a matching
+    /// [`OmpRuntime::target_exit_data`].  While resident, a batch placed
+    /// on `dev` skips the buffer's H2D DMA once the device copy is
+    /// current and defers the D2H writeback — so iterative sweeps stop
+    /// paying PCIe per batch, the across-batch generalization of the
+    /// paper's §III-A in-batch transfer avoidance:
+    ///
+    /// ```
+    /// use omp_fpga::config::ClusterConfig;
+    /// use omp_fpga::omp::*;
+    /// use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
+    /// use omp_fpga::stencil::{Grid, Kernel};
+    ///
+    /// let k = Kernel::Laplace2d;
+    /// let mut rt = OmpRuntime::new(2);
+    /// rt.declare_hw_variant("step", "vc709", "hw_step", k);
+    /// let cfg = ClusterConfig::homogeneous(1, 1, k);
+    /// let dev = rt.register_device(Box::new(
+    ///     Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+    /// ));
+    /// rt.set_default_device(dev);
+    /// let mut env = DataEnv::new();
+    /// env.insert("V", Grid::random(&[8, 8], 1).unwrap());
+    ///
+    /// rt.target_enter_data(dev, &env, &[(EnterMap::To, "V")]).unwrap();
+    /// let mut sweep = |rt: &mut OmpRuntime, env: &mut DataEnv| {
+    ///     let d = rt.dep_vars(2);
+    ///     rt.parallel(env, |ctx| {
+    ///         ctx.target("step")
+    ///             .map(MapDir::ToFrom, "V")
+    ///             .depend_in(d[0])
+    ///             .depend_out(d[1])
+    ///             .nowait()
+    ///             .submit()?;
+    ///         Ok(())
+    ///     })
+    /// };
+    /// let first = sweep(&mut rt, &mut env).unwrap(); // pays the H2D
+    /// let second = sweep(&mut rt, &mut env).unwrap(); // elides it
+    /// assert_eq!(second.batches[0].1.stats.h2d_elided, 1);
+    /// assert!(second.virtual_time_s() < first.virtual_time_s());
+    /// // the deferred writeback is charged at region exit
+    /// let wb = rt.target_exit_data(dev, &[(ExitMap::From, "V")]).unwrap();
+    /// assert!(wb > 0.0);
+    /// ```
+    pub fn target_enter_data(
+        &mut self,
+        dev: DeviceId,
+        env: &DataEnv,
+        maps: &[(EnterMap, &str)],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            dev.0 < self.devices.len(),
+            "target enter data: no device {}",
+            dev.0
+        );
+        for (m, name) in maps {
+            let bytes = env
+                .get(name)
+                .with_context(|| format!("target enter data on device {}", dev.0))?
+                .bytes();
+            self.present.enter(dev, name, bytes, *m);
+        }
+        Ok(())
+    }
+
+    /// `#pragma omp target exit data map(from|release|delete: ...)
+    /// device(dev)`: drop one reference per buffer (OpenMP's dynamic
+    /// reference count; `delete` zeroes it outright).  Returns the
+    /// modelled seconds of deferred writebacks this exit forced —
+    /// charged only for `from` maps whose count reached zero while the
+    /// device held the newest copy.  Exiting a buffer that was never
+    /// entered is a named error, not a panic:
+    ///
+    /// ```
+    /// use omp_fpga::omp::*;
+    /// use omp_fpga::stencil::Grid;
+    /// let mut rt = OmpRuntime::new(1);
+    /// let err = rt
+    ///     .target_exit_data(HOST_DEVICE, &[(ExitMap::From, "V")])
+    ///     .unwrap_err();
+    /// assert!(err.to_string().contains("no matching target enter data"));
+    ///
+    /// // nested regions hold one reference each; delete force-drops
+    /// let mut env = DataEnv::new();
+    /// env.insert("V", Grid::zeros(&[2, 2]).unwrap());
+    /// rt.target_enter_data(HOST_DEVICE, &env, &[(EnterMap::To, "V")]).unwrap();
+    /// rt.target_enter_data(HOST_DEVICE, &env, &[(EnterMap::Alloc, "V")]).unwrap();
+    /// rt.target_exit_data(HOST_DEVICE, &[(ExitMap::Release, "V")]).unwrap();
+    /// assert_eq!(rt.present().refcount(HOST_DEVICE, "V"), 1);
+    /// rt.target_exit_data(HOST_DEVICE, &[(ExitMap::Delete, "V")]).unwrap();
+    /// assert!(rt.present().is_empty());
+    /// ```
+    pub fn target_exit_data(
+        &mut self,
+        dev: DeviceId,
+        maps: &[(ExitMap, &str)],
+    ) -> Result<f64> {
+        anyhow::ensure!(
+            dev.0 < self.devices.len(),
+            "target exit data: no device {}",
+            dev.0
+        );
+        let mut wb_s = 0.0;
+        for (m, name) in maps {
+            let eff = self.present.exit(dev, name, *m)?;
+            if let Some(bytes) = eff.writeback_bytes {
+                wb_s += self.devices[dev.0].writeback_s(bytes as f64);
+            }
+        }
+        Ok(wb_s)
+    }
+
+    /// Scoped `#pragma omp target data map(tofrom: bufs) device(dev)`
+    /// region: enter-data before `body`, exit-data after it (balanced
+    /// even when the body fails).  Returns the body's value plus the
+    /// modelled writeback seconds the exit charged:
+    ///
+    /// ```
+    /// use omp_fpga::config::ClusterConfig;
+    /// use omp_fpga::omp::*;
+    /// use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
+    /// use omp_fpga::stencil::{Grid, Kernel};
+    ///
+    /// let k = Kernel::Laplace2d;
+    /// let mut rt = OmpRuntime::new(2);
+    /// rt.declare_hw_variant("step", "vc709", "hw_step", k);
+    /// let cfg = ClusterConfig::homogeneous(1, 1, k);
+    /// let dev = rt.register_device(Box::new(
+    ///     Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+    /// ));
+    /// rt.set_default_device(dev);
+    /// let mut env = DataEnv::new();
+    /// env.insert("V", Grid::random(&[8, 8], 3).unwrap());
+    ///
+    /// let (sweeps, wb) = rt
+    ///     .target_data(dev, &mut env, &["V"], |rt, env| {
+    ///         let mut reports = Vec::new();
+    ///         for _ in 0..3 {
+    ///             let d = rt.dep_vars(2);
+    ///             reports.push(rt.parallel(env, |ctx| {
+    ///                 ctx.target("step")
+    ///                     .map(MapDir::ToFrom, "V")
+    ///                     .depend_in(d[0])
+    ///                     .depend_out(d[1])
+    ///                     .nowait()
+    ///                     .submit()?;
+    ///                 Ok(())
+    ///             })?);
+    ///         }
+    ///         Ok(reports)
+    ///     })
+    ///     .unwrap();
+    /// // sweeps 2 and 3 skipped their H2D; every sweep deferred its D2H
+    /// assert!(sweeps[1].virtual_time_s() < sweeps[0].virtual_time_s());
+    /// assert!(wb > 0.0, "one writeback at region exit, not one per sweep");
+    /// assert!(rt.present().is_empty(), "refcounts return to zero");
+    /// ```
+    pub fn target_data<R>(
+        &mut self,
+        dev: DeviceId,
+        env: &mut DataEnv,
+        bufs: &[&str],
+        body: impl FnOnce(&mut OmpRuntime, &mut DataEnv) -> Result<R>,
+    ) -> Result<(R, f64)> {
+        let enters: Vec<(EnterMap, &str)> =
+            bufs.iter().map(|b| (EnterMap::To, *b)).collect();
+        self.target_enter_data(dev, env, &enters)?;
+        let result = body(self, env);
+        let exits: Vec<(ExitMap, &str)> =
+            bufs.iter().map(|b| (ExitMap::From, *b)).collect();
+        let wb_s = self.target_exit_data(dev, &exits)?;
+        Ok((result?, wb_s))
+    }
+
     /// `#pragma omp parallel` + `#pragma omp single`: run `body` as the
     /// control thread building the task graph, then execute the graph at
     /// the closing barrier.
@@ -219,6 +425,7 @@ impl OmpRuntime {
             // graphs (all the figure sweeps) price nothing here.
             for r in disp.ready_unplaced() {
                 let tasks = disp.dag().run(r).tasks.clone();
+                let bufs = read_buffers(&graph, &tasks);
                 let mut cands: Vec<(DeviceId, f64)> = Vec::new();
                 for (i, plugin) in self.devices.iter().enumerate().skip(1) {
                     let arch = plugin.arch();
@@ -229,9 +436,25 @@ impl OmpRuntime {
                                 .resolve(&graph.task(*id).base_name, arch)
                         })
                         .collect();
-                    if let Some(est) = plugin
-                        .estimate_batch_s(&graph, &tasks, &names, &self.fns, env)
-                    {
+                    let residency = self.present.residency(DeviceId(i));
+                    if let Some(mut est) = plugin.estimate_batch_s(
+                        &graph, &tasks, &names, &self.fns, env, &residency,
+                    ) {
+                        // data affinity, the other half of the residency
+                        // cost model: an input whose newest copy sits on
+                        // another cluster must be written back to the
+                        // host before this one can stream it — the
+                        // holder prices without either charge
+                        for b in &bufs {
+                            if let Some((holder, bytes)) =
+                                self.present.dirty_holder(b)
+                            {
+                                if holder.0 != i {
+                                    est += self.devices[holder.0]
+                                        .writeback_s(bytes as f64);
+                                }
+                            }
+                        }
                         cands.push((DeviceId(i), est));
                     }
                 }
@@ -275,12 +498,43 @@ impl OmpRuntime {
                     coalesced.push((r2, rel2));
                 }
             }
+            // Forced writebacks: a buffer this batch READS whose newest
+            // copy sits dirty on ANOTHER device (a deferred D2H) must be
+            // flushed to the host first — the host task's flow
+            // dependence, or a rival cluster's H2D, forces the writeback
+            // the present table deferred.  The flush pushes this batch's
+            // release back by its modelled duration.  A `from`-only
+            // consumer is a pure producer: it overwrites the buffer, so
+            // nothing is flushed for it (the write below supersedes the
+            // device copy instead).
+            let mut release_s = release_s;
+            let mut flushed = false;
+            for b in read_buffers(&graph, &ids) {
+                if let Some((holder, bytes)) = self.present.dirty_holder(&b) {
+                    if holder != dev {
+                        let wb = self.devices[holder.0].writeback_s(bytes as f64);
+                        self.present.mark_flushed(holder, &b);
+                        report.writebacks.push(WritebackEvent {
+                            device: holder,
+                            buffer: b,
+                            at_s: release_s,
+                            seconds: wb,
+                        });
+                        release_s += wb;
+                        flushed = true;
+                    }
+                }
+            }
+            let ctx = BatchCtx {
+                release_s,
+                residency: self.present.residency(dev),
+            };
             let plugin = self
                 .devices
                 .get_mut(dev.0)
                 .ok_or_else(|| anyhow::anyhow!("task bound to unknown device {}", dev.0))?;
             let mut rep = plugin
-                .run_batch(&graph, &ids, env, &self.fns, release_s)
+                .run_batch(&graph, &ids, env, &self.fns, &ctx)
                 .with_context(|| format!("device {} ({})", dev.0, plugin.arch()))?;
             // a plugin must not finish before it was released; normalize
             // the report so virtual_time_s() agrees with the dispatcher
@@ -290,9 +544,28 @@ impl OmpRuntime {
             // batches are free in virtual time); those instants equal
             // some earlier batch's finish, so the report's makespan is
             // unaffected and the batch keeps the documented
-            // finish == release + duration identity
+            // finish == release + duration identity.  A forced writeback
+            // delays the whole merged batch, so its members finish no
+            // earlier than the flushed release.
             for (r2, rel2) in coalesced {
-                disp.complete(r2, rel2);
+                disp.complete(r2, if flushed { release_s } else { rel2 });
+            }
+            // Present-table bookkeeping: the batch's inputs are now
+            // current on the executing device (streamed or elided), its
+            // outputs supersede every other device's copy, and an
+            // accelerator's resident outputs stay on the device with the
+            // host copy stale until something forces the writeback.
+            for id in &ids {
+                let t = graph.task(*id);
+                for n in t.inputs() {
+                    self.present.mark_device_current(dev, n);
+                }
+                for n in t.outputs() {
+                    self.present.invalidate_others(n, dev);
+                    if dev != HOST_DEVICE {
+                        self.present.mark_device_write(dev, n);
+                    }
+                }
             }
             report.batches.push((dev, rep));
         }
@@ -302,6 +575,21 @@ impl OmpRuntime {
         report.wall_s = t0.elapsed().as_secs_f64();
         Ok(report)
     }
+}
+
+/// Distinct buffer names `tasks` read from the host view (`map(to:)` /
+/// `map(tofrom:)`), in first-use order — the buffers whose host copy
+/// must be current before the batch starts.
+fn read_buffers(graph: &TaskGraph, tasks: &[TaskId]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for id in tasks {
+        for n in graph.task(*id).inputs() {
+            if !out.iter().any(|b| b == n) {
+                out.push(n.to_string());
+            }
+        }
+    }
+    out
 }
 
 /// The control-thread context inside `parallel`+`single`.
@@ -564,6 +852,14 @@ mod tests {
     /// semantics without a full VC709 cluster.
     struct FakeAccel {
         per_task_s: f64,
+        /// flat modelled cost of flushing a resident buffer to the host
+        writeback_s: f64,
+    }
+
+    impl FakeAccel {
+        fn new(per_task_s: f64) -> FakeAccel {
+            FakeAccel { per_task_s, writeback_s: 0.0 }
+        }
     }
 
     impl DevicePlugin for FakeAccel {
@@ -579,7 +875,7 @@ mod tests {
             tasks: &[TaskId],
             env: &mut DataEnv,
             fns: &FnRegistry,
-            release_s: f64,
+            ctx: &super::BatchCtx,
         ) -> Result<DeviceReport> {
             for id in tasks {
                 match fns.get(&graph.task(*id).fn_name)? {
@@ -593,8 +889,8 @@ mod tests {
             Ok(DeviceReport {
                 tasks_run: tasks.len(),
                 virtual_time_s: d,
-                release_s,
-                finish_s: release_s + d,
+                release_s: ctx.release_s,
+                finish_s: ctx.release_s + d,
                 ..DeviceReport::default()
             })
         }
@@ -605,6 +901,7 @@ mod tests {
             fn_names: &[String],
             fns: &FnRegistry,
             _env: &DataEnv,
+            _residency: &super::super::dataenv::Residency,
         ) -> Option<f64> {
             // software-capable accelerator: competes for device(any)
             // runs at its fixed per-task cost
@@ -615,6 +912,9 @@ mod tests {
                 }
             }
             Some(self.per_task_s * tasks.len() as f64)
+        }
+        fn writeback_s(&self, _bytes: f64) -> f64 {
+            self.writeback_s
         }
     }
 
@@ -635,7 +935,7 @@ mod tests {
             _tasks: &[TaskId],
             _env: &mut DataEnv,
             _fns: &FnRegistry,
-            _release_s: f64,
+            _ctx: &super::BatchCtx,
         ) -> Result<DeviceReport> {
             anyhow::bail!("device(any) placed a run on a model-less device")
         }
@@ -685,8 +985,8 @@ mod tests {
     #[test]
     fn device_any_chains_balance_across_accelerators() {
         let mut rt = two_buf_runtime();
-        let d1 = rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
-        let d2 = rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
+        let d1 = rt.register_device(Box::new(FakeAccel::new(1.0)));
+        let d2 = rt.register_device(Box::new(FakeAccel::new(1.0)));
         let deps = rt.dep_vars(20);
         let mut env = DataEnv::new();
         env.insert("A", Grid::zeros(&[3, 3]).unwrap());
@@ -707,7 +1007,7 @@ mod tests {
     #[test]
     fn device_any_prefers_a_compatible_accelerator_over_host() {
         let mut rt = inc_runtime();
-        let acc = rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
+        let acc = rt.register_device(Box::new(FakeAccel::new(1.0)));
         let deps = rt.dep_vars(3);
         let mut env = DataEnv::new();
         env.insert("V", Grid::zeros(&[3, 3]).unwrap());
@@ -759,11 +1059,77 @@ mod tests {
     }
 
     #[test]
+    fn host_dependence_forces_writeback_and_delays_release() {
+        // V is resident on the accelerator; a host task's flow
+        // dependence on it must charge the deferred writeback and push
+        // the host batch's release back by it
+        let mut rt = inc_runtime();
+        let acc = rt.register_device(Box::new(FakeAccel {
+            per_task_s: 1.0,
+            writeback_s: 0.25,
+        }));
+        let deps = rt.dep_vars(3);
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        rt.target_enter_data(acc, &env, &[(EnterMap::To, "V")]).unwrap();
+        let rep = rt
+            .parallel(&mut env, |ctx| {
+                ctx.target("inc_v")
+                    .device(acc)
+                    .map(MapDir::ToFrom, "V")
+                    .depend_in(deps[0])
+                    .depend_out(deps[1])
+                    .nowait()
+                    .submit()?;
+                ctx.task("inc_v")
+                    .map(MapDir::ToFrom, "V")
+                    .depend_in(deps[1])
+                    .depend_out(deps[2])
+                    .nowait()
+                    .submit()?;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(rep.writebacks.len(), 1);
+        assert_eq!(rep.writebacks[0].device, acc);
+        assert_eq!(rep.writebacks[0].buffer, "V");
+        assert!((rep.writebacks[0].at_s - 1.0).abs() < 1e-12);
+        assert!((rep.writebacks[0].seconds - 0.25).abs() < 1e-12);
+        // accel batch [0, 1.0]; host batch released at 1.0 + 0.25
+        assert!((rep.virtual_time_s() - 1.25).abs() < 1e-12);
+        assert!(env.get("V").unwrap().data().iter().all(|&v| v == 2.0));
+        // the flush already happened inside the region: region exit
+        // charges nothing more, and the table drains
+        let wb = rt.target_exit_data(acc, &[(ExitMap::From, "V")]).unwrap();
+        assert_eq!(wb, 0.0);
+        assert!(rt.present().is_empty());
+    }
+
+    #[test]
+    fn data_region_on_unknown_device_is_rejected() {
+        let mut rt = inc_runtime();
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[2, 2]).unwrap());
+        let err = rt
+            .target_enter_data(DeviceId(9), &env, &[(EnterMap::To, "V")])
+            .unwrap_err();
+        assert!(err.to_string().contains("no device 9"), "{err}");
+        let err = rt
+            .target_exit_data(DeviceId(9), &[(ExitMap::From, "V")])
+            .unwrap_err();
+        assert!(err.to_string().contains("no device 9"), "{err}");
+        // and entering a buffer absent from the host environment fails
+        assert!(rt
+            .target_enter_data(HOST_DEVICE, &env, &[(EnterMap::To, "W")])
+            .is_err());
+    }
+
+    #[test]
     fn device_any_schedule_is_deterministic() {
         let run_once = || {
             let mut rt = two_buf_runtime();
-            rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
-            rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
+            rt.register_device(Box::new(FakeAccel::new(1.0)));
+            rt.register_device(Box::new(FakeAccel::new(1.0)));
             let deps = rt.dep_vars(20);
             let mut env = DataEnv::new();
             env.insert("A", Grid::zeros(&[3, 3]).unwrap());
@@ -785,7 +1151,7 @@ mod tests {
         // greedy condensation could not schedule — it must now run and
         // report makespan timing.
         let mut rt = inc_runtime();
-        let acc = rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
+        let acc = rt.register_device(Box::new(FakeAccel::new(1.0)));
         let deps = rt.dep_vars(5);
         let mut env = DataEnv::new();
         env.insert("V", Grid::zeros(&[4, 4]).unwrap());
@@ -893,8 +1259,8 @@ mod tests {
                 Ok(())
             });
         }
-        let d1 = rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
-        let d2 = rt.register_device(Box::new(FakeAccel { per_task_s: 1.0 }));
+        let d1 = rt.register_device(Box::new(FakeAccel::new(1.0)));
+        let d2 = rt.register_device(Box::new(FakeAccel::new(1.0)));
         let deps = rt.dep_vars(20);
         let mut env = DataEnv::new();
         env.insert("A", Grid::zeros(&[3, 3]).unwrap());

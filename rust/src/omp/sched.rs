@@ -29,7 +29,13 @@
 //! and [`Dispatcher::next`] commits the candidate with the earliest
 //! modelled **finish** (release ⊔ device-free + estimated duration),
 //! HEFT-style, with ties broken by device index so placement is
-//! deterministic.  Bound runs schedule exactly as before.
+//! deterministic.  Bound runs schedule exactly as before.  The
+//! candidates are residency-aware in the data dimension too: a device
+//! already holding a run's buffers in its data environment
+//! ([`crate::omp::dataenv::PresentTable`]) prices without their H2D,
+//! while rivals are surcharged the writeback of any dirty resident
+//! input — placement follows the data (affinity), not just the clocks
+//! (EFT).
 //!
 //! [`DevicePlugin::estimate_batch_s`]: super::device::DevicePlugin::estimate_batch_s
 

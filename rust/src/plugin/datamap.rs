@@ -6,6 +6,15 @@
 //! output forwarded to the next IP in the following iteration" (§III-A):
 //! with the whole graph visible at the sync point, interior transfers
 //! collapse into IP->IP streams.
+//!
+//! A pipeline may touch **several** buffers (a Jacobi-style ping-pong
+//! alternates `A`/`Anew`; a wave kernel rotates `prev`/`cur`/`next`):
+//! [`coalesce`] returns one [`MovePlan`] per distinct buffer, in
+//! first-use order, and [`segments`] splits the chain into maximal
+//! same-buffer sub-chains — the unit the VC709 plugin streams through an
+//! IP pipeline.  Between two segments of the *same* buffer the grid
+//! parks on the device, so the interior transfers those map clauses
+//! imply are elided exactly like Listing 3's.
 
 use anyhow::{bail, Result};
 
@@ -16,48 +25,99 @@ use crate::omp::task::TaskId;
 pub struct MovePlan {
     /// the pipelined buffer
     pub buffer: String,
-    /// host -> device before the first task (it maps `to`/`tofrom`)
+    /// host -> device before the buffer's first task (it maps `to`/`tofrom`)
     pub h2d: bool,
-    /// device -> host after the last task (it maps `from`/`tofrom`)
+    /// device -> host after the buffer's last task (it maps `from`/`tofrom`)
     pub d2h: bool,
-    /// host round-trips eliminated by coalescing
+    /// interior host round-trips eliminated by coalescing: a round-trip
+    /// exists between consecutive uses only when the earlier use maps
+    /// `from`/`tofrom` (a d2h would have happened) **and** the later use
+    /// maps `to`/`tofrom` (an h2d would have followed) — a `to`-only or
+    /// `from`-only chain has no interior round-trips at all
     pub saved_roundtrips: usize,
 }
 
-/// Plan data movement for a chain batch.  Every task must map exactly one
-/// buffer and it must be the same buffer (the paper's pipelines; richer
-/// layouts would extend this analysis, not the mechanism).
-pub fn coalesce(graph: &TaskGraph, tasks: &[TaskId]) -> Result<MovePlan> {
+/// One maximal same-buffer sub-chain of a batch — the unit the VC709
+/// plugin maps onto an IP pipeline and streams in passes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    pub buffer: String,
+    /// tasks of the segment, in chain order
+    pub tasks: Vec<TaskId>,
+}
+
+/// The single buffer a pipeline task maps, validated: the VC709 plugin
+/// streams exactly one grid per task (multi-map tasks would need a
+/// gather/scatter datapath the substrate does not model).
+fn sole_buffer<'g>(graph: &'g TaskGraph, id: TaskId) -> Result<&'g str> {
+    let t = graph.task(id);
+    if t.maps.len() != 1 {
+        bail!(
+            "task {} maps {} buffers; the VC709 plugin streams exactly one \
+             grid per task",
+            t.id.0,
+            t.maps.len()
+        );
+    }
+    Ok(t.maps[0].1.as_str())
+}
+
+/// Plan data movement for a chain batch: one [`MovePlan`] per distinct
+/// buffer, in first-use order.  Every task must map exactly one buffer;
+/// tasks touching different buffers may interleave freely (the segment
+/// split is [`segments`]' job).
+pub fn coalesce(graph: &TaskGraph, tasks: &[TaskId]) -> Result<Vec<MovePlan>> {
     if tasks.is_empty() {
         bail!("empty device batch");
     }
-    let first = graph.task(tasks[0]);
-    if first.maps.len() != 1 {
-        bail!(
-            "task {} maps {} buffers; the VC709 plugin streams exactly one \
-             grid per pipeline",
-            first.id.0,
-            first.maps.len()
-        );
-    }
-    let buffer = first.maps[0].1.clone();
+    // buffer -> map directions of its uses, in chain order
+    let mut order: Vec<String> = Vec::new();
+    let mut uses: Vec<Vec<crate::omp::task::MapDir>> = Vec::new();
     for id in tasks {
-        let t = graph.task(*id);
-        if t.maps.len() != 1 || t.maps[0].1 != buffer {
-            bail!(
-                "task {} maps '{}' but the pipeline streams '{}' — \
-                 mixed-buffer pipelines are not supported",
-                id.0,
-                t.maps.first().map(|(_, n)| n.as_str()).unwrap_or("<none>"),
-                buffer
-            );
+        let buf = sole_buffer(graph, *id)?;
+        let dir = graph.task(*id).maps[0].0;
+        match order.iter().position(|b| b == buf) {
+            Some(i) => uses[i].push(dir),
+            None => {
+                order.push(buf.to_string());
+                uses.push(vec![dir]);
+            }
         }
     }
-    let h2d = graph.task(tasks[0]).maps[0].0.to_device();
-    let d2h = graph.task(*tasks.last().unwrap()).maps[0].0.from_device();
-    // every interior tofrom would have been a d2h+h2d round-trip
-    let saved = tasks.len().saturating_sub(1);
-    Ok(MovePlan { buffer, h2d, d2h, saved_roundtrips: saved })
+    Ok(order
+        .into_iter()
+        .zip(uses)
+        .map(|(buffer, dirs)| {
+            let saved = dirs
+                .windows(2)
+                .filter(|w| w[0].from_device() && w[1].to_device())
+                .count();
+            MovePlan {
+                buffer,
+                h2d: dirs.first().unwrap().to_device(),
+                d2h: dirs.last().unwrap().from_device(),
+                saved_roundtrips: saved,
+            }
+        })
+        .collect())
+}
+
+/// Split a chain batch into maximal same-buffer [`Segment`]s, in chain
+/// order.  `[A, A, B, A]` becomes `[A×2], [B], [A]` — the middle `B`
+/// segment streams while `A` stays parked on the device.
+pub fn segments(graph: &TaskGraph, tasks: &[TaskId]) -> Result<Vec<Segment>> {
+    if tasks.is_empty() {
+        bail!("empty device batch");
+    }
+    let mut segs: Vec<Segment> = Vec::new();
+    for id in tasks {
+        let buf = sole_buffer(graph, *id)?;
+        match segs.last_mut() {
+            Some(s) if s.buffer == buf => s.tasks.push(*id),
+            _ => segs.push(Segment { buffer: buf.to_string(), tasks: vec![*id] }),
+        }
+    }
+    Ok(segs)
 }
 
 #[cfg(test)]
@@ -66,20 +126,28 @@ mod tests {
     use crate::omp::device::DeviceId;
     use crate::omp::task::{DepVar, MapDir, Task};
 
+    fn push_task(
+        g: &mut TaskGraph,
+        i: usize,
+        maps: Vec<(MapDir, String)>,
+    ) -> TaskId {
+        g.add(Task {
+            id: TaskId(0),
+            base_name: "f".into(),
+            fn_name: "hw_f".into(),
+            device: DeviceId(1).into(),
+            maps,
+            deps_in: vec![DepVar(i)],
+            deps_out: vec![DepVar(i + 1)],
+            nowait: true,
+        })
+    }
+
     fn chain(n: usize, dir: MapDir, buf: &str) -> (TaskGraph, Vec<TaskId>) {
         let mut g = TaskGraph::new();
         let mut ids = Vec::new();
         for i in 0..n {
-            ids.push(g.add(Task {
-                id: TaskId(0),
-                base_name: "f".into(),
-                fn_name: "hw_f".into(),
-                device: DeviceId(1).into(),
-                maps: vec![(dir, buf.into())],
-                deps_in: vec![DepVar(i)],
-                deps_out: vec![DepVar(i + 1)],
-                nowait: true,
-            }));
+            ids.push(push_task(&mut g, i, vec![(dir, buf.into())]));
         }
         (g, ids)
     }
@@ -87,36 +155,106 @@ mod tests {
     #[test]
     fn listing3_tofrom_chain() {
         let (g, ids) = chain(240, MapDir::ToFrom, "V");
-        let plan = coalesce(&g, &ids).unwrap();
+        let plans = coalesce(&g, &ids).unwrap();
+        assert_eq!(plans.len(), 1);
+        let plan = &plans[0];
         assert_eq!(plan.buffer, "V");
         assert!(plan.h2d && plan.d2h);
         assert_eq!(plan.saved_roundtrips, 239);
+        let segs = segments(&g, &ids).unwrap();
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].tasks.len(), 240);
     }
 
     #[test]
     fn directions_respected() {
+        // a `to`-only chain never sends data back, so there are no
+        // interior *round-trips* to save — and symmetrically for `from`
         let (g, ids) = chain(4, MapDir::To, "V");
-        let plan = coalesce(&g, &ids).unwrap();
+        let plan = &coalesce(&g, &ids).unwrap()[0];
         assert!(plan.h2d && !plan.d2h);
+        assert_eq!(plan.saved_roundtrips, 0, "to-only chain has no round-trips");
         let (g, ids) = chain(4, MapDir::From, "V");
-        let plan = coalesce(&g, &ids).unwrap();
+        let plan = &coalesce(&g, &ids).unwrap()[0];
         assert!(!plan.h2d && plan.d2h);
+        assert_eq!(plan.saved_roundtrips, 0, "from-only chain has no round-trips");
     }
 
     #[test]
-    fn mixed_buffers_rejected() {
-        let (mut g, mut ids) = chain(2, MapDir::ToFrom, "V");
-        ids.push(g.add(Task {
-            id: TaskId(0),
-            base_name: "f".into(),
-            fn_name: "hw_f".into(),
-            device: DeviceId(1).into(),
-            maps: vec![(MapDir::ToFrom, "W".into())],
-            deps_in: vec![DepVar(2)],
-            deps_out: vec![DepVar(3)],
-            nowait: true,
-        }));
-        assert!(coalesce(&g, &ids).is_err());
+    fn mixed_direction_roundtrips_count_only_real_pairs() {
+        // to, tofrom, from: one elided round-trip (tofrom -> from); the
+        // to -> tofrom boundary elides the interior h2d only, which is
+        // not a round-trip
+        let mut g = TaskGraph::new();
+        let ids = vec![
+            push_task(&mut g, 0, vec![(MapDir::To, "V".into())]),
+            push_task(&mut g, 1, vec![(MapDir::ToFrom, "V".into())]),
+            push_task(&mut g, 2, vec![(MapDir::From, "V".into())]),
+        ];
+        let plan = &coalesce(&g, &ids).unwrap()[0];
+        assert!(plan.h2d && plan.d2h);
+        assert_eq!(plan.saved_roundtrips, 1);
+    }
+
+    #[test]
+    fn two_buffer_pingpong_plans_per_buffer() {
+        // A, B, A, B: the Jacobi ping-pong shape the old coalescer
+        // rejected with "mixed-buffer pipelines are not supported"
+        let mut g = TaskGraph::new();
+        let mut ids = Vec::new();
+        for (i, buf) in ["A", "B", "A", "B"].iter().enumerate() {
+            ids.push(push_task(
+                &mut g,
+                i,
+                vec![(MapDir::ToFrom, (*buf).to_string())],
+            ));
+        }
+        let plans = coalesce(&g, &ids).unwrap();
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].buffer, "A");
+        assert_eq!(plans[1].buffer, "B");
+        // each buffer's two uses elide one interior round-trip
+        assert_eq!(plans[0].saved_roundtrips, 1);
+        assert_eq!(plans[1].saved_roundtrips, 1);
+        let segs = segments(&g, &ids).unwrap();
+        assert_eq!(segs.len(), 4, "alternating buffers split per task");
+        assert!(segs.iter().all(|s| s.tasks.len() == 1));
+    }
+
+    #[test]
+    fn segments_group_maximal_same_buffer_runs() {
+        let mut g = TaskGraph::new();
+        let mut ids = Vec::new();
+        for (i, buf) in ["A", "A", "B", "A"].iter().enumerate() {
+            ids.push(push_task(
+                &mut g,
+                i,
+                vec![(MapDir::ToFrom, (*buf).to_string())],
+            ));
+        }
+        let segs = segments(&g, &ids).unwrap();
+        assert_eq!(segs.len(), 3);
+        assert_eq!(segs[0].buffer, "A");
+        assert_eq!(segs[0].tasks.len(), 2);
+        assert_eq!(segs[1].buffer, "B");
+        assert_eq!(segs[2].buffer, "A");
+    }
+
+    #[test]
+    fn multi_map_task_and_empty_batch_rejected() {
+        let mut g = TaskGraph::new();
+        let id = push_task(
+            &mut g,
+            0,
+            vec![
+                (MapDir::ToFrom, "V".into()),
+                (MapDir::ToFrom, "W".into()),
+            ],
+        );
+        let err = coalesce(&g, &[id]).unwrap_err();
+        assert!(err.to_string().contains("exactly one grid"), "{err}");
+        assert!(segments(&g, &[id]).is_err());
         assert!(coalesce(&g, &[]).is_err());
+        assert!(segments(&g, &[]).is_err());
     }
 }

@@ -14,8 +14,10 @@
 
 use anyhow::{bail, Context, Result};
 
+use std::collections::BTreeSet;
+
 use super::backend::{ExecBackend, GoldenExec, PjrtExec, TimingOnlyExec};
-use super::datamap::{self, MovePlan};
+use super::datamap;
 use super::mapper::{self, Assignment, IpSlot};
 use crate::config::{ClusterConfig, TimingConfig};
 use crate::hw::axis::{ip_port, Burst, PORT_DMA, PORT_NET, PORT_VFIFO};
@@ -23,6 +25,7 @@ use crate::hw::board::Cluster;
 use crate::hw::ip_core::{IpCore, StepExecutor};
 use crate::hw::mac::ETHERTYPE_STENCIL;
 use crate::hw::net::{CHANNEL_EAST, CHANNEL_WEST};
+use crate::omp::dataenv::{BatchCtx, Residency};
 use crate::omp::device::{DataEnv, DevicePlugin, DeviceReport, FnRegistry};
 use crate::omp::graph::TaskGraph;
 use crate::omp::task::TaskId;
@@ -457,19 +460,19 @@ impl Vc709Plugin {
     }
 
     /// Hop sequence of one pass, as (server kind, board, ip) references.
+    /// `entry` is the pass's ingress hop (PCIe DMA for a fresh stream,
+    /// the board-0 VFIFO read port for a loop-back or a device-resident
+    /// buffer); `exit` its egress hop, or `None` when the stream parks on
+    /// the device (deferred D2H — the data simply stays where the last
+    /// hop deposited it, which is what makes residency free at the tail).
     fn pass_hops(
         &self,
         groups: &[(usize, Vec<usize>)],
-        first_pass: bool,
-        final_pass: bool,
+        entry: Hop,
+        exit: Option<Hop>,
         shape: &[usize],
     ) -> Vec<Hop> {
-        let mut hops = Vec::new();
-        if first_pass {
-            hops.push(Hop::Pcie);
-        } else {
-            hops.push(Hop::VfifoRead(0));
-        }
+        let mut hops = vec![entry];
         for (gi, (b, ips)) in groups.iter().enumerate() {
             hops.push(Hop::Switch(*b));
             for &i in ips {
@@ -492,12 +495,114 @@ impl Vc709Plugin {
                 }
             }
         }
-        if final_pass {
-            hops.push(Hop::Pcie);
-        } else {
-            hops.push(Hop::VfifoWrite(0));
-        }
+        hops.extend(exit);
         hops
+    }
+
+    /// Resolve a batch into per-segment execution plans: one maximal
+    /// same-buffer sub-chain at a time, each with its own mapper
+    /// assignment, grid shape and transfer decisions.  A segment enters
+    /// from the device park (VFIFO) instead of PCIe when its buffer's
+    /// device copy is current — either resident via the present table
+    /// (`residency.device_valid`) or parked by an earlier segment of this
+    /// batch — and defers its D2H when the buffer stays on the device
+    /// (resident, or reused by a later segment).  Shared verbatim by
+    /// `run_batch` and `estimate_batch_s`, so the placement estimate and
+    /// the executed duration cannot drift.
+    fn plan_segments(
+        &self,
+        graph: &TaskGraph,
+        tasks: &[TaskId],
+        kernels: &[Kernel],
+        env: &DataEnv,
+        residency: &Residency,
+    ) -> Result<Vec<SegPlan>> {
+        let segs = datamap::segments(graph, tasks)?;
+        let mut on_device: BTreeSet<String> = residency.device_valid.clone();
+        let mut plans = Vec::with_capacity(segs.len());
+        let mut cursor = 0usize; // segments partition `tasks` in order
+        for (si, seg) in segs.iter().enumerate() {
+            let idxs: Vec<usize> = (cursor..cursor + seg.tasks.len()).collect();
+            cursor += seg.tasks.len();
+            let seg_kernels: Vec<Kernel> =
+                idxs.iter().map(|&i| kernels[i]).collect();
+            let assignment =
+                mapper::assign(&self.board_kernels(), &seg_kernels)?;
+            let (bytes, shape) = match env.get(&seg.buffer) {
+                Ok(g) => (g.bytes() as f64, g.shape().to_vec()),
+                Err(_) => (0.0, vec![1, 1]),
+            };
+            if bytes > 0.0 {
+                for k in &seg_kernels {
+                    if k.ndim() != shape.len() {
+                        bail!(
+                            "kernel {} expects {}D but buffer '{}' is {}D",
+                            k.name(),
+                            k.ndim(),
+                            seg.buffer,
+                            shape.len()
+                        );
+                    }
+                }
+            }
+            let entry_resident = on_device.contains(&seg.buffer);
+            let exit_deferred = residency.resident.contains(&seg.buffer)
+                || segs[si + 1..].iter().any(|s| s.buffer == seg.buffer);
+            if exit_deferred {
+                on_device.insert(seg.buffer.clone());
+            } else {
+                on_device.remove(&seg.buffer);
+            }
+            plans.push(SegPlan {
+                buffer: seg.buffer.clone(),
+                kernels: seg_kernels,
+                assignment,
+                shape,
+                bytes,
+                entry_resident,
+                exit_deferred,
+            });
+        }
+        Ok(plans)
+    }
+
+    /// The DES over a batch's segments: every pass of every segment
+    /// streamed chunk-wise through its hop sequence, starting at
+    /// `start_s`.  The single timing path behind both `run_batch` and
+    /// `estimate_batch_s` — a segment whose buffer is device-resident
+    /// enters through the VFIFO read port instead of the PCIe DMA, and a
+    /// deferred D2H charges nothing (the stream tail rests on the
+    /// device), so the model prices only the transfers that actually
+    /// happen.
+    fn model_segments(
+        &self,
+        servers: &mut DesServers,
+        segs: &[SegPlan],
+        start_s: f64,
+    ) -> f64 {
+        let mut vtime = start_s;
+        for seg in segs {
+            let npasses = seg.assignment.npasses();
+            for p in 0..npasses {
+                let groups = group_slots(&seg.assignment.pass_slots(p));
+                let entry = if p > 0 || seg.entry_resident {
+                    Hop::VfifoRead(0)
+                } else {
+                    Hop::Pcie
+                };
+                let exit = if p + 1 < npasses {
+                    Some(Hop::VfifoWrite(0))
+                } else if seg.exit_deferred {
+                    None
+                } else {
+                    Some(Hop::Pcie)
+                };
+                let hops = self.pass_hops(&groups, entry, exit, &seg.shape);
+                vtime += self.timing.pass_overhead_s;
+                vtime = self.stream_pass_virtual(servers, &hops, vtime, seg.bytes);
+            }
+        }
+        vtime
     }
 
     fn stream_pass_virtual(
@@ -554,6 +659,7 @@ fn group_slots(slots: &[IpSlot]) -> Vec<(usize, Vec<usize>)> {
     groups
 }
 
+#[derive(Debug, Clone, Copy)]
 enum Hop {
     Pcie,
     VfifoWrite(usize),
@@ -561,6 +667,21 @@ enum Hop {
     Switch(usize),
     Ip(usize, usize, f64),
     Net(usize),
+}
+
+/// Execution plan of one maximal same-buffer sub-chain of a batch.
+struct SegPlan {
+    buffer: String,
+    /// kernels of the segment's tasks, in chain order
+    kernels: Vec<Kernel>,
+    assignment: Assignment,
+    shape: Vec<usize>,
+    bytes: f64,
+    /// the device copy is current at entry: read the VFIFO park, skip
+    /// the H2D DMA
+    entry_resident: bool,
+    /// the buffer stays on the device: defer (skip) the D2H
+    exit_deferred: bool,
 }
 
 struct DesServers {
@@ -612,9 +733,10 @@ impl DevicePlugin for Vc709Plugin {
         tasks: &[TaskId],
         env: &mut DataEnv,
         fns: &FnRegistry,
-        release_s: f64,
+        ctx: &BatchCtx,
     ) -> Result<DeviceReport> {
         let t0 = std::time::Instant::now();
+        let release_s = ctx.release_s;
         if tasks.is_empty() {
             return Ok(DeviceReport {
                 release_s,
@@ -641,55 +763,54 @@ impl DevicePlugin for Vc709Plugin {
             .map(|id| fns.kernel_of(&graph.task(*id).fn_name))
             .collect::<Result<_>>()?;
         // -- plan -----------------------------------------------------------
-        let plan: MovePlan = datamap::coalesce(graph, tasks)?;
-        let assignment = mapper::assign(&self.board_kernels(), &kernels)?;
-        let grid_in = env.take(&plan.buffer)?;
-        let shape = grid_in.shape().to_vec();
-        for k in &kernels {
-            if k.ndim() != shape.len() {
-                bail!(
-                    "kernel {} expects {}D but buffer '{}' is {}D",
-                    k.name(),
-                    k.ndim(),
-                    plan.buffer,
-                    shape.len()
-                );
+        // the per-buffer coalescing analysis (how many host round-trips
+        // the pipeline view eliminates), reported through the run stats
+        let plans = datamap::coalesce(graph, tasks)?;
+        let segs =
+            self.plan_segments(graph, tasks, &kernels, env, &ctx.residency)?;
+
+        // -- functional streaming, one segment at a time -------------------
+        // The grids really move regardless of residency: the host data
+        // environment stays the functional truth, which is what makes
+        // resident and always-stream executions bit-identical.  Skipped
+        // entirely in timing-only mode (figure sweeps; numerics are
+        // identity).
+        for seg in &segs {
+            let mut grid = env.take(&seg.buffer)?;
+            let npasses = seg.assignment.npasses();
+            for p in 0..npasses {
+                let slots = seg.assignment.pass_slots(p);
+                let pass_kernels: Vec<Kernel> = seg.assignment.passes[p]
+                    .iter()
+                    .map(|&t| seg.kernels[t])
+                    .collect();
+                let first = p == 0;
+                let fin = p + 1 == npasses;
+                let groups =
+                    self.program_pass(&slots, first, fin, &pass_kernels)?;
+                if self.backend_kind != ExecBackend::TimingOnly {
+                    grid = self
+                        .stream_pass_impl(grid, &groups, first, fin, &seg.shape)?;
+                }
             }
+            env.put(&seg.buffer, grid);
         }
 
-        // -- execute the pass schedule ------------------------------------
-        let mut servers = self.build_servers();
-        let bytes = grid_in.bytes() as f64;
+        // -- virtual time: the shared DES over the same segments ----------
         // the batch DAG's release time positions this batch on the global
         // virtual timeline, then the one-time offload startup (graph
         // handoff + device init) applies per offload episode
-        let mut vtime = release_s + self.timing.offload_startup_s;
-        let mut grid = grid_in;
-        let npasses = assignment.npasses();
-        for p in 0..npasses {
-            let slots = assignment.pass_slots(p);
-            let pass_kernels: Vec<Kernel> =
-                assignment.passes[p].iter().map(|&t| kernels[t]).collect();
-            let first = p == 0;
-            let fin = p + 1 == npasses;
-            let groups =
-                self.program_pass(&slots, first, fin, &pass_kernels)?;
-            // functional streaming — skipped entirely in timing-only mode
-            // (that mode exists for figure sweeps; numerics are identity)
-            if self.backend_kind != ExecBackend::TimingOnly {
-                grid =
-                    self.stream_pass_impl(grid, &groups, first, fin, &shape)?;
-            }
-            // virtual time
-            let hops = self.pass_hops(&groups, first, fin, &shape);
-            vtime += self.timing.pass_overhead_s;
-            let pass_finish =
-                self.stream_pass_virtual(&mut servers, &hops, vtime, bytes);
-            vtime = pass_finish;
-        }
-
-        env.put(&plan.buffer, grid);
-        self.last_assignment = Some(assignment);
+        let mut servers = self.build_servers();
+        let vtime = self.model_segments(
+            &mut servers,
+            &segs,
+            release_s + self.timing.offload_startup_s,
+        );
+        let total_passes: usize =
+            segs.iter().map(|s| s.assignment.npasses()).sum();
+        let h2d_elided = segs.iter().filter(|s| s.entry_resident).count();
+        let d2h_deferred = segs.iter().filter(|s| s.exit_deferred).count();
+        self.last_assignment = segs.into_iter().last().map(|s| s.assignment);
 
         let duration_s = vtime - release_s;
         let mut report = DeviceReport {
@@ -702,19 +823,27 @@ impl DevicePlugin for Vc709Plugin {
         };
         servers.absorb_into(&mut report.stats);
         report.stats.virtual_time_s = duration_s;
-        report.stats.passes = npasses;
+        report.stats.passes = total_passes;
+        report.stats.h2d_elided = h2d_elided;
+        report.stats.d2h_deferred = d2h_deferred;
+        report.stats.roundtrips_elided =
+            plans.iter().map(|p| p.saved_roundtrips).sum();
         Ok(report)
     }
 
     /// Communication-aware placement model for `device(any)`: the exact
     /// DES this cluster would time the batch with — same mapper (so the
-    /// kernel↔IP skip logic decides compatibility), same pass hop
-    /// sequences across the ring, same byte counts the functional model
-    /// moves — evaluated against fresh servers starting at 0.  `None`
-    /// when any task resolves to software on this arch (no `declare
-    /// variant` for vc709) or when no IP in this cluster implements a
-    /// required kernel: such runs fall back to other devices or the
-    /// host.
+    /// kernel↔IP skip logic decides compatibility), same per-segment
+    /// pass hop sequences across the ring, same byte counts the
+    /// functional model moves, same residency elisions — evaluated
+    /// against fresh servers starting at 0.  A run whose inputs this
+    /// cluster already holds prices without their H2D, which is what
+    /// steers `device(any)` placement toward the data (affinity).
+    /// `None` when any task resolves to software on this arch (no
+    /// `declare variant` for vc709), when no IP in this cluster
+    /// implements a required kernel, or when the batch shape is one the
+    /// executor would reject: such runs fall back to other devices or
+    /// the host.
     fn estimate_batch_s(
         &self,
         graph: &TaskGraph,
@@ -722,6 +851,7 @@ impl DevicePlugin for Vc709Plugin {
         fn_names: &[String],
         fns: &FnRegistry,
         env: &DataEnv,
+        residency: &Residency,
     ) -> Option<f64> {
         if tasks.is_empty() {
             return Some(0.0);
@@ -730,35 +860,35 @@ impl DevicePlugin for Vc709Plugin {
             .iter()
             .map(|n| fns.kernel_of(n).ok())
             .collect::<Option<_>>()?;
-        let assignment = mapper::assign(&self.board_kernels(), &kernels).ok()?;
-        // admission mirrors run_batch exactly: a chain the map-clause
-        // coalescer rejects (e.g. mixed buffers) must make this plugin
-        // abstain rather than win placement and fail at execution
-        let plan = datamap::coalesce(graph, tasks).ok()?;
-        // the bytes the batch moves: the coalesced buffer, priced at the
-        // size currently in the data environment — the same bytes
-        // run_batch will stream.  The executor re-prices pending runs
-        // each dispatch round, so the buffer is present by the time a
-        // placement is committed (upstream producers have run).
-        let (bytes, shape) = match env.get(&plan.buffer) {
-            Ok(g) => (g.bytes() as f64, g.shape().to_vec()),
-            Err(_) => (0.0, vec![1, 1]),
-        };
-        if bytes > 0.0 && kernels.iter().any(|k| k.ndim() != shape.len()) {
-            // run_batch would reject the dimension mismatch
-            return None;
-        }
+        // admission mirrors run_batch exactly: a batch the segment
+        // planner rejects (multi-map task, unmappable kernel, dimension
+        // mismatch) must make this plugin abstain rather than win
+        // placement and fail at execution.  Buffer sizes are priced at
+        // the sizes currently in the data environment — the same bytes
+        // run_batch will stream (the executor re-prices pending runs
+        // each dispatch round, so upstream-produced buffers have
+        // materialized by the time a placement is committed).
+        let segs = self
+            .plan_segments(graph, tasks, &kernels, env, residency)
+            .ok()?;
         let mut servers = self.build_servers();
-        let mut vtime = self.timing.offload_startup_s;
-        let npasses = assignment.npasses();
-        for p in 0..npasses {
-            let groups = group_slots(&assignment.pass_slots(p));
-            let hops =
-                self.pass_hops(&groups, p == 0, p + 1 == npasses, &shape);
-            vtime += self.timing.pass_overhead_s;
-            vtime = self.stream_pass_virtual(&mut servers, &hops, vtime, bytes);
+        Some(self.model_segments(
+            &mut servers,
+            &segs,
+            self.timing.offload_startup_s,
+        ))
+    }
+
+    /// Deferred D2H: one bulk DMA of the resident buffer back over PCIe,
+    /// charged when a host flow dependence or an exit-data `from` forces
+    /// the writeback.  Bulk beats the chunked in-batch transfer it
+    /// replaced (one descriptor setup instead of one per chunk), so
+    /// deferring is never modelled slower than streaming eagerly.
+    fn writeback_s(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
         }
-        Some(vtime)
+        self.timing.dma_setup_s + bytes * 8.0 / self.timing.pcie_bps()
     }
 }
 
@@ -814,37 +944,33 @@ mod tests {
         let mut env = DataEnv::new();
         env.insert("V", Grid::random(&[16, 12], 2).unwrap());
         let names: Vec<String> = vec!["hw_f".into(); 4];
+        let none = Residency::default();
         let est = plugin
-            .estimate_batch_s(&graph, &ids, &names, &fns, &env)
+            .estimate_batch_s(&graph, &ids, &names, &fns, &env, &none)
             .expect("compatible batch must be priced");
-        let rep = plugin.run_batch(&graph, &ids, &mut env, &fns, 0.5).unwrap();
+        let rep = plugin
+            .run_batch(&graph, &ids, &mut env, &fns, &BatchCtx::at(0.5))
+            .unwrap();
         assert!(
             (est - rep.virtual_time_s).abs() < 1e-12,
             "estimate {est} != executed duration {}",
             rep.virtual_time_s
         );
+        assert_eq!(rep.stats.roundtrips_elided, 3, "4-task tofrom chain");
         // a kernel the cluster does not implement makes the plugin
         // abstain (mapper skip logic), as does a software resolution
         fns.register("hw_j", crate::omp::TaskFn::HwKernel(Kernel::Jacobi9pt));
         let bad: Vec<String> = vec!["hw_j".into(); 4];
         assert!(plugin
-            .estimate_batch_s(&graph, &ids, &bad, &fns, &env)
+            .estimate_batch_s(&graph, &ids, &bad, &fns, &env, &none)
             .is_none());
         let soft: Vec<String> = vec!["f".into(); 4];
         assert!(plugin
-            .estimate_batch_s(&graph, &ids, &soft, &fns, &env)
+            .estimate_batch_s(&graph, &ids, &soft, &fns, &env, &none)
             .is_none());
     }
 
-    #[test]
-    fn estimate_abstains_on_mixed_buffer_chain() {
-        // run_batch's coalescer rejects a chain mapping two different
-        // buffers, so the cost model must abstain rather than win
-        // placement and fail at execution
-        let cfg = ClusterConfig::homogeneous(1, 2, Kernel::Laplace2d);
-        let plugin = Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap();
-        let mut fns = FnRegistry::default();
-        fns.register("hw_f", crate::omp::TaskFn::HwKernel(Kernel::Laplace2d));
+    fn two_buffer_chain() -> (TaskGraph, Vec<TaskId>) {
         let mut graph = TaskGraph::new();
         let mut ids = Vec::new();
         for (i, buf) in ["A", "B"].iter().enumerate() {
@@ -859,12 +985,93 @@ mod tests {
                 nowait: true,
             }));
         }
+        (graph, ids)
+    }
+
+    #[test]
+    fn mixed_buffer_chain_prices_and_executes() {
+        // a chain whose tasks map different buffers — the Jacobi-style
+        // ping-pong shape the old coalescer rejected — now plans as two
+        // segments; the estimate still equals the executed duration
+        let cfg = ClusterConfig::homogeneous(1, 2, Kernel::Laplace2d);
+        let mut plugin = Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap();
+        let mut fns = FnRegistry::default();
+        fns.register("hw_f", crate::omp::TaskFn::HwKernel(Kernel::Laplace2d));
+        let (graph, ids) = two_buffer_chain();
+        let ga = Grid::random(&[8, 8], 1).unwrap();
+        let gb = Grid::random(&[8, 8], 2).unwrap();
         let mut env = DataEnv::new();
-        env.insert("A", Grid::random(&[8, 8], 1).unwrap());
-        env.insert("B", Grid::random(&[8, 8], 2).unwrap());
+        env.insert("A", ga.clone());
+        env.insert("B", gb.clone());
         let names: Vec<String> = vec!["hw_f".into(); 2];
-        assert!(plugin
-            .estimate_batch_s(&graph, &ids, &names, &fns, &env)
-            .is_none());
+        let none = Residency::default();
+        let est = plugin
+            .estimate_batch_s(&graph, &ids, &names, &fns, &env, &none)
+            .expect("two-buffer chains are schedulable now");
+        let rep = plugin
+            .run_batch(&graph, &ids, &mut env, &fns, &BatchCtx::at(0.0))
+            .unwrap();
+        assert!((est - rep.virtual_time_s).abs() < 1e-12);
+        // each buffer advanced by exactly its own task
+        assert_eq!(env.take("A").unwrap(), Kernel::Laplace2d.apply(&ga).unwrap());
+        assert_eq!(env.take("B").unwrap(), Kernel::Laplace2d.apply(&gb).unwrap());
+        // no residency, no same-buffer reuse: nothing elided or deferred
+        assert_eq!(rep.stats.h2d_elided, 0);
+        assert_eq!(rep.stats.d2h_deferred, 0);
+    }
+
+    #[test]
+    fn resident_buffer_elides_h2d_and_defers_d2h() {
+        let cfg = ClusterConfig::homogeneous(1, 2, Kernel::Laplace2d);
+        let mut plugin = Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap();
+        let mut fns = FnRegistry::default();
+        fns.register("hw_f", crate::omp::TaskFn::HwKernel(Kernel::Laplace2d));
+        let mut graph = TaskGraph::new();
+        let mut ids = Vec::new();
+        for i in 0..2 {
+            ids.push(graph.add(Task {
+                id: TaskId(0),
+                base_name: "f".into(),
+                fn_name: "hw_f".into(),
+                device: crate::omp::DeviceId(1).into(),
+                maps: vec![(crate::omp::MapDir::ToFrom, "V".into())],
+                deps_in: vec![DepVar(i)],
+                deps_out: vec![DepVar(i + 1)],
+                nowait: true,
+            }));
+        }
+        let input = Grid::random(&[16, 12], 4).unwrap();
+        let run = |plugin: &mut Vc709Plugin, ctx: &BatchCtx| {
+            let mut env = DataEnv::new();
+            env.insert("V", input.clone());
+            let rep = plugin.run_batch(&graph, &ids, &mut env, &fns, ctx).unwrap();
+            (rep, env.take("V").unwrap())
+        };
+        let (stream, g_stream) = run(&mut plugin, &BatchCtx::at(0.0));
+        let mut resident = BatchCtx::at(0.0);
+        resident.residency.resident.insert("V".into());
+        resident.residency.device_valid.insert("V".into());
+        let (res, g_res) = run(&mut plugin, &resident);
+        assert_eq!(res.stats.h2d_elided, 1);
+        assert_eq!(res.stats.d2h_deferred, 1);
+        assert!(
+            res.virtual_time_s < stream.virtual_time_s,
+            "residency must be cheaper: {} vs {}",
+            res.virtual_time_s,
+            stream.virtual_time_s
+        );
+        // residency is a timing-plane concept: numerics are identical
+        assert_eq!(g_res, g_stream);
+        // and the estimate tracks the residency-adjusted duration exactly
+        let names: Vec<String> = vec!["hw_f".into(); 2];
+        let mut env = DataEnv::new();
+        env.insert("V", input.clone());
+        let est = plugin
+            .estimate_batch_s(&graph, &ids, &names, &fns, &env, &resident.residency)
+            .unwrap();
+        assert!((est - res.virtual_time_s).abs() < 1e-12);
+        // a resident buffer never written back for free
+        assert!(plugin.writeback_s(input.bytes() as f64) > 0.0);
+        assert_eq!(plugin.writeback_s(0.0), 0.0);
     }
 }

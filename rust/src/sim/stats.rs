@@ -15,6 +15,15 @@ pub struct RunStats {
     pub modules: BTreeMap<String, ModuleStats>,
     pub virtual_time_s: f64,
     pub passes: usize,
+    /// segments whose H2D DMA was skipped because the buffer's device
+    /// copy was already current (device-resident data environment)
+    pub h2d_elided: usize,
+    /// segments whose D2H writeback was deferred because the buffer
+    /// stays resident on the device
+    pub d2h_deferred: usize,
+    /// interior host round-trips the map-clause coalescer eliminated
+    /// (the §III-A pipeline view, counted per `MovePlan`)
+    pub roundtrips_elided: usize,
 }
 
 impl RunStats {
@@ -45,6 +54,9 @@ impl RunStats {
         }
         self.virtual_time_s += other.virtual_time_s;
         self.passes += other.passes;
+        self.h2d_elided += other.h2d_elided;
+        self.d2h_deferred += other.d2h_deferred;
+        self.roundtrips_elided += other.roundtrips_elided;
     }
 
     pub fn utilization(&self, module: &str) -> f64 {
@@ -61,6 +73,12 @@ impl RunStats {
             "virtual time {:.6} s over {} passes",
             self.virtual_time_s, self.passes
         )];
+        if self.h2d_elided > 0 || self.d2h_deferred > 0 {
+            out.push(format!(
+                "  residency: {} H2D elided, {} D2H deferred",
+                self.h2d_elided, self.d2h_deferred
+            ));
+        }
         for (name, m) in &self.modules {
             out.push(format!(
                 "  {:<14} {:>12.0} bytes  busy {:>10.6} s  util {:>5.1}%",

@@ -80,6 +80,44 @@ pub fn check<T: std::fmt::Debug>(
     }
 }
 
+/// [`check`] with greedy shrinking: on failure, `shrink` proposes
+/// smaller candidate cases and the first candidate that still fails
+/// replaces the current counterexample, repeating to a fixed point —
+/// the panic then reports a (locally) minimal reproduction alongside
+/// the seed.
+pub fn check_shrink<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for seed in 0..cases {
+        let mut rng = Rng::with_seed(seed);
+        let case = gen(&mut rng);
+        let Err(first_msg) = prop(&case) else {
+            continue;
+        };
+        let mut cur = case;
+        let mut cur_msg = first_msg;
+        // greedy descent, bounded so a pathological shrinker terminates
+        'outer: for _ in 0..1000 {
+            for cand in shrink(&cur) {
+                if let Err(msg) = prop(&cand) {
+                    cur = cand;
+                    cur_msg = msg;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed (seed {seed}): {cur_msg}\n\
+             minimized case: {cur:#?}"
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +172,44 @@ mod tests {
     #[should_panic(expected = "property 'always-false' failed")]
     fn check_reports_failure() {
         check("always-false", 3, |r| r.range(0, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn check_shrink_passes_quietly() {
+        check_shrink(
+            "always-true",
+            3,
+            |r| vec![r.range(0, 10)],
+            |_| vec![],
+            |_| Ok(()),
+        );
+    }
+
+    #[test]
+    fn check_shrink_minimizes_counterexample() {
+        // the property rejects everything and the shrinker drops one
+        // element at a time, so the reported case must be minimal: []
+        let result = std::panic::catch_unwind(|| {
+            check_shrink(
+                "always-fails",
+                1,
+                |r| vec![r.range(0, 10), r.range(0, 10), r.range(0, 10)],
+                |v| {
+                    (0..v.len())
+                        .map(|i| {
+                            let mut c = v.clone();
+                            c.remove(i);
+                            c
+                        })
+                        .collect()
+                },
+                |_| Err("nope".into()),
+            )
+        });
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .expect("panic carries a formatted message");
+        assert!(msg.contains("minimized case: []"), "{msg}");
     }
 }

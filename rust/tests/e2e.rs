@@ -6,7 +6,7 @@ use omp_fpga::config::ClusterConfig;
 use omp_fpga::exec::{run_host_reference, run_stencil_app, RunSpec};
 use omp_fpga::hw::ip_core::IpCore;
 use omp_fpga::omp::device::{DevicePlugin, HOST_DEVICE};
-use omp_fpga::omp::{DataEnv, MapDir, OmpRuntime};
+use omp_fpga::omp::{BatchCtx, DataEnv, EnterMap, ExitMap, MapDir, OmpRuntime};
 use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
 use omp_fpga::stencil::kernels::ALL_KERNELS;
 use omp_fpga::stencil::workload::small_workload;
@@ -116,7 +116,7 @@ fn vfifo_drained_after_run() {
     let mut env = DataEnv::new();
     let input = Grid::random(&[8, 8], 5).unwrap();
     env.insert("V", input.clone());
-    let report = plugin.run_batch(&graph, &ids, &mut env, &fns, 0.0).unwrap();
+    let report = plugin.run_batch(&graph, &ids, &mut env, &fns, &BatchCtx::at(0.0)).unwrap();
     assert_eq!(report.tasks_run, 6);
     assert_eq!(report.release_s, 0.0);
     assert!((report.finish_s - report.virtual_time_s).abs() < 1e-12);
@@ -153,7 +153,7 @@ fn frame_stats_accumulate_on_multi_board_runs() {
     }
     let mut env = DataEnv::new();
     env.insert("V", Grid::random(&[12, 10], 9).unwrap());
-    plugin.run_batch(&graph, &ids, &mut env, &fns, 0.0).unwrap();
+    plugin.run_batch(&graph, &ids, &mut env, &fns, &BatchCtx::at(0.0)).unwrap();
     // one pass over 3 boards: 2 forward crossings + 1 wrap = every board
     // transmitted frames
     for b in &plugin.cluster.boards {
@@ -185,7 +185,7 @@ fn wrong_buffer_count_is_rejected() {
         nowait: true,
     });
     let mut env = DataEnv::new();
-    assert!(plugin.run_batch(&graph, &[id], &mut env, &fns, 0.0).is_err());
+    assert!(plugin.run_batch(&graph, &[id], &mut env, &fns, &BatchCtx::at(0.0)).is_err());
 }
 
 #[test]
@@ -524,11 +524,12 @@ fn device_any_falls_back_to_host_when_cluster_lacks_kernel() {
 }
 
 #[test]
-fn device_any_mixed_buffer_chain_falls_back_to_host() {
+fn device_any_mixed_buffer_chain_now_schedules_on_fpga() {
     // a dependence chains two unbound tasks that map different buffers:
-    // the VC709 coalescer cannot execute that as one pipeline, so the
-    // plugin abstains from placement and the run lands on the host base
-    // functions instead of failing at execution
+    // the old single-buffer coalescer rejected this shape ("mixed-buffer
+    // pipelines are not supported") and the run fell back to the host.
+    // The per-buffer MovePlan generalization executes it as two
+    // segments on the cluster.
     let k = Kernel::Laplace2d;
     let mut rt = OmpRuntime::new(2);
     rt.register_software("fa", move |env| {
@@ -544,7 +545,7 @@ fn device_any_mixed_buffer_chain_falls_back_to_host() {
     rt.declare_hw_variant("fa", "vc709", "hw_a", k);
     rt.declare_hw_variant("fb", "vc709", "hw_b", k);
     let cfg = ClusterConfig::homogeneous(1, 2, k);
-    rt.register_device(Box::new(
+    let fpga = rt.register_device(Box::new(
         Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
     ));
     let ga = Grid::random(&[8, 8], 3).unwrap();
@@ -572,9 +573,262 @@ fn device_any_mixed_buffer_chain_falls_back_to_host() {
         })
         .unwrap();
     assert_eq!(report.batches.len(), 1);
-    assert_eq!(report.batches[0].0, HOST_DEVICE);
+    assert_eq!(report.batches[0].0, fpga, "the cluster prices and wins the run");
+    assert!(report.batches[0].1.virtual_time_s > 0.0);
     assert_eq!(env.take("A").unwrap(), k.apply(&ga).unwrap());
     assert_eq!(env.take("B").unwrap(), k.apply(&gb).unwrap());
+}
+
+#[test]
+fn jacobi_pingpong_two_buffer_pipeline_end_to_end() {
+    // the Jacobi-style two-buffer ping-pong: one bound pipeline whose
+    // tasks alternate between A and Anew — previously rejected outright
+    // by the coalescer, now split into per-buffer segments with the
+    // interior transfers of each buffer elided by on-device parking
+    let k = Kernel::Jacobi9pt;
+    let mut rt = OmpRuntime::new(2);
+    rt.declare_hw_variant("step", "vc709", "hw_step", k);
+    let cfg = ClusterConfig::homogeneous(1, 2, k);
+    let fpga = rt.register_device(Box::new(
+        Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+    ));
+    let ga = Grid::random(&[12, 10], 5).unwrap();
+    let gb = Grid::random(&[12, 10], 6).unwrap();
+    let mut env = DataEnv::new();
+    env.insert("A", ga.clone());
+    env.insert("Anew", gb.clone());
+    let deps = rt.dep_vars(9);
+    let report = rt
+        .parallel(&mut env, |ctx| {
+            for i in 0..8 {
+                let buf = if i % 2 == 0 { "A" } else { "Anew" };
+                ctx.target("step")
+                    .device(fpga)
+                    .map(MapDir::ToFrom, buf)
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    // one batch, eight single-task segments alternating buffers
+    assert_eq!(report.batches.len(), 1);
+    let (dev, rep) = &report.batches[0];
+    assert_eq!(*dev, fpga);
+    assert_eq!(rep.tasks_run, 8);
+    // intra-batch parking: every non-first use of each buffer skips its
+    // H2D, every non-last use defers its D2H (3 + 3 and 4 + 4 segments)
+    assert_eq!(rep.stats.h2d_elided, 6);
+    assert_eq!(rep.stats.d2h_deferred, 6);
+    assert_eq!(rep.stats.roundtrips_elided, 6);
+    // numerics: each buffer advanced by its own four applications
+    assert_eq!(env.take("A").unwrap(), k.iterate(&ga, 4).unwrap());
+    assert_eq!(env.take("Anew").unwrap(), k.iterate(&gb, 4).unwrap());
+}
+
+#[test]
+fn target_data_region_elides_transfers_across_batches() {
+    // an iterative sweep whose FPGA chains are split by a host monitor
+    // task (which maps only a residual buffer): without a data region
+    // every FPGA batch re-streams V over PCIe; inside `target data`
+    // only the first batch pays the H2D and the single writeback is
+    // deferred to region exit — strictly lower makespan, identical grid
+    let k = Kernel::Diffusion2d;
+    const SWEEPS: usize = 4;
+    let run = |resident: bool| {
+        let mut rt = OmpRuntime::new(2);
+        rt.declare_hw_variant("step", "vc709", "hw_step", k);
+        rt.register_software("monitor", |env| {
+            let mut r = env.take("R")?;
+            for v in r.data_mut() {
+                *v += 1.0; // count the sweeps
+            }
+            env.put("R", r);
+            Ok(())
+        });
+        let cfg = ClusterConfig::homogeneous(1, 2, k);
+        let fpga = rt.register_device(Box::new(
+            Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+        ));
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::random(&[24, 20], 9).unwrap());
+        env.insert("R", Grid::zeros(&[1, 1]).unwrap());
+        if resident {
+            rt.target_enter_data(fpga, &env, &[(EnterMap::To, "V")]).unwrap();
+        }
+        let deps = rt.dep_vars(3 * SWEEPS + 2);
+        let report = rt
+            .parallel(&mut env, |ctx| {
+                for s in 0..SWEEPS {
+                    for i in 0..2 {
+                        ctx.target("step")
+                            .device(fpga)
+                            .map(MapDir::ToFrom, "V")
+                            .depend_in(deps[3 * s + i])
+                            .depend_out(deps[3 * s + i + 1])
+                            .nowait()
+                            .submit()?;
+                    }
+                    ctx.task("monitor")
+                        .map(MapDir::ToFrom, "R")
+                        .depend_in(deps[3 * s + 2])
+                        .depend_out(deps[3 * s + 3])
+                        .nowait()
+                        .submit()?;
+                }
+                Ok(())
+            })
+            .unwrap();
+        let wb = if resident {
+            rt.target_exit_data(fpga, &[(ExitMap::From, "V")]).unwrap()
+        } else {
+            0.0
+        };
+        let elided: usize =
+            report.batches.iter().map(|(_, r)| r.stats.h2d_elided).sum();
+        (
+            report.virtual_time_s() + wb,
+            elided,
+            env.take("V").unwrap(),
+            env.take("R").unwrap(),
+        )
+    };
+    let (t_stream, e_stream, v_stream, r_stream) = run(false);
+    let (t_res, e_res, v_res, r_res) = run(true);
+    assert_eq!(e_stream, 0, "no region, no elision");
+    assert_eq!(e_res, SWEEPS - 1, "every sweep after the first skips its H2D");
+    assert!(
+        t_res < t_stream,
+        "residency must be strictly cheaper even after the exit \
+         writeback: {t_res} vs {t_stream}"
+    );
+    // bit-identical numerics: residency is a timing-plane concept
+    assert_eq!(v_res, v_stream);
+    assert_eq!(r_res, r_stream);
+}
+
+#[test]
+fn host_flow_dependence_forces_writeback_of_resident_buffer() {
+    // a host task reads V while the cluster holds the newest copy: the
+    // executor must charge the deferred writeback and delay the host
+    // batch's release by it
+    let k = Kernel::Laplace2d;
+    let mut rt = OmpRuntime::new(2);
+    rt.declare_hw_variant("step", "vc709", "hw_step", k);
+    rt.register_software("sum", |env| {
+        let g = env.take("V")?;
+        let _ = g.checksum();
+        env.put("V", g);
+        Ok(())
+    });
+    let cfg = ClusterConfig::homogeneous(1, 1, k);
+    let fpga = rt.register_device(Box::new(
+        Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+    ));
+    let mut env = DataEnv::new();
+    env.insert("V", Grid::random(&[16, 12], 2).unwrap());
+    rt.target_enter_data(fpga, &env, &[(EnterMap::To, "V")]).unwrap();
+    let deps = rt.dep_vars(3);
+    let report = rt
+        .parallel(&mut env, |ctx| {
+            ctx.target("step")
+                .device(fpga)
+                .map(MapDir::ToFrom, "V")
+                .depend_in(deps[0])
+                .depend_out(deps[1])
+                .nowait()
+                .submit()?;
+            ctx.task("sum")
+                .map(MapDir::ToFrom, "V")
+                .depend_in(deps[1])
+                .depend_out(deps[2])
+                .nowait()
+                .submit()?;
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(report.writebacks.len(), 1);
+    let wb = &report.writebacks[0];
+    assert_eq!(wb.device, fpga);
+    assert_eq!(wb.buffer, "V");
+    assert!(wb.seconds > 0.0);
+    let fpga_finish = report.batches[0].1.finish_s;
+    let host = &report.batches[1].1;
+    assert!(
+        (host.release_s - (fpga_finish + wb.seconds)).abs() < 1e-12,
+        "host release {} must include the {}s flush after {}",
+        host.release_s,
+        wb.seconds,
+        fpga_finish
+    );
+    assert!((report.virtual_time_s() - host.finish_s).abs() < 1e-12);
+    // the host write invalidated nothing (read-modify-write of V puts
+    // the newest copy back on the host); exiting now charges no second
+    // writeback
+    let wb_exit = rt.target_exit_data(fpga, &[(ExitMap::From, "V")]).unwrap();
+    assert_eq!(wb_exit, 0.0, "already flushed inside the region");
+}
+
+#[test]
+fn residency_affinity_steers_device_any_placement() {
+    // two identical clusters; V is resident (and dirty) on the second.
+    // An unbound chain over V must land on the holder: it prices without
+    // the H2D while the rival is surcharged the flush.
+    let k = Kernel::Diffusion2d;
+    let mut rt = OmpRuntime::new(2);
+    rt.declare_hw_variant("step", "vc709", "hw_step", k);
+    let cfg = ClusterConfig::homogeneous(1, 1, k);
+    let _d1 = rt.register_device(Box::new(
+        Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+    ));
+    let d2 = rt.register_device(Box::new(
+        Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+    ));
+    let input = Grid::random(&[16, 12], 8).unwrap();
+    let mut env = DataEnv::new();
+    env.insert("V", input.clone());
+    rt.target_enter_data(d2, &env, &[(EnterMap::To, "V")]).unwrap();
+    // region 1: a bound batch on d2 makes its copy current (and dirty)
+    let deps = rt.dep_vars(8);
+    rt.parallel(&mut env, |ctx| {
+        ctx.target("step")
+            .device(d2)
+            .map(MapDir::ToFrom, "V")
+            .depend_in(deps[0])
+            .depend_out(deps[1])
+            .nowait()
+            .submit()?;
+        Ok(())
+    })
+    .unwrap();
+    // region 2: device(any) — EFT alone would tie-break to d1 (same
+    // est, lower index); residency affinity must override that
+    let report = rt
+        .parallel(&mut env, |ctx| {
+            for i in 2..4 {
+                ctx.target("step")
+                    .device_any()
+                    .map(MapDir::ToFrom, "V")
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(report.batches.len(), 1);
+    assert_eq!(
+        report.batches[0].0, d2,
+        "placement must follow the resident data"
+    );
+    assert_eq!(report.batches[0].1.stats.h2d_elided, 1);
+    assert!(report.writebacks.is_empty(), "no flush when the holder wins");
+    rt.target_exit_data(d2, &[(ExitMap::From, "V")]).unwrap();
+    // numerics unchanged by any of it
+    assert_eq!(env.take("V").unwrap(), k.iterate(&input, 3).unwrap());
 }
 
 #[test]

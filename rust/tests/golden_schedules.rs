@@ -1,0 +1,237 @@
+//! Golden schedule-trace snapshots: the Dispatcher's (device, tasks,
+//! release, finish) trace for the figure sweeps and the heterogeneous
+//! interleaved pipeline, serialized to committed JSON fixtures.  Any
+//! future scheduler, placement or timing-model change that perturbs a
+//! schedule fails these tests loudly instead of silently shifting the
+//! figures.
+//!
+//! Fixture coverage:
+//! * `fig6_fig7.json` — the fig6 spec grid (five Table-II kernels ×
+//!   1..=6 FPGAs); fig7 runs the *same* specs, so one fixture pins both.
+//! * `fig8_fig9.json` — the fig8 spec grid (Laplace-2D, 1..=4 IPs ×
+//!   eight iteration counts); fig9's (iters, IPs) grid is a subset.
+//! * `heterogeneous.json` — the host → FPGA → host → FPGA → host
+//!   `device(any)` pipeline of `examples/heterogeneous.rs`.
+//!
+//! Blessing: a missing fixture is written on first run (and reported —
+//! commit it); `BLESS=1 cargo test` rewrites all of them after an
+//! intentional schedule change.  Floats are serialized with Rust's
+//! shortest-roundtrip `Display`, so comparison is exact across
+//! debug/release and platforms.
+
+use std::path::PathBuf;
+
+use omp_fpga::config::ClusterConfig;
+use omp_fpga::exec::{run_stencil_app, RunSpec, ScheduleEvent};
+use omp_fpga::figures::{fig6, fig8};
+use omp_fpga::omp::{DataEnv, MapDir, OmpReport, OmpRuntime};
+use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
+use omp_fpga::stencil::workload::{paper_workload, paper_workloads};
+use omp_fpga::stencil::{Grid, Kernel};
+use omp_fpga::util::json::{arr, num, obj, Value};
+
+fn trace_value(schedule: &[ScheduleEvent]) -> Value {
+    arr(schedule
+        .iter()
+        .map(|e| {
+            arr(vec![
+                num(e.device as f64),
+                num(e.tasks as f64),
+                num(e.release_s),
+                num(e.finish_s),
+            ])
+        })
+        .collect())
+}
+
+fn report_trace(report: &OmpReport) -> Value {
+    arr(report
+        .batches
+        .iter()
+        .map(|(d, r)| {
+            arr(vec![
+                num(d.0 as f64),
+                num(r.tasks_run as f64),
+                num(r.release_s),
+                num(r.finish_s),
+            ])
+        })
+        .collect())
+}
+
+/// Compare `actual` against the committed fixture, or bless it when the
+/// fixture is absent or `BLESS` is set.
+fn check_golden(name: &str, actual: &Value) {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(format!("{name}.json"));
+    let text = actual.to_string();
+    if std::env::var("BLESS").is_ok() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{text}\n")).unwrap();
+        eprintln!(
+            "golden fixture {} (re)written — commit it",
+            path.display()
+        );
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        expected.trim_end(),
+        text,
+        "schedule trace '{name}' diverged from the committed fixture; \
+         if the change is intentional, re-bless with `BLESS=1 cargo test`"
+    );
+}
+
+#[test]
+fn golden_fig6_fig7_schedules() {
+    let mut entries: Vec<(String, Value)> = Vec::new();
+    for w in paper_workloads() {
+        for f in 1..=fig6::MAX_FPGAS {
+            let spec = RunSpec::new(w.clone(), f, ExecBackend::TimingOnly);
+            let res = run_stencil_app(&spec).unwrap();
+            entries.push((
+                format!("{}/{f}fpga", w.kernel.name()),
+                trace_value(&res.schedule),
+            ));
+        }
+    }
+    let v = obj(entries.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+    check_golden("fig6_fig7", &v);
+}
+
+#[test]
+fn golden_fig8_fig9_schedules() {
+    let base = paper_workload(Kernel::Laplace2d);
+    let mut entries: Vec<(String, Value)> = Vec::new();
+    for ips in 1..=4usize {
+        for iters in fig8::ITERATIONS {
+            let w = base.with_ips(ips).with_iterations(iters);
+            let spec = RunSpec::new(w, 1, ExecBackend::TimingOnly);
+            let res = run_stencil_app(&spec).unwrap();
+            entries.push((
+                format!("{ips}ip/{iters}it"),
+                trace_value(&res.schedule),
+            ));
+        }
+    }
+    let v = obj(entries.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+    check_golden("fig8_fig9", &v);
+}
+
+/// The heterogeneous interleaved pipeline of
+/// `examples/heterogeneous.rs`: host → FPGA chain → host → FPGA chain →
+/// host, FPGA stages unbound (`device(any)`) over a 3-board ring and a
+/// single board.
+fn heterogeneous_report() -> OmpReport {
+    const STAGE_ITERS: usize = 6;
+    let kernel = Kernel::Diffusion2d;
+    let mut rt = OmpRuntime::new(4);
+    rt.register_software("preprocess", |env| {
+        let mut g = env.take("V")?;
+        for v in g.data_mut() {
+            *v *= 0.5;
+        }
+        env.put("V", g);
+        Ok(())
+    });
+    rt.register_software("renormalize", |env| {
+        let mut g = env.take("V")?;
+        for v in g.data_mut() {
+            *v *= 2.0;
+        }
+        env.put("V", g);
+        Ok(())
+    });
+    rt.register_software("postprocess", |env| {
+        let g = env.take("V")?;
+        let _ = g.checksum();
+        env.put("V", g);
+        Ok(())
+    });
+    rt.register_software("do_diffusion2d", move |env| {
+        let g = env.take("V")?;
+        env.put("V", kernel.apply(&g)?);
+        Ok(())
+    });
+    rt.declare_hw_variant("do_diffusion2d", "vc709", "hw_diffusion2d", kernel);
+    rt.register_device(Box::new(
+        Vc709Plugin::new(
+            &ClusterConfig::homogeneous(3, 1, kernel),
+            ExecBackend::Golden,
+        )
+        .unwrap(),
+    ));
+    rt.register_device(Box::new(
+        Vc709Plugin::new(
+            &ClusterConfig::homogeneous(1, 1, kernel),
+            ExecBackend::Golden,
+        )
+        .unwrap(),
+    ));
+    let mut env = DataEnv::new();
+    env.insert("V", Grid::random(&[64, 48], 11).unwrap());
+    let deps = rt.dep_vars(2 * STAGE_ITERS + 4);
+    rt.parallel(&mut env, |ctx| {
+        ctx.task("preprocess")
+            .map(MapDir::ToFrom, "V")
+            .depend_out(deps[0])
+            .nowait()
+            .submit()?;
+        for i in 0..STAGE_ITERS {
+            ctx.target("do_diffusion2d")
+                .device_any()
+                .map(MapDir::ToFrom, "V")
+                .depend_in(deps[i])
+                .depend_out(deps[i + 1])
+                .nowait()
+                .submit()?;
+        }
+        let mid = STAGE_ITERS;
+        ctx.task("renormalize")
+            .map(MapDir::ToFrom, "V")
+            .depend_in(deps[mid])
+            .depend_out(deps[mid + 1])
+            .nowait()
+            .submit()?;
+        for i in 0..STAGE_ITERS {
+            ctx.target("do_diffusion2d")
+                .device_any()
+                .map(MapDir::ToFrom, "V")
+                .depend_in(deps[mid + 1 + i])
+                .depend_out(deps[mid + 2 + i])
+                .nowait()
+                .submit()?;
+        }
+        ctx.task("postprocess")
+            .map(MapDir::ToFrom, "V")
+            .depend_in(deps[2 * STAGE_ITERS + 1])
+            .depend_out(deps[2 * STAGE_ITERS + 2])
+            .nowait()
+            .submit()?;
+        Ok(())
+    })
+    .unwrap()
+}
+
+#[test]
+fn golden_heterogeneous_schedule() {
+    let report = heterogeneous_report();
+    assert_eq!(report.batches.len(), 5, "host/fpga/host/fpga/host");
+    check_golden("heterogeneous", &report_trace(&report));
+}
+
+#[test]
+fn schedule_traces_are_deterministic() {
+    // the snapshot net is only as good as the determinism underneath:
+    // the same spec must produce the same trace twice in-process
+    let w = paper_workload(Kernel::Jacobi9pt);
+    let spec = RunSpec::new(w, 3, ExecBackend::TimingOnly);
+    let a = run_stencil_app(&spec).unwrap().schedule;
+    let b = run_stencil_app(&spec).unwrap().schedule;
+    assert_eq!(a, b);
+    let ha = report_trace(&heterogeneous_report()).to_string();
+    let hb = report_trace(&heterogeneous_report()).to_string();
+    assert_eq!(ha, hb);
+}
