@@ -16,10 +16,17 @@
 //!    stencil whose grid either re-streams over PCIe every sweep or
 //!    stays device-resident across batches (DESIGN.md §2), paying one
 //!    H2D up front and one bulk writeback at region exit.
+//! 6. **per-request planning vs compile-once/execute-N** — a stencil
+//!    service replaying one region per request: N× `parallel` (plan
+//!    cache off, the pre-compile-once runtime) against one captured
+//!    [`omp_fpga::omp::Program`] compiled once and executed N times
+//!    (DESIGN.md §2), with bit-identical grids and identical makespans.
 
 use omp_fpga::config::{ClusterConfig, TimingConfig};
 use omp_fpga::exec::{run_stencil_app, RunSpec};
-use omp_fpga::omp::{DataEnv, EnterMap, ExitMap, MapDir, OmpRuntime};
+use omp_fpga::omp::{
+    DataEnv, DepVar, EnterMap, ExitMap, MapDir, OmpRuntime, SingleCtx,
+};
 use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
 use omp_fpga::stencil::workload::paper_workloads;
 use omp_fpga::stencil::{Grid, Kernel};
@@ -137,6 +144,68 @@ fn resident_sweep_run(resident: bool) -> (f64, usize, Grid) {
     let elided: usize =
         report.batches.iter().map(|(_, r)| r.stats.h2d_elided).sum();
     (report.virtual_time_s() + wb, elided, env.take("V").unwrap())
+}
+
+/// The served region of case 6: an unbound 4-step diffusion chain.
+fn submit_chain(ctx: &mut SingleCtx, deps: &[DepVar]) -> anyhow::Result<()> {
+    for i in 0..4 {
+        ctx.target("do_step")
+            .device_any()
+            .map(MapDir::ToFrom, "V")
+            .depend_in(deps[i])
+            .depend_out(deps[i + 1])
+            .nowait()
+            .submit()?;
+    }
+    Ok(())
+}
+
+/// Case-6 worker: `REQUESTS` requests of the same region over two
+/// clusters.  `compiled = false` issues each request through
+/// `parallel` with the plan cache disabled — every request pays
+/// condensation + placement, the pre-compile-once behaviour; `true`
+/// captures and compiles once, then replays the executable.  Returns
+/// (per-request makespans, plans built, placements computed, grid).
+fn served_stencil_run(compiled: bool) -> (Vec<f64>, usize, usize, Grid) {
+    const REQUESTS: usize = 6;
+    let kernel = Kernel::Diffusion2d;
+    let mut rt = OmpRuntime::new(2);
+    rt.declare_hw_variant("do_step", "vc709", "hw_step", kernel);
+    let cfg = ClusterConfig::homogeneous(1, 2, kernel);
+    for _ in 0..2 {
+        rt.register_device(Box::new(
+            Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+        ));
+    }
+    let mut env = DataEnv::new();
+    env.insert("V", Grid::random(&[32, 24], 9).unwrap());
+    let mut times = Vec::new();
+    if compiled {
+        let deps = rt.dep_vars(5);
+        let program =
+            rt.capture(&env, |ctx| submit_chain(ctx, &deps)).unwrap();
+        let exe = program.compile(&mut rt).unwrap();
+        for _ in 0..REQUESTS {
+            times.push(
+                exe.execute(&mut rt, &mut env).unwrap().virtual_time_s(),
+            );
+        }
+    } else {
+        rt.set_plan_cache(false);
+        for _ in 0..REQUESTS {
+            let deps = rt.dep_vars(5);
+            times.push(
+                rt.parallel(&mut env, |ctx| submit_chain(ctx, &deps))
+                    .unwrap()
+                    .virtual_time_s(),
+            );
+        }
+    }
+    let (plans, placements) = {
+        let s = rt.plan_stats();
+        (s.plans_built, s.placements_computed)
+    };
+    (times, plans, placements, env.take("V").unwrap())
 }
 
 fn gflops_with(t: &TimingConfig, fpgas: usize) -> Vec<(String, f64)> {
@@ -267,4 +336,40 @@ fn main() {
     // residency is a timing-plane concept: the final grids are
     // bit-identical
     assert_eq!(g_res, g_stream, "residency perturbed the numerics");
+
+    // -- 6. per-request planning vs compile-once/execute-N -----------------
+    // A serving loop replays one region shape per request.  Issued
+    // through `parallel` with the plan cache off, every request pays
+    // condensation + `device(any)` placement again; captured and
+    // compiled once, the executable replays the committed schedule with
+    // zero re-planning — same grids, same makespans, 1/N of the
+    // host-side planning work.
+    println!("\n== ablation: per-request planning vs compile-once/execute-N ==");
+    let (t_per, plans_per, plc_per, g_per) = served_stencil_run(false);
+    let (t_once, plans_once, plc_once, g_once) = served_stencil_run(true);
+    println!(
+        "  parallel xN   : {plans_per} plans built, {plc_per} placements \
+         computed over {} requests",
+        t_per.len()
+    );
+    println!(
+        "  compile-once  : {plans_once} plan built, {plc_once} placement \
+         computed over {} requests",
+        t_once.len()
+    );
+    assert_eq!(plans_per, t_per.len(), "one plan per request without reuse");
+    assert_eq!(plans_once, 1, "compile-once builds exactly one plan");
+    assert!(
+        plans_once < plans_per && plc_once < plc_per,
+        "compile-once must strictly beat per-request planning \
+         ({plans_once}/{plc_once} vs {plans_per}/{plc_per})"
+    );
+    // the reused plan is not an approximation: identical timing and
+    // bit-identical numerics, request by request
+    assert_eq!(t_once, t_per, "per-request makespans must be identical");
+    assert_eq!(g_once, g_per, "compile-once perturbed the numerics");
+    println!(
+        "  -> identical makespans ({:.6} s/request) and bit-identical grids",
+        t_once[0]
+    );
 }

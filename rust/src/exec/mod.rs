@@ -73,6 +73,9 @@ pub struct RunResult {
     pub module_summary: Vec<String>,
     /// the dispatcher's batch trace
     pub schedule: Vec<ScheduleEvent>,
+    /// compiled plans the runtime built for this run (1: the region is
+    /// captured, compiled once and replayed — see `omp::program`)
+    pub plans_built: usize,
 }
 
 /// Run the paper's stencil pipeline (Listing 3) for `spec`.
@@ -160,6 +163,7 @@ pub fn run_stencil_app(spec: &RunSpec) -> Result<RunResult> {
         grid: spec.keep_grid.then_some(grid),
         module_summary,
         schedule,
+        plans_built: rt.plan_stats().plans_built,
     })
 }
 
@@ -202,6 +206,7 @@ mod tests {
             assert_eq!(res.tasks, spec.workload.iterations);
             assert!(res.virtual_time_s > 0.0);
             assert!(res.gflops > 0.0);
+            assert_eq!(res.plans_built, 1, "one region, one compiled plan");
         }
     }
 

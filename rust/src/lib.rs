@@ -4,8 +4,10 @@
 //! (Nepomuceno et al., 2021) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! - **L3 (this crate)** — the paper's contribution: an OpenMP-style task
-//!   runtime ([`omp`]) with a libomptarget-like device-plugin interface
-//!   and a dependence-aware batch-DAG scheduler ([`omp::sched`]), the
+//!   runtime ([`omp`]) with a libomptarget-like device-plugin interface,
+//!   a dependence-aware batch-DAG scheduler ([`omp::sched`]), a
+//!   compile-once/run-many program API ([`omp::program`]:
+//!   `capture → compile → execute` with cached plans), the
 //!   VC709 Multi-FPGA plugin ([`plugin`]), a functional model of the
 //!   VC709 board infrastructure ([`hw`]), and a discrete-event timing
 //!   model ([`sim`]).

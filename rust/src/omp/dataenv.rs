@@ -207,6 +207,32 @@ impl PresentTable {
         }
     }
 
+    /// Feed the planning-relevant residency state of `bufs` into `h`:
+    /// for every present-table entry of one of those buffers, the
+    /// holding device, validity, staleness and byte count.  This is the
+    /// plan-cache fingerprint ingredient (`omp::program`): placement and
+    /// transfer planning read exactly these bits, so a cached plan is
+    /// replayed only while they are unchanged and recompiled (with a
+    /// named reason) when they drift.  The resident *generation* is
+    /// deliberately excluded — it counts device writes but steers no
+    /// planning decision.
+    pub fn planning_fingerprint<H: std::hash::Hasher>(
+        &self,
+        bufs: &[String],
+        h: &mut H,
+    ) {
+        use std::hash::Hash;
+        for ((dev, name), e) in &self.entries {
+            if bufs.iter().any(|b| b == name) {
+                dev.0.hash(h);
+                name.hash(h);
+                e.device_valid.hash(h);
+                e.host_stale.hash(h);
+                e.bytes.hash(h);
+            }
+        }
+    }
+
     /// `writer` produced a new value of `name`: every *other* device's
     /// copy is now out of date — it must re-stream before use, and any
     /// pending writeback of it is cancelled (a stale copy is never the
@@ -369,6 +395,36 @@ mod tests {
         t.mark_flushed(D2, "A");
         assert!(t.dirty_holder("A").is_none());
         assert!(t.residency(D2).device_valid.contains("A"));
+    }
+
+    #[test]
+    fn planning_fingerprint_tracks_state_not_generation() {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::Hasher;
+        let bufs = vec!["V".to_string()];
+        let fp = |t: &PresentTable| {
+            let mut h = DefaultHasher::new();
+            t.planning_fingerprint(&bufs, &mut h);
+            h.finish()
+        };
+        let mut t = PresentTable::new();
+        let empty = fp(&t);
+        t.enter(D1, "V", 64, EnterMap::To);
+        let entered = fp(&t);
+        assert_ne!(empty, entered, "residency must change the fingerprint");
+        // an unrelated buffer's residency is invisible to this program
+        t.enter(D2, "W", 16, EnterMap::To);
+        assert_eq!(entered, fp(&t));
+        // validity and staleness are planning inputs...
+        t.mark_device_current(D1, "V");
+        let valid = fp(&t);
+        assert_ne!(entered, valid);
+        t.mark_device_write(D1, "V");
+        let dirty = fp(&t);
+        assert_ne!(valid, dirty);
+        // ...but a further write that only bumps the generation is not
+        t.mark_device_write(D1, "V");
+        assert_eq!(dirty, fp(&t));
     }
 
     #[test]

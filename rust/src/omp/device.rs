@@ -215,6 +215,13 @@ pub trait DevicePlugin {
     /// kernel).  Abstaining devices are skipped by automatic placement;
     /// when every device abstains the run falls back to the host base
     /// function (the paper's verification flow).  The default abstains.
+    ///
+    /// The estimate must be a function of buffer **shapes and byte
+    /// counts**, never values: compiled programs
+    /// ([`crate::omp::program`]) price placement against shape-only
+    /// phantom buffers, and the plan replay relies on the estimate
+    /// matching the duration `run_batch` will report (exact for every
+    /// in-tree plugin — tested).
     fn estimate_batch_s(
         &self,
         graph: &TaskGraph,

@@ -129,6 +129,33 @@ impl TaskGraph {
         Ok(level)
     }
 
+    /// Feed the graph's *structure* into `h`: task names, resolved
+    /// function names, device bindings, map clauses and the dependence
+    /// **edges** — but not the raw [`DepVar`] addresses, which are
+    /// allocated fresh per region (`OmpRuntime::dep_vars`).  Two regions
+    /// that build the same pipeline over fresh dependence arrays hash
+    /// identically, which is what lets the runtime's plan cache recognize
+    /// a repeated program shape (`omp::program`).
+    pub fn structural_hash<H: std::hash::Hasher>(&self, h: &mut H) {
+        use std::hash::Hash;
+        self.tasks.len().hash(h);
+        for t in &self.tasks {
+            t.base_name.hash(h);
+            t.fn_name.hash(h);
+            t.device.hash(h);
+            t.nowait.hash(h);
+            t.maps.len().hash(h);
+            for (dir, name) in &t.maps {
+                dir.hash(h);
+                name.hash(h);
+            }
+            // edges, not addresses: preds are derived from the depend
+            // clauses with OpenMP 4.5 semantics, so they capture exactly
+            // the ordering the addresses imply
+            self.preds[t.id.0].hash(h);
+        }
+    }
+
     /// True if the graph is one linear chain t0 -> t1 -> ... -> tn-1 —
     /// the pipeline shape of Listing 3, which the plugin maps to a
     /// straight IP chain.
@@ -246,6 +273,41 @@ mod tests {
         assert_eq!(g.topo_order().unwrap().len(), 4);
         assert_eq!(g.levels().unwrap(), vec![0, 1, 2, 3]);
         assert!(g.is_chain());
+    }
+
+    #[test]
+    fn structural_hash_ignores_dep_addresses_but_not_structure() {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::Hasher;
+        let hash_of = |g: &TaskGraph| {
+            let mut h = DefaultHasher::new();
+            g.structural_hash(&mut h);
+            h.finish()
+        };
+        // the same 4-task pipeline over two different dependence arrays
+        let chain = |base: usize| {
+            let mut g = TaskGraph::new();
+            for i in 0..4 {
+                g.add(task(1, &[base + i], &[base + i + 1]));
+            }
+            g
+        };
+        assert_eq!(hash_of(&chain(0)), hash_of(&chain(100)));
+        // a structural change (an extra task) must change the hash...
+        let mut longer = chain(0);
+        longer.add(task(1, &[4], &[5]));
+        assert_ne!(hash_of(&chain(0)), hash_of(&longer));
+        // ...and so must a different device binding or a broken edge
+        let mut rebound = TaskGraph::new();
+        for i in 0..4 {
+            rebound.add(task(2, &[i], &[i + 1]));
+        }
+        assert_ne!(hash_of(&chain(0)), hash_of(&rebound));
+        let mut split = TaskGraph::new();
+        for i in 0..4 {
+            split.add(task(1, &[10 * i], &[10 * i + 1])); // no edges
+        }
+        assert_ne!(hash_of(&chain(0)), hash_of(&split));
     }
 
     #[test]

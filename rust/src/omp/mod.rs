@@ -28,6 +28,13 @@
 //!   modelled finish, pricing communication through each plugin's cost
 //!   model ([`DevicePlugin::estimate_batch_s`]) and falling back to the
 //!   host base function when no device matches.
+//! * [`program`] — compile-once / run-many: `parallel` bodies trace
+//!   into an immutable [`Program`], compile once (condensation,
+//!   placement, writeback planning) into an [`Executable`], and replay
+//!   any number of times with zero re-planning.  [`runtime::OmpRuntime::parallel`]
+//!   itself runs through this pipeline behind a graph-shape-keyed plan
+//!   cache with named invalidation (runtime epoch + residency
+//!   fingerprint).
 //! * [`runtime`] — `parallel` / `single` / `target` entry points and the
 //!   deferred-dispatch executor driving [`sched`] at the barrier.
 
@@ -35,6 +42,7 @@ pub mod dataenv;
 pub mod device;
 pub mod graph;
 pub mod host;
+pub mod program;
 pub mod runtime;
 pub mod sched;
 pub mod task;
@@ -43,12 +51,15 @@ pub mod variant;
 pub use dataenv::{
     BatchCtx, EnterMap, ExitMap, PresentTable, Residency,
 };
+pub use program::{BufferSlot, Executable, PlanStats, Program};
 pub use device::{
     DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel, FnRegistry,
     TaskFn, HOST_DEVICE,
 };
 pub use graph::TaskGraph;
-pub use runtime::{OmpReport, OmpRuntime, TargetBuilder, WritebackEvent};
+pub use runtime::{
+    OmpReport, OmpRuntime, SingleCtx, TargetBuilder, WritebackEvent,
+};
 pub use sched::{BatchDag, Dispatcher, Run};
 pub use task::{DepVar, MapDir, Task, TaskId};
 pub use variant::VariantRegistry;

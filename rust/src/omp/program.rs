@@ -1,0 +1,1062 @@
+//! Compile-once / run-many programs: `capture → compile → execute`.
+//!
+//! The one-shot path re-derives the task graph, the run condensation,
+//! the `device(any)` placement and the transfer plan on **every**
+//! `parallel` region.  That is fine for a single experiment and wrong
+//! for the serving workloads the roadmap targets: a stencil service
+//! replays the *same* region thousands of times with different buffer
+//! contents, so all of that planning is pure overhead after the first
+//! request.  This module splits the phases, PJRT-executable style:
+//!
+//! 1. **Capture** ([`OmpRuntime::capture`]) traces the familiar
+//!    `SingleCtx`/`TargetBuilder` closure into a [`Program`]: an
+//!    immutable task-graph IR plus symbolic [`BufferSlot`]s — buffer
+//!    names and shapes, no data.
+//! 2. **Compile** ([`Program::compile`]) runs condensation
+//!    ([`BatchDag::build`]), `device(any)` placement, host-run
+//!    coalescing and writeback planning exactly **once**, producing an
+//!    [`Executable`] around an immutable `CompiledPlan`: the committed
+//!    batch sequence, every run's device binding
+//!    ([`Dispatcher::committed_bindings`]) and the modelled makespan.
+//! 3. **Execute** ([`Executable::execute`]) binds concrete buffers to
+//!    the slots (a shape mismatch is a named error) and replays the
+//!    committed schedule through the DES — `run_batch` per planned
+//!    batch, release times recomputed from actual predecessor finishes
+//!    **and** per-device availability clocks (independent batches
+//!    committed to one device still queue behind each other, exactly
+//!    as the dispatcher serialized them) — with **zero re-planning**.
+//!    The replay composes with the
+//!    present table ([`super::dataenv::PresentTable`]) exactly like the
+//!    one-shot path, so `target data` residency persists *across*
+//!    executions: the first replay pays a resident buffer's H2D, every
+//!    later one elides it.
+//!
+//! [`OmpRuntime::parallel`] is now a thin wrapper over this pipeline
+//! with a **plan cache** keyed by the region's graph-shape hash
+//! ([`TaskGraph::structural_hash`] — dependence *edges*, not the raw
+//! `DepVar` addresses, which are fresh per region) plus the slot
+//! shapes.  A cached plan is replayed only while the runtime epoch
+//! (bumped by `register_device` / `declare_hw_variant` /
+//! `register_software`) and the mapped buffers' residency fingerprint
+//! ([`super::dataenv::PresentTable::planning_fingerprint`]) are
+//! unchanged; otherwise it recompiles and records the named reason in
+//! [`PlanStats::recompiles`] — never a silent stale replay.
+//!
+//! **Equivalence.** Compilation prices batch durations through the same
+//! [`DevicePlugin::estimate_batch_s`] models that placement uses; for
+//! every in-tree plugin the estimate equals the executed duration
+//! exactly (tested), so the committed dispatch order, the batch
+//! release/finish times, the forced writebacks and the grids are
+//! identical to what the former single-pass executor produced — the
+//! golden schedule fixtures and fig6–9 go through `parallel` unchanged.
+//! A third-party plugin whose estimate drifts from its execution still
+//! replays a dependence-respecting schedule (releases are recomputed
+//! from real finishes); only the committed *order* among independent
+//! runs reflects the model.  Corollaries: cost models must price from
+//! buffer shapes/bytes (compilation prices against shape-only phantom
+//! buffers), and a buffer first created by a mid-region task is priced
+//! at its capture-time absence, not its eventual size — a `device(any)`
+//! run mapping only such buffers makes every accelerator abstain and
+//! falls back to the host, where the one-shot executor (pricing at
+//! dispatch time) could have placed it.
+//!
+//! [`BatchDag::build`]: super::sched::BatchDag::build
+//! [`Dispatcher::committed_bindings`]: super::sched::Dispatcher::committed_bindings
+//! [`DevicePlugin::estimate_batch_s`]: super::device::DevicePlugin::estimate_batch_s
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::dataenv::{BatchCtx, PresentTable};
+use super::device::{DataEnv, DeviceId, DevicePlugin, DeviceSel, HOST_DEVICE};
+use super::graph::TaskGraph;
+use super::runtime::{OmpReport, OmpRuntime, SingleCtx, WritebackEvent};
+use super::sched::{BatchDag, Dispatcher};
+use super::task::TaskId;
+use crate::stencil::Grid;
+
+/// How many compiled plans `parallel` keeps before clearing the cache
+/// wholesale (simple and deterministic; a serving loop replays a
+/// handful of shapes, far below this).
+const PLAN_CACHE_CAP: usize = 64;
+
+/// How many recompilation reasons [`PlanStats::recompiles`] retains
+/// (oldest dropped first) — a long-lived service that thrashes the
+/// cache must not grow the log without bound.
+const RECOMPILE_LOG_CAP: usize = 32;
+
+/// A symbolic buffer slot of a captured [`Program`]: the name a `map`
+/// clause referenced and the shape the capture-time data environment
+/// held for it (`None` when the buffer was absent at capture — its
+/// planning falls back to the same zero-byte pricing the one-shot path
+/// used, and any execution-time error surfaces from the batch itself).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BufferSlot {
+    pub name: String,
+    pub shape: Option<Vec<usize>>,
+}
+
+/// An immutable, parameterized task-graph IR: what
+/// [`OmpRuntime::capture`] traces a region body into.  Holds no buffer
+/// data — only the graph and the [`BufferSlot`] table — so it can be
+/// compiled once and executed many times against different
+/// environments.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub(crate) graph: TaskGraph,
+    pub(crate) slots: Vec<BufferSlot>,
+    pub(crate) shape_hash: u64,
+}
+
+impl Program {
+    /// Number of traced tasks.
+    pub fn task_count(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// The symbolic buffer slots, in first-use order.
+    pub fn slots(&self) -> &[BufferSlot] {
+        &self.slots
+    }
+
+    /// The graph-shape hash `parallel`'s plan cache keys on.
+    pub fn shape_hash(&self) -> u64 {
+        self.shape_hash
+    }
+
+    /// Compile the program against `rt`'s current device, variant and
+    /// residency state: condensation, placement, coalescing and
+    /// writeback planning run once, here.  See
+    /// [`OmpRuntime::compile`].
+    ///
+    /// ```
+    /// use omp_fpga::omp::*;
+    /// use omp_fpga::stencil::Grid;
+    ///
+    /// let mut rt = OmpRuntime::new(1);
+    /// rt.register_software("inc", |env| {
+    ///     let mut g = env.take("V")?;
+    ///     for v in g.data_mut() {
+    ///         *v += 1.0;
+    ///     }
+    ///     env.put("V", g);
+    ///     Ok(())
+    /// });
+    /// let mut env = DataEnv::new();
+    /// env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+    /// let deps = rt.dep_vars(2);
+    /// let program = rt
+    ///     .capture(&env, |ctx| {
+    ///         ctx.task("inc")
+    ///             .map(MapDir::ToFrom, "V")
+    ///             .depend_in(deps[0])
+    ///             .depend_out(deps[1])
+    ///             .nowait()
+    ///             .submit()?;
+    ///         Ok(())
+    ///     })
+    ///     .unwrap();
+    /// let exe = program.compile(&mut rt).unwrap();
+    ///
+    /// // changing the runtime invalidates the executable by name...
+    /// rt.register_software("other", |_| Ok(()));
+    /// let err = exe.execute(&mut rt, &mut env).unwrap_err();
+    /// assert!(err.to_string().contains("recompile"), "{err}");
+    /// assert!(err.to_string().contains("register_software"), "{err}");
+    ///
+    /// // ...and recompiling against the new epoch runs again
+    /// let exe = program.compile(&mut rt).unwrap();
+    /// exe.execute(&mut rt, &mut env).unwrap();
+    /// assert!(env.get("V").unwrap().data().iter().all(|&v| v == 1.0));
+    /// ```
+    pub fn compile(&self, rt: &mut OmpRuntime) -> Result<Executable> {
+        rt.compile(self)
+    }
+
+    /// Shape-only stand-in environment for compile-time pricing: one
+    /// zero grid per shaped slot.  Cost models read shapes and byte
+    /// counts, never values, so this prices exactly like the live data.
+    fn phantom_env(&self) -> Result<DataEnv> {
+        let mut env = DataEnv::new();
+        for s in &self.slots {
+            if let Some(shape) = &s.shape {
+                env.insert(&s.name, Grid::zeros(shape)?);
+            }
+        }
+        Ok(env)
+    }
+
+    fn slot_names(&self) -> Vec<String> {
+        self.slots.iter().map(|s| s.name.clone()).collect()
+    }
+}
+
+/// One condensed run of the committed plan: its placed device and its
+/// tasks, plus the predecessor runs whose finishes gate its release.
+#[derive(Debug, Clone)]
+struct PlanRun {
+    device: DeviceId,
+    tasks: Vec<TaskId>,
+    preds: Vec<usize>,
+}
+
+/// One dispatched batch of the committed plan: the primary run plus any
+/// host runs the compiler coalesced into the same `run_batch` call.
+#[derive(Debug, Clone)]
+struct PlanStep {
+    runs: Vec<usize>,
+}
+
+/// The immutable product of compilation: the placed graph, the run
+/// structure and the committed dispatch sequence.
+#[derive(Debug)]
+pub(crate) struct CompiledPlan {
+    /// the captured graph with every `device(any)` task bound and its
+    /// `declare variant` resolved against the placed device's arch
+    graph: TaskGraph,
+    slots: Vec<BufferSlot>,
+    runs: Vec<PlanRun>,
+    steps: Vec<PlanStep>,
+    /// modelled makespan under the compile-time residency state
+    makespan_s: f64,
+}
+
+/// A compiled program: replayable any number of times via
+/// [`Executable::execute`] with zero re-planning.  Cheap to clone (the
+/// plan is shared).  Valid for the runtime epoch it was compiled at;
+/// executing it after `register_device` / `declare_hw_variant` /
+/// `register_software` is a named error telling you to recompile.
+#[derive(Debug, Clone)]
+pub struct Executable {
+    plan: Arc<CompiledPlan>,
+    epoch: u64,
+    shape_hash: u64,
+    /// the compiling runtime's instance id — the plan's device indices
+    /// are meaningless on any other runtime, so replay checks it
+    runtime_id: u64,
+}
+
+impl Executable {
+    /// Modelled makespan of one execution under the residency state the
+    /// program was compiled against.  (A replay that *changes* residency
+    /// — e.g. the first execution inside a `target data` region — makes
+    /// later replays cheaper; [`OmpReport::virtual_time_s`] on each
+    /// report is the per-execution truth.)
+    pub fn makespan_s(&self) -> f64 {
+        self.plan.makespan_s
+    }
+
+    /// The runtime epoch this plan was compiled at.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Number of `run_batch` dispatches one execution performs.
+    pub fn batch_count(&self) -> usize {
+        self.plan.steps.len()
+    }
+
+    /// The graph-shape hash of the program this was compiled from.
+    pub fn shape_hash(&self) -> u64 {
+        self.shape_hash
+    }
+
+    /// Bind the buffers in `env` to the program's slots and replay the
+    /// committed schedule: one `run_batch` per planned batch, release
+    /// times recomputed from actual predecessor finishes and per-device
+    /// availability clocks, forced writebacks charged against the live
+    /// present table — and **no** condensation, placement or candidate
+    /// pricing.  Binding a buffer whose shape differs from its slot is
+    /// a named error, as is executing on a different runtime instance
+    /// or across an epoch bump.
+    ///
+    /// ```
+    /// use omp_fpga::omp::*;
+    /// use omp_fpga::stencil::Grid;
+    ///
+    /// let mut rt = OmpRuntime::new(1);
+    /// rt.register_software("inc", |env| {
+    ///     let mut g = env.take("V")?;
+    ///     for v in g.data_mut() {
+    ///         *v += 1.0;
+    ///     }
+    ///     env.put("V", g);
+    ///     Ok(())
+    /// });
+    /// let mut env = DataEnv::new();
+    /// env.insert("V", Grid::zeros(&[4, 4]).unwrap());
+    /// let deps = rt.dep_vars(2);
+    /// let program = rt
+    ///     .capture(&env, |ctx| {
+    ///         ctx.task("inc")
+    ///             .map(MapDir::ToFrom, "V")
+    ///             .depend_in(deps[0])
+    ///             .depend_out(deps[1])
+    ///             .nowait()
+    ///             .submit()?;
+    ///         Ok(())
+    ///     })
+    ///     .unwrap();
+    /// let exe = program.compile(&mut rt).unwrap();
+    ///
+    /// // run-many: each execution binds the same slot to live data
+    /// for _ in 0..3 {
+    ///     exe.execute(&mut rt, &mut env).unwrap();
+    /// }
+    /// assert_eq!(rt.plan_stats().plans_built, 1);
+    /// assert_eq!(rt.plan_stats().executions, 3);
+    /// assert!(env.get("V").unwrap().data().iter().all(|&v| v == 3.0));
+    ///
+    /// // a mismatched binding is a named error, not a wrong answer
+    /// let mut wrong = DataEnv::new();
+    /// wrong.insert("V", Grid::zeros(&[2, 2]).unwrap());
+    /// let err = exe.execute(&mut rt, &mut wrong).unwrap_err();
+    /// assert!(err.to_string().contains("expecting shape"), "{err}");
+    /// ```
+    pub fn execute(
+        &self,
+        rt: &mut OmpRuntime,
+        env: &mut DataEnv,
+    ) -> Result<OmpReport> {
+        rt.execute_plan(self, env)
+    }
+}
+
+/// An entry of the runtime's plan cache: the compiled executable plus
+/// the residency fingerprint it was compiled under.
+#[derive(Debug, Clone)]
+pub(crate) struct CachedPlan {
+    pub(crate) fingerprint: u64,
+    pub(crate) exe: Executable,
+}
+
+/// Host-side planning counters — how much scheduling work the runtime
+/// has actually done, which is what the compile-once ablation
+/// (`benches/ablation.rs` case 6) reports.
+#[derive(Debug, Default, Clone)]
+pub struct PlanStats {
+    /// compiled plans built (one condensation + placement pass each)
+    pub plans_built: usize,
+    /// placement pricing rounds: one per ready `device(any)` run per
+    /// dispatch round during compilation
+    pub placements_computed: usize,
+    /// plan-cache hits inside [`OmpRuntime::parallel`]
+    pub cache_hits: usize,
+    /// plan replays ([`Executable::execute`], including via `parallel`)
+    pub executions: usize,
+    /// named reason for every recompilation of a cached plan (epoch or
+    /// residency drift) — never a silent stale replay
+    pub recompiles: Vec<String>,
+}
+
+impl OmpRuntime {
+    /// Phase 1 — trace `body` into an immutable [`Program`] without
+    /// executing anything.  The body is the exact closure `parallel`
+    /// takes; buffer shapes for the slot table are read from `env`
+    /// (data is not touched).
+    ///
+    /// ```
+    /// use omp_fpga::omp::*;
+    /// use omp_fpga::stencil::Grid;
+    ///
+    /// let mut rt = OmpRuntime::new(2);
+    /// rt.register_software("inc", |env| {
+    ///     let mut g = env.take("V")?;
+    ///     for v in g.data_mut() {
+    ///         *v += 1.0;
+    ///     }
+    ///     env.put("V", g);
+    ///     Ok(())
+    /// });
+    /// let mut env = DataEnv::new();
+    /// env.insert("V", Grid::zeros(&[4, 4]).unwrap());
+    /// let deps = rt.dep_vars(3);
+    /// let program = rt
+    ///     .capture(&env, |ctx| {
+    ///         for i in 0..2 {
+    ///             ctx.task("inc")
+    ///                 .map(MapDir::ToFrom, "V")
+    ///                 .depend_in(deps[i])
+    ///                 .depend_out(deps[i + 1])
+    ///                 .nowait()
+    ///                 .submit()?;
+    ///         }
+    ///         Ok(())
+    ///     })
+    ///     .unwrap();
+    /// assert_eq!(program.task_count(), 2);
+    /// assert_eq!(program.slots().len(), 1);
+    /// assert_eq!(program.slots()[0].name, "V");
+    /// assert_eq!(program.slots()[0].shape.as_deref(), Some(&[4, 4][..]));
+    ///
+    /// // compile once, execute many — no data was captured, so each
+    /// // execution sees the live environment
+    /// let exe = program.compile(&mut rt).unwrap();
+    /// exe.execute(&mut rt, &mut env).unwrap();
+    /// exe.execute(&mut rt, &mut env).unwrap();
+    /// assert!(env.get("V").unwrap().data().iter().all(|&v| v == 4.0));
+    /// assert_eq!(rt.plan_stats().plans_built, 1);
+    /// ```
+    pub fn capture(
+        &self,
+        env: &DataEnv,
+        body: impl FnOnce(&mut SingleCtx) -> Result<()>,
+    ) -> Result<Program> {
+        let mut ctx = SingleCtx::for_runtime(self);
+        body(&mut ctx).context("single region failed")?;
+        let graph = ctx.into_graph();
+        let mut slots: Vec<BufferSlot> = Vec::new();
+        for t in &graph.tasks {
+            for (_, name) in &t.maps {
+                if !slots.iter().any(|s| &s.name == name) {
+                    let shape = env.get(name).ok().map(|g| g.shape().to_vec());
+                    slots.push(BufferSlot { name: name.clone(), shape });
+                }
+            }
+        }
+        let mut h = DefaultHasher::new();
+        graph.structural_hash(&mut h);
+        slots.len().hash(&mut h);
+        for s in &slots {
+            s.name.hash(&mut h);
+            s.shape.hash(&mut h);
+        }
+        let shape_hash = h.finish();
+        Ok(Program { graph, slots, shape_hash })
+    }
+
+    /// Phase 2 — compile `program` against the current device, variant
+    /// and residency state.  This is the **only** place scheduling work
+    /// happens: the graph is condensed into runs, every `device(any)`
+    /// run is priced and placed (HEFT-style, residency-affine — the
+    /// same policy the one-shot executor applied), ready host runs are
+    /// coalesced, forced writebacks are planned, and the committed
+    /// dispatch sequence plus the modelled makespan are frozen into an
+    /// [`Executable`].
+    pub fn compile(&mut self, program: &Program) -> Result<Executable> {
+        let mut graph = program.graph.clone();
+        let phantom = program.phantom_env()?;
+        // simulate residency evolution over the plan on a clone; the
+        // live table is only touched by executions
+        let mut present = self.present.clone();
+        let mut disp = Dispatcher::new(BatchDag::build(&graph)?);
+        let mut placements = 0usize;
+        let mut steps: Vec<PlanStep> = Vec::new();
+        let mut makespan = 0.0f64;
+        loop {
+            // Price the ready unbound runs (re-priced each round, so a
+            // placement always reflects the residency state at its own
+            // release): every accelerator that can execute a run
+            // advertises its modelled duration; rivals of a dirty
+            // holder are surcharged the flush.  Bound-only graphs (all
+            // the figure sweeps) price nothing here.
+            for r in disp.ready_unplaced() {
+                let tasks = disp.dag().run(r).tasks.clone();
+                let bufs = read_buffers(&graph, &tasks);
+                let mut cands: Vec<(DeviceId, f64)> = Vec::new();
+                for (i, plugin) in self.devices.iter().enumerate().skip(1) {
+                    let arch = plugin.arch();
+                    let names: Vec<String> = tasks
+                        .iter()
+                        .map(|id| {
+                            self.variants
+                                .resolve(&graph.task(*id).base_name, arch)
+                        })
+                        .collect();
+                    let residency = present.residency(DeviceId(i));
+                    if let Some(mut est) = plugin.estimate_batch_s(
+                        &graph, &tasks, &names, &self.fns, &phantom,
+                        &residency,
+                    ) {
+                        for b in &bufs {
+                            if let Some((holder, bytes)) =
+                                present.dirty_holder(b)
+                            {
+                                if holder.0 != i {
+                                    est += self.devices[holder.0]
+                                        .writeback_s(bytes as f64);
+                                }
+                            }
+                        }
+                        cands.push((DeviceId(i), est));
+                    }
+                }
+                placements += 1;
+                disp.set_candidates(r, cands);
+            }
+            let Some((run, release_s)) = disp.next() else {
+                break;
+            };
+            let dev = disp.device_of(run).ok_or_else(|| {
+                anyhow!("dispatched run {run} has no device (scheduler bug)")
+            })?;
+            let mut ids = disp.dag().run(run).tasks.clone();
+            // bind placed tasks and resolve their `declare variant`
+            // against the chosen device's arch (deferred resolution —
+            // the arch was unknown at submit time)
+            let arch = self
+                .devices
+                .get(dev.0)
+                .ok_or_else(|| {
+                    anyhow!("run {run} bound to unknown device {}", dev.0)
+                })?
+                .arch();
+            for id in &ids {
+                let t = graph.tasks.get_mut(id.0).ok_or_else(|| {
+                    anyhow!(
+                        "task {} of run {run} missing from the captured \
+                         graph (scheduler bug)",
+                        id.0
+                    )
+                })?;
+                if t.device.is_any() {
+                    t.device = DeviceSel::Bound(dev);
+                    t.fn_name = self.variants.resolve(&t.base_name, arch);
+                }
+            }
+            // Coalesce every ready host run released by this instant
+            // into the same batch (dependence-free by construction), so
+            // the worker pool runs them concurrently at execution.
+            let mut step_runs = vec![run];
+            let mut members: Vec<(usize, f64)> = Vec::new();
+            if dev == HOST_DEVICE {
+                while let Some((r2, rel2)) =
+                    disp.next_ready_on(dev, release_s)
+                {
+                    ids.extend_from_slice(&disp.dag().run(r2).tasks);
+                    step_runs.push(r2);
+                    members.push((r2, rel2));
+                }
+            }
+            // Model the forced writebacks this batch's reads imply
+            // under the planned residency, pushing the release back —
+            // the identical rule the replay applies to the live table.
+            let (release_s, flushed) = charge_forced_writebacks(
+                &self.devices,
+                &mut present,
+                &graph,
+                &ids,
+                dev,
+                release_s,
+                None,
+            )?;
+            // Modelled duration: host batches are free in virtual time;
+            // a device batch is priced by its own cost model — for
+            // every in-tree plugin the estimate equals the executed
+            // duration exactly, so the committed order matches the
+            // one-shot executor's.  A bound batch whose plugin abstains
+            // (no cost model) is modelled free here: its committed
+            // order among independent runs and the frozen makespan
+            // reflect that, but replay correctness does not — releases
+            // and device clocks are recomputed from real finishes.
+            let duration = if dev == HOST_DEVICE {
+                0.0
+            } else {
+                let names: Vec<String> = ids
+                    .iter()
+                    .map(|id| graph.task(*id).fn_name.clone())
+                    .collect();
+                self.devices[dev.0]
+                    .estimate_batch_s(
+                        &graph,
+                        &ids,
+                        &names,
+                        &self.fns,
+                        &phantom,
+                        &present.residency(dev),
+                    )
+                    .unwrap_or(0.0)
+            };
+            let finish_s = release_s + duration;
+            disp.complete(run, finish_s)?;
+            for (r2, rel2) in members {
+                disp.complete(r2, if flushed { release_s } else { rel2 })?;
+            }
+            // planned present-table bookkeeping, mirrored by the replay
+            settle_present_after_batch(&mut present, &graph, &ids, dev);
+            makespan = makespan.max(finish_s);
+            steps.push(PlanStep { runs: step_runs });
+        }
+        if !disp.is_complete() {
+            bail!("scheduler stalled with runs pending (graph bug)");
+        }
+        let bindings = disp.committed_bindings()?;
+        let runs: Vec<PlanRun> = (0..disp.dag().len())
+            .map(|r| PlanRun {
+                device: bindings[r],
+                tasks: disp.dag().run(r).tasks.clone(),
+                preds: disp.dag().preds(r).to_vec(),
+            })
+            .collect();
+        self.plan_stats.plans_built += 1;
+        self.plan_stats.placements_computed += placements;
+        Ok(Executable {
+            plan: Arc::new(CompiledPlan {
+                graph,
+                slots: program.slots.clone(),
+                runs,
+                steps,
+                makespan_s: makespan,
+            }),
+            epoch: self.epoch,
+            shape_hash: program.shape_hash,
+            runtime_id: self.runtime_id,
+        })
+    }
+
+    /// `parallel`'s compile path: reuse the cached plan for this graph
+    /// shape when both the runtime epoch and the mapped buffers'
+    /// residency fingerprint still match; otherwise recompile and
+    /// record the named reason.
+    pub(crate) fn compile_cached(
+        &mut self,
+        program: &Program,
+    ) -> Result<Executable> {
+        if !self.plan_cache_enabled {
+            return self.compile(program);
+        }
+        let fp = self.residency_fingerprint(program);
+        if let Some(hit) = self.plan_cache.get(&program.shape_hash) {
+            if hit.exe.epoch == self.epoch && hit.fingerprint == fp {
+                self.plan_stats.cache_hits += 1;
+                return Ok(hit.exe.clone());
+            }
+            let reason = if hit.exe.epoch != self.epoch {
+                format!(
+                    "plan {:#018x} recompiled: runtime changed ({})",
+                    program.shape_hash, self.epoch_reason
+                )
+            } else {
+                format!(
+                    "plan {:#018x} recompiled: mapped-buffer residency \
+                     changed since compile",
+                    program.shape_hash
+                )
+            };
+            self.plan_stats.recompiles.push(reason);
+            // bounded log: a cache-thrashing service must not leak
+            if self.plan_stats.recompiles.len() > RECOMPILE_LOG_CAP {
+                let drop = self.plan_stats.recompiles.len() - RECOMPILE_LOG_CAP;
+                self.plan_stats.recompiles.drain(..drop);
+            }
+        }
+        let exe = self.compile(program)?;
+        if self.plan_cache.len() >= PLAN_CACHE_CAP {
+            self.plan_cache.clear();
+        }
+        self.plan_cache.insert(
+            program.shape_hash,
+            CachedPlan { fingerprint: fp, exe: exe.clone() },
+        );
+        Ok(exe)
+    }
+
+    /// Phase 3 — replay `exe`'s committed schedule against `env` (see
+    /// [`Executable::execute`]).  Validates the runtime identity, the
+    /// epoch and the slot bindings, then dispatches the planned batches
+    /// in order: releases are the max over actual predecessor finishes
+    /// and the executing device's availability clock (mirroring the
+    /// dispatcher's serialization of same-device batches), forced
+    /// writebacks are charged against the **live** present table
+    /// (residency persists across executions), and every batch goes
+    /// through the plugin's `run_batch` DES exactly as the one-shot
+    /// path did.
+    pub(crate) fn execute_plan(
+        &mut self,
+        exe: &Executable,
+        env: &mut DataEnv,
+    ) -> Result<OmpReport> {
+        ensure!(
+            exe.runtime_id == self.runtime_id,
+            "executable compiled on a different OmpRuntime instance \
+             (runtime #{} vs #{}): its device indices mean nothing here — \
+             compile the program on the runtime that executes it",
+            exe.runtime_id,
+            self.runtime_id
+        );
+        ensure!(
+            exe.epoch == self.epoch,
+            "stale executable: compiled at runtime epoch {} but the \
+             runtime is now at epoch {} after {} — recompile the program",
+            exe.epoch,
+            self.epoch,
+            self.epoch_reason
+        );
+        let plan = &exe.plan;
+        // Validate every shaped slot BEFORE touching any state: a bad
+        // binding must be a named error up front, not a mid-replay
+        // failure after residency bookkeeping has already mutated.
+        // (A shape-less slot was absent at capture too — planning
+        // priced it as absent, and any error surfaces from the batch
+        // itself, exactly as the one-shot path behaved.)
+        for slot in &plan.slots {
+            let Some(shape) = &slot.shape else { continue };
+            match env.get(&slot.name) {
+                Ok(g) => ensure!(
+                    g.shape() == shape.as_slice(),
+                    "buffer '{}' bound to a slot expecting shape {:?} but \
+                     the data environment holds shape {:?}",
+                    slot.name,
+                    shape,
+                    g.shape()
+                ),
+                Err(_) => bail!(
+                    "buffer '{}' is not bound: the program's slot expects \
+                     shape {:?} but the data environment has no such buffer",
+                    slot.name,
+                    shape
+                ),
+            }
+        }
+        self.plan_stats.executions += 1;
+        let t0 = Instant::now();
+        let graph = &plan.graph;
+        let mut report =
+            OmpReport { tasks: graph.len(), ..Default::default() };
+        let mut finish = vec![0.0f64; plan.runs.len()];
+        // per-device virtual availability clocks, mirroring the
+        // dispatcher's: two independent batches committed to one device
+        // must still queue behind each other at replay
+        let mut dev_free: std::collections::BTreeMap<usize, f64> =
+            std::collections::BTreeMap::new();
+        for step in &plan.steps {
+            let primary = step.runs[0];
+            let dev = plan.runs[primary].device;
+            let pred_release = release_of(&plan.runs, &finish, primary);
+            let start = pred_release
+                .max(dev_free.get(&dev.0).copied().unwrap_or(0.0));
+            let member_rel: Vec<f64> = step.runs[1..]
+                .iter()
+                .map(|&m| release_of(&plan.runs, &finish, m))
+                .collect();
+            let ids: Vec<TaskId> = step
+                .runs
+                .iter()
+                .flat_map(|&r| plan.runs[r].tasks.iter().copied())
+                .collect();
+            // Forced writebacks against the live table: a buffer this
+            // batch reads whose newest copy sits dirty on another
+            // device is flushed first, pushing the release back.
+            let (release_s, flushed) = charge_forced_writebacks(
+                &self.devices,
+                &mut self.present,
+                graph,
+                &ids,
+                dev,
+                start,
+                Some(&mut report.writebacks),
+            )?;
+            let ctx = BatchCtx {
+                release_s,
+                residency: self.present.residency(dev),
+            };
+            let plugin = self.devices.get_mut(dev.0).ok_or_else(|| {
+                anyhow!("planned batch bound to unknown device {}", dev.0)
+            })?;
+            let mut rep = plugin
+                .run_batch(graph, &ids, env, &self.fns, &ctx)
+                .with_context(|| {
+                    format!("device {} ({})", dev.0, plugin.arch())
+                })?;
+            // a plugin must not finish before it was released; normalize
+            // so virtual_time_s() agrees with the release propagation
+            rep.finish_s = rep.finish_s.max(release_s);
+            finish[primary] = rep.finish_s;
+            // occupy the device clock exactly as Dispatcher::complete
+            // does: only a batch that finished past its dependence
+            // release holds the device against later batches
+            if rep.finish_s > pred_release {
+                let free = dev_free.entry(dev.0).or_insert(0.0);
+                if rep.finish_s > *free {
+                    *free = rep.finish_s;
+                }
+            }
+            // coalesced host members finish at their own releases (host
+            // batches are free in virtual time) unless a forced flush
+            // delayed the whole merged batch
+            for (i, &m) in step.runs[1..].iter().enumerate() {
+                let fm = if flushed { release_s } else { member_rel[i] };
+                finish[m] = fm;
+                if fm > member_rel[i] {
+                    let free = dev_free.entry(dev.0).or_insert(0.0);
+                    if fm > *free {
+                        *free = fm;
+                    }
+                }
+            }
+            // live present-table bookkeeping — identical to the planned
+            // evolution, which is what keeps cached placements honest
+            settle_present_after_batch(&mut self.present, graph, &ids, dev);
+            report.batches.push((dev, rep));
+        }
+        report.wall_s = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Host-side planning counters: plans built, placements priced,
+    /// cache hits, executions, and the named reason of every
+    /// recompilation.
+    pub fn plan_stats(&self) -> &PlanStats {
+        &self.plan_stats
+    }
+
+    /// Enable or disable `parallel`'s plan cache (enabled by default).
+    /// Disabling also drops the cached plans — every region then
+    /// recompiles, which is exactly the pre-compile-once behaviour the
+    /// ablation baseline measures.
+    pub fn set_plan_cache(&mut self, enabled: bool) {
+        self.plan_cache_enabled = enabled;
+        if !enabled {
+            self.plan_cache.clear();
+        }
+    }
+
+    fn residency_fingerprint(&self, program: &Program) -> u64 {
+        let names = program.slot_names();
+        let mut h = DefaultHasher::new();
+        self.present.planning_fingerprint(&names, &mut h);
+        h.finish()
+    }
+}
+
+/// Release instant of run `r`: the max finish over its predecessor runs.
+fn release_of(runs: &[PlanRun], finish: &[f64], r: usize) -> f64 {
+    runs[r].preds.iter().map(|&p| finish[p]).fold(0.0f64, f64::max)
+}
+
+/// The forced-writeback rule for one batch, shared **verbatim** by
+/// planning (cloned table, no events) and replay (live table, events
+/// recorded) — the two must never drift, or cached placements stop
+/// being honest.  A buffer the batch reads whose newest copy sits
+/// dirty on another device is flushed to the host first; each flush
+/// pushes the release back by its modelled duration.  Returns the
+/// flushed release and whether anything flushed.
+fn charge_forced_writebacks(
+    devices: &[Box<dyn DevicePlugin>],
+    present: &mut PresentTable,
+    graph: &TaskGraph,
+    ids: &[TaskId],
+    dev: DeviceId,
+    release_s: f64,
+    mut events: Option<&mut Vec<WritebackEvent>>,
+) -> Result<(f64, bool)> {
+    let mut release_s = release_s;
+    let mut flushed = false;
+    for b in read_buffers(graph, ids) {
+        if let Some((holder, bytes)) = present.dirty_holder(&b) {
+            if holder != dev {
+                let wb = devices
+                    .get(holder.0)
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "buffer '{b}' resident on unknown device {}",
+                            holder.0
+                        )
+                    })?
+                    .writeback_s(bytes as f64);
+                present.mark_flushed(holder, &b);
+                if let Some(events) = events.as_mut() {
+                    events.push(WritebackEvent {
+                        device: holder,
+                        buffer: b,
+                        at_s: release_s,
+                        seconds: wb,
+                    });
+                }
+                release_s += wb;
+                flushed = true;
+            }
+        }
+    }
+    Ok((release_s, flushed))
+}
+
+/// Present-table bookkeeping after one batch, shared **verbatim** by
+/// planning and replay: the batch's inputs are now current on the
+/// executing device, its outputs supersede every other device's copy,
+/// and an accelerator's resident outputs stay parked with the host
+/// copy stale until something forces the writeback.
+fn settle_present_after_batch(
+    present: &mut PresentTable,
+    graph: &TaskGraph,
+    ids: &[TaskId],
+    dev: DeviceId,
+) {
+    for id in ids {
+        let t = graph.task(*id);
+        for n in t.inputs() {
+            present.mark_device_current(dev, n);
+        }
+        for n in t.outputs() {
+            present.invalidate_others(n, dev);
+            if dev != HOST_DEVICE {
+                present.mark_device_write(dev, n);
+            }
+        }
+    }
+}
+
+/// Distinct buffer names `tasks` read from the host view (`map(to:)` /
+/// `map(tofrom:)`), in first-use order — the buffers whose host copy
+/// must be current before the batch starts.
+fn read_buffers(graph: &TaskGraph, tasks: &[TaskId]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for id in tasks {
+        for n in graph.task(*id).inputs() {
+            if !out.iter().any(|b| b == n) {
+                out.push(n.to_string());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::task::MapDir;
+
+    fn inc_runtime() -> OmpRuntime {
+        let mut rt = OmpRuntime::new(2);
+        rt.register_software("inc", |env| {
+            let mut g = env.take("V")?;
+            for v in g.data_mut() {
+                *v += 1.0;
+            }
+            env.put("V", g);
+            Ok(())
+        });
+        rt
+    }
+
+    fn sweep(rt: &mut OmpRuntime, env: &mut DataEnv) -> OmpReport {
+        let deps = rt.dep_vars(3);
+        rt.parallel(env, |ctx| {
+            for i in 0..2 {
+                ctx.task("inc")
+                    .map(MapDir::ToFrom, "V")
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            Ok(())
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn capture_hash_is_structural_not_address_based() {
+        let rt = inc_runtime();
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[4, 4]).unwrap());
+        let trace = |deps: &[crate::omp::DepVar]| {
+            let d = deps.to_vec();
+            rt.capture(&env, move |ctx| {
+                for i in 0..2 {
+                    ctx.task("inc")
+                        .map(MapDir::ToFrom, "V")
+                        .depend_in(d[i])
+                        .depend_out(d[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+                Ok(())
+            })
+            .unwrap()
+        };
+        let mut rt2 = inc_runtime();
+        let a = trace(&rt2.dep_vars(3));
+        let b = trace(&rt2.dep_vars(3)); // fresh addresses, same structure
+        assert_eq!(a.shape_hash(), b.shape_hash());
+        assert_eq!(a.task_count(), 2);
+        assert_eq!(a.slots().len(), 1);
+        // a different buffer shape is a different program
+        let mut env2 = DataEnv::new();
+        env2.insert("V", Grid::zeros(&[8, 8]).unwrap());
+        let deps = rt2.dep_vars(3);
+        let c = rt
+            .capture(&env2, |ctx| {
+                for i in 0..2 {
+                    ctx.task("inc")
+                        .map(MapDir::ToFrom, "V")
+                        .depend_in(deps[i])
+                        .depend_out(deps[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_ne!(a.shape_hash(), c.shape_hash());
+    }
+
+    #[test]
+    fn parallel_caches_plans_and_recompiles_on_epoch_bump() {
+        let mut rt = inc_runtime();
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        sweep(&mut rt, &mut env);
+        sweep(&mut rt, &mut env);
+        assert_eq!(rt.plan_stats().plans_built, 1, "second region reuses");
+        assert_eq!(rt.plan_stats().cache_hits, 1);
+        assert_eq!(rt.plan_stats().executions, 2);
+        assert!(env.get("V").unwrap().data().iter().all(|&v| v == 4.0));
+
+        // any registration invalidates the cached plan, by name
+        rt.register_software("unrelated", |_| Ok(()));
+        sweep(&mut rt, &mut env);
+        assert_eq!(rt.plan_stats().plans_built, 2);
+        assert_eq!(rt.plan_stats().recompiles.len(), 1);
+        assert!(
+            rt.plan_stats().recompiles[0].contains("register_software"),
+            "{:?}",
+            rt.plan_stats().recompiles
+        );
+    }
+
+    #[test]
+    fn disabling_the_plan_cache_recompiles_every_region() {
+        let mut rt = inc_runtime();
+        rt.set_plan_cache(false);
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        sweep(&mut rt, &mut env);
+        sweep(&mut rt, &mut env);
+        assert_eq!(rt.plan_stats().plans_built, 2);
+        assert_eq!(rt.plan_stats().cache_hits, 0);
+        assert!(env.get("V").unwrap().data().iter().all(|&v| v == 4.0));
+    }
+
+    #[test]
+    fn empty_program_compiles_and_replays() {
+        let mut rt = inc_runtime();
+        let env0 = DataEnv::new();
+        let program = rt.capture(&env0, |_| Ok(())).unwrap();
+        assert_eq!(program.task_count(), 0);
+        let exe = program.compile(&mut rt).unwrap();
+        assert_eq!(exe.batch_count(), 0);
+        assert_eq!(exe.makespan_s(), 0.0);
+        let mut env = DataEnv::new();
+        let rep = exe.execute(&mut rt, &mut env).unwrap();
+        assert_eq!(rep.tasks, 0);
+        assert!(rep.batches.is_empty());
+    }
+
+    #[test]
+    fn capture_propagates_body_errors_like_parallel() {
+        let rt = inc_runtime();
+        let env = DataEnv::new();
+        let err = rt
+            .capture(&env, |ctx| {
+                ctx.target("inc").device(DeviceId(9)).submit()?;
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("device(9)"), "{err:#}");
+    }
+}

@@ -60,33 +60,64 @@
 //! freely, and independent batches on different devices overlap in
 //! virtual time — [`OmpReport::virtual_time_s`] is the modelled makespan
 //! (critical path), not the sum of batch times.
+//!
+//! Under the hood every region goes through the **compile-once /
+//! run-many** pipeline of [`super::program`]: `parallel` is
+//! `capture → compile → execute` with a plan cache keyed by the
+//! region's graph shape, so a service that replays the same region
+//! thousands of times pays condensation and placement once.  Hold the
+//! [`super::program::Executable`] yourself (via
+//! [`OmpRuntime::capture`] + [`super::program::Program::compile`]) to
+//! skip even the per-call tracing.
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::dataenv::{BatchCtx, EnterMap, ExitMap, PresentTable};
+use super::dataenv::{EnterMap, ExitMap, PresentTable};
 use super::device::{
     DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel, FnRegistry,
     TaskFn, HOST_DEVICE,
 };
 use super::graph::TaskGraph;
 use super::host::HostDevice;
-use super::sched::{BatchDag, Dispatcher};
+use super::program::{CachedPlan, PlanStats};
 use super::task::{DepVar, MapDir, Task, TaskId};
 use super::variant::VariantRegistry;
 
 pub struct OmpRuntime {
-    fns: FnRegistry,
-    variants: VariantRegistry,
-    devices: Vec<Box<dyn DevicePlugin>>,
-    default_device: DeviceId,
+    pub(crate) fns: FnRegistry,
+    pub(crate) variants: VariantRegistry,
+    pub(crate) devices: Vec<Box<dyn DevicePlugin>>,
+    pub(crate) default_device: DeviceId,
     next_dep: usize,
     /// the device data environments (`target data` regions), persisting
     /// across parallel regions until the matching exit-data
-    present: PresentTable,
+    pub(crate) present: PresentTable,
+    /// bumped whenever the device/function/variant tables change — a
+    /// compiled [`super::program::Executable`] is valid only for the
+    /// epoch it was compiled at, and the plan cache recompiles (with
+    /// `epoch_reason` as the named cause) instead of replaying stale
+    /// placements
+    pub(crate) epoch: u64,
+    pub(crate) epoch_reason: String,
+    /// compiled-plan cache keyed by the program's graph-shape hash
+    /// ([`TaskGraph::structural_hash`] + slot shapes); entries also pin
+    /// the compile-time epoch and residency fingerprint
+    pub(crate) plan_cache: BTreeMap<u64, CachedPlan>,
+    pub(crate) plan_cache_enabled: bool,
+    pub(crate) plan_stats: PlanStats,
+    /// process-unique instance id: an [`super::program::Executable`]
+    /// replays only on the runtime that compiled it — its plan's device
+    /// indices mean nothing on another instance, even one at the same
+    /// epoch
+    pub(crate) runtime_id: u64,
 }
+
+/// Process-wide source of [`OmpRuntime::new`] instance ids.
+static NEXT_RUNTIME_ID: AtomicU64 = AtomicU64::new(0);
 
 /// One forced writeback of a device-resident buffer, charged inside a
 /// parallel region when a consumer on another device (usually a host
@@ -138,12 +169,32 @@ impl OmpRuntime {
             default_device: HOST_DEVICE,
             next_dep: 0,
             present: PresentTable::new(),
+            epoch: 0,
+            epoch_reason: "fresh runtime".to_string(),
+            plan_cache: BTreeMap::new(),
+            plan_cache_enabled: true,
+            plan_stats: PlanStats::default(),
+            runtime_id: NEXT_RUNTIME_ID.fetch_add(1, Ordering::Relaxed),
         }
     }
 
+    /// The device/function/variant tables changed in a way that can
+    /// invalidate committed placements: advance the epoch so compiled
+    /// plans recompile with `reason` named instead of replaying stale.
+    fn bump_epoch(&mut self, reason: String) {
+        self.epoch += 1;
+        self.epoch_reason = reason;
+    }
+
     /// Register an acceleration device; returns its device id (the
-    /// integer the `device` clause takes).
+    /// integer the `device` clause takes).  Invalidates compiled plans:
+    /// `device(any)` placements priced without the new device are stale.
     pub fn register_device(&mut self, dev: Box<dyn DevicePlugin>) -> DeviceId {
+        self.bump_epoch(format!(
+            "register_device({}: {})",
+            self.devices.len(),
+            dev.arch()
+        ));
         self.devices.push(dev);
         DeviceId(self.devices.len() - 1)
     }
@@ -169,17 +220,20 @@ impl OmpRuntime {
             .collect()
     }
 
-    /// Register a host software function.
+    /// Register a host software function.  Invalidates compiled plans
+    /// (the function table is a compile input).
     pub fn register_software(
         &mut self,
         name: &str,
         f: impl Fn(&mut DataEnv) -> Result<()> + Send + Sync + 'static,
     ) {
+        self.bump_epoch(format!("register_software('{name}')"));
         self.fns.register(name, TaskFn::Software(Arc::new(f)));
     }
 
     /// `#pragma omp declare variant (base) match(device=arch(<arch>))`
-    /// binding `variant` to hardware IP `kernel`.
+    /// binding `variant` to hardware IP `kernel`.  Invalidates compiled
+    /// plans: variant resolution participates in placement.
     pub fn declare_hw_variant(
         &mut self,
         base: &str,
@@ -187,6 +241,7 @@ impl OmpRuntime {
         variant: &str,
         kernel: crate::stencil::Kernel,
     ) {
+        self.bump_epoch(format!("declare_hw_variant('{base}' for {arch})"));
         self.variants.declare(base, arch, variant);
         self.fns.register(variant, TaskFn::HwKernel(kernel));
     }
@@ -383,213 +438,29 @@ impl OmpRuntime {
     /// `#pragma omp parallel` + `#pragma omp single`: run `body` as the
     /// control thread building the task graph, then execute the graph at
     /// the closing barrier.
+    ///
+    /// Since the capture/compile/execute split
+    /// ([`super::program`]) this is a thin compatibility wrapper:
+    /// the body is traced into a [`super::program::Program`], compiled
+    /// through the runtime's plan cache (a repeated region shape reuses
+    /// its committed schedule instead of re-running condensation and
+    /// placement; the cache recompiles with a named reason when the
+    /// device tables or the mapped buffers' residency changed), and the
+    /// compiled plan is replayed against `env`.  Observable behaviour —
+    /// grids, batch order, release/finish times, forced writebacks — is
+    /// identical to the former single-pass executor, with one documented
+    /// exception: `device(any)` placement prices buffers at their
+    /// capture-time shapes, so a buffer first *created* by a mid-region
+    /// task is priced as absent (see [`super::program`]'s corollaries).
     pub fn parallel(
         &mut self,
         env: &mut DataEnv,
         body: impl FnOnce(&mut SingleCtx) -> Result<()>,
     ) -> Result<OmpReport> {
-        let mut ctx = SingleCtx {
-            graph: TaskGraph::new(),
-            variants: &self.variants,
-            device_archs: self.devices.iter().map(|d| d.arch()).collect(),
-            default_device: self.default_device,
-        };
-        body(&mut ctx).context("single region failed")?;
-        let graph = ctx.graph;
-        self.execute(graph, env)
+        let program = self.capture(env, body)?;
+        let exe = self.compile_cached(&program)?;
+        self.execute_plan(&exe, env)
     }
-
-    /// The implicit barrier: condense the graph into per-device runs and
-    /// dispatch each run as its dependence predecessors complete (the
-    /// paper's deferred dispatch, made concurrency-aware).  Any
-    /// topologically valid DAG schedules — host and device batches may
-    /// interleave arbitrarily.  `device(any)` runs are placed here: each
-    /// accelerator prices the run through its communication-aware cost
-    /// model and the dispatcher commits the earliest-finish candidate.
-    fn execute(&mut self, mut graph: TaskGraph, env: &mut DataEnv) -> Result<OmpReport> {
-        let t0 = Instant::now();
-        let mut report = OmpReport { tasks: graph.len(), ..Default::default() };
-        if graph.is_empty() {
-            return Ok(report);
-        }
-        let mut disp = Dispatcher::new(BatchDag::build(&graph)?);
-        loop {
-            // Placement candidates for the *ready* unbound runs (their
-            // predecessors have finished, so the buffers they map are in
-            // the environment at their true sizes): every accelerator
-            // that can execute a run (kernel↔IP compatibility included —
-            // the vc709 model reuses the mapper's skip logic) advertises
-            // its modelled batch duration.  Abstainers are skipped; with
-            // no candidates at all the dispatcher falls back to the host
-            // base function (the paper's verification flow).  Bound-only
-            // graphs (all the figure sweeps) price nothing here.
-            for r in disp.ready_unplaced() {
-                let tasks = disp.dag().run(r).tasks.clone();
-                let bufs = read_buffers(&graph, &tasks);
-                let mut cands: Vec<(DeviceId, f64)> = Vec::new();
-                for (i, plugin) in self.devices.iter().enumerate().skip(1) {
-                    let arch = plugin.arch();
-                    let names: Vec<String> = tasks
-                        .iter()
-                        .map(|id| {
-                            self.variants
-                                .resolve(&graph.task(*id).base_name, arch)
-                        })
-                        .collect();
-                    let residency = self.present.residency(DeviceId(i));
-                    if let Some(mut est) = plugin.estimate_batch_s(
-                        &graph, &tasks, &names, &self.fns, env, &residency,
-                    ) {
-                        // data affinity, the other half of the residency
-                        // cost model: an input whose newest copy sits on
-                        // another cluster must be written back to the
-                        // host before this one can stream it — the
-                        // holder prices without either charge
-                        for b in &bufs {
-                            if let Some((holder, bytes)) =
-                                self.present.dirty_holder(b)
-                            {
-                                if holder.0 != i {
-                                    est += self.devices[holder.0]
-                                        .writeback_s(bytes as f64);
-                                }
-                            }
-                        }
-                        cands.push((DeviceId(i), est));
-                    }
-                }
-                disp.set_candidates(r, cands);
-            }
-            let Some((run, release_s)) = disp.next() else {
-                break;
-            };
-            let dev = disp.device_of(run).ok_or_else(|| {
-                anyhow::anyhow!("dispatched run has no device (scheduler bug)")
-            })?;
-            let mut ids = disp.dag().run(run).tasks.clone();
-            // bind placed tasks and resolve their `declare variant`
-            // against the chosen device's arch (deferred resolution —
-            // the arch was unknown at submit time)
-            let arch = self
-                .devices
-                .get(dev.0)
-                .ok_or_else(|| {
-                    anyhow::anyhow!("task bound to unknown device {}", dev.0)
-                })?
-                .arch();
-            for id in &ids {
-                let t = &mut graph.tasks[id.0];
-                if t.device.is_any() {
-                    t.device = DeviceSel::Bound(dev);
-                    t.fn_name = self.variants.resolve(&t.base_name, arch);
-                }
-            }
-            // Coalesce every ready host run released by the same instant
-            // into this batch: ready runs share no dependence path, the
-            // host plugin schedules arbitrary subgraphs on its worker
-            // pool, and host batches are free in virtual time — so
-            // independent host tasks execute concurrently in wall-clock
-            // while the batch report stays exact (every member shares
-            // this batch's release).
-            let mut coalesced: Vec<(usize, f64)> = Vec::new();
-            if dev == HOST_DEVICE {
-                while let Some((r2, rel2)) = disp.next_ready_on(dev, release_s) {
-                    ids.extend_from_slice(&disp.dag().run(r2).tasks);
-                    coalesced.push((r2, rel2));
-                }
-            }
-            // Forced writebacks: a buffer this batch READS whose newest
-            // copy sits dirty on ANOTHER device (a deferred D2H) must be
-            // flushed to the host first — the host task's flow
-            // dependence, or a rival cluster's H2D, forces the writeback
-            // the present table deferred.  The flush pushes this batch's
-            // release back by its modelled duration.  A `from`-only
-            // consumer is a pure producer: it overwrites the buffer, so
-            // nothing is flushed for it (the write below supersedes the
-            // device copy instead).
-            let mut release_s = release_s;
-            let mut flushed = false;
-            for b in read_buffers(&graph, &ids) {
-                if let Some((holder, bytes)) = self.present.dirty_holder(&b) {
-                    if holder != dev {
-                        let wb = self.devices[holder.0].writeback_s(bytes as f64);
-                        self.present.mark_flushed(holder, &b);
-                        report.writebacks.push(WritebackEvent {
-                            device: holder,
-                            buffer: b,
-                            at_s: release_s,
-                            seconds: wb,
-                        });
-                        release_s += wb;
-                        flushed = true;
-                    }
-                }
-            }
-            let ctx = BatchCtx {
-                release_s,
-                residency: self.present.residency(dev),
-            };
-            let plugin = self
-                .devices
-                .get_mut(dev.0)
-                .ok_or_else(|| anyhow::anyhow!("task bound to unknown device {}", dev.0))?;
-            let mut rep = plugin
-                .run_batch(&graph, &ids, env, &self.fns, &ctx)
-                .with_context(|| format!("device {} ({})", dev.0, plugin.arch()))?;
-            // a plugin must not finish before it was released; normalize
-            // the report so virtual_time_s() agrees with the dispatcher
-            rep.finish_s = rep.finish_s.max(release_s);
-            disp.complete(run, rep.finish_s);
-            // each coalesced host run finishes at its own release (host
-            // batches are free in virtual time); those instants equal
-            // some earlier batch's finish, so the report's makespan is
-            // unaffected and the batch keeps the documented
-            // finish == release + duration identity.  A forced writeback
-            // delays the whole merged batch, so its members finish no
-            // earlier than the flushed release.
-            for (r2, rel2) in coalesced {
-                disp.complete(r2, if flushed { release_s } else { rel2 });
-            }
-            // Present-table bookkeeping: the batch's inputs are now
-            // current on the executing device (streamed or elided), its
-            // outputs supersede every other device's copy, and an
-            // accelerator's resident outputs stay on the device with the
-            // host copy stale until something forces the writeback.
-            for id in &ids {
-                let t = graph.task(*id);
-                for n in t.inputs() {
-                    self.present.mark_device_current(dev, n);
-                }
-                for n in t.outputs() {
-                    self.present.invalidate_others(n, dev);
-                    if dev != HOST_DEVICE {
-                        self.present.mark_device_write(dev, n);
-                    }
-                }
-            }
-            report.batches.push((dev, rep));
-        }
-        if !disp.is_complete() {
-            anyhow::bail!("scheduler stalled with runs pending (graph bug)");
-        }
-        report.wall_s = t0.elapsed().as_secs_f64();
-        Ok(report)
-    }
-}
-
-/// Distinct buffer names `tasks` read from the host view (`map(to:)` /
-/// `map(tofrom:)`), in first-use order — the buffers whose host copy
-/// must be current before the batch starts.
-fn read_buffers(graph: &TaskGraph, tasks: &[TaskId]) -> Vec<String> {
-    let mut out: Vec<String> = Vec::new();
-    for id in tasks {
-        for n in graph.task(*id).inputs() {
-            if !out.iter().any(|b| b == n) {
-                out.push(n.to_string());
-            }
-        }
-    }
-    out
 }
 
 /// The control-thread context inside `parallel`+`single`.
@@ -601,6 +472,22 @@ pub struct SingleCtx<'rt> {
 }
 
 impl<'rt> SingleCtx<'rt> {
+    /// A fresh control-thread context for `rt` — what
+    /// [`OmpRuntime::capture`] traces the region body through.
+    pub(crate) fn for_runtime(rt: &'rt OmpRuntime) -> SingleCtx<'rt> {
+        SingleCtx {
+            graph: TaskGraph::new(),
+            variants: &rt.variants,
+            device_archs: rt.devices.iter().map(|d| d.arch()).collect(),
+            default_device: rt.default_device,
+        }
+    }
+
+    /// The traced task graph, consumed at the end of the capture.
+    pub(crate) fn into_graph(self) -> TaskGraph {
+        self.graph
+    }
+
     /// `#pragma omp target` — builder for one offloaded task.
     pub fn target(&mut self, base_name: &str) -> TargetBuilder<'_, 'rt> {
         TargetBuilder {
@@ -740,6 +627,7 @@ impl<'a, 'rt> TargetBuilder<'a, 'rt> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::omp::dataenv::BatchCtx;
     use crate::stencil::Grid;
 
     fn inc_runtime() -> OmpRuntime {
@@ -875,7 +763,7 @@ mod tests {
             tasks: &[TaskId],
             env: &mut DataEnv,
             fns: &FnRegistry,
-            ctx: &super::BatchCtx,
+            ctx: &BatchCtx,
         ) -> Result<DeviceReport> {
             for id in tasks {
                 match fns.get(&graph.task(*id).fn_name)? {
@@ -901,7 +789,7 @@ mod tests {
             fn_names: &[String],
             fns: &FnRegistry,
             _env: &DataEnv,
-            _residency: &super::super::dataenv::Residency,
+            _residency: &crate::omp::dataenv::Residency,
         ) -> Option<f64> {
             // software-capable accelerator: competes for device(any)
             // runs at its fixed per-task cost
@@ -935,7 +823,7 @@ mod tests {
             _tasks: &[TaskId],
             _env: &mut DataEnv,
             _fns: &FnRegistry,
-            _ctx: &super::BatchCtx,
+            _ctx: &BatchCtx,
         ) -> Result<DeviceReport> {
             anyhow::bail!("device(any) placed a run on a model-less device")
         }
@@ -1244,6 +1132,53 @@ mod tests {
         assert!(env.get("A").unwrap().data().iter().all(|&v| v == 2.0));
         assert!(env.get("B").unwrap().data().iter().all(|&v| v == 2.0));
         assert_eq!(rep.virtual_time_s(), 0.0); // host work is free
+    }
+
+    #[test]
+    fn independent_chains_on_one_device_serialize_in_replay() {
+        // two dependence-free chains both bound to ONE accelerator: the
+        // replayed plan must queue the second behind the first on the
+        // device's availability clock (makespan 3 + 2, never max(3, 2))
+        let mut rt = two_buf_runtime();
+        let acc = rt.register_device(Box::new(FakeAccel::new(1.0)));
+        let deps = rt.dep_vars(20);
+        let mut env = DataEnv::new();
+        env.insert("A", Grid::zeros(&[3, 3]).unwrap());
+        env.insert("B", Grid::zeros(&[3, 3]).unwrap());
+        let rep = rt
+            .parallel(&mut env, |ctx| {
+                for i in 0..3 {
+                    ctx.target("inc_A")
+                        .device(acc)
+                        .map(MapDir::ToFrom, "A")
+                        .depend_in(deps[i])
+                        .depend_out(deps[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+                for i in 10..12 {
+                    ctx.target("inc_B")
+                        .device(acc)
+                        .map(MapDir::ToFrom, "B")
+                        .depend_in(deps[i])
+                        .depend_out(deps[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(rep.batches.len(), 2);
+        let (a, b) = (&rep.batches[0].1, &rep.batches[1].1);
+        assert!(
+            (b.release_s - a.finish_s).abs() < 1e-12,
+            "second chain must queue behind the first: {} vs {}",
+            b.release_s,
+            a.finish_s
+        );
+        assert!((rep.virtual_time_s() - 5.0).abs() < 1e-12);
+        assert!(env.get("A").unwrap().data().iter().all(|&v| v == 3.0));
+        assert!(env.get("B").unwrap().data().iter().all(|&v| v == 2.0));
     }
 
     #[test]

@@ -41,7 +41,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::device::{DeviceId, DeviceSel, HOST_DEVICE};
 use super::graph::TaskGraph;
@@ -216,11 +216,12 @@ impl Dispatcher {
     }
 
     /// Ready `device(any)` runs not yet dispatched — exactly the runs
-    /// the executor should (re-)price via [`Dispatcher::set_candidates`]
+    /// the compiler should (re-)price via [`Dispatcher::set_candidates`]
     /// before the next [`Dispatcher::next`] call.  A ready run's
-    /// predecessors have all finished, so the buffers it maps are
-    /// present in the data environment at their true sizes.  Sorted for
-    /// deterministic pricing order.
+    /// predecessors have all finished, so its placement reflects the
+    /// residency state at its own release; buffer sizes come from the
+    /// program's capture-time slot shapes ([`crate::omp::program`]).
+    /// Sorted for deterministic pricing order.
     pub fn ready_unplaced(&self) -> Vec<usize> {
         let mut v: Vec<usize> = self
             .ready
@@ -264,22 +265,21 @@ impl Dispatcher {
                 self.release[r].max(self.free_of(HOST_DEVICE)),
             );
         }
-        let mut best: Option<(DeviceId, f64, f64)> = None; // (dev, start, fin)
-        for &(d, est) in cands {
+        // (dev, start, fin), seeded from the first candidate so no
+        // "non-empty" panic can hide here
+        let mut best = {
+            let (d0, e0) = cands[0];
+            let s0 = self.release[r].max(self.free_of(d0));
+            (d0, s0, s0 + e0)
+        };
+        for &(d, est) in &cands[1..] {
             let start = self.release[r].max(self.free_of(d));
             let finish = start + est;
-            let better = match best {
-                None => true,
-                Some((bd, _, bf)) => {
-                    finish < bf || (finish == bf && d.0 < bd.0)
-                }
-            };
-            if better {
-                best = Some((d, start, finish));
+            if finish < best.2 || (finish == best.2 && d.0 < best.0 .0) {
+                best = (d, start, finish);
             }
         }
-        let (d, start, _) = best.expect("non-empty candidates");
-        (d, start)
+        (best.0, best.1)
     }
 
     /// Pop the ready run with the earliest modelled start time
@@ -333,13 +333,21 @@ impl Dispatcher {
 
     /// Retire run `run` at virtual time `finish_s`: advance its device's
     /// availability clock and release any successor whose predecessors
-    /// have now all finished.
-    pub fn complete(&mut self, run: usize, finish_s: f64) {
+    /// have now all finished.  Completing a run that was never handed
+    /// out by [`Dispatcher::next`]/[`Dispatcher::next_ready_on`] — or
+    /// one that somehow lost its device binding — is a named scheduler
+    /// invariant error, not a panic.
+    pub fn complete(&mut self, run: usize, finish_s: f64) -> Result<()> {
         let pos = self
             .in_flight
             .iter()
             .position(|&r| r == run)
-            .expect("complete() for a run that was never dispatched");
+            .ok_or_else(|| {
+                anyhow!(
+                    "complete() for run {run} which is not in flight \
+                     (never dispatched, or completed twice)"
+                )
+            })?;
         self.in_flight.swap_remove(pos);
         self.completed += 1;
         // only a batch that actually spent device time occupies the
@@ -347,7 +355,12 @@ impl Dispatcher {
         // delay later batches on the same device
         if finish_s > self.release[run] {
             let dev = self.binding[run]
-                .expect("complete() for a run that was never bound")
+                .ok_or_else(|| {
+                    anyhow!(
+                        "run {run} completed at {finish_s}s without a \
+                         committed device binding (placement bug)"
+                    )
+                })?
                 .0;
             let free = self.dev_free.entry(dev).or_insert(0.0);
             if finish_s > *free {
@@ -366,6 +379,28 @@ impl Dispatcher {
                 self.ready.push(s);
             }
         }
+        Ok(())
+    }
+
+    /// The committed device of every run, in run order — the plan-reuse
+    /// entry point: once a full drain has placed and completed every
+    /// run, a compiled program ([`crate::omp::program`]) records these
+    /// bindings and replays them on every execution without re-pricing
+    /// a single candidate.  A run that was never dispatched (a stalled
+    /// or partial drain) is a named error.
+    pub fn committed_bindings(&self) -> Result<Vec<DeviceId>> {
+        self.binding
+            .iter()
+            .enumerate()
+            .map(|(r, b)| {
+                b.ok_or_else(|| {
+                    anyhow!(
+                        "run {r} was never placed on a device — drain the \
+                         dispatcher before committing its schedule"
+                    )
+                })
+            })
+            .collect()
     }
 
     /// True once every run has been dispatched and completed.
@@ -413,7 +448,7 @@ mod tests {
         while let Some((r, release)) = d.next() {
             let finish = release + dur(d.dag().run(r));
             order.push(r);
-            d.complete(r, finish);
+            d.complete(r, finish).unwrap();
         }
         assert!(d.is_complete(), "scheduler stalled");
         order
@@ -548,11 +583,11 @@ mod tests {
         assert_eq!((r1, rel), (1, 0.0));
         // ...but the fpga run is not a host candidate
         assert!(d.next_ready_on(DeviceId(0), start).is_none());
-        d.complete(r0, 0.0);
-        d.complete(r1, 0.0);
+        d.complete(r0, 0.0).unwrap();
+        d.complete(r1, 0.0).unwrap();
         let (r2, _) = d.next().unwrap();
         assert_eq!(r2, 2);
-        d.complete(r2, 1.0);
+        d.complete(r2, 1.0).unwrap();
         assert!(d.is_complete());
         assert!((d.makespan_s() - 1.0).abs() < 1e-12);
     }
@@ -594,7 +629,7 @@ mod tests {
         d.set_candidates(1, vec![(DeviceId(1), 2.0), (DeviceId(2), 2.0)]);
         let durs = [3.0f64, 2.0];
         while let Some((r, release)) = d.next() {
-            d.complete(r, release + durs[r]);
+            d.complete(r, release + durs[r]).unwrap();
         }
         assert!(d.is_complete());
         // the t=0 tie broke to device 1 for the first run; the second
@@ -619,10 +654,10 @@ mod tests {
         d.set_candidates(1, vec![(DeviceId(1), 1.0), (DeviceId(2), 4.0)]);
         let (r0, rel0) = d.next().unwrap();
         assert_eq!(r0, 0); // t=0 tie breaks by run index
-        d.complete(r0, rel0 + 5.0);
+        d.complete(r0, rel0 + 5.0).unwrap();
         let (r1, rel1) = d.next().unwrap();
         assert_eq!((r1, rel1), (1, 0.0));
-        d.complete(r1, rel1 + 4.0);
+        d.complete(r1, rel1 + 4.0).unwrap();
         assert_eq!(d.device_of(1), Some(DeviceId(2)));
         assert!((d.makespan_s() - 5.0).abs() < 1e-12);
     }
@@ -637,7 +672,7 @@ mod tests {
         d.set_candidates(0, vec![(DeviceId(3), 2.0), (DeviceId(1), 2.0)]);
         let (r, rel) = d.next().unwrap();
         assert_eq!(d.device_of(0), Some(DeviceId(1)));
-        d.complete(r, rel + 2.0);
+        d.complete(r, rel + 2.0).unwrap();
         assert!(d.is_complete());
     }
 
@@ -649,7 +684,7 @@ mod tests {
         d.set_candidates(0, vec![(DeviceId(0), 0.0)]);
         let (r, rel) = d.next().unwrap();
         assert_eq!((r, rel), (0, 0.0));
-        d.complete(r, 0.0);
+        d.complete(r, 0.0).unwrap();
         assert_eq!(d.device_of(0), Some(DeviceId(0)));
         assert!(d.is_complete());
         assert_eq!(d.makespan_s(), 0.0);
@@ -664,7 +699,7 @@ mod tests {
         let (r, rel) = d.next().unwrap();
         assert_eq!((r, rel), (0, 0.0));
         assert_eq!(d.device_of(0), Some(HOST_DEVICE));
-        d.complete(r, 0.0);
+        d.complete(r, 0.0).unwrap();
         assert!(d.is_complete());
     }
 
@@ -721,7 +756,7 @@ mod tests {
                             d.dag().run(r).tasks.len() as f64
                         };
                         log.push((r, dev, rel));
-                        d.complete(r, rel + dur);
+                        d.complete(r, rel + dur).map_err(|e| e.to_string())?;
                     }
                     if !d.is_complete() {
                         return Err("stalled".into());
@@ -825,7 +860,7 @@ mod tests {
                         t_release[id.0] = release;
                         t_finish[id.0] = finish;
                     }
-                    d.complete(r, finish);
+                    d.complete(r, finish).map_err(|e| e.to_string())?;
                 }
                 if !d.is_complete() {
                     return Err("scheduler stalled before completion".into());

@@ -10,7 +10,7 @@ pub struct DepVar(pub usize);
 pub struct TaskId(pub usize);
 
 /// `map` clause direction.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MapDir {
     To,
     From,

@@ -62,17 +62,31 @@ fn sole_buffer<'g>(graph: &'g TaskGraph, id: TaskId) -> Result<&'g str> {
     Ok(t.maps[0].1.as_str())
 }
 
-/// Plan data movement for a chain batch: one [`MovePlan`] per distinct
-/// buffer, in first-use order.  Every task must map exactly one buffer;
-/// tasks touching different buffers may interleave freely (the segment
-/// split is [`segments`]' job).
-pub fn coalesce(graph: &TaskGraph, tasks: &[TaskId]) -> Result<Vec<MovePlan>> {
+/// The full data-movement analysis of one chain batch — the plan-reuse
+/// entry point: both views ([`MovePlan`]s and [`Segment`]s) computed in
+/// a single walk and reusable for as long as the batch's task list is
+/// unchanged, which is how the VC709 plugin avoids re-walking the chain
+/// per view and how compiled programs (`omp::program`) keep replays
+/// free of re-analysis.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// one [`MovePlan`] per distinct buffer, in first-use order
+    pub moves: Vec<MovePlan>,
+    /// maximal same-buffer sub-chains, in chain order
+    pub segments: Vec<Segment>,
+}
+
+/// Analyze a chain batch in one walk: per-buffer [`MovePlan`]s *and*
+/// the same-buffer [`Segment`] split.  Every task must map exactly one
+/// buffer; tasks touching different buffers may interleave freely.
+pub fn plan(graph: &TaskGraph, tasks: &[TaskId]) -> Result<BatchPlan> {
     if tasks.is_empty() {
         bail!("empty device batch");
     }
     // buffer -> map directions of its uses, in chain order
     let mut order: Vec<String> = Vec::new();
     let mut uses: Vec<Vec<crate::omp::task::MapDir>> = Vec::new();
+    let mut segs: Vec<Segment> = Vec::new();
     for id in tasks {
         let buf = sole_buffer(graph, *id)?;
         let dir = graph.task(*id).maps[0].0;
@@ -83,8 +97,12 @@ pub fn coalesce(graph: &TaskGraph, tasks: &[TaskId]) -> Result<Vec<MovePlan>> {
                 uses.push(vec![dir]);
             }
         }
+        match segs.last_mut() {
+            Some(s) if s.buffer == buf => s.tasks.push(*id),
+            _ => segs.push(Segment { buffer: buf.to_string(), tasks: vec![*id] }),
+        }
     }
-    Ok(order
+    let moves = order
         .into_iter()
         .zip(uses)
         .map(|(buffer, dirs)| {
@@ -99,25 +117,22 @@ pub fn coalesce(graph: &TaskGraph, tasks: &[TaskId]) -> Result<Vec<MovePlan>> {
                 saved_roundtrips: saved,
             }
         })
-        .collect())
+        .collect();
+    Ok(BatchPlan { moves, segments: segs })
+}
+
+/// Plan data movement for a chain batch: one [`MovePlan`] per distinct
+/// buffer, in first-use order.  Thin view over [`plan`].
+pub fn coalesce(graph: &TaskGraph, tasks: &[TaskId]) -> Result<Vec<MovePlan>> {
+    Ok(plan(graph, tasks)?.moves)
 }
 
 /// Split a chain batch into maximal same-buffer [`Segment`]s, in chain
 /// order.  `[A, A, B, A]` becomes `[A×2], [B], [A]` — the middle `B`
-/// segment streams while `A` stays parked on the device.
+/// segment streams while `A` stays parked on the device.  Thin view
+/// over [`plan`].
 pub fn segments(graph: &TaskGraph, tasks: &[TaskId]) -> Result<Vec<Segment>> {
-    if tasks.is_empty() {
-        bail!("empty device batch");
-    }
-    let mut segs: Vec<Segment> = Vec::new();
-    for id in tasks {
-        let buf = sole_buffer(graph, *id)?;
-        match segs.last_mut() {
-            Some(s) if s.buffer == buf => s.tasks.push(*id),
-            _ => segs.push(Segment { buffer: buf.to_string(), tasks: vec![*id] }),
-        }
-    }
-    Ok(segs)
+    Ok(plan(graph, tasks)?.segments)
 }
 
 #[cfg(test)]
@@ -238,6 +253,25 @@ mod tests {
         assert_eq!(segs[0].tasks.len(), 2);
         assert_eq!(segs[1].buffer, "B");
         assert_eq!(segs[2].buffer, "A");
+    }
+
+    #[test]
+    fn plan_computes_both_views_consistently() {
+        let mut g = TaskGraph::new();
+        let mut ids = Vec::new();
+        for (i, buf) in ["A", "A", "B", "A"].iter().enumerate() {
+            ids.push(push_task(
+                &mut g,
+                i,
+                vec![(MapDir::ToFrom, (*buf).to_string())],
+            ));
+        }
+        let bp = plan(&g, &ids).unwrap();
+        assert_eq!(bp.moves, coalesce(&g, &ids).unwrap());
+        assert_eq!(bp.segments, segments(&g, &ids).unwrap());
+        assert_eq!(bp.moves.len(), 2);
+        assert_eq!(bp.segments.len(), 3);
+        assert!(plan(&g, &[]).is_err());
     }
 
     #[test]

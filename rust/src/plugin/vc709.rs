@@ -518,6 +518,19 @@ impl Vc709Plugin {
         residency: &Residency,
     ) -> Result<Vec<SegPlan>> {
         let segs = datamap::segments(graph, tasks)?;
+        self.segment_plans(&segs, kernels, env, residency)
+    }
+
+    /// [`Vc709Plugin::plan_segments`] over a precomputed segment split —
+    /// `run_batch` analyzes the chain once via [`datamap::plan`] and
+    /// feeds both views from that single walk.
+    fn segment_plans(
+        &self,
+        segs: &[datamap::Segment],
+        kernels: &[Kernel],
+        env: &DataEnv,
+        residency: &Residency,
+    ) -> Result<Vec<SegPlan>> {
         let mut on_device: BTreeSet<String> = residency.device_valid.clone();
         let mut plans = Vec::with_capacity(segs.len());
         let mut cursor = 0usize; // segments partition `tasks` in order
@@ -763,11 +776,17 @@ impl DevicePlugin for Vc709Plugin {
             .map(|id| fns.kernel_of(&graph.task(*id).fn_name))
             .collect::<Result<_>>()?;
         // -- plan -----------------------------------------------------------
-        // the per-buffer coalescing analysis (how many host round-trips
-        // the pipeline view eliminates), reported through the run stats
-        let plans = datamap::coalesce(graph, tasks)?;
-        let segs =
-            self.plan_segments(graph, tasks, &kernels, env, &ctx.residency)?;
+        // one chain walk yields both views: the per-buffer coalescing
+        // analysis (how many host round-trips the pipeline view
+        // eliminates, reported through the run stats) and the segment
+        // split the streaming + timing below consume
+        let batch_plan = datamap::plan(graph, tasks)?;
+        let segs = self.segment_plans(
+            &batch_plan.segments,
+            &kernels,
+            env,
+            &ctx.residency,
+        )?;
 
         // -- functional streaming, one segment at a time -------------------
         // The grids really move regardless of residency: the host data
@@ -827,7 +846,7 @@ impl DevicePlugin for Vc709Plugin {
         report.stats.h2d_elided = h2d_elided;
         report.stats.d2h_deferred = d2h_deferred;
         report.stats.roundtrips_elided =
-            plans.iter().map(|p| p.saved_roundtrips).sum();
+            batch_plan.moves.iter().map(|p| p.saved_roundtrips).sum();
         Ok(report)
     }
 
@@ -863,11 +882,13 @@ impl DevicePlugin for Vc709Plugin {
         // admission mirrors run_batch exactly: a batch the segment
         // planner rejects (multi-map task, unmappable kernel, dimension
         // mismatch) must make this plugin abstain rather than win
-        // placement and fail at execution.  Buffer sizes are priced at
-        // the sizes currently in the data environment — the same bytes
-        // run_batch will stream (the executor re-prices pending runs
-        // each dispatch round, so upstream-produced buffers have
-        // materialized by the time a placement is committed).
+        // placement and fail at execution.  Buffer sizes come from the
+        // `env` the caller prices with: the compiled pipeline
+        // (omp::program) passes a shape-only phantom built from the
+        // capture-time slots — same shapes and byte counts run_batch
+        // will stream, zero values, and a buffer first created by a
+        // mid-region task absent (priced as empty; see the program
+        // module's documented corollary).
         let segs = self
             .plan_segments(graph, tasks, &kernels, env, residency)
             .ok()?;

@@ -1,0 +1,381 @@
+//! Integration tests for the compile-once / run-many program API
+//! (`omp::program`): `capture → compile → execute` must be
+//! observably identical to the one-shot `parallel` path (grids, batch
+//! traces, makespans), replay with zero re-planning, compose with
+//! `target data` residency across executions, and fail by name on
+//! stale plans and mismatched slot bindings.
+
+use omp_fpga::config::ClusterConfig;
+use omp_fpga::omp::{
+    DataEnv, DepVar, DeviceId, EnterMap, ExitMap, MapDir, OmpReport,
+    OmpRuntime, SingleCtx,
+};
+use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
+use omp_fpga::stencil::{Grid, Kernel};
+
+const KERNEL: Kernel = Kernel::Diffusion2d;
+const SHAPE: [usize; 2] = [24, 20];
+
+/// Runtime with the service functions registered and one VC709 cluster
+/// per `(boards, ips)` entry.
+fn make_runtime(clusters: &[(usize, usize)]) -> (OmpRuntime, Vec<DeviceId>) {
+    let mut rt = OmpRuntime::new(2);
+    rt.register_software("pre", |env| {
+        let mut g = env.take("V")?;
+        for v in g.data_mut() {
+            *v *= 0.5;
+        }
+        env.put("V", g);
+        Ok(())
+    });
+    rt.register_software("do_step", |env| {
+        let g = env.take("V")?;
+        env.put("V", KERNEL.apply(&g)?);
+        Ok(())
+    });
+    rt.declare_hw_variant("do_step", "vc709", "hw_step", KERNEL);
+    let devs = clusters
+        .iter()
+        .map(|&(boards, ips)| {
+            let cfg = ClusterConfig::homogeneous(boards, ips, KERNEL);
+            rt.register_device(Box::new(
+                Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+            ))
+        })
+        .collect();
+    (rt, devs)
+}
+
+/// The served region: a host preprocessing task feeding an unbound
+/// (`device(any)`) 4-step stencil chain — placement, host batching and
+/// coalescing all exercised.
+fn submit_service(ctx: &mut SingleCtx, deps: &[DepVar]) -> anyhow::Result<()> {
+    ctx.task("pre")
+        .map(MapDir::ToFrom, "V")
+        .depend_out(deps[0])
+        .nowait()
+        .submit()?;
+    for i in 0..4 {
+        ctx.target("do_step")
+            .device_any()
+            .map(MapDir::ToFrom, "V")
+            .depend_in(deps[i])
+            .depend_out(deps[i + 1])
+            .nowait()
+            .submit()?;
+    }
+    Ok(())
+}
+
+/// One request's expected numerics: pre (×0.5) then 4 kernel steps.
+fn reference_request(g: &Grid) -> Grid {
+    let mut want = g.clone();
+    for v in want.data_mut() {
+        *v *= 0.5;
+    }
+    KERNEL.iterate(&want, 4).unwrap()
+}
+
+fn trace(rep: &OmpReport) -> Vec<(usize, usize, f64, f64, f64)> {
+    rep.batches
+        .iter()
+        .map(|(d, r)| {
+            (d.0, r.tasks_run, r.release_s, r.finish_s, r.virtual_time_s)
+        })
+        .collect()
+}
+
+#[test]
+fn executable_matches_parallel_exactly() {
+    let input = Grid::random(&SHAPE, 3).unwrap();
+
+    // one-shot path
+    let (mut rt_a, _) = make_runtime(&[(1, 1), (1, 2)]);
+    let mut env_a = DataEnv::new();
+    env_a.insert("V", input.clone());
+    let deps_a = rt_a.dep_vars(6);
+    let rep_a = rt_a
+        .parallel(&mut env_a, |ctx| submit_service(ctx, &deps_a))
+        .unwrap();
+
+    // compiled path on an identical runtime
+    let (mut rt_b, _) = make_runtime(&[(1, 1), (1, 2)]);
+    let mut env_b = DataEnv::new();
+    env_b.insert("V", input.clone());
+    let deps_b = rt_b.dep_vars(6);
+    let program = rt_b
+        .capture(&env_b, |ctx| submit_service(ctx, &deps_b))
+        .unwrap();
+    assert_eq!(program.task_count(), 5);
+    let exe = program.compile(&mut rt_b).unwrap();
+    let rep_b = exe.execute(&mut rt_b, &mut env_b).unwrap();
+
+    // identical schedule, timing and numerics — bit for bit
+    assert_eq!(trace(&rep_a), trace(&rep_b));
+    assert_eq!(rep_a.virtual_time_s(), rep_b.virtual_time_s());
+    // the compile-time model of this region matches the replay (all
+    // releases are 0 here, so even the float sequences agree)
+    assert!(
+        (exe.makespan_s() - rep_b.virtual_time_s()).abs() < 1e-9,
+        "modelled {} vs replayed {}",
+        exe.makespan_s(),
+        rep_b.virtual_time_s()
+    );
+    assert!(rep_a.writebacks.is_empty() && rep_b.writebacks.is_empty());
+    let got_a = env_a.take("V").unwrap();
+    assert_eq!(got_a, env_b.take("V").unwrap());
+    assert_eq!(got_a, reference_request(&input));
+}
+
+#[test]
+fn plan_cache_hit_is_identical_to_cold_compile() {
+    let input = Grid::random(&SHAPE, 7).unwrap();
+    let run_twice = |cache: bool| {
+        let (mut rt, _) = make_runtime(&[(1, 2)]);
+        rt.set_plan_cache(cache);
+        let mut env = DataEnv::new();
+        env.insert("V", input.clone());
+        let mut traces = Vec::new();
+        for _ in 0..2 {
+            let deps = rt.dep_vars(6);
+            let rep = rt
+                .parallel(&mut env, |ctx| submit_service(ctx, &deps))
+                .unwrap();
+            traces.push(trace(&rep));
+        }
+        (traces, env.take("V").unwrap(), rt.plan_stats().clone())
+    };
+    let (t_hit, g_hit, s_hit) = run_twice(true);
+    let (t_cold, g_cold, s_cold) = run_twice(false);
+    // the replayed plan is indistinguishable from a fresh compile
+    assert_eq!(t_hit, t_cold);
+    assert_eq!(g_hit, g_cold);
+    // ...but only the cached runtime skipped the planning work
+    assert_eq!(s_hit.plans_built, 1);
+    assert_eq!(s_hit.cache_hits, 1);
+    assert_eq!(s_hit.executions, 2);
+    assert_eq!(s_cold.plans_built, 2);
+    assert_eq!(s_cold.cache_hits, 0);
+}
+
+#[test]
+fn epoch_bump_recompiles_instead_of_replaying_stale_placement() {
+    let input = Grid::random(&SHAPE, 5).unwrap();
+    let (mut rt, devs) = make_runtime(&[(1, 1)]);
+    let mut env = DataEnv::new();
+    env.insert("V", input);
+    let sweep = |rt: &mut OmpRuntime, env: &mut DataEnv| {
+        let deps = rt.dep_vars(6);
+        rt.parallel(env, |ctx| submit_service(ctx, &deps)).unwrap()
+    };
+    let rep1 = sweep(&mut rt, &mut env);
+    assert_eq!(rep1.batches[1].0, devs[0], "only one cluster to pick");
+
+    // a faster cluster appears: replaying the cached placement would
+    // silently keep the chain on the slow one
+    let cfg = ClusterConfig::homogeneous(1, 4, KERNEL);
+    let d2 = rt.register_device(Box::new(
+        Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+    ));
+    let rep2 = sweep(&mut rt, &mut env);
+    assert_eq!(
+        rep2.batches[1].0, d2,
+        "recompilation re-placed the chain on the faster cluster"
+    );
+    assert_eq!(rt.plan_stats().plans_built, 2);
+    assert_eq!(rt.plan_stats().recompiles.len(), 1);
+    assert!(
+        rt.plan_stats().recompiles[0].contains("register_device"),
+        "{:?}",
+        rt.plan_stats().recompiles
+    );
+
+    // declare_hw_variant invalidates too
+    rt.declare_hw_variant("other", "vc709", "hw_other", KERNEL);
+    sweep(&mut rt, &mut env);
+    assert_eq!(rt.plan_stats().plans_built, 3);
+    assert!(
+        rt.plan_stats().recompiles[1].contains("declare_hw_variant"),
+        "{:?}",
+        rt.plan_stats().recompiles
+    );
+}
+
+#[test]
+fn n_executions_build_one_plan_with_identical_makespans() {
+    let input = Grid::random(&SHAPE, 11).unwrap();
+    let (mut rt, _) = make_runtime(&[(2, 2)]);
+    let mut env = DataEnv::new();
+    env.insert("V", input.clone());
+    let deps = rt.dep_vars(6);
+    let program =
+        rt.capture(&env, |ctx| submit_service(ctx, &deps)).unwrap();
+    let exe = program.compile(&mut rt).unwrap();
+    let mut times = Vec::new();
+    for _ in 0..4 {
+        times.push(exe.execute(&mut rt, &mut env).unwrap().virtual_time_s());
+    }
+    // zero re-planning, and (no residency in play) bit-equal makespans
+    assert_eq!(rt.plan_stats().plans_built, 1);
+    assert_eq!(rt.plan_stats().placements_computed, 1);
+    assert_eq!(rt.plan_stats().executions, 4);
+    assert!(times.windows(2).all(|w| w[0] == w[1]), "{times:?}");
+    // functional truth advanced request by request
+    let mut want = input;
+    for _ in 0..4 {
+        want = reference_request(&want);
+    }
+    assert_eq!(env.take("V").unwrap(), want);
+}
+
+#[test]
+fn residency_persists_across_executions_of_one_plan() {
+    let input = Grid::random(&SHAPE, 13).unwrap();
+    let (mut rt, devs) = make_runtime(&[(1, 2)]);
+    let fpga = devs[0];
+    let mut env = DataEnv::new();
+    env.insert("V", input.clone());
+    rt.target_enter_data(fpga, &env, &[(EnterMap::To, "V")]).unwrap();
+    let deps = rt.dep_vars(3);
+    let program = rt
+        .capture(&env, |ctx| {
+            for i in 0..2 {
+                ctx.target("do_step")
+                    .device(fpga)
+                    .map(MapDir::ToFrom, "V")
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    let exe = program.compile(&mut rt).unwrap();
+    let first = exe.execute(&mut rt, &mut env).unwrap();
+    let second = exe.execute(&mut rt, &mut env).unwrap();
+    // the first replay streamed V in; the second found it resident
+    assert_eq!(first.batches[0].1.stats.h2d_elided, 0);
+    assert_eq!(second.batches[0].1.stats.h2d_elided, 1);
+    assert!(second.virtual_time_s() < first.virtual_time_s());
+    // the deferred writeback settles at region exit, and the host
+    // environment stayed the functional truth throughout
+    let wb = rt.target_exit_data(fpga, &[(ExitMap::From, "V")]).unwrap();
+    assert!(wb > 0.0);
+    assert_eq!(env.take("V").unwrap(), KERNEL.iterate(&input, 4).unwrap());
+}
+
+#[test]
+fn executable_from_another_runtime_is_rejected() {
+    // two runtimes with the same registration sequence sit at the same
+    // epoch, but a plan's device indices are only meaningful on the
+    // runtime that compiled it
+    let input = Grid::random(&SHAPE, 19).unwrap();
+    let (mut rt_a, _) = make_runtime(&[(1, 1)]);
+    let (mut rt_b, _) = make_runtime(&[(1, 4)]);
+    let mut env = DataEnv::new();
+    env.insert("V", input);
+    let deps = rt_a.dep_vars(6);
+    let program =
+        rt_a.capture(&env, |ctx| submit_service(ctx, &deps)).unwrap();
+    let exe = program.compile(&mut rt_a).unwrap();
+    let err = exe.execute(&mut rt_b, &mut env).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("different OmpRuntime"), "{msg}");
+    // the compiling runtime still replays it fine
+    exe.execute(&mut rt_a, &mut env).unwrap();
+}
+
+#[test]
+fn independent_chains_on_one_cluster_queue_in_replay() {
+    // two dependence-free bound chains on ONE cluster: the compiled
+    // plan's replay must keep the dispatcher's device serialization —
+    // the second batch is released at the first one's finish
+    let k = KERNEL;
+    let mut rt = OmpRuntime::new(2);
+    rt.declare_hw_variant("fa", "vc709", "hw_a", k);
+    rt.declare_hw_variant("fb", "vc709", "hw_b", k);
+    let cfg = ClusterConfig::homogeneous(1, 2, k);
+    let fpga = rt.register_device(Box::new(
+        Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+    ));
+    let ga = Grid::random(&SHAPE, 21).unwrap();
+    let gb = Grid::random(&SHAPE, 22).unwrap();
+    let mut env = DataEnv::new();
+    env.insert("A", ga.clone());
+    env.insert("B", gb.clone());
+    let deps = rt.dep_vars(20);
+    let program = rt
+        .capture(&env, |ctx| {
+            for i in 0..4 {
+                ctx.target("fa")
+                    .device(fpga)
+                    .map(MapDir::ToFrom, "A")
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            for i in 10..14 {
+                ctx.target("fb")
+                    .device(fpga)
+                    .map(MapDir::ToFrom, "B")
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    let exe = program.compile(&mut rt).unwrap();
+    let rep = exe.execute(&mut rt, &mut env).unwrap();
+    assert_eq!(rep.batches.len(), 2);
+    let (a, b) = (&rep.batches[0].1, &rep.batches[1].1);
+    assert!(a.virtual_time_s > 0.0 && b.virtual_time_s > 0.0);
+    assert!(
+        (b.release_s - a.finish_s).abs() < 1e-12,
+        "second chain must queue behind the first on the shared cluster: \
+         released {} vs finish {}",
+        b.release_s,
+        a.finish_s
+    );
+    assert!(
+        (rep.virtual_time_s() - (a.virtual_time_s + b.virtual_time_s)).abs()
+            < 1e-9,
+        "makespan must be the serial sum on one device"
+    );
+    assert_eq!(env.take("A").unwrap(), k.iterate(&ga, 4).unwrap());
+    assert_eq!(env.take("B").unwrap(), k.iterate(&gb, 4).unwrap());
+}
+
+#[test]
+fn mismatched_slot_binding_is_a_named_error() {
+    let input = Grid::random(&SHAPE, 17).unwrap();
+    let (mut rt, _) = make_runtime(&[(1, 1)]);
+    let mut env = DataEnv::new();
+    env.insert("V", input);
+    let deps = rt.dep_vars(6);
+    let program =
+        rt.capture(&env, |ctx| submit_service(ctx, &deps)).unwrap();
+    assert_eq!(
+        program.slots()[0].shape.as_deref(),
+        Some(&SHAPE[..]),
+        "slot captured the bound shape"
+    );
+    let exe = program.compile(&mut rt).unwrap();
+    let mut small = DataEnv::new();
+    small.insert("V", Grid::zeros(&[8, 8]).unwrap());
+    let err = exe.execute(&mut rt, &mut small).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("'V'"), "{msg}");
+    assert!(msg.contains("expecting shape"), "{msg}");
+    // an unbound slot fails up front too, before any state mutates
+    let mut empty = DataEnv::new();
+    let err = exe.execute(&mut rt, &mut empty).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("'V'") && msg.contains("not bound"), "{msg}");
+    assert_eq!(rt.plan_stats().executions, 0, "failed bindings never ran");
+    // the original environment still executes
+    exe.execute(&mut rt, &mut env).unwrap();
+}
