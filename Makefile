@@ -1,6 +1,6 @@
 # Entry points the docs and test skip-messages refer to.
 
-.PHONY: artifacts test clean
+.PHONY: artifacts test perf clean
 
 # AOT-lower the five Table-I stencils to HLO-text artifacts + manifest.
 # Written to ./artifacts (where the examples, run from the repo root,
@@ -15,5 +15,10 @@ test:
 	cargo build --release
 	cargo test -q
 
+# The BENCH harness: hot-path timings -> BENCH_perf.json at the repo
+# root (schema: name -> {median_s, throughput, ...}; DESIGN.md §7).
+perf:
+	cargo bench --bench perf
+
 clean:
-	rm -rf target artifacts rust/artifacts results
+	rm -rf target artifacts rust/artifacts results BENCH_*.json

@@ -30,7 +30,7 @@ use omp_fpga::omp::{
 use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
 use omp_fpga::stencil::workload::paper_workloads;
 use omp_fpga::stencil::{Grid, Kernel};
-use omp_fpga::util::bench;
+use omp_fpga::util::bench::{self, Measurement};
 
 /// Imbalanced two-chain DAG (8 + 2 diffusion tasks on separate buffers)
 /// over two single-board clusters.  `round_robin = true` statically
@@ -221,6 +221,10 @@ fn gflops_with(t: &TimingConfig, fpgas: usize) -> Vec<(String, f64)> {
 }
 
 fn main() {
+    // machine-readable output: the per-chunk DES timings land in
+    // BENCH_ablation.json via the shared bench writer
+    let mut measured: Vec<(Measurement, Option<f64>)> = Vec::new();
+
     // -- 1. host ablation -------------------------------------------------
     let archaic = gflops_with(&TimingConfig::default(), 6);
     let modern = gflops_with(&TimingConfig::modern_host(), 6);
@@ -274,7 +278,7 @@ fn main() {
             );
         }
         prev = Some(v);
-        let _ = m;
+        measured.push((m, None));
     }
     println!(
         "virtual time monotone & bounded (<15% per 4x) in chunk size — \
@@ -372,4 +376,11 @@ fn main() {
         "  -> identical makespans ({:.6} s/request) and bit-identical grids",
         t_once[0]
     );
+
+    let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_ablation.json");
+    let refs: Vec<(&Measurement, Option<f64>)> =
+        measured.iter().map(|(m, t)| (m, *t)).collect();
+    bench::write_json(&out, &refs).unwrap();
 }

@@ -20,7 +20,10 @@ fn main() {
         assert!(s6 > 6.0 * 0.85, "{} not close to linear", s.label);
     }
 
-    bench::time("fig6::generate (30 timing-mode runs)", 1, 5, || {
+    let m = bench::time("fig6::generate (30 timing-mode runs)", 1, 5, || {
         fig6::generate().unwrap()
     });
+    let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_fig6.json");
+    bench::write_json(&out, &[(&m, None)]).unwrap();
 }

@@ -24,5 +24,8 @@ fn main() {
     assert_eq!(sorted[1].0, "Laplace 3D");
     assert_eq!(sorted.last().unwrap().0, "Jacobi 9-pt. 2-D");
 
-    bench::time("fig7::generate", 1, 5, || fig7::generate().unwrap());
+    let m = bench::time("fig7::generate", 1, 5, || fig7::generate().unwrap());
+    let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_fig7.json");
+    bench::write_json(&out, &[(&m, None)]).unwrap();
 }

@@ -18,5 +18,8 @@ fn main() {
         four.last().unwrap().1 / one.last().unwrap().1
     );
 
-    bench::time("fig8::generate", 1, 5, || fig8::generate().unwrap());
+    let m = bench::time("fig8::generate", 1, 5, || fig8::generate().unwrap());
+    let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_fig8.json");
+    bench::write_json(&out, &[(&m, None)]).unwrap();
 }

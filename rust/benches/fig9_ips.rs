@@ -17,5 +17,8 @@ fn main() {
         hi[3].1 - lo[3].1 > hi[0].1 - lo[0].1
     );
 
-    bench::time("fig9::generate", 1, 5, || fig9::generate().unwrap());
+    let m = bench::time("fig9::generate", 1, 5, || fig9::generate().unwrap());
+    let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_fig9.json");
+    bench::write_json(&out, &[(&m, None)]).unwrap();
 }

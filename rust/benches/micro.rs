@@ -1,6 +1,11 @@
 //! Micro-benchmarks of the coordinator hot paths (DESIGN.md §6):
 //! task-graph construction, mapper, MAC framing, switch forwarding, DES
 //! pass evaluation, golden kernels, and PJRT step execution.
+//!
+//! Writes `BENCH_micro.json` at the repository root through the shared
+//! [`bench::write_json`] helper.
+
+use std::path::PathBuf;
 
 use omp_fpga::hw::axis::{ip_port, AxisSwitch, Burst, PORT_DMA};
 use omp_fpga::hw::mac::{cells_to_bytes, MacAddr, MacFrame, ETHERTYPE_STENCIL};
@@ -11,7 +16,7 @@ use omp_fpga::omp::TaskGraph;
 use omp_fpga::plugin::mapper;
 use omp_fpga::sim::{Pipeline, Server};
 use omp_fpga::stencil::{Grid, Kernel};
-use omp_fpga::util::bench;
+use omp_fpga::util::bench::{self, Measurement};
 
 fn chain_task(i: usize) -> Task {
     Task {
@@ -27,6 +32,8 @@ fn chain_task(i: usize) -> Task {
 }
 
 fn main() {
+    let mut results: Vec<(Measurement, Option<f64>)> = Vec::new();
+
     // -- task graph construction (240-task pipeline, the paper's size) ---
     let m = bench::time("task-graph build (240-task chain)", 10, 200, || {
         let mut g = TaskGraph::new();
@@ -39,13 +46,16 @@ fn main() {
         "    -> {:.0} tasks/s",
         bench::per_second(&m, 240.0)
     );
+    let thr = bench::per_second(&m, 240.0);
+    results.push((m, Some(thr)));
 
     // -- mapper ----------------------------------------------------------
     let boards = vec![vec![Kernel::Laplace2d; 4]; 6];
     let kernels = vec![Kernel::Laplace2d; 240];
-    bench::time("mapper::assign (240 tasks, 24 IPs)", 10, 200, || {
+    let m = bench::time("mapper::assign (240 tasks, 24 IPs)", 10, 200, || {
         mapper::assign(&boards, &kernels).unwrap().npasses()
     });
+    results.push((m, None));
 
     // -- MAC framing throughput ------------------------------------------
     let cells: Vec<f32> = (0..512 * 1024).map(|i| i as f32).collect(); // 2 MiB
@@ -63,10 +73,9 @@ fn main() {
         let burst = Burst { cells: cells.clone(), stream_id: 0, last: true };
         mfh.pack(&burst).unwrap().len()
     });
-    println!(
-        "    -> {:.2} GB/s framed",
-        bench::per_second(&m, (cells.len() * 4) as f64) / 1e9
-    );
+    let thr = bench::per_second(&m, (cells.len() * 4) as f64);
+    println!("    -> {:.2} GB/s framed", thr / 1e9);
+    results.push((m, Some(thr)));
 
     // -- frame wire roundtrip (pack+CRC+unpack) ---------------------------
     let payload = cells_to_bytes(&cells[..2048]);
@@ -81,27 +90,28 @@ fn main() {
     let m = bench::time("MAC frame wire roundtrip (8 KiB)", 10, 500, || {
         MacFrame::unpack(&frame.pack()).unwrap().payload.len()
     });
-    println!(
-        "    -> {:.2} GB/s on the wire",
-        bench::per_second(&m, frame.wire_bytes() as f64) / 1e9
-    );
+    let thr = bench::per_second(&m, frame.wire_bytes() as f64);
+    println!("    -> {:.2} GB/s on the wire", thr / 1e9);
+    results.push((m, Some(thr)));
 
     // -- switch forwarding -------------------------------------------------
     let mut sw = AxisSwitch::new(7);
     sw.set_route(PORT_DMA, Some(ip_port(0))).unwrap();
     let burst = Burst { cells: vec![0.0; 4096], stream_id: 0, last: true };
-    bench::time("A-SWT forward (4096-cell burst)", 100, 1000, || {
+    let m = bench::time("A-SWT forward (4096-cell burst)", 100, 1000, || {
         sw.forward(PORT_DMA, &burst).unwrap()
     });
+    results.push((m, None));
 
     // -- DES pass (paper-size laplace2d, 6 boards) -------------------------
-    bench::time("DES pass (512 chunks x 38 hops)", 5, 50, || {
+    let m = bench::time("DES pass (512 chunks x 38 hops)", 5, 50, || {
         let hops: Vec<Server> = (0..38)
             .map(|i| Server::new("h", if i % 7 == 0 { 10e9 } else { 51.2e9 }, 1e-7))
             .collect();
         let mut p = Pipeline::new(hops);
         p.stream(0.0, 8.39e6, 16384.0).makespan_s
     });
+    results.push((m, None));
 
     // -- golden kernel (the functional hot loop) ---------------------------
     let g = Grid::random(&[4096, 512], 1).unwrap();
@@ -109,10 +119,9 @@ fn main() {
     let m = bench::time("golden laplace2d apply_into (4096x512)", 2, 20, || {
         Kernel::Laplace2d.apply_into(&g, &mut out).unwrap()
     });
-    println!(
-        "    -> {:.2} Gcell/s",
-        bench::per_second(&m, g.cells() as f64) / 1e9
-    );
+    let thr = bench::per_second(&m, g.cells() as f64);
+    println!("    -> {:.2} Gcell/s", thr / 1e9);
+    results.push((m, Some(thr)));
 
     // -- PJRT step (if artifacts are present) ------------------------------
     if std::path::Path::new("artifacts/manifest.json").exists() {
@@ -122,10 +131,9 @@ fn main() {
         let m = bench::time("PJRT step laplace2d (4096x512)", 2, 20, || {
             exe.run(&g).unwrap().cells()
         });
-        println!(
-            "    -> {:.2} Gcell/s through PJRT",
-            bench::per_second(&m, g.cells() as f64) / 1e9
-        );
+        let thr = bench::per_second(&m, g.cells() as f64);
+        println!("    -> {:.2} Gcell/s through PJRT", thr / 1e9);
+        results.push((m, Some(thr)));
         let chain = rt
             .load_chain(Kernel::Laplace2d, &[4096, 512], 4)
             .unwrap()
@@ -133,11 +141,17 @@ fn main() {
         let m = bench::time("PJRT chain4 laplace2d (4096x512)", 2, 20, || {
             chain.run(&g).unwrap().cells()
         });
-        println!(
-            "    -> {:.2} Gcell/s (4 fused iterations)",
-            bench::per_second(&m, 4.0 * g.cells() as f64) / 1e9
-        );
+        let thr = bench::per_second(&m, 4.0 * g.cells() as f64);
+        println!("    -> {:.2} Gcell/s (4 fused iterations)", thr / 1e9);
+        results.push((m, Some(thr)));
     } else {
         println!("(skipping PJRT benches: run `make artifacts`)");
     }
+
+    let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_micro.json");
+    let refs: Vec<(&Measurement, Option<f64>)> =
+        results.iter().map(|(m, t)| (m, *t)).collect();
+    bench::write_json(&out_path, &refs).unwrap();
 }

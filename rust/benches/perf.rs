@@ -1,0 +1,290 @@
+//! The BENCH harness for the execution hot paths (DESIGN.md §7): graph
+//! build, dispatch drain, cold compile vs cached `Executable::execute`,
+//! and streamed cells/sec on the 8-sweep resident stencil — the
+//! zero-copy engine A/B'd against the retained pre-PR clone-per-step
+//! path (`Vc709Plugin::naive_stream`).
+//!
+//! Writes `BENCH_perf.json` at the repository root (`name →
+//! {median_s, throughput, ...}` plus `stream/resident-8sweep`'s
+//! `speedup_vs_naive`), and prints a ready-to-paste markdown table for
+//! the README's perf section.  Shapes are CI-smoke sized; the relative
+//! numbers, not the absolute ones, are the contract.
+
+use std::path::PathBuf;
+
+use omp_fpga::config::ClusterConfig;
+use omp_fpga::omp::{
+    BatchDag, DataEnv, DeviceId, Dispatcher, EnterMap, ExitMap, MapDir,
+    OmpReport, OmpRuntime, Task, TaskGraph, TaskId,
+};
+use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
+use omp_fpga::stencil::{Grid, Kernel};
+use omp_fpga::util::bench::{self, Measurement};
+use omp_fpga::util::json::{num, Value};
+
+const SWEEPS: usize = 8;
+const STREAM_SHAPE: [usize; 2] = [384, 256];
+
+fn chain_task(dev: usize, i: usize) -> Task {
+    Task {
+        id: TaskId(0),
+        base_name: "f".into(),
+        fn_name: "hw_f".into(),
+        device: DeviceId(dev).into(),
+        maps: vec![(MapDir::ToFrom, "V".into())],
+        deps_in: vec![omp_fpga::omp::DepVar(i)],
+        deps_out: vec![omp_fpga::omp::DepVar(i + 1)],
+        nowait: true,
+    }
+}
+
+fn independent_task(dev: usize, i: usize) -> Task {
+    Task {
+        id: TaskId(0),
+        base_name: "f".into(),
+        fn_name: "hw_f".into(),
+        device: DeviceId(dev).into(),
+        maps: vec![(MapDir::ToFrom, "V".into())],
+        deps_in: vec![],
+        deps_out: vec![omp_fpga::omp::DepVar(1_000_000 + i)],
+        nowait: true,
+    }
+}
+
+/// Runtime for the 8-sweep resident stencil: one board, two diffusion
+/// IPs, a host monitor task splitting each sweep into its own FPGA
+/// batch (the `ablation.rs` case-5 shape at bench size).
+fn stream_runtime(naive: bool) -> (OmpRuntime, DeviceId) {
+    let kernel = Kernel::Diffusion2d;
+    let mut rt = OmpRuntime::new(2);
+    rt.declare_hw_variant("do_step", "vc709", "hw_step", kernel);
+    rt.register_software("monitor", |env| {
+        let mut r = env.take("R")?;
+        for v in r.data_mut() {
+            *v += 1.0;
+        }
+        env.put("R", r);
+        Ok(())
+    });
+    let cfg = ClusterConfig::homogeneous(1, 2, kernel);
+    let mut plugin = Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap();
+    plugin.naive_stream = naive;
+    let fpga = rt.register_device(Box::new(plugin));
+    (rt, fpga)
+}
+
+fn stream_env() -> DataEnv {
+    let mut env = DataEnv::new();
+    env.insert("V", Grid::random(&STREAM_SHAPE, 5).unwrap());
+    env.insert("R", Grid::zeros(&[1, 1]).unwrap());
+    env
+}
+
+fn sweep_region(rt: &mut OmpRuntime, env: &mut DataEnv, fpga: DeviceId) -> OmpReport {
+    let deps = rt.dep_vars(3 * SWEEPS + 2);
+    rt.parallel(env, |ctx| {
+        for s in 0..SWEEPS {
+            for i in 0..2 {
+                ctx.target("do_step")
+                    .device(fpga)
+                    .map(MapDir::ToFrom, "V")
+                    .depend_in(deps[3 * s + i])
+                    .depend_out(deps[3 * s + i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            ctx.task("monitor")
+                .map(MapDir::ToFrom, "R")
+                .depend_in(deps[3 * s + 2])
+                .depend_out(deps[3 * s + 3])
+                .nowait()
+                .submit()?;
+        }
+        Ok(())
+    })
+    .unwrap()
+}
+
+/// One full resident run from a fresh runtime, for the bit-identity
+/// check between the zero-copy and naive engines.
+fn checked_run(naive: bool) -> (Grid, Vec<(usize, usize, f64, f64)>) {
+    let (mut rt, fpga) = stream_runtime(naive);
+    let mut env = stream_env();
+    rt.target_enter_data(fpga, &env, &[(EnterMap::To, "V")]).unwrap();
+    let report = sweep_region(&mut rt, &mut env, fpga);
+    rt.target_exit_data(fpga, &[(ExitMap::From, "V")]).unwrap();
+    let trace = report
+        .batches
+        .iter()
+        .map(|(d, r)| (d.0, r.tasks_run, r.release_s, r.finish_s))
+        .collect();
+    (env.take("V").unwrap(), trace)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut entries: Vec<(String, Value)> = Vec::new();
+    let mut table: Vec<(String, f64, String)> = Vec::new();
+    let push = |m: &Measurement,
+                    thr: Option<f64>,
+                    unit: &str,
+                    entries: &mut Vec<(String, Value)>,
+                    table: &mut Vec<(String, f64, String)>| {
+        entries.push((m.name.clone(), m.to_json(thr)));
+        table.push((
+            m.name.clone(),
+            m.median.as_secs_f64(),
+            thr.map(|t| format!("{t:.3e} {unit}")).unwrap_or_default(),
+        ));
+    };
+
+    // -- graph build: the 100k-task pipeline ------------------------------
+    const N: usize = 100_000;
+    let m = bench::time("graph-build/100k-chain", 1, 3, || {
+        let mut g = TaskGraph::new();
+        for i in 0..N {
+            g.add(chain_task(1, i));
+        }
+        g.len()
+    });
+    push(&m, Some(bench::per_second(&m, N as f64)), "tasks/s", &mut entries, &mut table);
+
+    // -- graph build: anti-dependence fan-in ------------------------------
+    // 10 rounds of 2k readers followed by one writer — the shape whose
+    // reader walk used to cost O(R²) per writer
+    let m = bench::time("graph-build/fan-in-20k-readers", 1, 3, || {
+        let mut g = TaskGraph::new();
+        for round in 0..10 {
+            for _ in 0..2_000 {
+                g.add(Task {
+                    deps_in: vec![omp_fpga::omp::DepVar(0)],
+                    deps_out: vec![],
+                    ..chain_task(1, round)
+                });
+            }
+            g.add(Task {
+                deps_in: vec![],
+                deps_out: vec![omp_fpga::omp::DepVar(0)],
+                ..chain_task(1, round)
+            });
+        }
+        g.len()
+    });
+    push(&m, Some(bench::per_second(&m, 20_010.0)), "tasks/s", &mut entries, &mut table);
+
+    // -- dispatch: drain 100k independent runs over 3 devices --------------
+    let dag = {
+        let mut g = TaskGraph::new();
+        for i in 0..N {
+            g.add(independent_task(1 + i % 3, i));
+        }
+        BatchDag::build(&g).unwrap()
+    };
+    // pre-clone outside the timed region (warmup + iters consumers) so
+    // the runs/s metric times the dispatcher, not BatchDag::clone
+    let mut dag_pool: Vec<BatchDag> = (0..4).map(|_| dag.clone()).collect();
+    let m = bench::time("dispatch/100k-runs-3-devices", 1, 3, || {
+        let mut d =
+            Dispatcher::new(dag_pool.pop().unwrap_or_else(|| dag.clone()));
+        let mut n = 0usize;
+        while let Some((r, rel)) = d.next() {
+            d.complete(r, rel + 1e-4).unwrap();
+            n += 1;
+        }
+        assert!(d.is_complete());
+        n
+    });
+    push(&m, Some(bench::per_second(&m, N as f64)), "runs/s", &mut entries, &mut table);
+
+    // -- compile once vs cached execute ------------------------------------
+    let kernel = Kernel::Diffusion2d;
+    let mut rt = OmpRuntime::new(2);
+    rt.declare_hw_variant("do_step", "vc709", "hw_step", kernel);
+    let cfg = ClusterConfig::homogeneous(1, 2, kernel);
+    let fpga = rt
+        .register_device(Box::new(Vc709Plugin::new(&cfg, ExecBackend::Golden)?));
+    let mut env = DataEnv::new();
+    env.insert("V", Grid::random(&[32, 24], 3)?);
+    let deps = rt.dep_vars(9);
+    let program = rt.capture(&env, |ctx| {
+        for i in 0..8 {
+            ctx.target("do_step")
+                .device(fpga)
+                .map(MapDir::ToFrom, "V")
+                .depend_in(deps[i])
+                .depend_out(deps[i + 1])
+                .nowait()
+                .submit()?;
+        }
+        Ok(())
+    })?;
+    let m = bench::time("compile/8-task-chain-cold", 2, 20, || {
+        program.compile(&mut rt).unwrap().batch_count()
+    });
+    push(&m, Some(bench::per_second(&m, 1.0)), "plans/s", &mut entries, &mut table);
+    let exe = program.compile(&mut rt)?;
+    let m = bench::time("execute/8-task-chain-cached", 2, 20, || {
+        exe.execute(&mut rt, &mut env).unwrap().tasks
+    });
+    push(&m, Some(bench::per_second(&m, 1.0)), "executions/s", &mut entries, &mut table);
+
+    // -- streamed cells/sec: 8-sweep resident stencil ----------------------
+    // identical inputs through both engines must agree bit-for-bit
+    // before their throughputs are worth comparing
+    let (g_zero, t_zero) = checked_run(false);
+    let (g_naive, t_naive) = checked_run(true);
+    assert_eq!(g_zero, g_naive, "zero-copy grids diverged from naive");
+    assert_eq!(t_zero, t_naive, "zero-copy schedule diverged from naive");
+
+    let cells_per_region = (SWEEPS * 2 * STREAM_SHAPE[0] * STREAM_SHAPE[1]) as f64;
+    let stream_bench = |naive: bool, name: &str| {
+        let (mut rt, fpga) = stream_runtime(naive);
+        let mut env = stream_env();
+        rt.target_enter_data(fpga, &env, &[(EnterMap::To, "V")]).unwrap();
+        let m = bench::time(name, 2, 12, || {
+            sweep_region(&mut rt, &mut env, fpga).tasks
+        });
+        let thr = bench::per_second(&m, cells_per_region);
+        (m, thr)
+    };
+    let (m_naive, thr_naive) =
+        stream_bench(true, "stream/resident-8sweep-naive");
+    let (m_zero, thr_zero) = stream_bench(false, "stream/resident-8sweep");
+    let speedup = thr_zero / thr_naive;
+    println!(
+        "    -> zero-copy {:.3e} cells/s vs naive {:.3e} cells/s \
+         ({speedup:.2}x)",
+        thr_zero, thr_naive
+    );
+    if speedup < 2.0 {
+        eprintln!(
+            "WARNING: zero-copy streaming below the 2x target \
+             ({speedup:.2}x) — allocator traffic crept back into the hot \
+             path?"
+        );
+    }
+    push(&m_naive, Some(thr_naive), "cells/s", &mut entries, &mut table);
+    let mut zero_entry = m_zero.to_json(Some(thr_zero));
+    if let Value::Obj(o) = &mut zero_entry {
+        o.insert("speedup_vs_naive".into(), num(speedup));
+    }
+    entries.push((m_zero.name.clone(), zero_entry));
+    table.push((
+        m_zero.name.clone(),
+        m_zero.median.as_secs_f64(),
+        format!("{thr_zero:.3e} cells/s ({speedup:.2}x vs naive)"),
+    ));
+
+    // -- report -------------------------------------------------------------
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_perf.json");
+    bench::write_report(&out, entries)?;
+
+    println!("\nREADME perf table (paste under `## Performance`):\n");
+    println!("| bench | median | throughput |");
+    println!("|-------|--------|------------|");
+    for (name, median, thr) in &table {
+        println!("| `{name}` | {median:.6} s | {thr} |");
+    }
+    Ok(())
+}

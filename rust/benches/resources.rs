@@ -46,7 +46,7 @@ fn main() {
         assert_eq!(r.dsp, d, "{name} DSP");
     }
 
-    bench::time("resource estimation (5 kernels)", 10, 100, || {
+    let m = bench::time("resource estimation (5 kernels)", 10, 100, || {
         PAPER
             .iter()
             .map(|(n, s, ..)| {
@@ -54,4 +54,7 @@ fn main() {
             })
             .sum::<usize>()
     });
+    let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_resources.json");
+    bench::write_json(&out, &[(&m, None)]).unwrap();
 }

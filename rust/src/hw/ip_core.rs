@@ -19,6 +19,14 @@ pub const PES_PER_IP: usize = 8;
 /// the golden model (plugin::exec_backend).
 pub trait StepExecutor {
     fn step(&mut self, kernel: Kernel, grid: &Grid) -> Result<Grid>;
+    /// One iteration into a caller-owned buffer (the zero-copy hot
+    /// path): `dst` must have `src`'s shape and is fully overwritten.
+    /// The default allocates through [`StepExecutor::step`]; backends
+    /// on the streaming path override it.
+    fn step_into(&mut self, kernel: Kernel, src: &Grid, dst: &mut Grid) -> Result<()> {
+        *dst = self.step(kernel, src)?;
+        Ok(())
+    }
     /// Executes k fused iterations if a fused artifact exists; default
     /// falls back to k single steps.
     fn step_k(&mut self, kernel: Kernel, grid: &Grid, k: usize) -> Result<Grid> {
@@ -27,6 +35,44 @@ pub trait StepExecutor {
             g = self.step(kernel, &g)?;
         }
         Ok(g)
+    }
+    /// Whether the `*_into` variants actually consult the caller's
+    /// scratch buffer.  Backends that own their output buffers (PJRT)
+    /// override to `false` so callers can skip the full-grid scratch
+    /// allocation and pass a stub instead; the default `step_k_into`
+    /// stays correct either way (it falls back to a local buffer when
+    /// handed a mismatched stub).
+    fn uses_scratch(&self) -> bool {
+        true
+    }
+    /// k fused iterations ping-ponging two caller-owned buffers: `cur`
+    /// holds the input on entry and the result on return; `scratch` is
+    /// clobbered when it matches `cur`'s shape.  A mismatched `scratch`
+    /// (the stub a caller passes when [`StepExecutor::uses_scratch`] is
+    /// false) makes the default fall back to one local allocation
+    /// instead of erroring.  Numerically identical to
+    /// [`StepExecutor::step_k`], without its per-step allocations once
+    /// `step_into` is overridden.
+    fn step_k_into(
+        &mut self,
+        kernel: Kernel,
+        k: usize,
+        cur: &mut Grid,
+        scratch: &mut Grid,
+    ) -> Result<()> {
+        if scratch.shape() != cur.shape() {
+            let mut local = Grid::zeros(cur.shape())?;
+            for _ in 0..k {
+                self.step_into(kernel, cur, &mut local)?;
+                std::mem::swap(cur, &mut local);
+            }
+            return Ok(());
+        }
+        for _ in 0..k {
+            self.step_into(kernel, cur, scratch)?;
+            std::mem::swap(cur, scratch);
+        }
+        Ok(())
     }
     /// Human-readable backend name for reports.
     fn backend_name(&self) -> &'static str;
@@ -155,6 +201,34 @@ mod tests {
         let got = Golden.step_k(Kernel::Diffusion2d, &g, 3).unwrap();
         let want = Kernel::Diffusion2d.iterate(&g, 3).unwrap();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn default_into_variants_match_allocating_ones() {
+        let g = Grid::random(&[6, 5], 2).unwrap();
+        let mut dst = Grid::zeros(&[6, 5]).unwrap();
+        Golden.step_into(Kernel::Jacobi9pt, &g, &mut dst).unwrap();
+        assert_eq!(dst, Golden.step(Kernel::Jacobi9pt, &g).unwrap());
+        let mut cur = g.clone();
+        let mut scratch = Grid::zeros(&[6, 5]).unwrap();
+        Golden
+            .step_k_into(Kernel::Jacobi9pt, 3, &mut cur, &mut scratch)
+            .unwrap();
+        assert_eq!(cur, Golden.step_k(Kernel::Jacobi9pt, &g, 3).unwrap());
+    }
+
+    #[test]
+    fn default_step_k_into_tolerates_a_stub_scratch() {
+        // a caller honoring `uses_scratch() == false` passes a 1-cell
+        // stub; the default implementation must fall back to a local
+        // buffer, not error or corrupt
+        let g = Grid::random(&[5, 5], 4).unwrap();
+        let mut cur = g.clone();
+        let mut stub = Grid::zeros(&[1, 1]).unwrap();
+        Golden
+            .step_k_into(Kernel::Diffusion2d, 2, &mut cur, &mut stub)
+            .unwrap();
+        assert_eq!(cur, Golden.step_k(Kernel::Diffusion2d, &g, 2).unwrap());
     }
 
     #[test]

@@ -27,6 +27,13 @@ pub struct TaskGraph {
     preds: Vec<Vec<TaskId>>,
     succs: Vec<Vec<TaskId>>,
     addr: BTreeMap<DepVar, AddrState>,
+    /// last-seen marker per source task: `edge_mark[from] == to` means
+    /// the edge `from -> to` was already recorded while adding task
+    /// `to`.  Task ids are unique, so one stamp replaces the old
+    /// `preds.contains` scan — a k-wide fan-in costs O(k), not O(k²),
+    /// which is what keeps 100k-task graph builds linear
+    /// (`benches/perf.rs`).
+    edge_mark: Vec<usize>,
 }
 
 impl TaskGraph {
@@ -57,11 +64,18 @@ impl TaskGraph {
         task.id = id;
         self.preds.push(Vec::new());
         self.succs.push(Vec::new());
+        self.edge_mark.push(usize::MAX);
 
-        let add_edge = |from: TaskId, to: TaskId, preds: &mut Vec<Vec<TaskId>>, succs: &mut Vec<Vec<TaskId>>| {
+        let add_edge = |from: TaskId,
+                        to: TaskId,
+                        preds: &mut Vec<Vec<TaskId>>,
+                        succs: &mut Vec<Vec<TaskId>>,
+                        mark: &mut Vec<usize>| {
             // a task never depends on itself (e.g. the same address listed
-            // in both depend(in:) and depend(out:) of one task)
-            if from != to && !preds[to.0].contains(&from) {
+            // in both depend(in:) and depend(out:) of one task); the
+            // last-seen stamp dedups repeat sources in O(1)
+            if from != to && mark[from.0] != to.0 {
+                mark[from.0] = to.0;
                 preds[to.0].push(from);
                 succs[from.0].push(to);
             }
@@ -70,18 +84,24 @@ impl TaskGraph {
         for dv in &task.deps_in {
             let st = self.addr.entry(*dv).or_default();
             if let Some(w) = st.last_out {
-                add_edge(w, id, &mut self.preds, &mut self.succs);
+                add_edge(w, id, &mut self.preds, &mut self.succs, &mut self.edge_mark);
             }
-            st.readers_since.push(id);
+            // a task listing one address several times in depend(in:)
+            // reads it once — dedup at insert (consecutive within this
+            // add) so the address's next writer doesn't walk duplicate
+            // reader entries
+            if st.readers_since.last() != Some(&id) {
+                st.readers_since.push(id);
+            }
         }
         for dv in &task.deps_out {
             let st = self.addr.entry(*dv).or_default();
             if let Some(w) = st.last_out {
-                add_edge(w, id, &mut self.preds, &mut self.succs);
+                add_edge(w, id, &mut self.preds, &mut self.succs, &mut self.edge_mark);
             }
             for r in std::mem::take(&mut st.readers_since) {
                 if r != id {
-                    add_edge(r, id, &mut self.preds, &mut self.succs);
+                    add_edge(r, id, &mut self.preds, &mut self.succs, &mut self.edge_mark);
                 }
             }
             st.last_out = Some(id);
@@ -232,6 +252,44 @@ mod tests {
         // and a subsequent reader depends only on the new writer
         let r3 = g.add(task(1, &[0], &[]));
         assert_eq!(g.preds(r3), &[w]);
+    }
+
+    #[test]
+    fn repeated_dep_vars_produce_single_edges() {
+        // a task repeating one address in depend(in:) registers as one
+        // reader, and a writer repeating addresses in depend(out:) adds
+        // one edge per predecessor — never duplicates
+        let mut g = TaskGraph::new();
+        let w0 = g.add(task(1, &[], &[0, 0]));
+        let r = g.add(task(1, &[0, 0, 0], &[]));
+        assert_eq!(g.preds(r), &[w0]);
+        assert_eq!(g.succs(w0), &[r]);
+        let w1 = g.add(task(1, &[], &[0, 0]));
+        // anti-dependence on the (deduped) reader plus the output
+        // dependence on w0: each exactly once
+        let mut p = g.preds(w1).to_vec();
+        p.sort();
+        assert_eq!(p, vec![w0, r]);
+        assert_eq!(g.succs(r), &[w1]);
+        // reading and writing the same address in one task stays
+        // self-edge-free
+        let rw = g.add(task(1, &[0], &[0]));
+        assert_eq!(g.preds(rw), &[w1]);
+        assert!(!g.succs(rw).contains(&rw));
+    }
+
+    #[test]
+    fn wide_fan_in_edges_exactly_once_per_reader() {
+        let mut g = TaskGraph::new();
+        let readers: Vec<TaskId> =
+            (0..50).map(|_| g.add(task(1, &[0], &[]))).collect();
+        let w = g.add(task(1, &[], &[0]));
+        let mut p = g.preds(w).to_vec();
+        p.sort();
+        assert_eq!(p, readers);
+        for r in &readers {
+            assert_eq!(g.succs(*r), &[w]);
+        }
     }
 
     #[test]

@@ -621,7 +621,10 @@ impl OmpRuntime {
         }
         let fp = self.residency_fingerprint(program);
         if let Some(hit) = self.plan_cache.get(&program.shape_hash) {
-            if hit.exe.epoch == self.epoch && hit.fingerprint == fp {
+            if hit.exe.epoch == self.epoch
+                && hit.fingerprint == fp
+                && structure_matches(&hit.exe.plan, program)
+            {
                 self.plan_stats.cache_hits += 1;
                 return Ok(hit.exe.clone());
             }
@@ -630,10 +633,16 @@ impl OmpRuntime {
                     "plan {:#018x} recompiled: runtime changed ({})",
                     program.shape_hash, self.epoch_reason
                 )
-            } else {
+            } else if hit.fingerprint != fp {
                 format!(
                     "plan {:#018x} recompiled: mapped-buffer residency \
                      changed since compile",
+                    program.shape_hash
+                )
+            } else {
+                format!(
+                    "plan {:#018x} recompiled: graph-shape hash collision \
+                     (different region structure behind one 64-bit key)",
                     program.shape_hash
                 )
             };
@@ -826,6 +835,33 @@ impl OmpRuntime {
 /// Release instant of run `r`: the max finish over its predecessor runs.
 fn release_of(runs: &[PlanRun], finish: &[f64], r: usize) -> f64 {
     runs[r].preds.iter().map(|&p| finish[p]).fold(0.0f64, f64::max)
+}
+
+/// Collision guard for the plan cache: a shape-hash hit must also match
+/// the captured structure before the cached plan replays — a 64-bit
+/// hash collision between two different regions must recompile, never
+/// silently execute the other region's schedule.  Devices and resolved
+/// function names are deliberately excluded: compilation rewrites them
+/// for placed `device(any)` tasks, and they are already pinned by the
+/// epoch check.
+fn structure_matches(plan: &CompiledPlan, program: &Program) -> bool {
+    plan.slots == program.slots
+        && plan.graph.len() == program.graph.len()
+        && plan
+            .graph
+            .tasks
+            .iter()
+            .zip(&program.graph.tasks)
+            .all(|(a, b)| {
+                a.base_name == b.base_name
+                    && a.maps == b.maps
+                    && a.nowait == b.nowait
+            })
+        && program
+            .graph
+            .tasks
+            .iter()
+            .all(|t| plan.graph.preds(t.id) == program.graph.preds(t.id))
 }
 
 /// The forced-writeback rule for one batch, shared **verbatim** by
@@ -1030,6 +1066,43 @@ mod tests {
         assert_eq!(rt.plan_stats().plans_built, 2);
         assert_eq!(rt.plan_stats().cache_hits, 0);
         assert!(env.get("V").unwrap().data().iter().all(|&v| v == 4.0));
+    }
+
+    #[test]
+    fn cache_hit_guard_rejects_structural_mismatch() {
+        // the shape-hash alone never clears a cache hit: a different
+        // task count, dependence structure or slot shape behind the
+        // same key must read as a mismatch (hash-collision guard)
+        let mut rt = inc_runtime();
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        let capture_n = |rt: &mut OmpRuntime, env: &DataEnv, n: usize| {
+            let deps = rt.dep_vars(n + 1);
+            rt.capture(env, |ctx| {
+                for i in 0..n {
+                    ctx.task("inc")
+                        .map(MapDir::ToFrom, "V")
+                        .depend_in(deps[i])
+                        .depend_out(deps[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+                Ok(())
+            })
+            .unwrap()
+        };
+        let p2 = capture_n(&mut rt, &env, 2);
+        let exe = rt.compile(&p2).unwrap();
+        assert!(structure_matches(&exe.plan, &p2));
+        // same program re-captured over fresh dep addresses still matches
+        let p2_again = capture_n(&mut rt, &env, 2);
+        assert!(structure_matches(&exe.plan, &p2_again));
+        let p3 = capture_n(&mut rt, &env, 3);
+        assert!(!structure_matches(&exe.plan, &p3));
+        let mut env8 = DataEnv::new();
+        env8.insert("V", Grid::zeros(&[8, 8]).unwrap());
+        let p2_wide = capture_n(&mut rt, &env8, 2);
+        assert!(!structure_matches(&exe.plan, &p2_wide));
     }
 
     #[test]

@@ -50,6 +50,13 @@ pub struct Vc709Plugin {
     /// by ~10% because it quarters the Grid<->Literal marshalling copies
     /// (16 MB per call on the paper grid).  Default **on**.
     pub fuse_chains: bool,
+    /// Route functional streaming through the pre-zero-copy path:
+    /// clone-per-step backend calls, a placeholder grid allocated per
+    /// parked pass and a re-copying VFIFO drain.  Kept behind this flag
+    /// (default **off**) as the A/B baseline `benches/perf.rs` measures
+    /// and the differential property tests compare against — grids and
+    /// schedules are bit-identical either way (DESIGN.md §7).
+    pub naive_stream: bool,
     /// report of the last batch, for inspection
     pub last_assignment: Option<Assignment>,
 }
@@ -85,6 +92,7 @@ impl Vc709Plugin {
             backend_kind: backend,
             timing: config.timing.clone(),
             fuse_chains: true,
+            naive_stream: false,
             last_assignment: None,
         })
     }
@@ -239,11 +247,164 @@ impl Vc709Plugin {
     // Functional streaming (one pass)
     // ---------------------------------------------------------------------
 
-    /// One pass, functionally: every burst consults the decoded switch
-    /// routes; crossings really pack MAC frames; numerics run through the
-    /// backend.  On non-final passes the grid parks in board 0's VFIFO and
-    /// a same-shape placeholder threads back to the caller.
-    fn stream_pass_impl(
+    /// One pass, functionally and allocation-free: every burst consults
+    /// the decoded switch routes; crossings really pack MAC frames;
+    /// numerics run in place through the backend's `step_k_into` against
+    /// the caller-owned `scratch`.  `grid` is `Some` when the stream
+    /// enters from the host (first pass) and `None` when it enters from
+    /// the VFIFO park; the return value is `Some` only when the final
+    /// pass delivers the grid back to the host — a parked stream returns
+    /// `None` instead of allocating a placeholder.  The cell buffer
+    /// itself threads through every hop by move: `into_data` →
+    /// bursts → `from_vec` are all zero-copy (DESIGN.md §7).
+    fn stream_pass(
+        &mut self,
+        grid: Option<Grid>,
+        scratch: &mut Grid,
+        groups: &[(usize, Vec<usize>)],
+        first_pass: bool,
+        final_pass: bool,
+        shape: &[usize],
+    ) -> Result<Option<Grid>> {
+        // host -> board 0 entry
+        let mut data = if first_pass {
+            let g = grid.ok_or_else(|| {
+                anyhow::anyhow!("first pass entered without a host grid")
+            })?;
+            self.cluster.boards[0].dma.h2c(g.into_data())
+        } else {
+            // from the VFIFO loop: the previous pass parked it there as
+            // one burst, whose buffer is taken back without re-copying
+            let mut bursts = self.cluster.boards[0].vfifo.drain();
+            let cells = match bursts.len() {
+                0 => Vec::new(),
+                1 => bursts.remove(0).cells,
+                _ => {
+                    let mut cells = Vec::with_capacity(
+                        bursts.iter().map(|b| b.cells.len()).sum(),
+                    );
+                    for b in bursts {
+                        cells.extend(b.cells);
+                    }
+                    cells
+                }
+            };
+            if cells.is_empty() {
+                bail!("VFIFO empty at pass start (routing bug)");
+            }
+            cells
+        };
+
+        let mut ingress = if first_pass { PORT_DMA } else { PORT_VFIFO };
+        // MFH stream ids were assigned in crossing order by program_pass
+        let mut crossing: u16 = 0;
+        for (gi, (b, ips)) in groups.iter().enumerate() {
+            if gi == 0 && *b != 0 {
+                bail!("pass must start on board 0 (mapper bug)");
+            }
+            // traverse this board's IP chain, fusing same-kernel runs
+            let mut fuse_run: Vec<usize> = Vec::new();
+            let mut i_iter = ips.iter().peekable();
+            while let Some(&i) = i_iter.next() {
+                let burst =
+                    Burst { cells: data, stream_id: crossing, last: true };
+                let egress = self.cluster.boards[*b]
+                    .switch
+                    .forward(ingress, &burst)
+                    .with_context(|| format!("board {b} ingress {ingress}"))?;
+                if egress != ip_port(i) {
+                    bail!(
+                        "route mismatch on board {b}: ingress {ingress} -> \
+                         egress {egress}, expected IP port {}",
+                        ip_port(i)
+                    );
+                }
+                data = burst.cells;
+                fuse_run.push(i);
+                ingress = ip_port(i);
+                let next_same = i_iter.peek().is_some_and(|&&n| {
+                    self.cluster.boards[*b].ips[n].kernel
+                        == self.cluster.boards[*b].ips[i].kernel
+                });
+                if !(self.fuse_chains && next_same) {
+                    let mut g = Grid::from_vec(shape, data)?;
+                    let k = self.cluster.boards[*b].ips[fuse_run[0]].kernel;
+                    for &fi in &fuse_run {
+                        if !self.cluster.boards[*b].ips[fi].enabled {
+                            bail!("board {b} IP {fi} not enabled (CONF bug)");
+                        }
+                        self.cluster.boards[*b].ips[fi].invocations += 1;
+                        self.cluster.boards[*b].ips[fi].cells_processed +=
+                            g.cells() as u64;
+                    }
+                    self.backend
+                        .step_k_into(k, fuse_run.len(), &mut g, scratch)
+                        .with_context(|| {
+                            format!("executing {} on board {b}", k.name())
+                        })?;
+                    data = g.into_data();
+                    fuse_run.clear();
+                }
+            }
+            // leave this board: consult the exit route
+            let burst = Burst { cells: data, stream_id: crossing, last: true };
+            let egress =
+                self.cluster.boards[*b].switch.forward(ingress, &burst)?;
+            data = burst.cells;
+            let is_last_group = gi + 1 == groups.len();
+            match (is_last_group, egress) {
+                (false, e) if e == PORT_NET => {
+                    let dst_board = groups[gi + 1].0;
+                    data = self.ship_ring(*b, dst_board, crossing, data)?;
+                    crossing += 1;
+                    ingress = PORT_NET;
+                }
+                (true, e) if e == PORT_NET => {
+                    // wrap the ring back to board 0
+                    data = self.ship_ring(*b, 0, crossing, data)?;
+                    if final_pass {
+                        data = self.cluster.boards[0].dma.c2h(data);
+                    } else {
+                        self.cluster.boards[0].vfifo.push(Burst {
+                            cells: std::mem::take(&mut data),
+                            stream_id: crossing,
+                            last: true,
+                        })?;
+                    }
+                }
+                (true, e) if e == PORT_DMA => {
+                    debug_assert!(final_pass && *b == 0);
+                    data = self.cluster.boards[0].dma.c2h(data);
+                }
+                (true, e) if e == PORT_VFIFO => {
+                    debug_assert!(!final_pass && *b == 0);
+                    self.cluster.boards[0].vfifo.push(Burst {
+                        cells: std::mem::take(&mut data),
+                        stream_id: crossing,
+                        last: true,
+                    })?;
+                }
+                (last, e) => bail!(
+                    "unexpected egress {e} leaving board {b} \
+                     (last_group={last})"
+                ),
+            }
+        }
+        if final_pass {
+            Ok(Some(Grid::from_vec(shape, data)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// The pre-zero-copy pass implementation, kept verbatim behind
+    /// [`Vc709Plugin::naive_stream`]: `step_k` clones per iteration, a
+    /// parked pass hands a freshly allocated placeholder back to the
+    /// caller, and the VFIFO drain re-copies the cells.  Bit-identical
+    /// grids and schedules by construction (the timing plane is shared);
+    /// only the host-side allocator traffic differs — which is exactly
+    /// the A/B `benches/perf.rs` quantifies.
+    fn stream_pass_naive(
         &mut self,
         grid: Grid,
         groups: &[(usize, Vec<usize>)],
@@ -268,13 +429,11 @@ impl Vc709Plugin {
         };
 
         let mut ingress = if first_pass { PORT_DMA } else { PORT_VFIFO };
-        // MFH stream ids were assigned in crossing order by program_pass
         let mut crossing: u16 = 0;
         for (gi, (b, ips)) in groups.iter().enumerate() {
             if gi == 0 && *b != 0 {
                 bail!("pass must start on board 0 (mapper bug)");
             }
-            // traverse this board's IP chain, fusing same-kernel runs
             let mut fuse_run: Vec<usize> = Vec::new();
             let mut i_iter = ips.iter().peekable();
             while let Some(&i) = i_iter.next() {
@@ -333,7 +492,6 @@ impl Vc709Plugin {
                     ingress = PORT_NET;
                 }
                 (true, e) if e == PORT_NET => {
-                    // wrap the ring back to board 0
                     data = self.ship_ring(*b, 0, crossing, data)?;
                     if final_pass {
                         data = self.cluster.boards[0].dma.c2h(data);
@@ -793,9 +951,26 @@ impl DevicePlugin for Vc709Plugin {
         // environment stays the functional truth, which is what makes
         // resident and always-stream executions bit-identical.  Skipped
         // entirely in timing-only mode (figure sweeps; numerics are
-        // identity).
+        // identity).  One caller-owned ping-pong pair serves the whole
+        // segment: `grid` is `Some` while the stream is host-side (before
+        // the first pass, after the final one) and `None` while parked in
+        // the VFIFO between passes; `scratch` is the single per-segment
+        // allocation the backend's in-place kernels swap against.
         for seg in &segs {
-            let mut grid = env.take(&seg.buffer)?;
+            let mut grid = Some(env.take(&seg.buffer)?);
+            let stream = self.backend_kind != ExecBackend::TimingOnly;
+            // a backend that owns its outputs (PJRT) never touches the
+            // ping-pong scratch, so it gets a 1-cell stub instead of a
+            // dead full-grid allocation per segment
+            let mut scratch = if stream && !self.naive_stream {
+                Some(if self.backend.uses_scratch() {
+                    Grid::zeros(&seg.shape)?
+                } else {
+                    Grid::zeros(&[1, 1])?
+                })
+            } else {
+                None
+            };
             let npasses = seg.assignment.npasses();
             for p in 0..npasses {
                 let slots = seg.assignment.pass_slots(p);
@@ -807,11 +982,34 @@ impl DevicePlugin for Vc709Plugin {
                 let fin = p + 1 == npasses;
                 let groups =
                     self.program_pass(&slots, first, fin, &pass_kernels)?;
-                if self.backend_kind != ExecBackend::TimingOnly {
-                    grid = self
-                        .stream_pass_impl(grid, &groups, first, fin, &seg.shape)?;
+                if !stream {
+                    continue;
                 }
+                grid = match scratch.as_mut() {
+                    Some(s) => self
+                        .stream_pass(grid.take(), s, &groups, first, fin, &seg.shape)?,
+                    None => {
+                        // pre-PR baseline (behind `naive_stream`): the
+                        // placeholder a parked pass returns keeps the
+                        // Option occupied, exactly as the old code flowed
+                        let g = grid.take().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "pass {p} of segment '{}' lost its grid",
+                                seg.buffer
+                            )
+                        })?;
+                        Some(self.stream_pass_naive(
+                            g, &groups, first, fin, &seg.shape,
+                        )?)
+                    }
+                };
             }
+            let grid = grid.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "segment '{}' ended parked on the device (routing bug)",
+                    seg.buffer
+                )
+            })?;
             env.put(&seg.buffer, grid);
         }
 
@@ -989,6 +1187,66 @@ mod tests {
         assert!(plugin
             .estimate_batch_s(&graph, &ids, &soft, &fns, &env, &none)
             .is_none());
+    }
+
+    #[test]
+    fn zero_copy_stream_matches_naive_bit_exactly() {
+        // single-board VFIFO loop-backs, fused same-kernel chains, ring
+        // crossings with wrap, and multi-pass ring shapes: the zero-copy
+        // engine and the retained pre-PR clone-per-step path must agree
+        // bit-for-bit on grids, timing and IP accounting
+        let kernel = Kernel::Diffusion2d;
+        let input = Grid::random(&[12, 10], 7).unwrap();
+        for (boards, ips, tasks) in
+            [(1usize, 1usize, 4usize), (1, 2, 4), (3, 1, 5), (2, 2, 3)]
+        {
+            let cfg = ClusterConfig::homogeneous(boards, ips, kernel);
+            let mut graph = TaskGraph::new();
+            let mut fns = FnRegistry::default();
+            fns.register("hw_f", crate::omp::TaskFn::HwKernel(kernel));
+            let mut ids = Vec::new();
+            for i in 0..tasks {
+                ids.push(graph.add(Task {
+                    id: TaskId(0),
+                    base_name: "f".into(),
+                    fn_name: "hw_f".into(),
+                    device: crate::omp::DeviceId(1).into(),
+                    maps: vec![(crate::omp::MapDir::ToFrom, "V".into())],
+                    deps_in: vec![DepVar(i)],
+                    deps_out: vec![DepVar(i + 1)],
+                    nowait: true,
+                }));
+            }
+            let run = |naive: bool| {
+                let mut plugin =
+                    Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap();
+                plugin.naive_stream = naive;
+                let mut env = DataEnv::new();
+                env.insert("V", input.clone());
+                let rep = plugin
+                    .run_batch(&graph, &ids, &mut env, &fns, &BatchCtx::at(0.25))
+                    .unwrap();
+                let invocations: Vec<u64> = plugin
+                    .cluster
+                    .boards
+                    .iter()
+                    .flat_map(|b| b.ips.iter().map(|ip| ip.invocations))
+                    .collect();
+                (
+                    env.take("V").unwrap(),
+                    rep.release_s,
+                    rep.finish_s,
+                    rep.stats.passes,
+                    invocations,
+                )
+            };
+            let zero = run(false);
+            let naive = run(true);
+            assert_eq!(zero, naive, "{boards} boards x {ips} IPs, {tasks} tasks");
+            // and both equal the retained host reference
+            let want = kernel.iterate(&input, tasks).unwrap();
+            assert_eq!(zero.0, want, "{boards}x{ips}: grid diverged");
+        }
     }
 
     fn two_buffer_chain() -> (TaskGraph, Vec<TaskId>) {

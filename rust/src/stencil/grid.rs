@@ -11,32 +11,39 @@ pub struct Grid {
     data: Vec<f32>,
 }
 
+/// Shared shape validation: 2-D or 3-D, no zero axes.  Returns the cell
+/// count so `zeros` and `from_vec` agree on exactly one rule set.
+fn validate_shape(shape: &[usize]) -> Result<usize> {
+    if !(shape.len() == 2 || shape.len() == 3) {
+        bail!("grid must be 2-D or 3-D, got {}D", shape.len());
+    }
+    if shape.iter().any(|&d| d == 0) {
+        bail!("grid axes must be non-zero: {shape:?}");
+    }
+    Ok(shape.iter().product())
+}
+
 impl Grid {
     pub fn zeros(shape: &[usize]) -> Result<Grid> {
-        if !(shape.len() == 2 || shape.len() == 3) {
-            bail!("grid must be 2-D or 3-D, got {}D", shape.len());
-        }
-        if shape.iter().any(|&d| d == 0) {
-            bail!("grid axes must be non-zero: {shape:?}");
-        }
-        Ok(Grid {
-            shape: shape.to_vec(),
-            data: vec![0.0; shape.iter().product()],
-        })
+        let cells = validate_shape(shape)?;
+        Ok(Grid { shape: shape.to_vec(), data: vec![0.0; cells] })
     }
 
+    /// Wrap an existing buffer without allocating: `data` is moved in,
+    /// so re-wrapping a grid that streamed through the fabric
+    /// (`into_data` → hops → `from_vec`) costs only the shape checks —
+    /// the zero-copy boundary the VC709 streaming path leans on.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Grid> {
-        let mut g = Grid::zeros(shape)?;
-        if data.len() != g.data.len() {
+        let cells = validate_shape(shape)?;
+        if data.len() != cells {
             bail!(
                 "data length {} does not match shape {:?} ({})",
                 data.len(),
                 shape,
-                g.data.len()
+                cells
             );
         }
-        g.data = data;
-        Ok(g)
+        Ok(Grid { shape: shape.to_vec(), data })
     }
 
     /// Random grid (splitmix64-seeded, reproducible across the test suite

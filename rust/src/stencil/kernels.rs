@@ -143,14 +143,33 @@ impl Kernel {
         Ok(())
     }
 
-    /// Apply `n` iterations, ping-ponging two buffers.
+    /// Apply `n` iterations ping-ponging two caller-owned buffers:
+    /// `cur` holds the input on entry and the result on return;
+    /// `scratch` (same shape) is clobbered.  The allocation-free core
+    /// of [`Kernel::iterate`] and of the backends' `step_k_into`.
+    pub fn iterate_into(
+        self,
+        n: usize,
+        cur: &mut Grid,
+        scratch: &mut Grid,
+    ) -> Result<()> {
+        for _ in 0..n {
+            self.apply_into(cur, scratch)?;
+            std::mem::swap(cur, scratch);
+        }
+        Ok(())
+    }
+
+    /// Apply `n` iterations, ping-ponging two internally-owned buffers.
     pub fn iterate(self, src: &Grid, n: usize) -> Result<Grid> {
         let mut a = src.clone();
-        let mut b = src.clone();
-        for _ in 0..n {
-            self.apply_into(&a, &mut b)?;
-            std::mem::swap(&mut a, &mut b);
+        if n == 0 {
+            return Ok(a);
         }
+        // scratch contents are irrelevant — apply_into fully overwrites
+        // its destination — so a zero grid avoids the second input copy
+        let mut b = Grid::zeros(src.shape())?;
+        self.iterate_into(n, &mut a, &mut b)?;
         Ok(a)
     }
 }
@@ -401,6 +420,25 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn iterate_into_matches_iterate_bit_exactly() {
+        for k in ALL_KERNELS {
+            let shape: &[usize] = if k.ndim() == 2 { &[7, 6] } else { &[5, 4, 6] };
+            let g = Grid::random(shape, 3).unwrap();
+            for n in 0..4 {
+                let want = k.iterate(&g, n).unwrap();
+                let mut cur = g.clone();
+                let mut scratch = Grid::zeros(shape).unwrap();
+                k.iterate_into(n, &mut cur, &mut scratch).unwrap();
+                assert_eq!(cur, want, "{} n={n}", k.name());
+            }
+        }
+        // shape mismatch between the ping-pong buffers is an error
+        let mut a = Grid::zeros(&[4, 4]).unwrap();
+        let mut b = Grid::zeros(&[4, 5]).unwrap();
+        assert!(Kernel::Laplace2d.iterate_into(1, &mut a, &mut b).is_err());
     }
 
     #[test]

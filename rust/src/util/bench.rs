@@ -1,7 +1,16 @@
 //! Measurement harness (criterion substitute): warmup + N timed iterations,
-//! reporting min/median/mean. Used by `rust/benches/*` (`harness = false`).
+//! reporting min/median/mean/p95. Used by `rust/benches/*` (`harness = false`).
+//!
+//! Every bench can emit machine-readable output through the shared
+//! [`write_json`]/[`write_report`] helpers — one `BENCH_<name>.json`
+//! file per harness, `{name: {median_s, throughput, ...}}`, which is
+//! what the CI `bench-smoke` job uploads and the README perf table is
+//! generated from.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::{num, obj, Value};
 
 #[derive(Debug, Clone)]
 pub struct Measurement {
@@ -10,14 +19,35 @@ pub struct Measurement {
     pub min: Duration,
     pub median: Duration,
     pub mean: Duration,
+    /// 95th-percentile sample (the max for small iteration counts) —
+    /// the tail the serving-path benches watch.
+    pub p95: Duration,
 }
 
 impl Measurement {
     pub fn print(&self) {
         println!(
-            "{:<48} iters={:<4} min={:>10.3?} median={:>10.3?} mean={:>10.3?}",
-            self.name, self.iters, self.min, self.median, self.mean
+            "{:<48} iters={:<4} min={:>10.3?} median={:>10.3?} mean={:>10.3?} p95={:>10.3?}",
+            self.name, self.iters, self.min, self.median, self.mean, self.p95
         );
+    }
+
+    /// The BENCH_*.json entry for this measurement: `{median_s,
+    /// throughput?, min_s, mean_s, p95_s, iters}`.  `throughput` is
+    /// whatever unit-per-second figure the bench derived (cells/s,
+    /// tasks/s, ...), omitted when the bench has none.
+    pub fn to_json(&self, throughput: Option<f64>) -> Value {
+        let mut pairs = vec![
+            ("median_s", num(self.median.as_secs_f64())),
+            ("min_s", num(self.min.as_secs_f64())),
+            ("mean_s", num(self.mean.as_secs_f64())),
+            ("p95_s", num(self.p95.as_secs_f64())),
+            ("iters", num(self.iters as f64)),
+        ];
+        if let Some(t) = throughput {
+            pairs.push(("throughput", num(t)));
+        }
+        obj(pairs)
     }
 }
 
@@ -40,12 +70,15 @@ pub fn time<T>(
     }
     samples.sort();
     let mean = samples.iter().sum::<Duration>() / iters as u32;
+    // ceil(0.95 * iters) as a 1-based rank, clamped into the samples
+    let p95_idx = ((iters * 95).div_ceil(100)).clamp(1, iters) - 1;
     let m = Measurement {
         name: name.to_string(),
         iters,
         min: samples[0],
         median: samples[iters / 2],
         mean,
+        p95: samples[p95_idx],
     };
     m.print();
     m
@@ -54,6 +87,32 @@ pub fn time<T>(
 /// Throughput helper: report items/second based on the median.
 pub fn per_second(m: &Measurement, items: f64) -> f64 {
     items / m.median.as_secs_f64()
+}
+
+/// Write measurements as `{name: {median_s, throughput, ...}}` JSON —
+/// the shared machine-readable BENCH output.  Pair each measurement
+/// with its derived throughput (or `None`).
+pub fn write_json(
+    path: &Path,
+    entries: &[(&Measurement, Option<f64>)],
+) -> anyhow::Result<()> {
+    write_report(
+        path,
+        entries
+            .iter()
+            .map(|(m, t)| (m.name.clone(), m.to_json(*t)))
+            .collect(),
+    )
+}
+
+/// [`write_json`] for benches that assemble custom entries (extra keys
+/// like speedup ratios) alongside plain measurements.
+pub fn write_report(path: &Path, entries: Vec<(String, Value)>) -> anyhow::Result<()> {
+    let v = Value::Obj(entries.into_iter().collect());
+    std::fs::write(path, format!("{v}\n"))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    println!("wrote {}", path.display());
+    Ok(())
 }
 
 #[cfg(test)]
@@ -65,6 +124,7 @@ mod tests {
         let m = time("noop", 1, 5, || 1 + 1);
         assert_eq!(m.iters, 5);
         assert!(m.min <= m.median && m.median <= m.mean * 2);
+        assert!(m.median <= m.p95, "p95 must sit at or above the median");
     }
 
     #[test]
@@ -73,5 +133,32 @@ mod tests {
             std::hint::black_box((0..100).sum::<u64>())
         });
         assert!(per_second(&m, 100.0) > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips_with_schema_keys() {
+        let m = time("j", 0, 4, || 1);
+        let v = m.to_json(Some(123.5));
+        let parsed = Value::parse(&v.to_string()).unwrap();
+        assert!(parsed.get("median_s").as_f64().is_some());
+        assert_eq!(parsed.get("throughput").as_f64(), Some(123.5));
+        assert_eq!(parsed.get("iters").as_usize(), Some(4));
+        // no-throughput entries omit the key
+        assert_eq!(m.to_json(None).get("throughput"), &Value::Null);
+    }
+
+    #[test]
+    fn write_json_emits_name_keyed_object() {
+        let m1 = time("alpha", 0, 2, || 1);
+        let m2 = time("beta", 0, 2, || 2);
+        let dir = std::env::temp_dir().join("omp_fpga_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_json(&path, &[(&m1, Some(1.0)), (&m2, None)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Value::parse(text.trim()).unwrap();
+        assert!(v.get("alpha").get("median_s").as_f64().is_some());
+        assert!(v.get("beta").get("p95_s").as_f64().is_some());
+        std::fs::remove_file(&path).ok();
     }
 }
