@@ -1,6 +1,6 @@
 # Entry points the docs and test skip-messages refer to.
 
-.PHONY: artifacts test perf clean
+.PHONY: artifacts test perf warm-start clean
 
 # AOT-lower the five Table-I stencils to HLO-text artifacts + manifest.
 # Written to ./artifacts (where the examples, run from the repo root,
@@ -20,5 +20,12 @@ test:
 perf:
 	cargo bench --bench perf
 
+# Executable persistence round-trip: compile + save a plan, then load
+# it into a fresh runtime and serve with zero compiles (DESIGN.md §8).
+# Leaves results/served_stencil.plan.json behind for inspection.
+warm-start:
+	cargo run --release --example served_stencil
+
 clean:
 	rm -rf target artifacts rust/artifacts results BENCH_*.json
+	find . -name '*.plan.json' -delete

@@ -1,8 +1,9 @@
 //! The BENCH harness for the execution hot paths (DESIGN.md §7): graph
 //! build, dispatch drain, cold compile vs cached `Executable::execute`,
-//! and streamed cells/sec on the 8-sweep resident stencil — the
+//! streamed cells/sec on the 8-sweep resident stencil — the
 //! zero-copy engine A/B'd against the retained pre-PR clone-per-step
-//! path (`Vc709Plugin::naive_stream`).
+//! path (`Vc709Plugin::naive_stream`) — and the streaming JSON core
+//! A/B'd against the `Value`-tree facade on a 100k-record trace.
 //!
 //! Writes `BENCH_perf.json` at the repository root (`name →
 //! {median_s, throughput, ...}` plus `stream/resident-8sweep`'s
@@ -20,7 +21,7 @@ use omp_fpga::omp::{
 use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
 use omp_fpga::stencil::{Grid, Kernel};
 use omp_fpga::util::bench::{self, Measurement};
-use omp_fpga::util::json::{num, Value};
+use omp_fpga::util::json::{arr, num, unum, Reader, Value, Writer};
 
 const SWEEPS: usize = 8;
 const STREAM_SHAPE: [usize; 2] = [384, 256];
@@ -273,6 +274,88 @@ fn main() -> anyhow::Result<()> {
         m_zero.median.as_secs_f64(),
         format!("{thr_zero:.3e} cells/s ({speedup:.2}x vs naive)"),
     ));
+
+    // -- JSON: 100k-record schedule trace, streamed vs Value tree ----------
+    // the BENCH/trace emission path: four-field records like the golden
+    // schedule fixtures, written and read both ways
+    const RECS: usize = 100_000;
+    let stream_write = || {
+        let mut buf: Vec<u8> = Vec::new();
+        let mut w = Writer::new(&mut buf);
+        w.arr().unwrap();
+        for i in 0..RECS {
+            w.arr().unwrap();
+            w.u64((i % 7) as u64).unwrap();
+            w.u64(i as u64).unwrap();
+            w.f64(i as f64 * 1e-6).unwrap();
+            w.f64(i as f64 * 1e-6 + 3.5e-7).unwrap();
+            w.end_arr().unwrap();
+        }
+        w.end_arr().unwrap();
+        w.into_inner();
+        buf
+    };
+    let text = String::from_utf8(stream_write()).unwrap();
+    let mb = text.len() as f64 / 1e6;
+
+    let m = bench::time("json/stream-write-100k-trace", 1, 5, || {
+        stream_write().len()
+    });
+    push(&m, Some(bench::per_second(&m, mb)), "MB/s", &mut entries, &mut table);
+
+    let m = bench::time("json/tree-write-100k-trace", 1, 5, || {
+        let v = arr((0..RECS)
+            .map(|i| {
+                arr(vec![
+                    unum((i % 7) as u64),
+                    unum(i as u64),
+                    num(i as f64 * 1e-6),
+                    num(i as f64 * 1e-6 + 3.5e-7),
+                ])
+            })
+            .collect());
+        v.to_string().len()
+    });
+    push(&m, Some(bench::per_second(&m, mb)), "MB/s", &mut entries, &mut table);
+
+    let m = bench::time("json/stream-read-100k-trace", 1, 5, || {
+        // pull parse: O(depth) live state, no document tree
+        let mut r = Reader::new(&text);
+        r.expect_arr().unwrap();
+        let mut n = 0usize;
+        let mut sum = 0.0f64;
+        while r.arr_next().unwrap() {
+            r.expect_arr().unwrap();
+            while r.arr_next().unwrap() {
+                sum += r.read_f64().unwrap();
+            }
+            n += 1;
+        }
+        assert_eq!(n, RECS);
+        sum
+    });
+    push(&m, Some(bench::per_second(&m, mb)), "MB/s", &mut entries, &mut table);
+
+    let m = bench::time("json/tree-read-100k-trace", 1, 5, || {
+        let v = Value::parse(&text).unwrap();
+        let recs = v.as_arr().unwrap();
+        assert_eq!(recs.len(), RECS);
+        recs.iter()
+            .map(|r| r.as_arr().unwrap()[3].as_f64().unwrap())
+            .sum::<f64>()
+    });
+    push(&m, Some(bench::per_second(&m, mb)), "MB/s", &mut entries, &mut table);
+
+    // allocation proxy: the streamed paths hold one output buffer (or
+    // O(depth) reader state); the tree paths additionally materialize
+    // ~5 Value nodes per record
+    let tree_nodes = RECS * 5 + 1;
+    let tree_mb =
+        (tree_nodes * std::mem::size_of::<Value>()) as f64 / 1e6;
+    println!(
+        "    -> {mb:.1} MB document; tree paths allocate ~{tree_mb:.1} MB \
+         of Value nodes on top, streamed paths none"
+    );
 
     // -- report -------------------------------------------------------------
     let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))

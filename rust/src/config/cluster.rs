@@ -21,7 +21,7 @@ use anyhow::{bail, Context, Result};
 use super::timing::TimingConfig;
 use crate::hw::pcie::PcieGen;
 use crate::stencil::Kernel;
-use crate::util::json::Value;
+use crate::util::json::{Reader, Writer};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct IpConfig {
@@ -58,74 +58,91 @@ impl ClusterConfig {
         }
     }
 
+    /// Single-pass pull parse: the config streams through the
+    /// [`Reader`] event-by-event (any key order, unknown keys skipped
+    /// as whole subtrees) — no document tree is materialized.
     pub fn parse(text: &str) -> Result<ClusterConfig> {
-        let v = Value::parse(text).context("conf.json parse error")?;
-        let bitstream_dir = v
-            .get("bitstream_dir")
-            .as_str()
-            .unwrap_or("artifacts")
-            .to_string();
-
-        let fpgas_v = v
-            .get("fpgas")
-            .as_arr()
-            .context("conf.json: missing 'fpgas' array")?;
-        if fpgas_v.is_empty() {
-            bail!("conf.json: 'fpgas' must not be empty");
-        }
-        let mut fpgas = Vec::new();
-        for (i, f) in fpgas_v.iter().enumerate() {
-            let ips_v = f
-                .get("ips")
-                .as_arr()
-                .with_context(|| format!("fpga[{i}]: missing 'ips'"))?;
-            if ips_v.is_empty() {
-                bail!("fpga[{i}]: needs at least one IP");
-            }
-            let mut ips = Vec::new();
-            for ip in ips_v {
-                let name = ip
-                    .as_str()
-                    .with_context(|| format!("fpga[{i}]: ip must be a kernel name"))?;
-                ips.push(IpConfig { kernel: Kernel::from_name(name)? });
-            }
-            fpgas.push(FpgaConfig { ips });
-        }
-
-        if let Some(t) = v.get("topology").as_str() {
-            if t != "ring" {
-                bail!("only 'ring' topology is supported, got '{t}'");
-            }
-        }
-
+        let mut r = Reader::new(text);
+        let mut bitstream_dir = "artifacts".to_string();
+        let mut fpgas: Option<Vec<FpgaConfig>> = None;
         let mut timing = TimingConfig::default();
-        let host = v.get("host");
-        if let Some(p) = host.get("pcie").as_str() {
-            timing.pcie = PcieGen::from_name(p)?;
-        }
-        if let Some(us) = host.get("pass_overhead_us").as_f64() {
-            timing.pass_overhead_s = us * 1e-6;
-        }
-        if let Some(us) = host.get("dma_setup_us").as_f64() {
-            timing.dma_setup_s = us * 1e-6;
-        }
-        let tv = v.get("timing");
-        if let Some(g) = tv.get("net_gbps").as_f64() {
-            timing.net_bps = g * 1e9;
-        }
-        if let Some(g) = tv.get("vfifo_gbps").as_f64() {
-            timing.vfifo_bps = g * 1e9;
-        }
-        if let Some(m) = tv.get("ip_clock_mhz").as_f64() {
-            timing.ip_clock_hz = m * 1e6;
-        }
-        if let Some(c) = tv.get("chunk_cells").as_usize() {
-            if c == 0 {
-                bail!("timing.chunk_cells must be positive");
+        r.expect_obj().context("conf.json parse error")?;
+        while let Some(key) = r.next_key()? {
+            match key.as_ref() {
+                "bitstream_dir" => {
+                    bitstream_dir = r.read_str()?.into_owned()
+                }
+                "fpgas" => {
+                    r.expect_arr()
+                        .context("conf.json: missing 'fpgas' array")?;
+                    let mut list = Vec::new();
+                    while r.arr_next()? {
+                        let i = list.len();
+                        list.push(read_fpga(&mut r, i)?);
+                    }
+                    if list.is_empty() {
+                        bail!("conf.json: 'fpgas' must not be empty");
+                    }
+                    fpgas = Some(list);
+                }
+                "topology" => {
+                    let t = r.read_str()?;
+                    if t != "ring" {
+                        bail!("only 'ring' topology is supported, got '{t}'");
+                    }
+                }
+                "host" => {
+                    r.expect_obj()?;
+                    while let Some(hk) = r.next_key()? {
+                        match hk.as_ref() {
+                            "pcie" => {
+                                timing.pcie =
+                                    PcieGen::from_name(r.read_str()?.as_ref())?
+                            }
+                            "pass_overhead_us" => {
+                                timing.pass_overhead_s = r.read_f64()? * 1e-6
+                            }
+                            "dma_setup_us" => {
+                                timing.dma_setup_s = r.read_f64()? * 1e-6
+                            }
+                            _ => r.skip_value()?,
+                        }
+                    }
+                }
+                "timing" => {
+                    r.expect_obj()?;
+                    while let Some(tk) = r.next_key()? {
+                        match tk.as_ref() {
+                            "net_gbps" => {
+                                timing.net_bps = r.read_f64()? * 1e9
+                            }
+                            "vfifo_gbps" => {
+                                timing.vfifo_bps = r.read_f64()? * 1e9
+                            }
+                            "ip_clock_mhz" => {
+                                timing.ip_clock_hz = r.read_f64()? * 1e6
+                            }
+                            "chunk_cells" => {
+                                // non-integer values are ignored, 0 is
+                                // rejected — mirrors the old accessor
+                                if let Some(c) = r.read_num()?.as_u64() {
+                                    if c == 0 {
+                                        bail!(
+                                            "timing.chunk_cells must be positive"
+                                        );
+                                    }
+                                    timing.chunk_cells = c as usize;
+                                }
+                            }
+                            _ => r.skip_value()?,
+                        }
+                    }
+                }
+                _ => r.skip_value()?,
             }
-            timing.chunk_cells = c;
         }
-
+        r.next()?; // enforce no trailing garbage
+        let fpgas = fpgas.context("conf.json: missing 'fpgas' array")?;
         let cfg = ClusterConfig { bitstream_dir, fpgas, timing };
         cfg.validate()?;
         Ok(cfg)
@@ -171,46 +188,94 @@ impl ClusterConfig {
         self.fpgas.iter().map(|f| f.ips.len()).sum()
     }
 
-    /// Emit the conf.json text for this configuration.
-    pub fn to_json(&self) -> String {
-        use crate::util::json::{arr, num, obj, s};
-        let fpgas = self
-            .fpgas
-            .iter()
-            .map(|f| {
-                obj(vec![(
-                    "ips",
-                    arr(f.ips.iter().map(|ip| s(ip.kernel.name())).collect()),
-                )])
-            })
-            .collect();
-        obj(vec![
-            ("bitstream_dir", s(&self.bitstream_dir)),
-            ("fpgas", arr(fpgas)),
-            ("topology", s("ring")),
-            (
-                "host",
-                obj(vec![
-                    ("pcie", s(self.timing.pcie.name())),
-                    (
-                        "pass_overhead_us",
-                        num(self.timing.pass_overhead_s * 1e6),
-                    ),
-                    ("dma_setup_us", num(self.timing.dma_setup_s * 1e6)),
-                ]),
-            ),
-            (
-                "timing",
-                obj(vec![
-                    ("net_gbps", num(self.timing.net_bps / 1e9)),
-                    ("vfifo_gbps", num(self.timing.vfifo_bps / 1e9)),
-                    ("ip_clock_mhz", num(self.timing.ip_clock_hz / 1e6)),
-                    ("chunk_cells", num(self.timing.chunk_cells as f64)),
-                ]),
-            ),
-        ])
-        .to_string()
+    /// Stream the conf.json document for this configuration into `w`
+    /// (sorted key order, matching what the old tree builder printed).
+    pub fn write_into<W: std::io::Write>(
+        &self,
+        w: &mut Writer<W>,
+    ) -> std::io::Result<()> {
+        w.obj()?;
+        w.key("bitstream_dir")?;
+        w.str(&self.bitstream_dir)?;
+        w.key("fpgas")?;
+        w.arr()?;
+        for f in &self.fpgas {
+            w.obj()?;
+            w.key("ips")?;
+            w.arr()?;
+            for ip in &f.ips {
+                w.str(ip.kernel.name())?;
+            }
+            w.end_arr()?;
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+        w.key("host")?;
+        w.obj()?;
+        w.key("dma_setup_us")?;
+        w.f64(self.timing.dma_setup_s * 1e6)?;
+        w.key("pass_overhead_us")?;
+        w.f64(self.timing.pass_overhead_s * 1e6)?;
+        w.key("pcie")?;
+        w.str(self.timing.pcie.name())?;
+        w.end_obj()?;
+        w.key("timing")?;
+        w.obj()?;
+        w.key("chunk_cells")?;
+        w.u64(self.timing.chunk_cells as u64)?;
+        w.key("ip_clock_mhz")?;
+        w.f64(self.timing.ip_clock_hz / 1e6)?;
+        w.key("net_gbps")?;
+        w.f64(self.timing.net_bps / 1e9)?;
+        w.key("vfifo_gbps")?;
+        w.f64(self.timing.vfifo_bps / 1e9)?;
+        w.end_obj()?;
+        w.key("topology")?;
+        w.str("ring")?;
+        w.end_obj()
     }
+
+    /// Emit the conf.json text for this configuration (via the push
+    /// [`Writer`] — no intermediate tree).
+    pub fn to_json(&self) -> String {
+        let mut buf = Vec::new();
+        let mut w = Writer::new(&mut buf);
+        self.write_into(&mut w).expect("in-memory write cannot fail");
+        w.into_inner();
+        String::from_utf8(buf).expect("writer emits UTF-8")
+    }
+}
+
+/// One `fpgas[i]` entry pulled off the event stream (unknown keys like
+/// `mac_base` skipped).
+fn read_fpga(r: &mut Reader<'_>, i: usize) -> Result<FpgaConfig> {
+    r.expect_obj().with_context(|| format!("fpga[{i}]: missing 'ips'"))?;
+    let mut ips: Option<Vec<IpConfig>> = None;
+    while let Some(key) = r.next_key()? {
+        match key.as_ref() {
+            "ips" => {
+                r.expect_arr()
+                    .with_context(|| format!("fpga[{i}]: missing 'ips'"))?;
+                let mut list = Vec::new();
+                while r.arr_next()? {
+                    let name = r.read_str().with_context(|| {
+                        format!("fpga[{i}]: ip must be a kernel name")
+                    })?;
+                    list.push(IpConfig {
+                        kernel: Kernel::from_name(name.as_ref())?,
+                    });
+                }
+                if list.is_empty() {
+                    bail!("fpga[{i}]: needs at least one IP");
+                }
+                ips = Some(list);
+            }
+            _ => r.skip_value()?,
+        }
+    }
+    Ok(FpgaConfig {
+        ips: ips.with_context(|| format!("fpga[{i}]: missing 'ips'"))?,
+    })
 }
 
 #[cfg(test)]

@@ -51,7 +51,9 @@ pub mod variant;
 pub use dataenv::{
     BatchCtx, EnterMap, ExitMap, PresentTable, Residency,
 };
-pub use program::{BufferSlot, Executable, PlanStats, Program};
+pub use program::{
+    BufferSlot, Executable, PlanStats, Program, EXECUTABLE_FORMAT,
+};
 pub use device::{
     DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel, FnRegistry,
     TaskFn, HOST_DEVICE,

@@ -66,6 +66,8 @@
 
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
+use std::io::{self, Write as _};
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -76,8 +78,9 @@ use super::device::{DataEnv, DeviceId, DevicePlugin, DeviceSel, HOST_DEVICE};
 use super::graph::TaskGraph;
 use super::runtime::{OmpReport, OmpRuntime, SingleCtx, WritebackEvent};
 use super::sched::{BatchDag, Dispatcher};
-use super::task::TaskId;
+use super::task::{DepVar, MapDir, Task, TaskId};
 use crate::stencil::Grid;
+use crate::util::json::{Event, Reader, Writer};
 
 /// How many compiled plans `parallel` keeps before clearing the cache
 /// wholesale (simple and deterministic; a serving loop replays a
@@ -88,6 +91,15 @@ const PLAN_CACHE_CAP: usize = 64;
 /// (oldest dropped first) — a long-lived service that thrashes the
 /// cache must not grow the log without bound.
 const RECOMPILE_LOG_CAP: usize = 32;
+
+/// On-disk format version written by [`Executable::save`] and required
+/// by [`OmpRuntime::load_executable`].  Bump on any layout change; the
+/// loader refuses other versions with a named "recompile" error rather
+/// than guessing.
+pub const EXECUTABLE_FORMAT: u64 = 1;
+
+/// Sanity tag distinguishing plan files from other JSON artifacts.
+const EXECUTABLE_KIND: &str = "omp-fpga-executable";
 
 /// A symbolic buffer slot of a captured [`Program`]: the name a `map`
 /// clause referenced and the shape the capture-time data environment
@@ -324,6 +336,379 @@ impl Executable {
     ) -> Result<OmpReport> {
         rt.execute_plan(self, env)
     }
+
+    /// Persist the compiled plan — committed runs, device bindings,
+    /// modelled makespan, runtime epoch and residency fingerprint,
+    /// under a format version — so another process can warm-start via
+    /// [`OmpRuntime::load_executable`] with zero compiles.  The file
+    /// streams out through the push [`Writer`]; no document tree is
+    /// built.  Saving requires the plan to be valid *now* (same
+    /// runtime, same epoch): a plan that would not execute must not be
+    /// snapshotted either.
+    pub fn save(&self, rt: &OmpRuntime, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        ensure!(
+            self.runtime_id == rt.runtime_id,
+            "executable compiled on a different OmpRuntime instance \
+             (runtime #{} vs #{}) — save from the runtime that compiled it",
+            self.runtime_id,
+            rt.runtime_id
+        );
+        ensure!(
+            self.epoch == rt.epoch,
+            "cannot save a stale executable: compiled at runtime epoch {} \
+             but the runtime is now at epoch {} after {} — recompile the \
+             program first",
+            self.epoch,
+            rt.epoch,
+            rt.epoch_reason
+        );
+        for t in &self.plan.graph.tasks {
+            ensure!(
+                t.device.bound().is_some(),
+                "task '{}' has no device binding (compiler bug) — refusing \
+                 to serialize an unbound plan",
+                t.base_name
+            );
+        }
+        let names: Vec<String> =
+            self.plan.slots.iter().map(|s| s.name.clone()).collect();
+        let fingerprint = rt.residency_fingerprint_names(&names);
+        let write = || -> io::Result<()> {
+            let file = std::fs::File::create(path)?;
+            let mut w = Writer::new(io::BufWriter::new(file));
+            self.write_manifest(&mut w, rt, fingerprint)?;
+            let mut out = w.into_inner();
+            out.write_all(b"\n")?;
+            out.flush()
+        };
+        write().with_context(|| format!("saving executable to {}", path.display()))
+    }
+
+    /// Stream the plan manifest into `w` (see the `format`/`kind` keys
+    /// for versioning; everything integer-valued uses the lossless u64
+    /// token, so 64-bit hashes and fingerprints round-trip exactly).
+    fn write_manifest<W: io::Write>(
+        &self,
+        w: &mut Writer<W>,
+        rt: &OmpRuntime,
+        fingerprint: u64,
+    ) -> io::Result<()> {
+        let plan = &self.plan;
+        w.obj()?;
+        w.key("format")?;
+        w.u64(EXECUTABLE_FORMAT)?;
+        w.key("kind")?;
+        w.str(EXECUTABLE_KIND)?;
+        w.key("epoch")?;
+        w.u64(self.epoch)?;
+        w.key("shape_hash")?;
+        w.u64(self.shape_hash)?;
+        w.key("fingerprint")?;
+        w.u64(fingerprint)?;
+        w.key("makespan_s")?;
+        w.f64(plan.makespan_s)?;
+        w.key("devices")?;
+        w.arr()?;
+        for (_, desc) in rt.devices() {
+            w.str(&desc)?;
+        }
+        w.end_arr()?;
+        w.key("slots")?;
+        w.arr()?;
+        for s in &plan.slots {
+            w.obj()?;
+            w.key("name")?;
+            w.str(&s.name)?;
+            w.key("shape")?;
+            match &s.shape {
+                Some(dims) => {
+                    w.arr()?;
+                    for &d in dims {
+                        w.u64(d as u64)?;
+                    }
+                    w.end_arr()?;
+                }
+                None => w.null()?,
+            }
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+        w.key("tasks")?;
+        w.arr()?;
+        for t in &plan.graph.tasks {
+            w.obj()?;
+            w.key("base")?;
+            w.str(&t.base_name)?;
+            w.key("fn")?;
+            w.str(&t.fn_name)?;
+            w.key("device")?;
+            // save() already rejected unbound tasks
+            w.u64(t.device.bound().map_or(0, |d| d.0) as u64)?;
+            w.key("nowait")?;
+            w.bool(t.nowait)?;
+            w.key("maps")?;
+            w.arr()?;
+            for (dir, name) in &t.maps {
+                w.arr()?;
+                w.str(map_dir_name(*dir))?;
+                w.str(name)?;
+                w.end_arr()?;
+            }
+            w.end_arr()?;
+            w.key("deps_in")?;
+            w.arr()?;
+            for d in &t.deps_in {
+                w.u64(d.0 as u64)?;
+            }
+            w.end_arr()?;
+            w.key("deps_out")?;
+            w.arr()?;
+            for d in &t.deps_out {
+                w.u64(d.0 as u64)?;
+            }
+            w.end_arr()?;
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+        w.key("runs")?;
+        w.arr()?;
+        for r in &plan.runs {
+            w.obj()?;
+            w.key("device")?;
+            w.u64(r.device.0 as u64)?;
+            w.key("tasks")?;
+            w.arr()?;
+            for t in &r.tasks {
+                w.u64(t.0 as u64)?;
+            }
+            w.end_arr()?;
+            w.key("preds")?;
+            w.arr()?;
+            for &p in &r.preds {
+                w.u64(p as u64)?;
+            }
+            w.end_arr()?;
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+        w.key("steps")?;
+        w.arr()?;
+        for s in &plan.steps {
+            w.arr()?;
+            for &r in &s.runs {
+                w.u64(r as u64)?;
+            }
+            w.end_arr()?;
+        }
+        w.end_arr()?;
+        w.end_obj()
+    }
+}
+
+fn map_dir_name(d: MapDir) -> &'static str {
+    match d {
+        MapDir::To => "to",
+        MapDir::From => "from",
+        MapDir::ToFrom => "tofrom",
+    }
+}
+
+fn map_dir_from(s: &str) -> Result<MapDir> {
+    match s {
+        "to" => Ok(MapDir::To),
+        "from" => Ok(MapDir::From),
+        "tofrom" => Ok(MapDir::ToFrom),
+        other => bail!("unknown map direction '{other}' in executable file"),
+    }
+}
+
+/// The raw fields of a plan file, pulled off the event stream in one
+/// pass.  Scalars are `Option`s so [`OmpRuntime::load_executable`] can
+/// name exactly which key a truncated file is missing.
+#[derive(Default)]
+struct RawManifest {
+    format: Option<u64>,
+    kind: Option<String>,
+    epoch: Option<u64>,
+    shape_hash: Option<u64>,
+    fingerprint: Option<u64>,
+    makespan_s: Option<f64>,
+    devices: Vec<String>,
+    slots: Vec<BufferSlot>,
+    tasks: Vec<Task>,
+    runs: Vec<PlanRun>,
+    steps: Vec<PlanStep>,
+}
+
+/// Pull-parse a plan manifest: one pass over the token stream, no
+/// document tree, fields in any order, unknown keys skipped (a newer
+/// writer may add keys without bumping the format).
+fn parse_executable_manifest(text: &str) -> Result<RawManifest> {
+    let mut r = Reader::new(text);
+    let mut m = RawManifest::default();
+    r.expect_obj().context("not a JSON object")?;
+    while let Some(key) = r.next_key()? {
+        match key.as_ref() {
+            "format" => m.format = Some(r.read_u64()?),
+            "kind" => m.kind = Some(r.read_str()?.into_owned()),
+            "epoch" => m.epoch = Some(r.read_u64()?),
+            "shape_hash" => m.shape_hash = Some(r.read_u64()?),
+            "fingerprint" => m.fingerprint = Some(r.read_u64()?),
+            "makespan_s" => m.makespan_s = Some(r.read_f64()?),
+            "devices" => {
+                r.expect_arr()?;
+                while r.arr_next()? {
+                    m.devices.push(r.read_str()?.into_owned());
+                }
+            }
+            "slots" => {
+                r.expect_arr()?;
+                while r.arr_next()? {
+                    m.slots.push(read_slot(&mut r)?);
+                }
+            }
+            "tasks" => {
+                r.expect_arr()?;
+                while r.arr_next()? {
+                    m.tasks.push(read_task(&mut r)?);
+                }
+            }
+            "runs" => {
+                r.expect_arr()?;
+                while r.arr_next()? {
+                    m.runs.push(read_run(&mut r)?);
+                }
+            }
+            "steps" => {
+                r.expect_arr()?;
+                while r.arr_next()? {
+                    r.expect_arr()?;
+                    let mut runs = Vec::new();
+                    while r.arr_next()? {
+                        runs.push(r.read_usize()?);
+                    }
+                    m.steps.push(PlanStep { runs });
+                }
+            }
+            _ => r.skip_value()?,
+        }
+    }
+    r.next()?; // enforce no trailing garbage
+    Ok(m)
+}
+
+fn read_slot(r: &mut Reader<'_>) -> Result<BufferSlot> {
+    r.expect_obj()?;
+    let mut name: Option<String> = None;
+    let mut shape: Option<Vec<usize>> = None;
+    while let Some(key) = r.next_key()? {
+        match key.as_ref() {
+            "name" => name = Some(r.read_str()?.into_owned()),
+            "shape" => {
+                if matches!(r.peek()?, Some(Event::Null)) {
+                    r.next()?; // shape-less slot: absent at capture
+                } else {
+                    r.expect_arr()?;
+                    let mut dims = Vec::new();
+                    while r.arr_next()? {
+                        dims.push(r.read_usize().context("bad slot dim")?);
+                    }
+                    shape = Some(dims);
+                }
+            }
+            _ => r.skip_value()?,
+        }
+    }
+    Ok(BufferSlot { name: name.context("slot missing 'name'")?, shape })
+}
+
+fn read_task(r: &mut Reader<'_>) -> Result<Task> {
+    r.expect_obj()?;
+    let mut base: Option<String> = None;
+    let mut fn_name: Option<String> = None;
+    let mut device: Option<usize> = None;
+    let mut nowait = false;
+    let mut maps: Vec<(MapDir, String)> = Vec::new();
+    let mut deps_in: Vec<DepVar> = Vec::new();
+    let mut deps_out: Vec<DepVar> = Vec::new();
+    while let Some(key) = r.next_key()? {
+        match key.as_ref() {
+            "base" => base = Some(r.read_str()?.into_owned()),
+            "fn" => fn_name = Some(r.read_str()?.into_owned()),
+            "device" => device = Some(r.read_usize()?),
+            "nowait" => nowait = r.read_bool()?,
+            "maps" => {
+                r.expect_arr()?;
+                while r.arr_next()? {
+                    // one map clause is a ["dir", "buffer"] pair
+                    r.expect_arr()?;
+                    ensure!(r.arr_next()?, "map entry missing direction");
+                    let dir = map_dir_from(r.read_str()?.as_ref())?;
+                    ensure!(r.arr_next()?, "map entry missing buffer name");
+                    let buf = r.read_str()?.into_owned();
+                    ensure!(!r.arr_next()?, "map entry has extra elements");
+                    maps.push((dir, buf));
+                }
+            }
+            "deps_in" => {
+                r.expect_arr()?;
+                while r.arr_next()? {
+                    deps_in.push(DepVar(r.read_usize()?));
+                }
+            }
+            "deps_out" => {
+                r.expect_arr()?;
+                while r.arr_next()? {
+                    deps_out.push(DepVar(r.read_usize()?));
+                }
+            }
+            _ => r.skip_value()?,
+        }
+    }
+    Ok(Task {
+        // reassigned by `TaskGraph::add` during the replay rebuild
+        id: TaskId(0),
+        base_name: base.context("task missing 'base'")?,
+        fn_name: fn_name.context("task missing 'fn'")?,
+        device: DeviceSel::Bound(DeviceId(
+            device.context("task missing 'device'")?,
+        )),
+        maps,
+        deps_in,
+        deps_out,
+        nowait,
+    })
+}
+
+fn read_run(r: &mut Reader<'_>) -> Result<PlanRun> {
+    r.expect_obj()?;
+    let mut device: Option<usize> = None;
+    let mut tasks: Vec<TaskId> = Vec::new();
+    let mut preds: Vec<usize> = Vec::new();
+    while let Some(key) = r.next_key()? {
+        match key.as_ref() {
+            "device" => device = Some(r.read_usize()?),
+            "tasks" => {
+                r.expect_arr()?;
+                while r.arr_next()? {
+                    tasks.push(TaskId(r.read_usize()?));
+                }
+            }
+            "preds" => {
+                r.expect_arr()?;
+                while r.arr_next()? {
+                    preds.push(r.read_usize()?);
+                }
+            }
+            _ => r.skip_value()?,
+        }
+    }
+    Ok(PlanRun {
+        device: DeviceId(device.context("run missing 'device'")?),
+        tasks,
+        preds,
+    })
 }
 
 /// An entry of the runtime's plan cache: the compiled executable plus
@@ -825,10 +1210,170 @@ impl OmpRuntime {
     }
 
     fn residency_fingerprint(&self, program: &Program) -> u64 {
-        let names = program.slot_names();
+        self.residency_fingerprint_names(&program.slot_names())
+    }
+
+    /// The mapped-buffer residency fingerprint over explicit slot
+    /// names — shared by the plan cache ([`Self::compile_cached`]) and
+    /// executable persistence ([`Self::load_executable`]), so the two
+    /// invalidation policies can never drift.
+    pub(crate) fn residency_fingerprint_names(&self, names: &[String]) -> u64 {
         let mut h = DefaultHasher::new();
-        self.present.planning_fingerprint(&names, &mut h);
+        self.present.planning_fingerprint(names, &mut h);
         h.finish()
+    }
+
+    /// Load an [`Executable::save`]d plan file and revalidate it
+    /// against **this** runtime: format version, runtime epoch,
+    /// mapped-buffer residency fingerprint, device registry (the
+    /// plugins' `describe()` strings, in registration order) and
+    /// slot/graph index consistency are all checked up front.  Any
+    /// mismatch is a named "recompile" error — a stale plan never
+    /// silently replays.  On success the plan is rebound to this
+    /// runtime and executes with **zero** compiles (`plans_built`
+    /// stays 0 in a fresh process): the TAPA-CS-style "partition once,
+    /// deploy many" warm start.
+    ///
+    /// The epoch is a per-runtime bump counter, so a fresh process that
+    /// replays the same `register_*` sequence lands on the same epoch
+    /// the saver had — that, plus the device-describe comparison,
+    /// is what "same runtime configuration" means across processes.
+    pub fn load_executable(&mut self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading executable {}", path.display()))?;
+        let m = parse_executable_manifest(&text)
+            .with_context(|| format!("parsing executable {}", path.display()))?;
+        ensure!(
+            m.kind.as_deref() == Some(EXECUTABLE_KIND),
+            "{} is not an executable plan file (kind {:?})",
+            path.display(),
+            m.kind
+        );
+        let format = m.format.context("executable file missing 'format'")?;
+        ensure!(
+            format == EXECUTABLE_FORMAT,
+            "unsupported executable format {format} (this build reads \
+             format {EXECUTABLE_FORMAT}) — recompile the program and re-save"
+        );
+        let epoch = m.epoch.context("executable file missing 'epoch'")?;
+        ensure!(
+            epoch == self.epoch,
+            "stale executable file: saved at runtime epoch {epoch} but this \
+             runtime is at epoch {} after {} — recompile the program",
+            self.epoch,
+            self.epoch_reason
+        );
+        let current: Vec<String> =
+            self.devices().into_iter().map(|(_, d)| d).collect();
+        ensure!(
+            m.devices == current,
+            "executable file was saved against a different device registry \
+             (saved {:?}, this runtime has {:?}) — recompile the program",
+            m.devices,
+            current
+        );
+        let saved_fp =
+            m.fingerprint.context("executable file missing 'fingerprint'")?;
+        let names: Vec<String> =
+            m.slots.iter().map(|s| s.name.clone()).collect();
+        let fp = self.residency_fingerprint_names(&names);
+        ensure!(
+            saved_fp == fp,
+            "stale executable file: mapped-buffer residency fingerprint \
+             {saved_fp:#018x} was saved but this runtime's is {fp:#018x} — \
+             recompile the program",
+        );
+        let shape_hash =
+            m.shape_hash.context("executable file missing 'shape_hash'")?;
+        let makespan_s =
+            m.makespan_s.context("executable file missing 'makespan_s'")?;
+        // Rebuild the graph by replaying `TaskGraph::add`: edges derive
+        // deterministically from the serialized depend clauses, so the
+        // loaded graph's preds/succs equal the compiled ones.
+        let mut graph = TaskGraph::new();
+        for t in m.tasks {
+            let dev = t
+                .device
+                .bound()
+                .expect("parser only produces bound tasks")
+                .0;
+            ensure!(
+                dev < self.devices.len(),
+                "executable task '{}' is bound to device {dev} but this \
+                 runtime has {} devices — recompile the program",
+                t.base_name,
+                self.devices.len()
+            );
+            graph.add(t);
+        }
+        // Slot/shape + index consistency: every mapped buffer needs a
+        // slot entry, every run/step index must be in range — a corrupt
+        // or truncated file is an error here, not a mid-replay panic.
+        for t in &graph.tasks {
+            for (_, name) in &t.maps {
+                ensure!(
+                    m.slots.iter().any(|s| &s.name == name),
+                    "executable task '{}' maps buffer '{}' with no slot \
+                     entry — corrupt file, recompile the program",
+                    t.base_name,
+                    name
+                );
+            }
+        }
+        for (i, r) in m.runs.iter().enumerate() {
+            ensure!(
+                r.device.0 < self.devices.len(),
+                "executable run {i} is bound to device {} but this runtime \
+                 has {} devices — recompile the program",
+                r.device.0,
+                self.devices.len()
+            );
+            for t in &r.tasks {
+                ensure!(
+                    t.0 < graph.len(),
+                    "executable run {i} references task {} of {} — corrupt \
+                     file, recompile the program",
+                    t.0,
+                    graph.len()
+                );
+            }
+            for &p in &r.preds {
+                ensure!(
+                    p < m.runs.len(),
+                    "executable run {i} references predecessor run {p} of \
+                     {} — corrupt file, recompile the program",
+                    m.runs.len()
+                );
+            }
+        }
+        for (i, s) in m.steps.iter().enumerate() {
+            ensure!(
+                !s.runs.is_empty(),
+                "executable step {i} dispatches no runs — corrupt file, \
+                 recompile the program"
+            );
+            for &r in &s.runs {
+                ensure!(
+                    r < m.runs.len(),
+                    "executable step {i} references run {r} of {} — corrupt \
+                     file, recompile the program",
+                    m.runs.len()
+                );
+            }
+        }
+        Ok(Executable {
+            plan: Arc::new(CompiledPlan {
+                graph,
+                slots: m.slots,
+                runs: m.runs,
+                steps: m.steps,
+                makespan_s,
+            }),
+            epoch: self.epoch,
+            shape_hash,
+            runtime_id: self.runtime_id,
+        })
     }
 }
 
@@ -1118,6 +1663,115 @@ mod tests {
         let rep = exe.execute(&mut rt, &mut env).unwrap();
         assert_eq!(rep.tasks, 0);
         assert!(rep.batches.is_empty());
+    }
+
+    fn capture_two_inc(rt: &OmpRuntime, env: &DataEnv) -> Program {
+        let deps = rt.dep_vars(3);
+        rt.capture(env, |ctx| {
+            for i in 0..2 {
+                ctx.task("inc")
+                    .map(MapDir::ToFrom, "V")
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            Ok(())
+        })
+        .unwrap()
+    }
+
+    fn temp_plan(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ompfpga-exe-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn executable_saves_and_loads_in_a_fresh_runtime() {
+        let path = temp_plan("roundtrip.plan.json");
+        let mut rt = inc_runtime();
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        let exe = capture_two_inc(&rt, &env).compile(&mut rt).unwrap();
+        exe.save(&rt, &path).unwrap();
+
+        // warm start: a second runtime replays the same registration
+        // sequence (same epoch, same device registry), loads the plan
+        // and executes it without compiling anything
+        let mut rt2 = inc_runtime();
+        let loaded = rt2.load_executable(&path).unwrap();
+        assert_eq!(loaded.shape_hash(), exe.shape_hash());
+        assert_eq!(loaded.epoch(), exe.epoch());
+        assert_eq!(
+            loaded.makespan_s().to_bits(),
+            exe.makespan_s().to_bits(),
+            "modelled makespan must round-trip bit-exactly"
+        );
+        assert_eq!(loaded.batch_count(), exe.batch_count());
+        loaded.execute(&mut rt2, &mut env).unwrap();
+        assert!(env.get("V").unwrap().data().iter().all(|&v| v == 2.0));
+        assert_eq!(rt2.plan_stats().plans_built, 0, "warm start compiles nothing");
+        assert_eq!(rt2.plan_stats().executions, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_refuses_a_stale_executable() {
+        let path = temp_plan("stale-save.plan.json");
+        let mut rt = inc_runtime();
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        let exe = capture_two_inc(&rt, &env).compile(&mut rt).unwrap();
+        rt.register_software("other", |_| Ok(()));
+        let err = exe.save(&rt, &path).unwrap_err();
+        assert!(err.to_string().contains("recompile"), "{err}");
+        assert!(!path.exists(), "a refused save must not leave a file");
+    }
+
+    #[test]
+    fn loading_into_a_changed_runtime_is_a_named_recompile_error() {
+        let path = temp_plan("stale-load.plan.json");
+        let mut rt = inc_runtime();
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        let exe = capture_two_inc(&rt, &env).compile(&mut rt).unwrap();
+        exe.save(&rt, &path).unwrap();
+
+        // the loading runtime registered one extra function — its epoch
+        // differs, so the plan must be rejected by name, not replayed
+        let mut rt2 = inc_runtime();
+        rt2.register_software("other", |_| Ok(()));
+        let err = rt2.load_executable(&path).unwrap_err();
+        assert!(err.to_string().contains("stale executable file"), "{err}");
+        assert!(err.to_string().contains("recompile"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_non_plan_and_wrong_format_files() {
+        let path = temp_plan("not-a-plan.json");
+        std::fs::write(&path, "{\"format\": 1}\n").unwrap();
+        let mut rt = inc_runtime();
+        let err = rt.load_executable(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("not an executable plan file"),
+            "{err:#}"
+        );
+        std::fs::write(
+            &path,
+            format!(
+                "{{\"format\": {}, \"kind\": \"omp-fpga-executable\"}}\n",
+                EXECUTABLE_FORMAT + 1
+            ),
+        )
+        .unwrap();
+        let err = rt.load_executable(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unsupported executable format"),
+            "{err:#}"
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::stencil::Kernel;
-use crate::util::json::Value;
+use crate::util::json::{Reader, Value};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactInfo {
@@ -37,55 +37,38 @@ impl ArtifactRegistry {
                 manifest_path.display()
             )
         })?;
-        let v = Value::parse(&text).context("manifest.json parse error")?;
-        if v.get("format").as_u64() != Some(1) {
-            bail!("unsupported manifest format {:?}", v.get("format"));
+        // single-pass pull parse — the manifest never materializes as a
+        // document tree, fields may appear in any order
+        let mut r = Reader::new(&text);
+        let mut format = Value::Null;
+        let mut interchange: Option<String> = None;
+        let mut artifacts: Option<Vec<ArtifactInfo>> = None;
+        r.expect_obj().context("manifest.json parse error")?;
+        while let Some(key) = r.next_key()? {
+            match key.as_ref() {
+                "format" => format = Value::from_reader(&mut r)?,
+                "interchange" => {
+                    interchange = Some(r.read_str()?.into_owned())
+                }
+                "artifacts" => {
+                    r.expect_arr()?;
+                    let mut list = Vec::new();
+                    while r.arr_next()? {
+                        list.push(read_artifact(&mut r)?);
+                    }
+                    artifacts = Some(list);
+                }
+                _ => r.skip_value()?,
+            }
         }
-        if v.get("interchange").as_str() != Some("hlo-text") {
+        r.next()?; // enforce no trailing garbage
+        if format.as_u64() != Some(1) {
+            bail!("unsupported manifest format {:?}", format);
+        }
+        if interchange.as_deref() != Some("hlo-text") {
             bail!("manifest interchange must be hlo-text");
         }
-        let mut artifacts = Vec::new();
-        for e in v
-            .get("artifacts")
-            .as_arr()
-            .context("manifest: missing artifacts")?
-        {
-            let name = e
-                .get("name")
-                .as_str()
-                .context("artifact missing name")?
-                .to_string();
-            let shape: Vec<usize> = e
-                .get("shape")
-                .as_arr()
-                .context("artifact missing shape")?
-                .iter()
-                .map(|d| d.as_usize().context("bad shape dim"))
-                .collect::<Result<_>>()?;
-            artifacts.push(ArtifactInfo {
-                kernel: Kernel::from_name(
-                    e.get("kernel").as_str().context("missing kernel")?,
-                )?,
-                kind: e
-                    .get("kind")
-                    .as_str()
-                    .context("missing kind")?
-                    .to_string(),
-                tag: e.get("tag").as_str().unwrap_or("").to_string(),
-                iters_fused: e.get("iters_fused").as_usize().unwrap_or(1),
-                flops_per_cell: e
-                    .get("flops_per_cell")
-                    .as_usize()
-                    .context("missing flops_per_cell")?,
-                file: e
-                    .get("file")
-                    .as_str()
-                    .context("missing file")?
-                    .to_string(),
-                name,
-                shape,
-            });
-        }
+        let artifacts = artifacts.context("manifest: missing artifacts")?;
         let reg = ArtifactRegistry { dir, artifacts };
         reg.validate()?;
         Ok(reg)
@@ -151,6 +134,51 @@ impl ArtifactRegistry {
     pub fn names(&self) -> Vec<String> {
         self.artifacts.iter().map(|a| a.name.clone()).collect()
     }
+}
+
+/// One artifact entry, pulled field-by-field off the event stream.
+fn read_artifact(r: &mut Reader<'_>) -> Result<ArtifactInfo> {
+    r.expect_obj()?;
+    let mut name: Option<String> = None;
+    let mut kernel: Option<Kernel> = None;
+    let mut kind: Option<String> = None;
+    let mut tag = String::new();
+    let mut shape: Option<Vec<usize>> = None;
+    let mut iters_fused = 1usize;
+    let mut flops_per_cell: Option<usize> = None;
+    let mut file: Option<String> = None;
+    while let Some(key) = r.next_key()? {
+        match key.as_ref() {
+            "name" => name = Some(r.read_str()?.into_owned()),
+            "kernel" => {
+                kernel = Some(Kernel::from_name(r.read_str()?.as_ref())?)
+            }
+            "kind" => kind = Some(r.read_str()?.into_owned()),
+            "tag" => tag = r.read_str()?.into_owned(),
+            "shape" => {
+                r.expect_arr()?;
+                let mut dims = Vec::new();
+                while r.arr_next()? {
+                    dims.push(r.read_usize().context("bad shape dim")?);
+                }
+                shape = Some(dims);
+            }
+            "iters_fused" => iters_fused = r.read_usize()?,
+            "flops_per_cell" => flops_per_cell = Some(r.read_usize()?),
+            "file" => file = Some(r.read_str()?.into_owned()),
+            _ => r.skip_value()?,
+        }
+    }
+    Ok(ArtifactInfo {
+        name: name.context("artifact missing name")?,
+        kernel: kernel.context("missing kernel")?,
+        kind: kind.context("missing kind")?,
+        tag,
+        shape: shape.context("artifact missing shape")?,
+        iters_fused,
+        flops_per_cell: flops_per_cell.context("missing flops_per_cell")?,
+        file: file.context("missing file")?,
+    })
 }
 
 #[cfg(test)]

@@ -7,10 +7,11 @@
 //! what the CI `bench-smoke` job uploads and the README perf table is
 //! generated from.
 
+use std::io::{self, BufWriter};
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use crate::util::json::{num, obj, Value};
+use crate::util::json::{num, obj, Value, Writer};
 
 #[derive(Debug, Clone)]
 pub struct Measurement {
@@ -48,6 +49,33 @@ impl Measurement {
             pairs.push(("throughput", num(t)));
         }
         obj(pairs)
+    }
+
+    /// Stream the same entry straight into a push [`Writer`] — the
+    /// BENCH emission path; no `Value` tree is built.
+    pub fn write_into<W: io::Write>(
+        &self,
+        w: &mut Writer<W>,
+        throughput: Option<f64>,
+    ) -> io::Result<()> {
+        // sorted key order — byte-identical to the `Value` facade's
+        // BTreeMap-ordered Display for the same entry
+        w.obj()?;
+        w.key("iters")?;
+        w.u64(self.iters as u64)?;
+        w.key("mean_s")?;
+        w.f64(self.mean.as_secs_f64())?;
+        w.key("median_s")?;
+        w.f64(self.median.as_secs_f64())?;
+        w.key("min_s")?;
+        w.f64(self.min.as_secs_f64())?;
+        w.key("p95_s")?;
+        w.f64(self.p95.as_secs_f64())?;
+        if let Some(t) = throughput {
+            w.key("throughput")?;
+            w.f64(t)?;
+        }
+        w.end_obj()
     }
 }
 
@@ -91,26 +119,51 @@ pub fn per_second(m: &Measurement, items: f64) -> f64 {
 
 /// Write measurements as `{name: {median_s, throughput, ...}}` JSON —
 /// the shared machine-readable BENCH output.  Pair each measurement
-/// with its derived throughput (or `None`).
+/// with its derived throughput (or `None`).  Every entry streams
+/// through the push [`Writer`]; no document tree is built.
 pub fn write_json(
     path: &Path,
     entries: &[(&Measurement, Option<f64>)],
 ) -> anyhow::Result<()> {
-    write_report(
-        path,
-        entries
-            .iter()
-            .map(|(m, t)| (m.name.clone(), m.to_json(*t)))
-            .collect(),
-    )
+    stream_report(path, entries.len(), |w, i| {
+        let (m, t) = entries[i];
+        w.key(&m.name)?;
+        m.write_into(w, t)
+    })
 }
 
 /// [`write_json`] for benches that assemble custom entries (extra keys
-/// like speedup ratios) alongside plain measurements.
+/// like speedup ratios) alongside plain measurements.  Entry `Value`s
+/// are streamed one at a time — the whole-document tree the old
+/// implementation materialized is gone.
 pub fn write_report(path: &Path, entries: Vec<(String, Value)>) -> anyhow::Result<()> {
-    let v = Value::Obj(entries.into_iter().collect());
-    std::fs::write(path, format!("{v}\n"))
-        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    stream_report(path, entries.len(), |w, i| {
+        let (name, v) = &entries[i];
+        w.key(name)?;
+        w.value(v)
+    })
+}
+
+/// Shared BENCH emission: open the file, stream `{entry, entry, ...}`
+/// via `emit(writer, index)`, trailing newline, one buffered pass.
+fn stream_report(
+    path: &Path,
+    n: usize,
+    mut emit: impl FnMut(&mut Writer<BufWriter<std::fs::File>>, usize) -> io::Result<()>,
+) -> anyhow::Result<()> {
+    let mut write = || -> io::Result<()> {
+        let file = std::fs::File::create(path)?;
+        let mut w = Writer::new(BufWriter::new(file));
+        w.obj()?;
+        for i in 0..n {
+            emit(&mut w, i)?;
+        }
+        w.end_obj()?;
+        let mut out = w.into_inner();
+        io::Write::write_all(&mut out, b"\n")?;
+        io::Write::flush(&mut out)
+    };
+    write().map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
     println!("wrote {}", path.display());
     Ok(())
 }
@@ -145,6 +198,22 @@ mod tests {
         assert_eq!(parsed.get("iters").as_usize(), Some(4));
         // no-throughput entries omit the key
         assert_eq!(m.to_json(None).get("throughput"), &Value::Null);
+    }
+
+    #[test]
+    fn streamed_entry_matches_value_facade() {
+        let m = time("s", 0, 3, || 1);
+        for t in [Some(2.5), None] {
+            let mut buf = Vec::new();
+            let mut w = Writer::new(&mut buf);
+            m.write_into(&mut w, t).unwrap();
+            w.into_inner();
+            assert_eq!(
+                String::from_utf8(buf).unwrap(),
+                m.to_json(t).to_string(),
+                "streamed bytes must equal the facade's Display"
+            );
+        }
     }
 
     #[test]

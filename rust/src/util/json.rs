@@ -1,22 +1,115 @@
-//! Minimal JSON parser/printer (serde_json substitute).
+//! Streaming JSON engine (serde_json substitute).
 //!
-//! Supports the full JSON grammar minus `\u` surrogate pairs being split
-//! across escapes (surrogate pairs themselves are handled).  Numbers are
-//! stored as `f64`; integers up to 2^53 round-trip exactly, which covers
-//! everything in `conf.json` and `manifest.json`.
+//! Two-layer stax design in the style of picojson/smoljson:
+//!
+//! * a pull [`Tokenizer`] → [`Reader`] over `&str` — strings come back
+//!   as [`Cow`] slices borrowed straight from the input wherever no
+//!   escape sequence occurs, and numbers carry a lossless integer
+//!   variant ([`Num`]) alongside `f64`, so 64-bit shape-hashes and
+//!   residency fingerprints round-trip byte-exact;
+//! * a push [`Writer`] that emits into any [`io::Write`] with no
+//!   intermediate tree — emission is O(depth) memory, never O(document).
+//!
+//! A thin [`Value`] facade sits *on top of* the Reader ([`Value::parse`]
+//! runs the event stream, [`fmt::Display`] runs the Writer into a
+//! buffer) for the few call sites that genuinely need random access.
+//! The grammar is full JSON minus `\u` escapes split across surrogate
+//! halves (whole surrogate pairs are handled).
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io;
 
-#[derive(Debug, Clone, PartialEq)]
-pub enum Value {
-    Null,
-    Bool(bool),
-    Num(f64),
-    Str(String),
-    Arr(Vec<Value>),
-    Obj(BTreeMap<String, Value>),
+// ---------------------------------------------------------------------------
+// numbers
+// ---------------------------------------------------------------------------
+
+/// A JSON number with a lossless integer fast path.
+///
+/// Every constructor normalizes: integral values that fit are stored as
+/// `U`/`I` (non-negative integers always as `U`), so two `Num`s that
+/// denote the same number compare equal and print identically.  `F` is
+/// reserved for genuine non-integers and integral magnitudes ≥ 2^53
+/// that only arrived as `f64` (where exactness was already lost).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Num {
+    /// Non-negative integer (covers the 64-bit hash/fingerprint range).
+    U(u64),
+    /// Negative integer (normalization never stores `I(x)` for x ≥ 0).
+    I(i64),
+    /// Everything else; non-finite values serialize as `null`.
+    F(f64),
 }
+
+impl Num {
+    /// Normalizing `f64` constructor: integral values below 2^53 (where
+    /// `f64` is still exact) become integer variants.
+    pub fn from_f64(n: f64) -> Num {
+        if n.is_finite() && n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+            if n < 0.0 {
+                Num::I(n as i64)
+            } else {
+                Num::U(n as u64) // note: -0.0 lands here as U(0)
+            }
+        } else {
+            Num::F(n)
+        }
+    }
+
+    /// Normalizing `i64` constructor (non-negative values become `U`).
+    pub fn from_i64(i: i64) -> Num {
+        if i >= 0 {
+            Num::U(i as u64)
+        } else {
+            Num::I(i)
+        }
+    }
+
+    /// Lossy view: exact for `U`/`I` up to 2^53, rounded above.
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Num::U(u) => u as f64,
+            Num::I(i) => i as f64,
+            Num::F(f) => f,
+        }
+    }
+
+    /// Exact non-negative integer view (`None` for negatives/floats).
+    pub fn as_u64(self) -> Option<u64> {
+        match self {
+            Num::U(u) => Some(u),
+            Num::I(i) if i >= 0 => Some(i as u64),
+            _ => None,
+        }
+    }
+
+    /// Exact signed integer view (`None` if out of `i64` range / float).
+    pub fn as_i64(self) -> Option<i64> {
+        match self {
+            Num::U(u) => i64::try_from(u).ok(),
+            Num::I(i) => Some(i),
+            Num::F(_) => None,
+        }
+    }
+}
+
+impl fmt::Display for Num {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Num::U(u) => write!(f, "{u}"),
+            Num::I(i) => write!(f, "{i}"),
+            // Rust's f64 Display is shortest-roundtrip and never uses
+            // exponent notation, so finite floats re-parse bit-exact.
+            Num::F(x) if x.is_finite() => write!(f, "{x}"),
+            Num::F(_) => write!(f, "null"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
 
 #[derive(Debug)]
 pub struct JsonError {
@@ -32,33 +125,837 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
-impl Value {
-    pub fn parse(text: &str) -> Result<Value, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), pos: 0 };
-        p.skip_ws();
-        let v = p.value()?;
-        p.skip_ws();
-        if p.pos != p.b.len() {
-            return Err(p.err("trailing garbage"));
+// ---------------------------------------------------------------------------
+// layer 1: pull tokenizer (lexical)
+// ---------------------------------------------------------------------------
+
+/// Lexical token. `Str` borrows from the input unless the string
+/// contained an escape sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RawToken<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    Comma,
+    Colon,
+    Null,
+    Bool(bool),
+    Num(Num),
+    Str(Cow<'a, str>),
+}
+
+/// Pull tokenizer over `&str`: whitespace-skipping, zero-copy strings
+/// on the no-escape fast path, lossless integer classification.
+pub struct Tokenizer<'a> {
+    text: &'a str,
+    b: &'a [u8],
+    pos: usize,
+    /// Byte offset where the most recently returned token started —
+    /// what grammar-level errors should point at.
+    start: usize,
+}
+
+impl<'a> Tokenizer<'a> {
+    pub fn new(text: &'a str) -> Tokenizer<'a> {
+        Tokenizer { text, b: text.as_bytes(), pos: 0, start: 0 }
+    }
+
+    /// Current byte offset (after the last token).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Byte offset of the last token returned by [`Tokenizer::next`].
+    pub fn token_start(&self) -> usize {
+        self.start
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn lit(&mut self, s: &str) -> Result<(), JsonError> {
+        if self.b[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{s}'")))
+        }
+    }
+
+    /// Next token, or `None` at end of input.
+    pub fn next(&mut self) -> Result<Option<RawToken<'a>>, JsonError> {
+        self.skip_ws();
+        self.start = self.pos;
+        let Some(c) = self.peek() else { return Ok(None) };
+        let punct = |t: &mut Self, tok| {
+            t.pos += 1;
+            Ok(Some(tok))
+        };
+        match c {
+            b'{' => punct(self, RawToken::ObjBegin),
+            b'}' => punct(self, RawToken::ObjEnd),
+            b'[' => punct(self, RawToken::ArrBegin),
+            b']' => punct(self, RawToken::ArrEnd),
+            b',' => punct(self, RawToken::Comma),
+            b':' => punct(self, RawToken::Colon),
+            b'"' => Ok(Some(RawToken::Str(self.string()?))),
+            b't' => self.lit("true").map(|_| Some(RawToken::Bool(true))),
+            b'f' => self.lit("false").map(|_| Some(RawToken::Bool(false))),
+            b'n' => self.lit("null").map(|_| Some(RawToken::Null)),
+            c if c == b'-' || c.is_ascii_digit() => {
+                Ok(Some(RawToken::Num(self.number()?)))
+            }
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    /// Lex a string. Fast path: scan to the closing quote and hand back
+    /// a borrowed slice — no allocation unless an escape appears.
+    fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        self.pos += 1; // opening quote
+        let start = self.pos;
+        loop {
+            match self.b.get(self.pos) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let s = &self.text[start..self.pos];
+                    self.pos += 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                Some(b'\\') => break, // escape: fall to the owned path
+                Some(&c) if c < 0x20 => {
+                    return Err(self.err("control char in string"))
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+        // Slow path: copy the clean prefix, then decode escapes.
+        let mut out = String::with_capacity(self.pos - start + 8);
+        out.push_str(&self.text[start..self.pos]);
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(Cow::Owned(out)),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hi = self.hex4()?;
+                        let cp = if (0xD800..0xDC00).contains(&hi) {
+                            // surrogate pair: expect \uXXXX low half
+                            if self.bump() != Some(b'\\')
+                                || self.bump() != Some(b'u')
+                            {
+                                return Err(self.err("bad low surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("bad low surrogate"));
+                            }
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else {
+                            hi
+                        };
+                        out.push(
+                            char::from_u32(cp)
+                                .ok_or_else(|| self.err("bad codepoint"))?,
+                        );
+                    }
+                    _ => return Err(self.err("bad escape")),
+                },
+                Some(c) if c < 0x20 => {
+                    return Err(self.err("control char in string"))
+                }
+                Some(c) => {
+                    // re-assemble UTF-8 multibyte sequences byte-wise
+                    let from = self.pos - 1;
+                    let end = from + utf8_len(c);
+                    if end > self.b.len() {
+                        return Err(self.err("truncated utf-8"));
+                    }
+                    out.push_str(&self.text[from..end]);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("eof in \\u"))?;
+            let d = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("bad hex digit"))?;
+            v = v * 16 + d;
         }
         Ok(v)
     }
 
+    /// Lex a number. Integer-looking text (no `.`/`e`) parses through
+    /// `u64`/`i64` first so 64-bit values survive losslessly; anything
+    /// else (or overflow) falls back to `f64` + normalization.
+    fn number(&mut self) -> Result<Num, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let int_start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.pos == int_start {
+            return Err(self.err("bad number"));
+        }
+        let mut integral = true;
+        if self.peek() == Some(b'.') {
+            integral = false;
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            integral = false;
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let s = &self.text[start..self.pos];
+        if integral {
+            if s.starts_with('-') {
+                if let Ok(i) = s.parse::<i64>() {
+                    return Ok(Num::from_i64(i));
+                }
+            } else if let Ok(u) = s.parse::<u64>() {
+                return Ok(Num::U(u));
+            }
+        }
+        s.parse::<f64>()
+            .map(Num::from_f64)
+            .map_err(|_| JsonError { pos: start, msg: "bad number".into() })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// layer 2: pull reader (grammar)
+// ---------------------------------------------------------------------------
+
+/// Grammar-level event. Object member names arrive as `Key` (their `:`
+/// already consumed); everything else mirrors the document structure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event<'a> {
+    Null,
+    Bool(bool),
+    Num(Num),
+    Str(Cow<'a, str>),
+    ObjBegin,
+    Key(Cow<'a, str>),
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Frame {
+    Obj,
+    Arr,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    /// Expecting a value (root, after `:`, after `,` in an array).
+    Value,
+    /// Right after `[`: a value or `]`.
+    ArrFirst,
+    /// Right after `{`: a key or `}`.
+    ObjFirst,
+    /// After `,` inside an object: a key.
+    ObjKey,
+    /// After a value inside a container: `,` or the matching close.
+    PostValue,
+    /// Root value complete: only end-of-input is legal.
+    Done,
+}
+
+/// Pull reader: validates the grammar while streaming [`Event`]s, with
+/// one event of lookahead ([`Reader::peek`]).  Memory is O(nesting
+/// depth) — a million-record trace array costs one stack slot.
+pub struct Reader<'a> {
+    tok: Tokenizer<'a>,
+    stack: Vec<Frame>,
+    state: State,
+    peeked: Option<Event<'a>>,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(text: &'a str) -> Reader<'a> {
+        Reader {
+            tok: Tokenizer::new(text),
+            stack: Vec::new(),
+            state: State::Value,
+            peeked: None,
+        }
+    }
+
+    /// Byte position of the last token — where errors point.
+    pub fn pos(&self) -> usize {
+        self.tok.token_start()
+    }
+
+    fn err_here(&self, msg: &str) -> JsonError {
+        JsonError { pos: self.tok.token_start(), msg: msg.to_string() }
+    }
+
+    fn err_eof(&self, msg: &str) -> JsonError {
+        JsonError { pos: self.tok.pos(), msg: msg.to_string() }
+    }
+
+    /// Next event; `None` once the root value and trailing whitespace
+    /// are consumed.  Trailing garbage is an error.
+    pub fn next(&mut self) -> Result<Option<Event<'a>>, JsonError> {
+        if let Some(ev) = self.peeked.take() {
+            return Ok(Some(ev));
+        }
+        self.next_inner()
+    }
+
+    /// One-event lookahead without consuming it.
+    pub fn peek(&mut self) -> Result<Option<&Event<'a>>, JsonError> {
+        if self.peeked.is_none() {
+            self.peeked = self.next_inner()?;
+        }
+        Ok(self.peeked.as_ref())
+    }
+
+    fn next_inner(&mut self) -> Result<Option<Event<'a>>, JsonError> {
+        loop {
+            match self.state {
+                State::Done => {
+                    return match self.tok.next()? {
+                        None => Ok(None),
+                        Some(_) => Err(self.err_here("trailing garbage")),
+                    };
+                }
+                State::Value => {
+                    let t = self
+                        .tok
+                        .next()?
+                        .ok_or_else(|| self.err_eof("expected a JSON value"))?;
+                    return self.value_event(t).map(Some);
+                }
+                State::ArrFirst => {
+                    let t = self
+                        .tok
+                        .next()?
+                        .ok_or_else(|| self.err_eof("expected a value or ']'"))?;
+                    if t == RawToken::ArrEnd {
+                        return self.close(Frame::Arr).map(Some);
+                    }
+                    return self.value_event(t).map(Some);
+                }
+                State::ObjFirst | State::ObjKey => {
+                    let t = self
+                        .tok
+                        .next()?
+                        .ok_or_else(|| self.err_eof("expected a key or '}'"))?;
+                    match t {
+                        RawToken::ObjEnd if self.state == State::ObjFirst => {
+                            return self.close(Frame::Obj).map(Some);
+                        }
+                        RawToken::Str(k) => {
+                            match self.tok.next()? {
+                                Some(RawToken::Colon) => {}
+                                _ => return Err(self.err_here("expected ':'")),
+                            }
+                            self.state = State::Value;
+                            return Ok(Some(Event::Key(k)));
+                        }
+                        _ => return Err(self.err_here("expected '\"'")),
+                    }
+                }
+                State::PostValue => {
+                    let t = self.tok.next()?.ok_or_else(|| {
+                        self.err_eof(self.close_msg())
+                    })?;
+                    match (t, self.stack.last()) {
+                        (RawToken::Comma, Some(Frame::Obj)) => {
+                            self.state = State::ObjKey;
+                            // comma produces no event: loop
+                        }
+                        (RawToken::Comma, Some(Frame::Arr)) => {
+                            self.state = State::Value;
+                        }
+                        (RawToken::ObjEnd, Some(Frame::Obj)) => {
+                            return self.close(Frame::Obj).map(Some);
+                        }
+                        (RawToken::ArrEnd, Some(Frame::Arr)) => {
+                            return self.close(Frame::Arr).map(Some);
+                        }
+                        _ => return Err(self.err_here(self.close_msg())),
+                    }
+                }
+            }
+        }
+    }
+
+    fn close_msg(&self) -> &'static str {
+        match self.stack.last() {
+            Some(Frame::Obj) => "expected ',' or '}'",
+            _ => "expected ',' or ']'",
+        }
+    }
+
+    fn value_event(&mut self, t: RawToken<'a>) -> Result<Event<'a>, JsonError> {
+        Ok(match t {
+            RawToken::ObjBegin => {
+                self.stack.push(Frame::Obj);
+                self.state = State::ObjFirst;
+                Event::ObjBegin
+            }
+            RawToken::ArrBegin => {
+                self.stack.push(Frame::Arr);
+                self.state = State::ArrFirst;
+                Event::ArrBegin
+            }
+            RawToken::Null => {
+                self.after_value();
+                Event::Null
+            }
+            RawToken::Bool(b) => {
+                self.after_value();
+                Event::Bool(b)
+            }
+            RawToken::Num(n) => {
+                self.after_value();
+                Event::Num(n)
+            }
+            RawToken::Str(s) => {
+                self.after_value();
+                Event::Str(s)
+            }
+            _ => return Err(self.err_here("expected a JSON value")),
+        })
+    }
+
+    fn close(&mut self, want: Frame) -> Result<Event<'a>, JsonError> {
+        debug_assert_eq!(self.stack.last(), Some(&want));
+        self.stack.pop();
+        self.after_value();
+        Ok(match want {
+            Frame::Obj => Event::ObjEnd,
+            Frame::Arr => Event::ArrEnd,
+        })
+    }
+
+    fn after_value(&mut self) {
+        self.state = if self.stack.is_empty() {
+            State::Done
+        } else {
+            State::PostValue
+        };
+    }
+
+    // -- pull helpers for hand-written config parsers -----------------------
+
+    /// Consume the opening `{` of an object.
+    pub fn expect_obj(&mut self) -> Result<(), JsonError> {
+        match self.next()? {
+            Some(Event::ObjBegin) => Ok(()),
+            _ => Err(self.err_here("expected an object")),
+        }
+    }
+
+    /// Consume the opening `[` of an array.
+    pub fn expect_arr(&mut self) -> Result<(), JsonError> {
+        match self.next()? {
+            Some(Event::ArrBegin) => Ok(()),
+            _ => Err(self.err_here("expected an array")),
+        }
+    }
+
+    /// Inside an object: the next member name, or `None` at `}` (which
+    /// is consumed).
+    pub fn next_key(&mut self) -> Result<Option<Cow<'a, str>>, JsonError> {
+        match self.next()? {
+            Some(Event::Key(k)) => Ok(Some(k)),
+            Some(Event::ObjEnd) => Ok(None),
+            _ => Err(self.err_here("expected a key or '}'")),
+        }
+    }
+
+    /// Inside an array: `true` if another element follows; consumes the
+    /// closing `]` when it doesn't.
+    pub fn arr_next(&mut self) -> Result<bool, JsonError> {
+        match self.peek()? {
+            Some(Event::ArrEnd) => {
+                self.next()?;
+                Ok(false)
+            }
+            Some(_) => Ok(true),
+            None => Err(self.err_eof("expected a value or ']'")),
+        }
+    }
+
+    pub fn read_str(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        match self.next()? {
+            Some(Event::Str(s)) => Ok(s),
+            _ => Err(self.err_here("expected a string")),
+        }
+    }
+
+    pub fn read_num(&mut self) -> Result<Num, JsonError> {
+        match self.next()? {
+            Some(Event::Num(n)) => Ok(n),
+            _ => Err(self.err_here("expected a number")),
+        }
+    }
+
+    pub fn read_f64(&mut self) -> Result<f64, JsonError> {
+        self.read_num().map(Num::as_f64)
+    }
+
+    pub fn read_u64(&mut self) -> Result<u64, JsonError> {
+        let n = self.read_num()?;
+        n.as_u64()
+            .ok_or_else(|| self.err_here("expected a non-negative integer"))
+    }
+
+    pub fn read_usize(&mut self) -> Result<usize, JsonError> {
+        self.read_u64().map(|u| u as usize)
+    }
+
+    pub fn read_bool(&mut self) -> Result<bool, JsonError> {
+        match self.next()? {
+            Some(Event::Bool(b)) => Ok(b),
+            _ => Err(self.err_here("expected a boolean")),
+        }
+    }
+
+    /// Consume one complete value (scalar or whole container).
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        let ev = self
+            .next()?
+            .ok_or_else(|| self.err_eof("expected a JSON value"))?;
+        let mut depth = match ev {
+            Event::ObjBegin | Event::ArrBegin => 1usize,
+            Event::Key(_) | Event::ObjEnd | Event::ArrEnd => {
+                return Err(self.err_here("expected a JSON value"))
+            }
+            _ => return Ok(()),
+        };
+        while depth > 0 {
+            match self.next()? {
+                Some(Event::ObjBegin | Event::ArrBegin) => depth += 1,
+                Some(Event::ObjEnd | Event::ArrEnd) => depth -= 1,
+                Some(_) => {}
+                None => return Err(self.err_eof("unterminated container")),
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// push writer
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct WFrame {
+    in_obj: bool,
+    first: bool,
+    /// In an object: a key was written, its value is pending.
+    after_key: bool,
+}
+
+/// Push JSON writer over any [`io::Write`]: commas/colons are managed
+/// from an O(depth) frame stack, bytes go straight to the sink — no
+/// document tree is ever built.
+///
+/// Grammar misuse (a value without a key inside an object, `end_obj`
+/// with a dangling key, ...) panics: writer call sites are static code
+/// paths, not data-dependent.
+pub struct Writer<W: io::Write> {
+    w: W,
+    stack: Vec<WFrame>,
+}
+
+impl<W: io::Write> Writer<W> {
+    pub fn new(w: W) -> Writer<W> {
+        Writer { w, stack: Vec::new() }
+    }
+
+    /// Recover the sink (e.g. the `Vec<u8>` buffer).
+    pub fn into_inner(self) -> W {
+        assert!(self.stack.is_empty(), "unclosed container in JSON writer");
+        self.w
+    }
+
+    fn before_value(&mut self) -> io::Result<()> {
+        if let Some(f) = self.stack.last_mut() {
+            if f.in_obj {
+                assert!(f.after_key, "object value written without a key");
+                f.after_key = false;
+            } else {
+                let first = f.first;
+                f.first = false;
+                if !first {
+                    self.w.write_all(b",")?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Write a member name (and its `:`); the next call must write the
+    /// member's value.
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        let f = self.stack.last_mut().expect("key() outside an object");
+        assert!(f.in_obj, "key() inside an array");
+        assert!(!f.after_key, "two keys in a row");
+        let first = f.first;
+        f.first = false;
+        f.after_key = true;
+        if !first {
+            self.w.write_all(b",")?;
+        }
+        write_escaped(&mut self.w, k)?;
+        self.w.write_all(b":")
+    }
+
+    pub fn obj(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.stack.push(WFrame { in_obj: true, first: true, after_key: false });
+        self.w.write_all(b"{")
+    }
+
+    pub fn end_obj(&mut self) -> io::Result<()> {
+        let f = self.stack.pop().expect("end_obj() with no open object");
+        assert!(f.in_obj, "end_obj() closing an array");
+        assert!(!f.after_key, "end_obj() with a dangling key");
+        self.w.write_all(b"}")
+    }
+
+    pub fn arr(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.stack.push(WFrame { in_obj: false, first: true, after_key: false });
+        self.w.write_all(b"[")
+    }
+
+    pub fn end_arr(&mut self) -> io::Result<()> {
+        let f = self.stack.pop().expect("end_arr() with no open array");
+        assert!(!f.in_obj, "end_arr() closing an object");
+        self.w.write_all(b"]")
+    }
+
+    pub fn null(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.w.write_all(b"null")
+    }
+
+    pub fn bool(&mut self, b: bool) -> io::Result<()> {
+        self.before_value()?;
+        self.w.write_all(if b { b"true" } else { b"false" })
+    }
+
+    pub fn num(&mut self, n: Num) -> io::Result<()> {
+        self.before_value()?;
+        write!(self.w, "{n}")
+    }
+
+    pub fn f64(&mut self, v: f64) -> io::Result<()> {
+        self.num(Num::from_f64(v))
+    }
+
+    pub fn u64(&mut self, v: u64) -> io::Result<()> {
+        self.num(Num::U(v))
+    }
+
+    pub fn i64(&mut self, v: i64) -> io::Result<()> {
+        self.num(Num::from_i64(v))
+    }
+
+    pub fn str(&mut self, s: &str) -> io::Result<()> {
+        self.before_value()?;
+        write_escaped(&mut self.w, s)
+    }
+
+    /// Stream a [`Value`] tree (the facade's Display runs through this,
+    /// so facade output and streamed output are bytewise identical).
+    pub fn value(&mut self, v: &Value) -> io::Result<()> {
+        match v {
+            Value::Null => self.null(),
+            Value::Bool(b) => self.bool(*b),
+            Value::Num(n) => self.num(*n),
+            Value::Str(s) => self.str(s),
+            Value::Arr(a) => {
+                self.arr()?;
+                for x in a {
+                    self.value(x)?;
+                }
+                self.end_arr()
+            }
+            Value::Obj(o) => {
+                self.obj()?;
+                for (k, x) in o {
+                    self.key(k)?;
+                    self.value(x)?;
+                }
+                self.end_obj()
+            }
+        }
+    }
+
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Escape + quote a string into `w`. Clean runs are emitted as whole
+/// slices (zero per-char work for the common case).
+fn write_escaped<W: io::Write>(w: &mut W, s: &str) -> io::Result<()> {
+    w.write_all(b"\"")?;
+    let b = s.as_bytes();
+    let mut run = 0;
+    for (i, &c) in b.iter().enumerate() {
+        if c != b'"' && c != b'\\' && c >= 0x20 {
+            continue;
+        }
+        w.write_all(&b[run..i])?;
+        match c {
+            b'"' => w.write_all(b"\\\"")?,
+            b'\\' => w.write_all(b"\\\\")?,
+            b'\n' => w.write_all(b"\\n")?,
+            b'\r' => w.write_all(b"\\r")?,
+            b'\t' => w.write_all(b"\\t")?,
+            c => write!(w, "\\u{c:04x}")?,
+        }
+        run = i + 1;
+    }
+    w.write_all(&b[run..])?;
+    w.write_all(b"\"")
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Value facade (random access on top of the Reader)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(Num),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Parse a complete document by folding the Reader's event stream.
+    pub fn parse(text: &str) -> Result<Value, JsonError> {
+        let mut r = Reader::new(text);
+        let v = Value::from_reader(&mut r)?;
+        r.next()?; // Done state: errors on trailing garbage
+        Ok(v)
+    }
+
+    /// Build the next complete value from an event stream (the facade
+    /// entry point, also usable mid-stream by hybrid parsers).
+    pub fn from_reader(r: &mut Reader<'_>) -> Result<Value, JsonError> {
+        let ev = r
+            .next()?
+            .ok_or_else(|| r.err_eof("expected a JSON value"))?;
+        Value::from_event(r, ev)
+    }
+
+    fn from_event(r: &mut Reader<'_>, ev: Event<'_>) -> Result<Value, JsonError> {
+        Ok(match ev {
+            Event::Null => Value::Null,
+            Event::Bool(b) => Value::Bool(b),
+            Event::Num(n) => Value::Num(n),
+            Event::Str(s) => Value::Str(s.into_owned()),
+            Event::ArrBegin => {
+                let mut a = Vec::new();
+                loop {
+                    let ev = r
+                        .next()?
+                        .ok_or_else(|| r.err_eof("unterminated array"))?;
+                    if ev == Event::ArrEnd {
+                        break;
+                    }
+                    a.push(Value::from_event(r, ev)?);
+                }
+                Value::Arr(a)
+            }
+            Event::ObjBegin => {
+                let mut m = BTreeMap::new();
+                while let Some(k) = r.next_key()? {
+                    let v = Value::from_reader(r)?;
+                    m.insert(k.into_owned(), v);
+                }
+                Value::Obj(m)
+            }
+            // the Reader's grammar never yields these at value position
+            Event::Key(_) | Event::ObjEnd | Event::ArrEnd => {
+                return Err(r.err_here("expected a JSON value"))
+            }
+        })
+    }
+
     // -- typed accessors ---------------------------------------------------
-    pub fn as_f64(&self) -> Option<f64> {
+    pub fn as_num(&self) -> Option<Num> {
         match self {
             Value::Num(n) => Some(*n),
             _ => None,
         }
     }
+    pub fn as_f64(&self) -> Option<f64> {
+        self.as_num().map(Num::as_f64)
+    }
     pub fn as_u64(&self) -> Option<u64> {
-        self.as_f64().and_then(|n| {
-            if n >= 0.0 && n.fract() == 0.0 && n <= 2f64.powi(53) {
-                Some(n as u64)
-            } else {
-                None
-            }
-        })
+        self.as_num().and_then(Num::as_u64)
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_num().and_then(Num::as_i64)
     }
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|n| n as usize)
@@ -97,268 +994,15 @@ impl Value {
     }
 }
 
-struct Parser<'a> {
-    b: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
-        JsonError { pos: self.pos, msg: msg.to_string() }
-    }
-    fn peek(&self) -> Option<u8> {
-        self.b.get(self.pos).copied()
-    }
-    fn bump(&mut self) -> Option<u8> {
-        let c = self.peek();
-        if c.is_some() {
-            self.pos += 1;
-        }
-        c
-    }
-    fn skip_ws(&mut self) {
-        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
-            self.pos += 1;
-        }
-    }
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
-        if self.bump() == Some(c) {
-            Ok(())
-        } else {
-            self.pos -= usize::from(self.pos > 0);
-            Err(self.err(&format!("expected '{}'", c as char)))
-        }
-    }
-    fn lit(&mut self, s: &str, v: Value) -> Result<Value, JsonError> {
-        if self.b[self.pos..].starts_with(s.as_bytes()) {
-            self.pos += s.len();
-            Ok(v)
-        } else {
-            Err(self.err(&format!("expected '{s}'")))
-        }
-    }
-
-    fn value(&mut self) -> Result<Value, JsonError> {
-        self.skip_ws();
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Value::Str(self.string()?)),
-            Some(b't') => self.lit("true", Value::Bool(true)),
-            Some(b'f') => self.lit("false", Value::Bool(false)),
-            Some(b'n') => self.lit("null", Value::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("expected a JSON value")),
-        }
-    }
-
-    fn object(&mut self) -> Result<Value, JsonError> {
-        self.expect(b'{')?;
-        let mut map = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.pos += 1;
-            return Ok(Value::Obj(map));
-        }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
-            let val = self.value()?;
-            map.insert(key, val);
-            self.skip_ws();
-            match self.bump() {
-                Some(b',') => continue,
-                Some(b'}') => return Ok(Value::Obj(map)),
-                _ => return Err(self.err("expected ',' or '}'")),
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Value, JsonError> {
-        self.expect(b'[')?;
-        let mut arr = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.pos += 1;
-            return Ok(Value::Arr(arr));
-        }
-        loop {
-            arr.push(self.value()?);
-            self.skip_ws();
-            match self.bump() {
-                Some(b',') => continue,
-                Some(b']') => return Ok(Value::Arr(arr)),
-                _ => return Err(self.err("expected ',' or ']'")),
-            }
-        }
-    }
-
-    fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
-        let mut out = String::new();
-        loop {
-            match self.bump() {
-                None => return Err(self.err("unterminated string")),
-                Some(b'"') => return Ok(out),
-                Some(b'\\') => match self.bump() {
-                    Some(b'"') => out.push('"'),
-                    Some(b'\\') => out.push('\\'),
-                    Some(b'/') => out.push('/'),
-                    Some(b'b') => out.push('\u{8}'),
-                    Some(b'f') => out.push('\u{c}'),
-                    Some(b'n') => out.push('\n'),
-                    Some(b'r') => out.push('\r'),
-                    Some(b't') => out.push('\t'),
-                    Some(b'u') => {
-                        let hi = self.hex4()?;
-                        let cp = if (0xD800..0xDC00).contains(&hi) {
-                            // surrogate pair: expect \uXXXX low half
-                            self.expect(b'\\')?;
-                            self.expect(b'u')?;
-                            let lo = self.hex4()?;
-                            if !(0xDC00..0xE000).contains(&lo) {
-                                return Err(self.err("bad low surrogate"));
-                            }
-                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
-                        } else {
-                            hi
-                        };
-                        out.push(
-                            char::from_u32(cp)
-                                .ok_or_else(|| self.err("bad codepoint"))?,
-                        );
-                    }
-                    _ => return Err(self.err("bad escape")),
-                },
-                Some(c) if c < 0x20 => {
-                    return Err(self.err("control char in string"))
-                }
-                Some(c) => {
-                    // re-assemble UTF-8 multibyte sequences byte-wise
-                    let start = self.pos - 1;
-                    let len = utf8_len(c);
-                    let end = start + len;
-                    if end > self.b.len() {
-                        return Err(self.err("truncated utf-8"));
-                    }
-                    let s = std::str::from_utf8(&self.b[start..end])
-                        .map_err(|_| self.err("invalid utf-8"))?;
-                    out.push_str(s);
-                    self.pos = end;
-                }
-            }
-        }
-    }
-
-    fn hex4(&mut self) -> Result<u32, JsonError> {
-        let mut v = 0u32;
-        for _ in 0..4 {
-            let c = self.bump().ok_or_else(|| self.err("eof in \\u"))?;
-            let d = (c as char)
-                .to_digit(16)
-                .ok_or_else(|| self.err("bad hex digit"))?;
-            v = v * 16 + d;
-        }
-        Ok(v)
-    }
-
-    fn number(&mut self) -> Result<Value, JsonError> {
-        let start = self.pos;
-        if self.peek() == Some(b'-') {
-            self.pos += 1;
-        }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.pos += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.pos += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
-            }
-        }
-        if matches!(self.peek(), Some(b'e' | b'E')) {
-            self.pos += 1;
-            if matches!(self.peek(), Some(b'+' | b'-')) {
-                self.pos += 1;
-            }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.pos += 1;
-            }
-        }
-        let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
-        s.parse::<f64>()
-            .map(Value::Num)
-            .map_err(|_| self.err("bad number"))
-    }
-}
-
-fn utf8_len(first: u8) -> usize {
-    match first {
-        0x00..=0x7F => 1,
-        0xC0..=0xDF => 2,
-        0xE0..=0xEF => 3,
-        _ => 4,
-    }
-}
-
-// ---------------------------------------------------------------------------
-// printing
-// ---------------------------------------------------------------------------
-
+/// Display streams through the push [`Writer`], so the facade and the
+/// streaming path produce bytewise-identical output by construction.
 impl fmt::Display for Value {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            Value::Null => write!(f, "null"),
-            Value::Bool(b) => write!(f, "{b}"),
-            Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
-                    write!(f, "{}", *n as i64)
-                } else {
-                    write!(f, "{n}")
-                }
-            }
-            Value::Str(s) => write_escaped(f, s),
-            Value::Arr(a) => {
-                write!(f, "[")?;
-                for (i, v) in a.iter().enumerate() {
-                    if i > 0 {
-                        write!(f, ",")?;
-                    }
-                    write!(f, "{v}")?;
-                }
-                write!(f, "]")
-            }
-            Value::Obj(o) => {
-                write!(f, "{{")?;
-                for (i, (k, v)) in o.iter().enumerate() {
-                    if i > 0 {
-                        write!(f, ",")?;
-                    }
-                    write_escaped(f, k)?;
-                    write!(f, ":{v}")?;
-                }
-                write!(f, "}}")
-            }
-        }
+        let mut buf = Vec::with_capacity(64);
+        let mut w = Writer::new(&mut buf);
+        w.value(self).map_err(|_| fmt::Error)?;
+        f.write_str(std::str::from_utf8(&buf).expect("writer emits UTF-8"))
     }
-}
-
-fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
-    write!(f, "\"")?;
-    for c in s.chars() {
-        match c {
-            '"' => write!(f, "\\\"")?,
-            '\\' => write!(f, "\\\\")?,
-            '\n' => write!(f, "\\n")?,
-            '\r' => write!(f, "\\r")?,
-            '\t' => write!(f, "\\t")?,
-            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
-            c => write!(f, "{c}")?,
-        }
-    }
-    write!(f, "\"")
 }
 
 /// Convenience builders used by config/report writers.
@@ -369,7 +1013,11 @@ pub fn arr(items: Vec<Value>) -> Value {
     Value::Arr(items)
 }
 pub fn num(n: f64) -> Value {
-    Value::Num(n)
+    Value::Num(Num::from_f64(n))
+}
+/// Lossless unsigned-integer builder (shape hashes, fingerprints).
+pub fn unum(n: u64) -> Value {
+    Value::Num(Num::U(n))
 }
 pub fn s(v: &str) -> Value {
     Value::Str(v.to_string())
@@ -384,7 +1032,8 @@ mod tests {
         assert_eq!(Value::parse("null").unwrap(), Value::Null);
         assert_eq!(Value::parse(" true ").unwrap(), Value::Bool(true));
         assert_eq!(Value::parse("false").unwrap(), Value::Bool(false));
-        assert_eq!(Value::parse("-12.5e2").unwrap(), Value::Num(-1250.0));
+        assert_eq!(Value::parse("-12.5e2").unwrap(), num(-1250.0));
+        assert_eq!(Value::parse("2.5").unwrap(), num(2.5));
         assert_eq!(Value::parse("\"a\\nb\"").unwrap(), Value::Str("a\nb".into()));
     }
 
@@ -404,6 +1053,9 @@ mod tests {
         assert!(Value::parse("1 2").is_err());
         assert!(Value::parse("\"\\q\"").is_err());
         assert!(Value::parse("{\"a\" 1}").is_err());
+        assert!(Value::parse("").is_err());
+        assert!(Value::parse("[1 2]").is_err());
+        assert!(Value::parse("{\"a\":1,}").is_err());
     }
 
     #[test]
@@ -413,6 +1065,10 @@ mod tests {
             Value::Str("é😀".into())
         );
         assert_eq!(Value::parse("\"é😀\"").unwrap(), Value::Str("é😀".into()));
+        assert_eq!(
+            Value::parse(r#""\ud83d\ude00""#).unwrap(),
+            Value::Str("😀".into())
+        );
     }
 
     #[test]
@@ -430,6 +1086,129 @@ mod tests {
         assert_eq!(a[0].as_u64(), Some(42));
         assert_eq!(a[0].as_usize(), Some(42));
         assert_eq!(a[1].as_u64(), None);
+        assert_eq!(a[1].as_i64(), Some(-1));
         assert_eq!(a[2].as_u64(), None);
+    }
+
+    #[test]
+    fn u64_hashes_roundtrip_byte_exact() {
+        // the satellite-1 regression: 2^53-breaking hashes must survive
+        for h in [u64::MAX, u64::MAX - 1, (1u64 << 53) + 1, 1u64 << 63] {
+            let v = obj(vec![("hash", unum(h))]);
+            let text = v.to_string();
+            assert_eq!(text, format!("{{\"hash\":{h}}}"));
+            let back = Value::parse(&text).unwrap();
+            assert_eq!(back.get("hash").as_u64(), Some(h));
+            assert_eq!(back.to_string(), text, "byte-exact round-trip");
+        }
+        // i64 extremes survive through the writer too
+        let v = Value::Num(Num::from_i64(i64::MIN));
+        let text = v.to_string();
+        assert_eq!(text, i64::MIN.to_string());
+        assert_eq!(Value::parse(&text).unwrap().as_i64(), Some(i64::MIN));
+    }
+
+    #[test]
+    fn num_normalization_makes_equal_numbers_equal() {
+        assert_eq!(Num::from_f64(4.0), Num::U(4));
+        assert_eq!(Num::from_f64(-0.0), Num::U(0));
+        assert_eq!(Num::from_f64(-3.0), Num::I(-3));
+        assert_eq!(Num::from_i64(7), Num::U(7));
+        // "5.0" and "5" denote the same number → same token
+        assert_eq!(Value::parse("5.0").unwrap(), Value::parse("5").unwrap());
+        // 1e2 normalizes through f64 to the integer token
+        assert_eq!(Value::parse("1e2").unwrap(), num(100.0));
+        // huge integral floats stay floats (exactness was already gone)
+        assert!(matches!(Num::from_f64(1e300), Num::F(_)));
+    }
+
+    #[test]
+    fn reader_streams_events_with_borrowed_strings() {
+        let mut r = Reader::new(r#"{"k":["abc","a\nb"],"n":18446744073709551615}"#);
+        assert_eq!(r.next().unwrap(), Some(Event::ObjBegin));
+        match r.next().unwrap() {
+            Some(Event::Key(Cow::Borrowed("k"))) => {}
+            ev => panic!("expected borrowed key, got {ev:?}"),
+        }
+        assert_eq!(r.next().unwrap(), Some(Event::ArrBegin));
+        match r.next().unwrap() {
+            // no escapes → zero-copy slice of the input
+            Some(Event::Str(Cow::Borrowed("abc"))) => {}
+            ev => panic!("expected borrowed str, got {ev:?}"),
+        }
+        match r.next().unwrap() {
+            // escape forces the owned path
+            Some(Event::Str(Cow::Owned(s))) => assert_eq!(s, "a\nb"),
+            ev => panic!("expected owned str, got {ev:?}"),
+        }
+        assert_eq!(r.next().unwrap(), Some(Event::ArrEnd));
+        assert_eq!(r.next().unwrap(), Some(Event::Key(Cow::Borrowed("n"))));
+        assert_eq!(r.next().unwrap(), Some(Event::Num(Num::U(u64::MAX))));
+        assert_eq!(r.next().unwrap(), Some(Event::ObjEnd));
+        assert_eq!(r.next().unwrap(), None);
+    }
+
+    #[test]
+    fn reader_pull_helpers_drive_config_style_parsing() {
+        let text = r#"{"name":"a","dims":[4,5],"extra":{"x":[1,{"y":2}]},"ok":true}"#;
+        let mut r = Reader::new(text);
+        r.expect_obj().unwrap();
+        let mut name = String::new();
+        let mut dims = Vec::new();
+        let mut ok = false;
+        while let Some(k) = r.next_key().unwrap() {
+            match k.as_ref() {
+                "name" => name = r.read_str().unwrap().into_owned(),
+                "dims" => {
+                    r.expect_arr().unwrap();
+                    while r.arr_next().unwrap() {
+                        dims.push(r.read_usize().unwrap());
+                    }
+                }
+                "ok" => ok = r.read_bool().unwrap(),
+                _ => r.skip_value().unwrap(), // unknown keys skip whole subtrees
+            }
+        }
+        assert_eq!(r.next().unwrap(), None);
+        assert_eq!((name.as_str(), dims.as_slice(), ok), ("a", &[4, 5][..], true));
+    }
+
+    #[test]
+    fn writer_streams_without_building_a_tree() {
+        let mut buf = Vec::new();
+        let mut w = Writer::new(&mut buf);
+        w.obj().unwrap();
+        w.key("trace").unwrap();
+        w.arr().unwrap();
+        for i in 0..3u64 {
+            w.arr().unwrap();
+            w.u64(i).unwrap();
+            w.f64(0.5 * i as f64).unwrap();
+            w.str("dev\"x\"").unwrap();
+            w.end_arr().unwrap();
+        }
+        w.end_arr().unwrap();
+        w.key("hash").unwrap();
+        w.u64(u64::MAX).unwrap();
+        w.key("none").unwrap();
+        w.null().unwrap();
+        w.end_obj().unwrap();
+        let text = String::from_utf8(w.into_inner().clone()).unwrap();
+        // facade Display of the parsed text must match what we streamed
+        let v = Value::parse(&text).unwrap();
+        assert_eq!(v.to_string(), text);
+        assert_eq!(v.get("hash").as_u64(), Some(u64::MAX));
+        assert_eq!(v.get("trace").as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn error_positions_are_stable() {
+        // positions are part of the API (tests + humans read them)
+        let e = Value::parse("[1,]").unwrap_err();
+        assert_eq!(e.pos, 3, "points at the ']' where a value was expected");
+        let e = Value::parse("1 2").unwrap_err();
+        assert_eq!(e.pos, 2, "points at the trailing garbage");
+        let e = Value::parse("{\"a\" 1}").unwrap_err();
+        assert_eq!(e.pos, 5, "points at the token where ':' was expected");
     }
 }

@@ -19,7 +19,8 @@
 //! shortest-roundtrip `Display`, so comparison is exact across
 //! debug/release and platforms.
 
-use std::path::PathBuf;
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
 
 use omp_fpga::config::ClusterConfig;
 use omp_fpga::exec::{run_stencil_app, RunSpec, ScheduleEvent};
@@ -28,83 +29,173 @@ use omp_fpga::omp::{DataEnv, MapDir, OmpReport, OmpRuntime};
 use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
 use omp_fpga::stencil::workload::{paper_workload, paper_workloads};
 use omp_fpga::stencil::{Grid, Kernel};
-use omp_fpga::util::json::{arr, num, obj, Value};
+use omp_fpga::util::json::{Reader, Writer};
 
-fn trace_value(schedule: &[ScheduleEvent]) -> Value {
-    arr(schedule
-        .iter()
-        .map(|e| {
-            arr(vec![
-                num(e.device as f64),
-                num(e.tasks as f64),
-                num(e.release_s),
-                num(e.finish_s),
-            ])
-        })
-        .collect())
+/// One schedule record: `[device, tasks, release_s, finish_s]` in the
+/// fixture.  Floats compare exactly — they are serialized with Rust's
+/// shortest-roundtrip `Display` and re-parsed bit-identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Rec {
+    device: u64,
+    tasks: u64,
+    release_s: f64,
+    finish_s: f64,
 }
 
-fn report_trace(report: &OmpReport) -> Value {
-    arr(report
+fn trace_recs(schedule: &[ScheduleEvent]) -> Vec<Rec> {
+    schedule
+        .iter()
+        .map(|e| Rec {
+            device: e.device as u64,
+            tasks: e.tasks as u64,
+            release_s: e.release_s,
+            finish_s: e.finish_s,
+        })
+        .collect()
+}
+
+fn report_recs(report: &OmpReport) -> Vec<Rec> {
+    report
         .batches
         .iter()
-        .map(|(d, r)| {
-            arr(vec![
-                num(d.0 as f64),
-                num(r.tasks_run as f64),
-                num(r.release_s),
-                num(r.finish_s),
-            ])
+        .map(|(d, r)| Rec {
+            device: d.0 as u64,
+            tasks: r.tasks_run as u64,
+            release_s: r.release_s,
+            finish_s: r.finish_s,
         })
-        .collect())
+        .collect()
 }
 
-/// Compare `actual` against the committed fixture, or bless it when the
-/// fixture is absent or `BLESS` is set.
-fn check_golden(name: &str, actual: &Value) {
+/// Stream the fixture straight to disk through the push [`Writer`] —
+/// even the largest trace grid never materializes as one document.
+fn write_fixture(path: &Path, entries: &[(String, Vec<Rec>)]) {
+    std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+    let file = std::fs::File::create(path).unwrap();
+    let mut w = Writer::new(BufWriter::new(file));
+    w.obj().unwrap();
+    for (name, recs) in entries {
+        w.key(name).unwrap();
+        w.arr().unwrap();
+        for r in recs {
+            w.arr().unwrap();
+            w.u64(r.device).unwrap();
+            w.u64(r.tasks).unwrap();
+            w.f64(r.release_s).unwrap();
+            w.f64(r.finish_s).unwrap();
+            w.end_arr().unwrap();
+        }
+        w.end_arr().unwrap();
+    }
+    w.end_obj().unwrap();
+    let mut out = w.into_inner();
+    out.write_all(b"\n").unwrap();
+    out.flush().unwrap();
+}
+
+/// Pull one `[device, tasks, release_s, finish_s]` record off the
+/// fixture's event stream.
+fn read_rec(r: &mut Reader<'_>) -> Rec {
+    r.expect_arr().unwrap();
+    let device = r.read_u64().unwrap();
+    let tasks = r.read_u64().unwrap();
+    let release_s = r.read_f64().unwrap();
+    let finish_s = r.read_f64().unwrap();
+    assert!(!r.arr_next().unwrap(), "fixture record has extra fields");
+    Rec { device, tasks, release_s, finish_s }
+}
+
+/// Compare `entries` against the committed fixture **record by
+/// record** over the pull [`Reader`] — a divergence names the exact
+/// trace and record index instead of dumping two documents — or bless
+/// the fixture when it is absent or `BLESS` is set.
+fn check_golden(name: &str, entries: &[(String, Vec<Rec>)]) {
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("tests/fixtures")
         .join(format!("{name}.json"));
-    let text = actual.to_string();
     if std::env::var("BLESS").is_ok() || !path.exists() {
-        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
-        std::fs::write(&path, format!("{text}\n")).unwrap();
+        write_fixture(&path, entries);
         eprintln!(
             "golden fixture {} (re)written — commit it",
             path.display()
         );
         return;
     }
-    let expected = std::fs::read_to_string(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut r = Reader::new(&text);
+    r.expect_obj().unwrap();
+    let mut idx = 0usize;
+    while let Some(key) = r.next_key().unwrap() {
+        assert!(
+            idx < entries.len(),
+            "fixture '{name}' has extra trace '{key}'; if the change is \
+             intentional, re-bless with `BLESS=1 cargo test`"
+        );
+        let (want_name, want) = &entries[idx];
+        assert_eq!(
+            key.as_ref(),
+            want_name,
+            "fixture '{name}' trace #{idx} is named differently; \
+             re-bless with `BLESS=1 cargo test` if intentional"
+        );
+        r.expect_arr().unwrap();
+        let mut rec = 0usize;
+        while r.arr_next().unwrap() {
+            let got = read_rec(&mut r);
+            assert!(
+                rec < want.len(),
+                "schedule trace '{name}/{want_name}' lost records: the \
+                 fixture has more than the {} produced; re-bless with \
+                 `BLESS=1 cargo test` if intentional",
+                want.len()
+            );
+            assert_eq!(
+                want[rec], got,
+                "schedule trace '{name}/{want_name}' diverged at record \
+                 {rec}; if the change is intentional, re-bless with \
+                 `BLESS=1 cargo test`"
+            );
+            rec += 1;
+        }
+        assert_eq!(
+            rec,
+            want.len(),
+            "schedule trace '{name}/{want_name}' grew: {} records \
+             produced but the fixture has {rec}; re-bless with \
+             `BLESS=1 cargo test` if intentional",
+            want.len()
+        );
+        idx += 1;
+    }
+    r.next().unwrap(); // no trailing garbage in the fixture
     assert_eq!(
-        expected.trim_end(),
-        text,
-        "schedule trace '{name}' diverged from the committed fixture; \
-         if the change is intentional, re-bless with `BLESS=1 cargo test`"
+        idx,
+        entries.len(),
+        "fixture '{name}' is missing traces; re-bless with \
+         `BLESS=1 cargo test` if intentional"
     );
 }
 
 #[test]
 fn golden_fig6_fig7_schedules() {
-    let mut entries: Vec<(String, Value)> = Vec::new();
+    let mut entries: Vec<(String, Vec<Rec>)> = Vec::new();
     for w in paper_workloads() {
         for f in 1..=fig6::MAX_FPGAS {
             let spec = RunSpec::new(w.clone(), f, ExecBackend::TimingOnly);
             let res = run_stencil_app(&spec).unwrap();
             entries.push((
                 format!("{}/{f}fpga", w.kernel.name()),
-                trace_value(&res.schedule),
+                trace_recs(&res.schedule),
             ));
         }
     }
-    let v = obj(entries.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
-    check_golden("fig6_fig7", &v);
+    check_golden("fig6_fig7", &entries);
 }
 
 #[test]
 fn golden_fig8_fig9_schedules() {
     let base = paper_workload(Kernel::Laplace2d);
-    let mut entries: Vec<(String, Value)> = Vec::new();
+    let mut entries: Vec<(String, Vec<Rec>)> = Vec::new();
     for ips in 1..=4usize {
         for iters in fig8::ITERATIONS {
             let w = base.with_ips(ips).with_iterations(iters);
@@ -112,12 +203,11 @@ fn golden_fig8_fig9_schedules() {
             let res = run_stencil_app(&spec).unwrap();
             entries.push((
                 format!("{ips}ip/{iters}it"),
-                trace_value(&res.schedule),
+                trace_recs(&res.schedule),
             ));
         }
     }
-    let v = obj(entries.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
-    check_golden("fig8_fig9", &v);
+    check_golden("fig8_fig9", &entries);
 }
 
 /// The heterogeneous interleaved pipeline of
@@ -219,7 +309,8 @@ fn heterogeneous_report() -> OmpReport {
 fn golden_heterogeneous_schedule() {
     let report = heterogeneous_report();
     assert_eq!(report.batches.len(), 5, "host/fpga/host/fpga/host");
-    check_golden("heterogeneous", &report_trace(&report));
+    let entries = vec![("pipeline".to_string(), report_recs(&report))];
+    check_golden("heterogeneous", &entries);
 }
 
 #[test]
@@ -231,7 +322,7 @@ fn schedule_traces_are_deterministic() {
     let a = run_stencil_app(&spec).unwrap().schedule;
     let b = run_stencil_app(&spec).unwrap().schedule;
     assert_eq!(a, b);
-    let ha = report_trace(&heterogeneous_report()).to_string();
-    let hb = report_trace(&heterogeneous_report()).to_string();
+    let ha = report_recs(&heterogeneous_report());
+    let hb = report_recs(&heterogeneous_report());
     assert_eq!(ha, hb);
 }

@@ -349,6 +349,103 @@ fn independent_chains_on_one_cluster_queue_in_replay() {
     assert_eq!(env.take("B").unwrap(), k.iterate(&gb, 4).unwrap());
 }
 
+fn temp_plan(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("ompfpga-program-api");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn saved_plan_warm_starts_a_fresh_runtime_bit_identically() {
+    // process A: capture, compile, save — then serve a request
+    let path = temp_plan("service.plan.json");
+    let input = Grid::random(&SHAPE, 23).unwrap();
+    let (mut rt_a, _) = make_runtime(&[(1, 1), (1, 2)]);
+    let mut env_a = DataEnv::new();
+    env_a.insert("V", input.clone());
+    let deps = rt_a.dep_vars(6);
+    let program =
+        rt_a.capture(&env_a, |ctx| submit_service(ctx, &deps)).unwrap();
+    let exe = program.compile(&mut rt_a).unwrap();
+    exe.save(&rt_a, &path).unwrap();
+    let rep_a = exe.execute(&mut rt_a, &mut env_a).unwrap();
+    let grid_a = env_a.take("V").unwrap();
+
+    // "process B": a fresh runtime replaying the same registration
+    // sequence loads the file instead of compiling
+    let (mut rt_b, _) = make_runtime(&[(1, 1), (1, 2)]);
+    let loaded = rt_b.load_executable(&path).unwrap();
+    assert_eq!(
+        loaded.makespan_s().to_bits(),
+        exe.makespan_s().to_bits(),
+        "modelled makespan round-trips bit-exactly"
+    );
+    assert_eq!(loaded.shape_hash(), exe.shape_hash());
+    assert_eq!(loaded.batch_count(), exe.batch_count());
+    let mut env_b = DataEnv::new();
+    env_b.insert("V", input.clone());
+    let rep_b = loaded.execute(&mut rt_b, &mut env_b).unwrap();
+    let grid_b = env_b.take("V").unwrap();
+
+    // the warm-started process compiled NOTHING and produced the same
+    // schedule and bit-identical grids
+    assert_eq!(rt_b.plan_stats().plans_built, 0);
+    assert_eq!(rt_b.plan_stats().placements_computed, 0);
+    assert_eq!(rt_b.plan_stats().executions, 1);
+    assert_eq!(trace(&rep_a), trace(&rep_b));
+    assert_eq!(grid_a, grid_b);
+    assert_eq!(grid_a, reference_request(&input));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn stale_plan_file_is_a_named_recompile_error() {
+    let path = temp_plan("stale.plan.json");
+    let input = Grid::random(&SHAPE, 29).unwrap();
+    let (mut rt_a, _) = make_runtime(&[(1, 2)]);
+    let mut env = DataEnv::new();
+    env.insert("V", input.clone());
+    let deps = rt_a.dep_vars(6);
+    let program =
+        rt_a.capture(&env, |ctx| submit_service(ctx, &deps)).unwrap();
+    let exe = program.compile(&mut rt_a).unwrap();
+    exe.save(&rt_a, &path).unwrap();
+
+    // epoch drift: the loader registered one more function
+    let (mut rt_b, _) = make_runtime(&[(1, 2)]);
+    rt_b.register_software("extra", |_| Ok(()));
+    let err = rt_b.load_executable(&path).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("stale executable file"), "{msg}");
+    assert!(msg.contains("recompile"), "{msg}");
+
+    // device-registry drift: same epoch count of registrations but a
+    // different cluster shape behind the device index
+    let (mut rt_c, _) = make_runtime(&[(2, 4)]);
+    let err = rt_c.load_executable(&path).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("device registry"), "{msg}");
+    assert!(msg.contains("recompile"), "{msg}");
+
+    // residency drift: same registrations, but the loader already has
+    // a mapped buffer resident — the saved placement priced against a
+    // different residency state and must not replay
+    let (mut rt_d, devs) = make_runtime(&[(1, 2)]);
+    rt_d.target_enter_data(devs[0], &env, &[(EnterMap::To, "V")]).unwrap();
+    let err = rt_d.load_executable(&path).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("residency fingerprint"), "{msg}");
+    assert!(msg.contains("recompile"), "{msg}");
+
+    // the clean twin still loads and serves
+    let (mut rt_e, _) = make_runtime(&[(1, 2)]);
+    let loaded = rt_e.load_executable(&path).unwrap();
+    loaded.execute(&mut rt_e, &mut env).unwrap();
+    assert_eq!(rt_e.plan_stats().plans_built, 0);
+    assert_eq!(env.take("V").unwrap(), reference_request(&input));
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn mismatched_slot_binding_is_a_named_error() {
     let input = Grid::random(&SHAPE, 17).unwrap();

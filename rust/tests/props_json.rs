@@ -1,0 +1,254 @@
+//! Differential properties of the streaming JSON core: the pull
+//! [`Reader`], the push [`Writer`] and the [`Value`] facade must agree
+//! with each other on every document — round-trips are lossless
+//! (including full-width 64-bit integers), a pure event-stream echo
+//! reproduces the facade's bytes exactly, and both parse paths report
+//! the same error at the same byte on malformed input.  All cases are
+//! seeded ([`omp_fpga::util::prop`]) and shrink to minimal
+//! counterexamples on failure.
+
+use std::collections::BTreeMap;
+
+use omp_fpga::util::json::{Event, Num, Reader, Value, Writer};
+use omp_fpga::util::prop::{check_shrink, Rng};
+
+/// Random scalar [`Num`], normalized the same way parsing normalizes
+/// (via the public constructors), covering the full u64/i64 range and
+/// genuine floats.
+fn gen_num(r: &mut Rng) -> Num {
+    match r.range(0, 5) {
+        0 => Num::U(r.next_u64()), // full width, incl. > 2^53
+        1 => Num::from_i64(-((r.next_u64() >> 1) as i64) - 1),
+        2 => Num::from_f64(r.range(0, 1000) as f64),
+        3 => Num::from_f64((r.f32() as f64 - 0.5) * 1e6),
+        _ => Num::from_f64(r.f32() as f64 * 1e-9),
+    }
+}
+
+/// Random string over a palette that exercises every escape class:
+/// clean ASCII (borrowed fast path), quotes/backslashes/controls
+/// (owned slow path) and multi-byte UTF-8 incl. an astral-plane char.
+fn gen_string(r: &mut Rng) -> String {
+    const PALETTE: &[&str] =
+        &["a", "Z", "0", " ", "\"", "\\", "\n", "\t", "\u{1}", "é", "😀", "/"];
+    (0..r.range(0, 8)).map(|_| *r.choose(PALETTE)).collect()
+}
+
+fn gen_value(r: &mut Rng, depth: usize) -> Value {
+    // at depth 0 only scalars, so generation always terminates
+    let top = if depth == 0 { 4 } else { 6 };
+    match r.range(0, top) {
+        0 => Value::Null,
+        1 => Value::Bool(r.bool()),
+        2 => Value::Num(gen_num(r)),
+        3 => Value::Str(gen_string(r)),
+        4 => Value::Arr(
+            (0..r.range(0, 4)).map(|_| gen_value(r, depth - 1)).collect(),
+        ),
+        _ => {
+            let mut m = BTreeMap::new();
+            for _ in 0..r.range(0, 4) {
+                m.insert(gen_string(r), gen_value(r, depth - 1));
+            }
+            Value::Obj(m)
+        }
+    }
+}
+
+/// Structural shrinker: replace a container by each of its children,
+/// drop one element at a time, or collapse a scalar to `Null`.
+fn shrink_value(v: &Value) -> Vec<Value> {
+    match v {
+        Value::Null => vec![],
+        Value::Arr(items) => {
+            let mut out: Vec<Value> = items.clone();
+            for i in 0..items.len() {
+                let mut smaller = items.clone();
+                smaller.remove(i);
+                out.push(Value::Arr(smaller));
+            }
+            out
+        }
+        Value::Obj(m) => {
+            let mut out: Vec<Value> = m.values().cloned().collect();
+            for k in m.keys() {
+                let mut smaller = m.clone();
+                smaller.remove(k);
+                out.push(Value::Obj(smaller));
+            }
+            out
+        }
+        _ => vec![Value::Null],
+    }
+}
+
+/// Echo `text` through the streaming layers only: pull every event off
+/// the [`Reader`] and push it straight into a [`Writer`] — no `Value`
+/// tree anywhere.
+fn stream_echo(text: &str) -> Result<String, String> {
+    let mut r = Reader::new(text);
+    let mut buf = Vec::new();
+    let mut w = Writer::new(&mut buf);
+    while let Some(ev) = r.next().map_err(|e| e.to_string())? {
+        match ev {
+            Event::Null => w.null(),
+            Event::Bool(b) => w.bool(b),
+            Event::Num(n) => w.num(n),
+            Event::Str(s) => w.str(&s),
+            Event::Key(k) => w.key(&k),
+            Event::ObjBegin => w.obj(),
+            Event::ObjEnd => w.end_obj(),
+            Event::ArrBegin => w.arr(),
+            Event::ArrEnd => w.end_arr(),
+        }
+        .map_err(|e| e.to_string())?;
+    }
+    w.into_inner();
+    String::from_utf8(buf).map_err(|e| e.to_string())
+}
+
+#[test]
+fn prop_write_then_parse_is_identity() {
+    check_shrink(
+        "json-roundtrip",
+        300,
+        |r| gen_value(r, 3),
+        shrink_value,
+        |v| {
+            let text = v.to_string();
+            let back = Value::parse(&text)
+                .map_err(|e| format!("reparse of {text:?} failed: {e}"))?;
+            if &back != v {
+                return Err(format!(
+                    "parse(write(x)) != x: wrote {text:?}, read back {back:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_streaming_echo_equals_facade_bytes() {
+    check_shrink(
+        "json-stream-echo",
+        300,
+        |r| gen_value(r, 3),
+        shrink_value,
+        |v| {
+            let text = v.to_string();
+            let echoed = stream_echo(&text)?;
+            if echoed != text {
+                return Err(format!(
+                    "streamed echo diverged from the facade:\n \
+                     facade: {text:?}\n stream: {echoed:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Outcome of a parse attempt: the document, or (byte position,
+/// message) of the first error.
+type Outcome = Result<Value, (usize, String)>;
+
+fn facade_outcome(text: &str) -> Outcome {
+    Value::parse(text).map_err(|e| (e.pos, e.msg))
+}
+
+/// The same parse driven purely through the pull API (`skip_value` +
+/// trailing-garbage check), then re-read as a tree for comparison.
+fn streaming_outcome(text: &str) -> Outcome {
+    let mut r = Reader::new(text);
+    let drive = |r: &mut Reader<'_>| -> Result<(), omp_fpga::util::json::JsonError> {
+        r.skip_value()?;
+        r.next()?;
+        Ok(())
+    };
+    match drive(&mut r) {
+        // a second pass builds the tree only so outcomes are comparable
+        Ok(()) => Ok(Value::parse(text).expect("skip accepted, parse must")),
+        Err(e) => Err((e.pos, e.msg)),
+    }
+}
+
+#[test]
+fn prop_error_positions_are_stable_across_parse_paths() {
+    // mutate one random spot of a valid serialization (insert a byte,
+    // truncate, or duplicate a char) and require the facade parse and
+    // the pure streaming parse to agree: same acceptance, or the same
+    // error at the same byte
+    let gen = |r: &mut Rng| {
+        let text = gen_value(r, 2).to_string();
+        let chars: Vec<char> = text.chars().collect();
+        let cut = r.range(0, chars.len() + 1);
+        match r.range(0, 3) {
+            0 => {
+                // insert a structural byte where it may not belong
+                let junk = *r.choose(&[',', ']', '}', ':', 'x', '"']);
+                let mut c = chars.clone();
+                c.insert(cut, junk);
+                c.into_iter().collect::<String>()
+            }
+            1 => chars[..cut].iter().collect(), // truncate
+            _ => {
+                let mut c = chars.clone();
+                if !chars.is_empty() {
+                    let i = r.range(0, chars.len());
+                    c.insert(i, chars[i]); // duplicate one char
+                }
+                c.into_iter().collect()
+            }
+        }
+    };
+    let shrink = |s: &String| {
+        let chars: Vec<char> = s.chars().collect();
+        (0..chars.len())
+            .map(|i| {
+                let mut c = chars.clone();
+                c.remove(i);
+                c.into_iter().collect::<String>()
+            })
+            .collect()
+    };
+    check_shrink("json-error-stability", 400, gen, shrink, |text| {
+        match (facade_outcome(text), streaming_outcome(text)) {
+            (Ok(a), Ok(b)) => {
+                if a == b {
+                    Ok(())
+                } else {
+                    Err(format!("both accepted {text:?} but built {a:?} vs {b:?}"))
+                }
+            }
+            (Err(a), Err(b)) => {
+                if a == b {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "error drift on {text:?}: facade says {a:?}, \
+                         streaming says {b:?}"
+                    ))
+                }
+            }
+            (a, b) => Err(format!(
+                "acceptance drift on {text:?}: facade {}, streaming {}",
+                if a.is_ok() { "accepts" } else { "rejects" },
+                if b.is_ok() { "accepts" } else { "rejects" },
+            )),
+        }
+    });
+}
+
+#[test]
+fn full_width_integers_survive_a_tree_roundtrip() {
+    // the regression the streaming core exists to fix: shape hashes and
+    // residency fingerprints are raw u64s and must not pass through f64
+    for x in [u64::MAX, u64::MAX - 1, (1 << 53) + 1, 1 << 63] {
+        let v = Value::Arr(vec![Value::Num(Num::U(x))]);
+        let text = v.to_string();
+        assert_eq!(text, format!("[{x}]"));
+        let back = Value::parse(&text).unwrap();
+        assert_eq!(back.as_arr().unwrap()[0].as_u64(), Some(x));
+    }
+}
