@@ -1,6 +1,6 @@
 # Entry points the docs and test skip-messages refer to.
 
-.PHONY: artifacts test perf warm-start clean
+.PHONY: artifacts test perf warm-start failover clean
 
 # AOT-lower the five Table-I stencils to HLO-text artifacts + manifest.
 # Written to ./artifacts (where the examples, run from the repo root,
@@ -25,6 +25,12 @@ perf:
 # Leaves results/served_stencil.plan.json behind for inspection.
 warm-start:
 	cargo run --release --example served_stencil
+
+# Mid-run board-death recovery demo: a serving process loses a board
+# (then the survivor), stays bit-identical, and writes the itemized
+# recovery bill to results/failover_recovery.json (DESIGN.md §9).
+failover:
+	cargo run --release --example failover
 
 clean:
 	rm -rf target artifacts rust/artifacts results BENCH_*.json

@@ -1,0 +1,183 @@
+//! Mid-run device failure and recovery over the VC709 cluster — the
+//! platform's unhappy paths, end to end (DESIGN.md §9).
+//!
+//! A serving process replays one compiled stencil plan per request on a
+//! two-board cluster.  Mid-service a board dies on dispatch (injected
+//! via the deterministic fault plane, exactly as the property net does
+//! it): the executor observes the typed `DeviceFailed`, marks the board
+//! dead with a named epoch bump, invalidates its residency, re-places
+//! the orphaned run on the survivor through the same `device(any)` HEFT
+//! pricing that compiled the plan, and drains the recovery schedule —
+//! grids stay **bit-identical** to a failure-free service because
+//! functional truth never leaves the host data environment.  The stale
+//! executable is then refused *by name*, the runtime recompiles on the
+//! surviving board, and when the survivor is hot-removed too the same
+//! region degrades to the host base function — still bit-identical.
+//!
+//! The itemized recovery bill is written to
+//! `results/failover_recovery.json` (uploaded by CI's fault-smoke job).
+//!
+//! ```sh
+//! cargo run --release --example failover   # or: make failover
+//! ```
+
+use anyhow::{ensure, Result};
+
+use omp_fpga::config::ClusterConfig;
+use omp_fpga::omp::{
+    DataEnv, DepVar, DeviceId, FaultSchedule, MapDir, OmpRuntime,
+    RecoveryEvent, SingleCtx,
+};
+use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
+use omp_fpga::stencil::{Grid, Kernel};
+
+const REQUESTS: usize = 6;
+const STEPS: usize = 4;
+/// the request whose only batch observes the injected board death
+const FAIL_AT_REQUEST: usize = 3;
+
+fn build_runtime(kernel: Kernel) -> Result<OmpRuntime> {
+    let mut rt = OmpRuntime::new(2);
+    // the software base function is the degradation tier: same
+    // reference numerics the Golden backend runs, so host fallback is
+    // bit-identical by construction
+    rt.register_software("do_step", move |env| {
+        let g = env.take("V")?;
+        env.insert("V", kernel.apply(&g)?);
+        Ok(())
+    });
+    rt.declare_hw_variant("do_step", "vc709", "hw_step", kernel);
+    let cfg = ClusterConfig::homogeneous(1, 2, kernel);
+    for _ in 0..2 {
+        rt.register_device(Box::new(Vc709Plugin::new(
+            &cfg,
+            ExecBackend::Golden,
+        )?));
+    }
+    Ok(rt)
+}
+
+fn submit_request(ctx: &mut SingleCtx, deps: &[DepVar]) -> Result<()> {
+    for i in 0..STEPS {
+        ctx.target("do_step")
+            .device_any()
+            .map(MapDir::ToFrom, "V")
+            .depend_in(deps[i])
+            .depend_out(deps[i + 1])
+            .nowait()
+            .submit()?;
+    }
+    Ok(())
+}
+
+fn serve_one(rt: &mut OmpRuntime, env: &mut DataEnv) -> Result<f64> {
+    let deps = rt.dep_vars(STEPS + 1);
+    let rep = rt.parallel(env, |ctx| submit_request(ctx, &deps))?;
+    Ok(rep.virtual_time_s())
+}
+
+fn main() -> Result<()> {
+    let kernel = Kernel::Diffusion2d;
+    let input = Grid::random(&[48, 32], 7)?;
+
+    // -- reference: the same service with no failures, ever ------------
+    let mut ref_rt = build_runtime(kernel)?;
+    let mut ref_env = DataEnv::new();
+    ref_env.insert("V", input.clone());
+    for _ in 0..REQUESTS {
+        serve_one(&mut ref_rt, &mut ref_env)?;
+    }
+
+    // -- the failing service -------------------------------------------
+    let mut rt = build_runtime(kernel)?;
+    let mut env = DataEnv::new();
+    env.insert("V", input.clone());
+    let deps = rt.dep_vars(STEPS + 1);
+    let exe = rt
+        .capture(&env, |ctx| submit_request(ctx, &deps))?
+        .compile(&mut rt)?;
+    // request 0 through `parallel` (priming the plan cache — its stale
+    // entry is what gets the named recompile after the failure), the
+    // rest through the compiled executable
+    serve_one(&mut rt, &mut env)?;
+    for _ in 1..FAIL_AT_REQUEST {
+        exe.execute(&mut rt, &mut env)?;
+    }
+
+    // board 1 (which the HEFT tie-break owns this chain on) dies on its
+    // next dispatch; deterministic, so this run always reproduces
+    rt.inject_faults(FaultSchedule::new().fail_after_batches(DeviceId(1), 0))?;
+    let rep = exe.execute(&mut rt, &mut env)?;
+    println!("request {FAIL_AT_REQUEST} observed a board death:");
+    for ev in &rep.recovery {
+        println!("  {ev:?}");
+    }
+    println!("  bill: {:?}", rep.recovery_cost);
+    ensure!(rep.recovery_cost.failures == 1, "exactly one board died");
+    ensure!(
+        rep.recovery.iter().any(|e| matches!(
+            e,
+            RecoveryEvent::RunReplaced { to, .. } if *to == DeviceId(2)
+        )),
+        "the orphaned run must re-place on the survivor"
+    );
+    ensure!(rt.is_dead(DeviceId(1)), "the dead board stays dead");
+
+    // the committed plan referenced the dead board: refused by name
+    let err = exe.execute(&mut rt, &mut env).unwrap_err();
+    println!("stale plan    : {err:#}");
+    ensure!(format!("{err:#}").contains("device_failed"), "{err:#}");
+
+    // service continues on the survivor — `parallel` recompiles, by name
+    for _ in FAIL_AT_REQUEST + 1..REQUESTS {
+        serve_one(&mut rt, &mut env)?;
+    }
+    ensure!(
+        rt.plan_stats()
+            .recompiles
+            .iter()
+            .any(|r| r.contains("device_failed")),
+        "the recompile must be attributed to the death"
+    );
+    ensure!(
+        env.get("V")? == ref_env.get("V")?,
+        "recovered service diverged from the failure-free reference"
+    );
+    println!(
+        "served {REQUESTS} requests across the failure — grids \
+         bit-identical to the failure-free service"
+    );
+
+    // -- lose the survivor too: degrade to the host base function ------
+    rt.unregister_device(DeviceId(2))?;
+    let t_host = serve_one(&mut rt, &mut env)?;
+    serve_one(&mut ref_rt, &mut ref_env)?;
+    ensure!(
+        env.get("V")? == ref_env.get("V")?,
+        "host-degraded request diverged"
+    );
+    ensure!(t_host == 0.0, "host base functions are free in virtual time");
+    println!(
+        "survivor hot-removed: request {} degraded to the host base \
+         function — still bit-identical",
+        REQUESTS
+    );
+
+    // -- the itemized bill, for CI -------------------------------------
+    std::fs::create_dir_all("results")?;
+    let cost = &rep.recovery_cost;
+    let json = format!(
+        "{{\n  \"failures\": {},\n  \"extra_makespan_s\": {},\n  \
+         \"replacements\": {},\n  \"host_fallbacks\": {},\n  \
+         \"restreamed_bytes\": {},\n  \"recovery_events\": {}\n}}\n",
+        cost.failures,
+        cost.extra_makespan_s,
+        cost.replacements,
+        cost.host_fallbacks,
+        cost.restreamed_bytes,
+        rep.recovery.len()
+    );
+    std::fs::write("results/failover_recovery.json", json)?;
+    println!("wrote results/failover_recovery.json");
+    Ok(())
+}

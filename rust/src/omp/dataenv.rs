@@ -245,6 +245,30 @@ impl PresentTable {
             }
         }
     }
+
+    /// Device `dev` died (or was hot-removed): every one of its resident
+    /// copies is gone.  The entries themselves *stay mapped* — refcounts
+    /// must still drain through `target exit data` — but nothing on the
+    /// dead board is valid and nothing can be flushed from it (functional
+    /// truth lives in the host `DataEnv`, so no data is lost; only the
+    /// transfer-elision credit is).  Returns `(buffers, bytes)` of the
+    /// device-valid residency that was invalidated — the re-streaming
+    /// bill if those buffers are needed on another device.
+    pub fn fail_device(&mut self, dev: DeviceId) -> (usize, usize) {
+        let mut buffers = 0;
+        let mut bytes = 0;
+        for ((d, _), e) in self.entries.iter_mut() {
+            if *d == dev {
+                if e.device_valid {
+                    buffers += 1;
+                    bytes += e.bytes;
+                }
+                e.device_valid = false;
+                e.host_stale = false;
+            }
+        }
+        (buffers, bytes)
+    }
 }
 
 /// One device's residency view for one batch, derived from the

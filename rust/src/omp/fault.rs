@@ -1,0 +1,335 @@
+//! Fault injection and recovery vocabulary — the unhappy paths of the
+//! multi-FPGA platform.
+//!
+//! The paper's platform (six VC709s over fiber-optic MFH links) assumes
+//! every board survives a run.  A long-lived serving process cannot: a
+//! board can die mid-batch, or be hot-removed/hot-added between
+//! requests.  This module defines the *deterministic, seedable* fault
+//! plane the runtime consults so those scenarios are reproducible in
+//! tests:
+//!
+//! * [`FaultSchedule`] / [`FaultSpec`] — a declarative schedule ("device
+//!   2 fails at virtual time 0.8 s", "device 1 fails after its 3rd
+//!   batch"), buildable by hand or drawn from a seed
+//!   ([`FaultSchedule::seeded`]) for property nets.
+//! * [`FaultPlane`] (crate-internal) — the armed schedule the executor
+//!   checks before every device batch dispatch.
+//! * [`DeviceFailed`] — the typed error a [`DevicePlugin`] raises (or
+//!   the executor synthesizes) when a board dies; carried through
+//!   `anyhow` so `run_batch` signatures don't change.
+//! * [`RecoveryEvent`] / [`RecoveryCost`] — the named audit trail and
+//!   the aggregate bill (extra makespan, re-placements, host fallbacks,
+//!   re-streamed bytes) surfaced in `OmpReport`.
+//!
+//! The recovery *algorithm* lives in `program.rs` (it is a replay
+//! concern); the invalidation of a dead board's present-table entries
+//! lives in `dataenv.rs` (`PresentTable::fail_device`).  Functional
+//! truth always lives in the host `DataEnv`, so recovery is
+//! bit-identical by construction: only the timing plane re-prices.
+//!
+//! [`DevicePlugin`]: crate::omp::device::DevicePlugin
+
+use std::collections::BTreeMap;
+
+use crate::omp::device::{DeviceId, HOST_DEVICE};
+use crate::util::prop::Rng;
+
+/// One injected fault.  Virtual-time triggers compare against the
+/// batch's modelled start; batch-count triggers compare against the
+/// number of batches the device has *completed* under the armed plane.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultSpec {
+    /// Device dies at virtual time `at_s`: the first batch whose
+    /// modelled start is `>= at_s` observes the failure.
+    FailAt { device: DeviceId, at_s: f64 },
+    /// Device dies after completing `batches` batches: dispatch number
+    /// `batches + 1` observes the failure.  `batches == 0` kills the
+    /// very first dispatch.
+    FailAfterBatches { device: DeviceId, batches: usize },
+}
+
+impl FaultSpec {
+    pub fn device(&self) -> DeviceId {
+        match self {
+            FaultSpec::FailAt { device, .. } => *device,
+            FaultSpec::FailAfterBatches { device, .. } => *device,
+        }
+    }
+}
+
+/// A deterministic schedule of injected faults.  Build by hand
+/// ([`fail_at`](Self::fail_at) / [`fail_after_batches`](Self::fail_after_batches))
+/// or draw from a seed ([`seeded`](Self::seeded)); arm with
+/// `OmpRuntime::inject_faults`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSchedule {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultSchedule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Device dies at virtual time `at_s`.
+    pub fn fail_at(mut self, device: DeviceId, at_s: f64) -> Self {
+        self.specs.push(FaultSpec::FailAt { device, at_s });
+        self
+    }
+
+    /// Device dies after completing `batches` batches.
+    pub fn fail_after_batches(
+        mut self,
+        device: DeviceId,
+        batches: usize,
+    ) -> Self {
+        self.specs.push(FaultSpec::FailAfterBatches { device, batches });
+        self
+    }
+
+    /// Draw up to `max_faults` single-device faults from a seed —
+    /// deterministic per seed, so property-net counterexamples
+    /// reproduce.  `devices` are the candidate victims (the host is
+    /// never a victim and is skipped if listed); `horizon_s` bounds the
+    /// virtual-time triggers.
+    pub fn seeded(
+        seed: u64,
+        devices: &[DeviceId],
+        horizon_s: f64,
+        max_faults: usize,
+    ) -> Self {
+        let victims: Vec<DeviceId> = devices
+            .iter()
+            .copied()
+            .filter(|d| *d != HOST_DEVICE)
+            .collect();
+        let mut sched = FaultSchedule::new();
+        if victims.is_empty() || max_faults == 0 {
+            return sched;
+        }
+        let mut rng = Rng::with_seed(seed);
+        let n = rng.range(0, max_faults + 1);
+        for _ in 0..n {
+            let device = *rng.choose(&victims);
+            if rng.bool() {
+                let at_s = f64::from(rng.f32()) * horizon_s.max(0.0);
+                sched = sched.fail_at(device, at_s);
+            } else {
+                let batches = rng.range(0, 4);
+                sched = sched.fail_after_batches(device, batches);
+            }
+        }
+        sched
+    }
+}
+
+/// The armed fault plane the executor consults.  One per runtime;
+/// `check` is called immediately before each *device* batch dispatch
+/// (the host never fails), `batch_completed` after each success, and
+/// `disarm` once a device has actually died (a board only dies once).
+#[derive(Debug, Clone, Default)]
+pub(crate) struct FaultPlane {
+    specs: Vec<FaultSpec>,
+    batches_done: BTreeMap<usize, usize>,
+}
+
+impl FaultPlane {
+    /// Replace the armed schedule (counters reset).
+    pub(crate) fn arm(&mut self, schedule: FaultSchedule) {
+        self.specs = schedule.specs;
+        self.batches_done.clear();
+    }
+
+    /// Would a batch starting at `start_s` on `dev` observe a failure?
+    /// Returns the named cause if so.
+    pub(crate) fn check(&self, dev: DeviceId, start_s: f64) -> Option<String> {
+        for spec in &self.specs {
+            match spec {
+                FaultSpec::FailAt { device, at_s }
+                    if *device == dev && start_s >= *at_s =>
+                {
+                    return Some(format!(
+                        "injected: device {} fails at t={:.6}s \
+                         (batch start {:.6}s)",
+                        dev.0, at_s, start_s
+                    ));
+                }
+                FaultSpec::FailAfterBatches { device, batches }
+                    if *device == dev
+                        && self.batches_done.get(&dev.0).copied()
+                            .unwrap_or(0)
+                            >= *batches =>
+                {
+                    return Some(format!(
+                        "injected: device {} fails after {} batch(es)",
+                        dev.0, batches
+                    ));
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// Record a successful batch on `dev` (feeds `FailAfterBatches`).
+    pub(crate) fn batch_completed(&mut self, dev: DeviceId) {
+        *self.batches_done.entry(dev.0).or_insert(0) += 1;
+    }
+
+    /// Remove every spec targeting `dev` — it is dead and cannot die
+    /// again.
+    pub(crate) fn disarm(&mut self, dev: DeviceId) {
+        self.specs.retain(|s| s.device() != dev);
+    }
+
+    pub(crate) fn is_armed(&self) -> bool {
+        !self.specs.is_empty()
+    }
+}
+
+/// The typed mid-batch failure a device plugin raises.  Carried through
+/// `anyhow::Error` (so `DevicePlugin::run_batch` keeps its signature)
+/// and downcast by the executor, which knows *which* device it
+/// dispatched to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceFailed {
+    /// Virtual time at which the board died.
+    pub at_s: f64,
+    /// Named cause, e.g. `"injected: device 2 fails after 1 batch(es)"`.
+    pub cause: String,
+}
+
+impl std::fmt::Display for DeviceFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "device failed at t={:.6}s: {}", self.at_s, self.cause)
+    }
+}
+
+impl std::error::Error for DeviceFailed {}
+
+/// One named step of the recovery audit trail, in occurrence order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RecoveryEvent {
+    /// A board died mid-drain.
+    DeviceFailed { device: DeviceId, at_s: f64, cause: String },
+    /// The dead board's present-table residency was invalidated:
+    /// `bytes` of device-valid data must re-stream if needed again.
+    ResidencyLost { device: DeviceId, buffers: usize, bytes: usize },
+    /// An orphaned run was re-placed on a surviving device by the
+    /// `device(any)` HEFT pricing.
+    RunReplaced { tasks: usize, from: DeviceId, to: DeviceId },
+    /// No surviving device implements the kernel: the run degraded to
+    /// the host base function (the paper's verification flow repurposed
+    /// as the fallback tier).
+    HostFallback { tasks: usize, base: String },
+}
+
+/// The aggregate recovery bill surfaced in `OmpReport`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryCost {
+    /// Boards that died during this run.
+    pub failures: usize,
+    /// Makespan paid beyond the committed plan's modelled makespan.
+    pub extra_makespan_s: f64,
+    /// Orphaned runs re-placed on surviving devices.
+    pub replacements: usize,
+    /// Orphaned runs degraded to the host base function.
+    pub host_fallbacks: usize,
+    /// Device-valid bytes whose residency was lost with the board.
+    pub restreamed_bytes: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D1: DeviceId = DeviceId(1);
+    const D2: DeviceId = DeviceId(2);
+
+    #[test]
+    fn fail_at_trips_on_or_after_the_deadline() {
+        let mut plane = FaultPlane::default();
+        plane.arm(FaultSchedule::new().fail_at(D1, 0.5));
+        assert!(plane.check(D1, 0.49).is_none());
+        assert!(plane.check(D1, 0.5).is_some());
+        assert!(plane.check(D1, 9.0).is_some());
+        // other devices unaffected
+        assert!(plane.check(D2, 9.0).is_none());
+    }
+
+    #[test]
+    fn fail_after_batches_counts_completions() {
+        let mut plane = FaultPlane::default();
+        plane.arm(FaultSchedule::new().fail_after_batches(D1, 2));
+        assert!(plane.check(D1, 0.0).is_none());
+        plane.batch_completed(D1);
+        assert!(plane.check(D1, 0.0).is_none());
+        plane.batch_completed(D1);
+        let cause = plane.check(D1, 0.0).expect("third dispatch dies");
+        assert!(cause.contains("after 2 batch(es)"), "{cause}");
+        // a different device's completions don't feed D1's counter
+        assert!(plane.check(D2, 0.0).is_none());
+    }
+
+    #[test]
+    fn fail_after_zero_batches_kills_first_dispatch() {
+        let mut plane = FaultPlane::default();
+        plane.arm(FaultSchedule::new().fail_after_batches(D2, 0));
+        assert!(plane.check(D2, 0.0).is_some());
+        assert!(plane.check(D1, 0.0).is_none());
+    }
+
+    #[test]
+    fn disarm_makes_a_dead_board_stay_dead_quietly() {
+        let mut plane = FaultPlane::default();
+        plane.arm(
+            FaultSchedule::new().fail_at(D1, 0.0).fail_after_batches(D2, 0),
+        );
+        assert!(plane.is_armed());
+        plane.disarm(D1);
+        assert!(plane.check(D1, 1.0).is_none());
+        assert!(plane.check(D2, 1.0).is_some());
+        plane.disarm(D2);
+        assert!(!plane.is_armed());
+    }
+
+    #[test]
+    fn seeded_schedules_are_deterministic_and_spare_the_host() {
+        let devs = [HOST_DEVICE, D1, D2];
+        let a = FaultSchedule::seeded(42, &devs, 2.0, 3);
+        let b = FaultSchedule::seeded(42, &devs, 2.0, 3);
+        assert_eq!(a, b);
+        for spec in &a.specs {
+            assert_ne!(spec.device(), HOST_DEVICE);
+            if let FaultSpec::FailAt { at_s, .. } = spec {
+                assert!((0.0..=2.0).contains(at_s));
+            }
+        }
+        // across many seeds, at least one non-empty schedule appears
+        let any_nonempty = (0..32).any(|s| {
+            !FaultSchedule::seeded(s, &devs, 2.0, 3).is_empty()
+        });
+        assert!(any_nonempty);
+    }
+
+    #[test]
+    fn seeded_with_no_victims_is_empty() {
+        assert!(FaultSchedule::seeded(1, &[HOST_DEVICE], 2.0, 3).is_empty());
+        assert!(FaultSchedule::seeded(1, &[D1], 2.0, 0).is_empty());
+    }
+
+    #[test]
+    fn device_failed_is_a_typed_anyhow_cause() {
+        let err = anyhow::Error::new(DeviceFailed {
+            at_s: 1.25,
+            cause: "injected".into(),
+        });
+        let df = err.downcast_ref::<DeviceFailed>().expect("downcasts");
+        assert_eq!(df.at_s, 1.25);
+        assert!(err.to_string().contains("t=1.250000s"));
+    }
+}

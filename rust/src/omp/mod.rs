@@ -40,6 +40,7 @@
 
 pub mod dataenv;
 pub mod device;
+pub mod fault;
 pub mod graph;
 pub mod host;
 pub mod program;
@@ -50,6 +51,9 @@ pub mod variant;
 
 pub use dataenv::{
     BatchCtx, EnterMap, ExitMap, PresentTable, Residency,
+};
+pub use fault::{
+    DeviceFailed, FaultSchedule, FaultSpec, RecoveryCost, RecoveryEvent,
 };
 pub use program::{
     BufferSlot, Executable, PlanStats, Program, EXECUTABLE_FORMAT,

@@ -75,6 +75,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::dataenv::{BatchCtx, PresentTable};
 use super::device::{DataEnv, DeviceId, DevicePlugin, DeviceSel, HOST_DEVICE};
+use super::fault::{DeviceFailed, RecoveryEvent};
 use super::graph::TaskGraph;
 use super::runtime::{OmpReport, OmpRuntime, SingleCtx, WritebackEvent};
 use super::sched::{BatchDag, Dispatcher};
@@ -214,6 +215,11 @@ struct PlanRun {
     device: DeviceId,
     tasks: Vec<TaskId>,
     preds: Vec<usize>,
+    /// release floor in absolute virtual time — 0.0 for a normal
+    /// compile; a recovery plan floors re-planned work at the failure
+    /// detection instant (plus its drained predecessors' finishes), and
+    /// replay honours the floor exactly as planning did
+    floor: f64,
 }
 
 /// One dispatched batch of the committed plan: the primary run plus any
@@ -221,6 +227,25 @@ struct PlanRun {
 #[derive(Debug, Clone)]
 struct PlanStep {
     runs: Vec<usize>,
+}
+
+/// What one `plan_with` pass commits: the placed run structure, the
+/// dispatch sequence, the modelled makespan, and how many `device(any)`
+/// placements were priced (for [`PlanStats`]).
+struct PlannedSchedule {
+    runs: Vec<PlanRun>,
+    steps: Vec<PlanStep>,
+    makespan_s: f64,
+    placements: usize,
+}
+
+/// One failed dispatch observed by `replay_steps`: which step died, on
+/// which device, at what virtual time, and the named cause.
+struct FailedStep {
+    step: usize,
+    device: DeviceId,
+    at_s: f64,
+    cause: String,
 }
 
 /// The immutable product of compilation: the placed graph, the run
@@ -708,6 +733,9 @@ fn read_run(r: &mut Reader<'_>) -> Result<PlanRun> {
         device: DeviceId(device.context("run missing 'device'")?),
         tasks,
         preds,
+        // recovery plans are never persisted (they live past an epoch
+        // bump, which `save` refuses), so a loaded run's floor is 0
+        floor: 0.0,
     })
 }
 
@@ -828,7 +856,59 @@ impl OmpRuntime {
         // simulate residency evolution over the plan on a clone; the
         // live table is only touched by executions
         let mut present = self.present.clone();
-        let mut disp = Dispatcher::new(BatchDag::build(&graph)?);
+        let planned = self.plan_with(
+            &mut graph,
+            &phantom,
+            &mut present,
+            &[],
+            &std::collections::BTreeMap::new(),
+        )?;
+        self.plan_stats.plans_built += 1;
+        self.plan_stats.placements_computed += planned.placements;
+        Ok(Executable {
+            plan: Arc::new(CompiledPlan {
+                graph,
+                slots: program.slots.clone(),
+                runs: planned.runs,
+                steps: planned.steps,
+                makespan_s: planned.makespan_s,
+            }),
+            epoch: self.epoch,
+            shape_hash: program.shape_hash,
+            runtime_id: self.runtime_id,
+        })
+    }
+
+    /// The planning loop shared by [`Self::compile`] (fresh region, zero
+    /// clocks, zero floors) and mid-run recovery (`Self::recover` —
+    /// carried device clocks, releases floored at the failure instant):
+    /// condense `graph` into runs, price and place every `device(any)`
+    /// run on the *live* devices (a dead board never receives a
+    /// candidate), coalesce ready host runs, model forced writebacks
+    /// against `present`, and commit the dispatch sequence.  Placed
+    /// tasks are bound in `graph` in place, with their `declare
+    /// variant` resolved against the chosen device's arch.  A run
+    /// statically bound to a removed device is a named error — the
+    /// caller must rebind to `device(any)` (recovery does) or recompile.
+    fn plan_with(
+        &self,
+        graph: &mut TaskGraph,
+        phantom: &DataEnv,
+        present: &mut PresentTable,
+        task_floor: &[f64],
+        dev_clocks: &std::collections::BTreeMap<usize, f64>,
+    ) -> Result<PlannedSchedule> {
+        let dag = BatchDag::build(graph)?;
+        let run_floor: Vec<f64> = (0..dag.len())
+            .map(|r| {
+                dag.run(r)
+                    .tasks
+                    .iter()
+                    .map(|id| task_floor.get(id.0).copied().unwrap_or(0.0))
+                    .fold(0.0f64, f64::max)
+            })
+            .collect();
+        let mut disp = Dispatcher::new_seeded(dag, &run_floor, dev_clocks);
         let mut placements = 0usize;
         let mut steps: Vec<PlanStep> = Vec::new();
         let mut makespan = 0.0f64;
@@ -841,9 +921,15 @@ impl OmpRuntime {
             // the figure sweeps) price nothing here.
             for r in disp.ready_unplaced() {
                 let tasks = disp.dag().run(r).tasks.clone();
-                let bufs = read_buffers(&graph, &tasks);
+                let bufs = read_buffers(graph, &tasks);
                 let mut cands: Vec<(DeviceId, f64)> = Vec::new();
                 for (i, plugin) in self.devices.iter().enumerate().skip(1) {
+                    if self.dead.contains(&i) {
+                        // a removed board never volunteers: orphaned
+                        // `device(any)` work re-places on the survivors
+                        // or falls back to the host base function
+                        continue;
+                    }
                     let arch = plugin.arch();
                     let names: Vec<String> = tasks
                         .iter()
@@ -854,7 +940,7 @@ impl OmpRuntime {
                         .collect();
                     let residency = present.residency(DeviceId(i));
                     if let Some(mut est) = plugin.estimate_batch_s(
-                        &graph, &tasks, &names, &self.fns, &phantom,
+                        graph, &tasks, &names, &self.fns, phantom,
                         &residency,
                     ) {
                         for b in &bufs {
@@ -879,6 +965,15 @@ impl OmpRuntime {
             let dev = disp.device_of(run).ok_or_else(|| {
                 anyhow!("dispatched run {run} has no device (scheduler bug)")
             })?;
+            if dev != HOST_DEVICE && self.dead.contains(&dev.0) {
+                bail!(
+                    "run {run} is statically bound to device {}, which was \
+                     removed ({}) — rebind with device(any) or recompile \
+                     after re-registering",
+                    dev.0,
+                    self.epoch_reason
+                );
+            }
             let mut ids = disp.dag().run(run).tasks.clone();
             // bind placed tasks and resolve their `declare variant`
             // against the chosen device's arch (deferred resolution —
@@ -922,8 +1017,8 @@ impl OmpRuntime {
             // the identical rule the replay applies to the live table.
             let (release_s, flushed) = charge_forced_writebacks(
                 &self.devices,
-                &mut present,
-                &graph,
+                present,
+                graph,
                 &ids,
                 dev,
                 release_s,
@@ -947,11 +1042,11 @@ impl OmpRuntime {
                     .collect();
                 self.devices[dev.0]
                     .estimate_batch_s(
-                        &graph,
+                        graph,
                         &ids,
                         &names,
                         &self.fns,
-                        &phantom,
+                        phantom,
                         &present.residency(dev),
                     )
                     .unwrap_or(0.0)
@@ -962,7 +1057,7 @@ impl OmpRuntime {
                 disp.complete(r2, if flushed { release_s } else { rel2 })?;
             }
             // planned present-table bookkeeping, mirrored by the replay
-            settle_present_after_batch(&mut present, &graph, &ids, dev);
+            settle_present_after_batch(present, graph, &ids, dev);
             makespan = makespan.max(finish_s);
             steps.push(PlanStep { runs: step_runs });
         }
@@ -975,22 +1070,10 @@ impl OmpRuntime {
                 device: bindings[r],
                 tasks: disp.dag().run(r).tasks.clone(),
                 preds: disp.dag().preds(r).to_vec(),
+                floor: run_floor[r],
             })
             .collect();
-        self.plan_stats.plans_built += 1;
-        self.plan_stats.placements_computed += placements;
-        Ok(Executable {
-            plan: Arc::new(CompiledPlan {
-                graph,
-                slots: program.slots.clone(),
-                runs,
-                steps,
-                makespan_s: makespan,
-            }),
-            epoch: self.epoch,
-            shape_hash: program.shape_hash,
-            runtime_id: self.runtime_id,
-        })
+        Ok(PlannedSchedule { runs, steps, makespan_s: makespan, placements })
     }
 
     /// `parallel`'s compile path: reuse the cached plan for this graph
@@ -1108,29 +1191,82 @@ impl OmpRuntime {
         }
         self.plan_stats.executions += 1;
         let t0 = Instant::now();
-        let graph = &plan.graph;
         let mut report =
-            OmpReport { tasks: graph.len(), ..Default::default() };
+            OmpReport { tasks: plan.graph.len(), ..Default::default() };
         let mut finish = vec![0.0f64; plan.runs.len()];
         // per-device virtual availability clocks, mirroring the
         // dispatcher's: two independent batches committed to one device
         // must still queue behind each other at replay
         let mut dev_free: std::collections::BTreeMap<usize, f64> =
             std::collections::BTreeMap::new();
-        for step in &plan.steps {
+        let failed = self.replay_steps(
+            &plan.graph,
+            &plan.runs,
+            &plan.steps,
+            env,
+            &mut finish,
+            &mut dev_free,
+            &mut report,
+        )?;
+        if let Some(fail) = failed {
+            self.recover(plan, fail, finish, dev_free, env, &mut report)?;
+            // the recovery bill: makespan paid beyond the committed
+            // plan's model (re-streaming, re-queueing, host fallbacks)
+            report.recovery_cost.extra_makespan_s =
+                (report.virtual_time_s() - plan.makespan_s).max(0.0);
+        }
+        report.wall_s = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Drain `steps` through the DES: one `run_batch` per step, releases
+    /// recomputed from actual predecessor finishes (floored at each
+    /// run's planned floor) and per-device availability clocks.  Returns
+    /// `Some(FailedStep)` when a device batch observes a failure —
+    /// either the armed fault plane trips at dispatch, or the plugin
+    /// itself raises [`DeviceFailed`] — *before* that step mutated the
+    /// data environment (a failing plugin must fail atomically; every
+    /// in-tree plugin checks injection before touching `env`).  The
+    /// host never fails.  Any other plugin error propagates unchanged.
+    #[allow(clippy::too_many_arguments)]
+    fn replay_steps(
+        &mut self,
+        graph: &TaskGraph,
+        runs: &[PlanRun],
+        steps: &[PlanStep],
+        env: &mut DataEnv,
+        finish: &mut [f64],
+        dev_free: &mut std::collections::BTreeMap<usize, f64>,
+        report: &mut OmpReport,
+    ) -> Result<Option<FailedStep>> {
+        for (si, step) in steps.iter().enumerate() {
             let primary = step.runs[0];
-            let dev = plan.runs[primary].device;
-            let pred_release = release_of(&plan.runs, &finish, primary);
+            let dev = runs[primary].device;
+            let pred_release = release_of(runs, finish, primary);
             let start = pred_release
                 .max(dev_free.get(&dev.0).copied().unwrap_or(0.0));
+            // the armed fault plane is consulted with the pre-flush
+            // start: a dying board fails the moment the dispatch
+            // reaches it, before this step's residency bookkeeping
+            // mutates anything
+            if dev != HOST_DEVICE {
+                if let Some(cause) = self.faults.check(dev, start) {
+                    return Ok(Some(FailedStep {
+                        step: si,
+                        device: dev,
+                        at_s: start,
+                        cause,
+                    }));
+                }
+            }
             let member_rel: Vec<f64> = step.runs[1..]
                 .iter()
-                .map(|&m| release_of(&plan.runs, &finish, m))
+                .map(|&m| release_of(runs, finish, m))
                 .collect();
             let ids: Vec<TaskId> = step
                 .runs
                 .iter()
-                .flat_map(|&r| plan.runs[r].tasks.iter().copied())
+                .flat_map(|&r| runs[r].tasks.iter().copied())
                 .collect();
             // Forced writebacks against the live table: a buffer this
             // batch reads whose newest copy sits dirty on another
@@ -1151,11 +1287,30 @@ impl OmpRuntime {
             let plugin = self.devices.get_mut(dev.0).ok_or_else(|| {
                 anyhow!("planned batch bound to unknown device {}", dev.0)
             })?;
-            let mut rep = plugin
+            let arch = plugin.arch();
+            let mut rep = match plugin
                 .run_batch(graph, &ids, env, &self.fns, &ctx)
-                .with_context(|| {
-                    format!("device {} ({})", dev.0, plugin.arch())
-                })?;
+            {
+                Ok(rep) => rep,
+                Err(err) => {
+                    // a plugin-raised DeviceFailed enters the recovery
+                    // path; anything else propagates as before
+                    if let Some(df) = err.downcast_ref::<DeviceFailed>() {
+                        return Ok(Some(FailedStep {
+                            step: si,
+                            device: dev,
+                            at_s: df.at_s.max(release_s),
+                            cause: df.cause.clone(),
+                        }));
+                    }
+                    return Err(
+                        err.context(format!("device {} ({arch})", dev.0))
+                    );
+                }
+            };
+            if dev != HOST_DEVICE {
+                self.faults.batch_completed(dev);
+            }
             // a plugin must not finish before it was released; normalize
             // so virtual_time_s() agrees with the release propagation
             rep.finish_s = rep.finish_s.max(release_s);
@@ -1187,8 +1342,184 @@ impl OmpRuntime {
             settle_present_after_batch(&mut self.present, graph, &ids, dev);
             report.batches.push((dev, rep));
         }
-        report.wall_s = t0.elapsed().as_secs_f64();
-        Ok(report)
+        Ok(None)
+    }
+
+    /// Mid-run device-failure recovery: the board that observed
+    /// `fail` is marked dead (named epoch bump — every plan placed on
+    /// it now recompiles by name — plus present-table invalidation),
+    /// the surviving suffix of the schedule is rebuilt with the
+    /// orphaned work rebound to `device(any)`, re-planned through the
+    /// exact same HEFT pricing [`Self::plan_with`] applies at compile
+    /// (a dead board never volunteers; a kernel no survivor implements
+    /// degrades to the host base function), and drained again — with
+    /// releases floored at the failure instant and the survivors'
+    /// availability clocks carried over, so recovery never pretends
+    /// the region restarted at t=0.  Functional truth lives in the
+    /// host `DataEnv` the whole time, which is what makes the
+    /// recovered grids bit-identical to a failure-free run; only the
+    /// timing plane re-prices.  Loops because another board can die
+    /// *during* recovery (multi-fault schedules): each iteration
+    /// permanently kills one more device, so it terminates — the host
+    /// never fails.  Every step lands in `report.recovery` /
+    /// `report.recovery_cost`.
+    fn recover(
+        &mut self,
+        plan: &CompiledPlan,
+        fail: FailedStep,
+        finish: Vec<f64>,
+        dev_free: std::collections::BTreeMap<usize, f64>,
+        env: &mut DataEnv,
+        report: &mut OmpReport,
+    ) -> Result<()> {
+        let mut graph = plan.graph.clone();
+        let mut runs = plan.runs.clone();
+        let mut steps = plan.steps.clone();
+        let mut finish = finish;
+        let mut dev_free = dev_free;
+        let mut fail = fail;
+        loop {
+            let dev = fail.device;
+            ensure!(
+                dev != HOST_DEVICE && !self.dead.contains(&dev.0),
+                "recovery observed a failure on device {} which cannot \
+                 fail (host, or already dead) — executor bug",
+                dev.0
+            );
+            report.recovery.push(RecoveryEvent::DeviceFailed {
+                device: dev,
+                at_s: fail.at_s,
+                cause: fail.cause.clone(),
+            });
+            report.recovery_cost.failures += 1;
+            // the board is gone: stale plans recompile by name, nothing
+            // is placed on or priced for the slot again, its injected
+            // faults are spent, and its residency credit is lost
+            let arch = self.devices[dev.0].arch();
+            self.bump_epoch(format!(
+                "device_failed({}: {arch} — {})",
+                dev.0, fail.cause
+            ));
+            self.dead.insert(dev.0);
+            self.faults.disarm(dev);
+            let (buffers, bytes) = self.present.fail_device(dev);
+            if buffers > 0 {
+                report.recovery.push(RecoveryEvent::ResidencyLost {
+                    device: dev,
+                    buffers,
+                    bytes,
+                });
+                report.recovery_cost.restreamed_bytes += bytes;
+            }
+            // split the schedule at the failed step: every run in an
+            // earlier step drained; the failed step and its suffix are
+            // orphaned (the failed dispatch mutated nothing — the check
+            // fires before residency bookkeeping and `run_batch`)
+            let mut run_done = vec![false; runs.len()];
+            for step in &steps[..fail.step] {
+                for &r in &step.runs {
+                    run_done[r] = true;
+                }
+            }
+            let mut task_done = vec![false; graph.len()];
+            let mut run_of = vec![usize::MAX; graph.len()];
+            for (ri, run) in runs.iter().enumerate() {
+                for t in &run.tasks {
+                    run_of[t.0] = ri;
+                    if run_done[ri] {
+                        task_done[t.0] = true;
+                    }
+                }
+            }
+            // rebuild the surviving suffix as its own graph — original
+            // task order, so the depend-derived edges among orphans
+            // reproduce exactly; an edge from a drained task becomes a
+            // release floor instead (its value already lives in `env`).
+            // Work stranded on a dead board is rebound to `device(any)`
+            // with its variant resolution reset to the base name.
+            let mut sub = TaskGraph::new();
+            let mut floors: Vec<f64> = Vec::new();
+            let mut rebound_from: Vec<Option<DeviceId>> = Vec::new();
+            for t in &graph.tasks {
+                if task_done[t.id.0] {
+                    continue;
+                }
+                let mut floor = fail.at_s;
+                for p in graph.preds(t.id) {
+                    if task_done[p.0] {
+                        floor = floor.max(finish[run_of[p.0]]);
+                    }
+                }
+                let mut nt = t.clone();
+                let mut from = None;
+                if let Some(d) = nt.device.bound() {
+                    if self.dead.contains(&d.0) {
+                        from = Some(d);
+                        nt.device = DeviceSel::Any;
+                        nt.fn_name = nt.base_name.clone();
+                    }
+                }
+                sub.add(nt);
+                floors.push(floor);
+                rebound_from.push(from);
+            }
+            // re-plan the suffix on the survivors: the same pricing,
+            // coalescing and writeback rules as compile, with carried
+            // device clocks — lost residency re-prices as fresh H2D
+            let mut planning_present = self.present.clone();
+            let planned = self.plan_with(
+                &mut sub,
+                env,
+                &mut planning_present,
+                &floors,
+                &dev_free,
+            )?;
+            self.plan_stats.plans_built += 1;
+            self.plan_stats.placements_computed += planned.placements;
+            for run in &planned.runs {
+                let Some(from) =
+                    run.tasks.iter().find_map(|t| rebound_from[t.0])
+                else {
+                    continue;
+                };
+                if run.device == HOST_DEVICE {
+                    report.recovery.push(RecoveryEvent::HostFallback {
+                        tasks: run.tasks.len(),
+                        base: sub.task(run.tasks[0]).base_name.clone(),
+                    });
+                    report.recovery_cost.host_fallbacks += 1;
+                } else {
+                    report.recovery.push(RecoveryEvent::RunReplaced {
+                        tasks: run.tasks.len(),
+                        from,
+                        to: run.device,
+                    });
+                    report.recovery_cost.replacements += 1;
+                }
+            }
+            // drain the recovery plan; a further failure loops back in
+            // with the recovery plan as the schedule being recovered
+            let mut sub_finish = vec![0.0f64; planned.runs.len()];
+            let failed_again = self.replay_steps(
+                &sub,
+                &planned.runs,
+                &planned.steps,
+                env,
+                &mut sub_finish,
+                &mut dev_free,
+                report,
+            )?;
+            match failed_again {
+                None => return Ok(()),
+                Some(next) => {
+                    graph = sub;
+                    runs = planned.runs;
+                    steps = planned.steps;
+                    finish = sub_finish;
+                    fail = next;
+                }
+            }
+        }
     }
 
     /// Host-side planning counters: plans built, placements priced,
@@ -1377,9 +1708,16 @@ impl OmpRuntime {
     }
 }
 
-/// Release instant of run `r`: the max finish over its predecessor runs.
+/// Release instant of run `r`: the max finish over its predecessor
+/// runs, floored at the run's planned release floor (non-zero only for
+/// recovery plans, whose work cannot start before the failure was
+/// detected).
 fn release_of(runs: &[PlanRun], finish: &[f64], r: usize) -> f64 {
-    runs[r].preds.iter().map(|&p| finish[p]).fold(0.0f64, f64::max)
+    runs[r]
+        .preds
+        .iter()
+        .map(|&p| finish[p])
+        .fold(runs[r].floor, f64::max)
 }
 
 /// Collision guard for the plan cache: a shape-hash hit must also match
@@ -1785,5 +2123,307 @@ mod tests {
             })
             .unwrap_err();
         assert!(format!("{err:#}").contains("device(9)"), "{err:#}");
+    }
+
+    // ---------------------------------------------------------------
+    // mid-run device failure + recovery
+    // ---------------------------------------------------------------
+
+    use crate::omp::dataenv::Residency;
+    use crate::omp::device::{DeviceReport, FnRegistry, TaskFn};
+    use crate::omp::fault::FaultSchedule;
+
+    /// Software-capable accelerator with a fixed per-task virtual cost
+    /// (test modules don't share items, so the runtime tests' FakeAccel
+    /// is restated): enough to drive `device(any)` placement, carried
+    /// availability clocks and mid-run recovery without a VC709 cluster.
+    struct SoftAccel {
+        per_task_s: f64,
+    }
+
+    impl DevicePlugin for SoftAccel {
+        fn arch(&self) -> &'static str {
+            "soft"
+        }
+        fn describe(&self) -> String {
+            "software-capable test accelerator".into()
+        }
+        fn run_batch(
+            &mut self,
+            graph: &TaskGraph,
+            tasks: &[TaskId],
+            env: &mut DataEnv,
+            fns: &FnRegistry,
+            ctx: &BatchCtx,
+        ) -> Result<DeviceReport> {
+            for id in tasks {
+                match fns.get(&graph.task(*id).fn_name)? {
+                    TaskFn::Software(f) => f(env)?,
+                    TaskFn::HwKernel(_) => {
+                        bail!("soft accel runs software bodies only")
+                    }
+                }
+            }
+            let d = self.per_task_s * tasks.len() as f64;
+            Ok(DeviceReport {
+                tasks_run: tasks.len(),
+                virtual_time_s: d,
+                release_s: ctx.release_s,
+                finish_s: ctx.release_s + d,
+                ..DeviceReport::default()
+            })
+        }
+        fn estimate_batch_s(
+            &self,
+            _graph: &TaskGraph,
+            tasks: &[TaskId],
+            fn_names: &[String],
+            fns: &FnRegistry,
+            _env: &DataEnv,
+            _residency: &Residency,
+        ) -> Option<f64> {
+            for n in fn_names {
+                match fns.get(n) {
+                    Ok(TaskFn::Software(_)) => {}
+                    _ => return None,
+                }
+            }
+            Some(self.per_task_s * tasks.len() as f64)
+        }
+    }
+
+    /// `inc_A`/`inc_B`/`inc_C` software bodies plus `accels` identical
+    /// unit-cost soft accelerators.
+    fn chains_runtime(accels: usize) -> (OmpRuntime, Vec<DeviceId>) {
+        let mut rt = OmpRuntime::new(2);
+        for buf in ["A", "B", "C"] {
+            rt.register_software(&format!("inc_{buf}"), move |env| {
+                let mut g = env.take(buf)?;
+                for v in g.data_mut() {
+                    *v += 1.0;
+                }
+                env.put(buf, g);
+                Ok(())
+            });
+        }
+        let devs = (0..accels)
+            .map(|_| {
+                rt.register_device(Box::new(SoftAccel { per_task_s: 1.0 }))
+            })
+            .collect();
+        (rt, devs)
+    }
+
+    fn chains_env() -> DataEnv {
+        let mut env = DataEnv::new();
+        for buf in ["A", "B", "C"] {
+            env.insert(buf, Grid::zeros(&[3, 3]).unwrap());
+        }
+        env
+    }
+
+    /// Three independent `device(any)` chains: 3 tasks on "A", 2 on
+    /// "B", 2 on "C".  With two unit-cost accels HEFT places A on the
+    /// first, B then C on the second — so the second board's *second*
+    /// batch is a mid-run dispatch with a completed prefix behind it.
+    fn run_three_chains(rt: &mut OmpRuntime, env: &mut DataEnv) -> OmpReport {
+        let deps = rt.dep_vars(30);
+        rt.parallel(env, |ctx| {
+            for (buf, len, base) in
+                [("A", 3usize, 0usize), ("B", 2, 10), ("C", 2, 20)]
+            {
+                for i in base..base + len {
+                    ctx.target(&format!("inc_{buf}"))
+                        .device_any()
+                        .map(MapDir::ToFrom, buf)
+                        .depend_in(deps[i])
+                        .depend_out(deps[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+            }
+            Ok(())
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn mid_run_failure_recovers_bit_identically_on_the_survivor() {
+        // failure-free baseline on an identically constructed runtime
+        let (mut base_rt, _) = chains_runtime(2);
+        let mut base_env = chains_env();
+        let base_rep = run_three_chains(&mut base_rt, &mut base_env);
+        assert!(base_rep.recovery.is_empty());
+        assert_eq!(base_rep.recovery_cost.failures, 0);
+
+        let (mut rt, devs) = chains_runtime(2);
+        let victim = devs[1]; // gets chain B, then chain C
+        rt.inject_faults(
+            FaultSchedule::new().fail_after_batches(victim, 1),
+        )
+        .unwrap();
+        let mut env = chains_env();
+        let rep = run_three_chains(&mut rt, &mut env);
+
+        // grids are bit-identical to the failure-free run: functional
+        // truth never left the host data environment
+        for buf in ["A", "B", "C"] {
+            assert_eq!(
+                env.get(buf).unwrap().data(),
+                base_env.get(buf).unwrap().data(),
+                "recovered '{buf}' diverged from the failure-free run"
+            );
+        }
+        // the bill is itemized: one failure, the orphaned chain C
+        // re-placed onto the survivor (no host fallback), and the
+        // re-queued makespan exceeds the committed plan's model
+        assert_eq!(rep.recovery_cost.failures, 1);
+        assert_eq!(rep.recovery_cost.replacements, 1);
+        assert_eq!(rep.recovery_cost.host_fallbacks, 0);
+        assert!(
+            rep.recovery_cost.extra_makespan_s > 0.0,
+            "re-queueing on the survivor must cost makespan: {:?}",
+            rep.recovery_cost
+        );
+        assert!(
+            rep.virtual_time_s() > base_rep.virtual_time_s(),
+            "recovered makespan {} must exceed failure-free {}",
+            rep.virtual_time_s(),
+            base_rep.virtual_time_s()
+        );
+        assert!(rep.recovery.iter().any(|e| matches!(
+            e,
+            RecoveryEvent::DeviceFailed { device, .. } if *device == victim
+        )));
+        assert!(rep.recovery.iter().any(|e| matches!(
+            e,
+            RecoveryEvent::RunReplaced { from, to, tasks: 2 }
+                if *from == victim && *to == devs[0]
+        )));
+        assert!(rt.is_dead(victim));
+
+        // the region still runs after the loss — recompiled by name,
+        // not replayed from the stale cached plan
+        let rep2 = run_three_chains(&mut rt, &mut env);
+        assert!(rep2.recovery.is_empty(), "fault was consumed");
+        assert!(
+            rt.plan_stats()
+                .recompiles
+                .iter()
+                .any(|r| r.contains("device_failed")),
+            "{:?}",
+            rt.plan_stats().recompiles
+        );
+        for buf in ["A", "B", "C"] {
+            let want = 2.0 * base_env.get(buf).unwrap().data()[0];
+            assert!(env
+                .get(buf)
+                .unwrap()
+                .data()
+                .iter()
+                .all(|&v| v == want));
+        }
+    }
+
+    #[test]
+    fn sole_capable_device_dying_degrades_to_host_base_function() {
+        let (mut rt, devs) = chains_runtime(1);
+        rt.inject_faults(
+            FaultSchedule::new().fail_after_batches(devs[0], 1),
+        )
+        .unwrap();
+        let mut env = chains_env();
+        let rep = run_three_chains(&mut rt, &mut env);
+        // every chain still ran to completion...
+        for (buf, len) in [("A", 3.0f32), ("B", 2.0), ("C", 2.0)] {
+            assert!(
+                env.get(buf).unwrap().data().iter().all(|&v| v == len),
+                "'{buf}' must reach {len} despite losing the only accel"
+            );
+        }
+        // ...with the orphans degraded to the host base function, since
+        // no surviving device implements them
+        assert_eq!(rep.recovery_cost.failures, 1);
+        assert!(rep.recovery_cost.host_fallbacks >= 1, "{:?}", rep.recovery);
+        assert_eq!(rep.recovery_cost.replacements, 0);
+        assert!(rep.recovery.iter().any(|e| matches!(
+            e,
+            RecoveryEvent::HostFallback { base, .. }
+                if base.starts_with("inc_")
+        )));
+    }
+
+    #[test]
+    fn failure_makes_the_executable_stale_by_name() {
+        let (mut rt, devs) = chains_runtime(1);
+        let mut env = chains_env();
+        let deps = rt.dep_vars(30);
+        let program = rt
+            .capture(&env, |ctx| {
+                for (buf, len, base) in
+                    [("A", 2usize, 0usize), ("B", 2, 10)]
+                {
+                    for i in base..base + len {
+                        ctx.target(&format!("inc_{buf}"))
+                            .device_any()
+                            .map(MapDir::ToFrom, buf)
+                            .depend_in(deps[i])
+                            .depend_out(deps[i + 1])
+                            .nowait()
+                            .submit()?;
+                    }
+                }
+                Ok(())
+            })
+            .unwrap();
+        let exe = program.compile(&mut rt).unwrap();
+        exe.execute(&mut rt, &mut env).unwrap();
+
+        rt.inject_faults(
+            FaultSchedule::new().fail_after_batches(devs[0], 1),
+        )
+        .unwrap();
+        let rep = exe.execute(&mut rt, &mut env).unwrap();
+        assert_eq!(rep.recovery_cost.failures, 1);
+
+        // the recovery's epoch bump retires the executable, by name
+        let err = exe.execute(&mut rt, &mut env).unwrap_err();
+        assert!(format!("{err:#}").contains("stale executable"), "{err:#}");
+        assert!(format!("{err:#}").contains("device_failed"), "{err:#}");
+        let err = exe.save(&rt, temp_plan("dead.plan.json")).unwrap_err();
+        assert!(format!("{err:#}").contains("recompile"), "{err:#}");
+    }
+
+    #[test]
+    fn saved_plan_bound_to_a_removed_device_is_rejected_on_load() {
+        let path = temp_plan("removed-device.plan.json");
+        let (mut rt, devs) = chains_runtime(1);
+        let env = chains_env();
+        let deps = rt.dep_vars(3);
+        let program = rt
+            .capture(&env, |ctx| {
+                for i in 0..2 {
+                    ctx.target("inc_A")
+                        .device_any()
+                        .map(MapDir::ToFrom, "A")
+                        .depend_in(deps[i])
+                        .depend_out(deps[i + 1])
+                        .nowait()
+                        .submit()?;
+                }
+                Ok(())
+            })
+            .unwrap();
+        let exe = program.compile(&mut rt).unwrap();
+        exe.save(&rt, &path).unwrap();
+
+        // hot-remove the board the plan is bound to: loading must be a
+        // named recompile error, never a replay onto the dead slot
+        rt.unregister_device(devs[0]).unwrap();
+        let err = rt.load_executable(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stale executable file"), "{msg}");
+        assert!(msg.contains("unregister_device"), "{msg}");
+        std::fs::remove_file(&path).ok();
     }
 }

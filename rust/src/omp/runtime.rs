@@ -70,7 +70,7 @@
 //! [`OmpRuntime::capture`] + [`super::program::Program::compile`]) to
 //! skip even the per-call tracing.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -81,6 +81,7 @@ use super::device::{
     DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel, FnRegistry,
     TaskFn, HOST_DEVICE,
 };
+use super::fault::{FaultPlane, FaultSchedule, RecoveryCost, RecoveryEvent};
 use super::graph::TaskGraph;
 use super::host::HostDevice;
 use super::program::{CachedPlan, PlanStats};
@@ -114,6 +115,13 @@ pub struct OmpRuntime {
     /// indices mean nothing on another instance, even one at the same
     /// epoch
     pub(crate) runtime_id: u64,
+    /// indices of devices that died mid-run or were hot-removed — the
+    /// slot stays (device ids are stable compile artifacts) but nothing
+    /// is placed on, priced for, or entered onto a dead device
+    pub(crate) dead: BTreeSet<usize>,
+    /// the armed fault-injection plane ([`OmpRuntime::inject_faults`]),
+    /// consulted by the executor before every device batch dispatch
+    pub(crate) faults: FaultPlane,
 }
 
 /// Process-wide source of [`OmpRuntime::new`] instance ids.
@@ -146,6 +154,11 @@ pub struct OmpReport {
     pub writebacks: Vec<WritebackEvent>,
     pub wall_s: f64,
     pub tasks: usize,
+    /// named recovery audit trail, in occurrence order — empty on a
+    /// failure-free run
+    pub recovery: Vec<RecoveryEvent>,
+    /// the aggregate recovery bill (zeroed on a failure-free run)
+    pub recovery_cost: RecoveryCost,
 }
 
 impl OmpReport {
@@ -175,13 +188,15 @@ impl OmpRuntime {
             plan_cache_enabled: true,
             plan_stats: PlanStats::default(),
             runtime_id: NEXT_RUNTIME_ID.fetch_add(1, Ordering::Relaxed),
+            dead: BTreeSet::new(),
+            faults: FaultPlane::default(),
         }
     }
 
     /// The device/function/variant tables changed in a way that can
     /// invalidate committed placements: advance the epoch so compiled
     /// plans recompile with `reason` named instead of replaying stale.
-    fn bump_epoch(&mut self, reason: String) {
+    pub(crate) fn bump_epoch(&mut self, reason: String) {
         self.epoch += 1;
         self.epoch_reason = reason;
     }
@@ -216,8 +231,85 @@ impl OmpRuntime {
         self.devices
             .iter()
             .enumerate()
-            .map(|(i, d)| (DeviceId(i), d.describe()))
+            .map(|(i, d)| {
+                let desc = if self.dead.contains(&i) {
+                    format!("<removed: {}>", d.describe())
+                } else {
+                    d.describe()
+                };
+                (DeviceId(i), desc)
+            })
             .collect()
+    }
+
+    /// Is `dev` a dead slot (died mid-run or hot-removed)?
+    pub fn is_dead(&self, dev: DeviceId) -> bool {
+        self.dead.contains(&dev.0)
+    }
+
+    /// Hot-remove a device between requests: the slot stays (compiled
+    /// device indices remain meaningful for *naming* the stale binding)
+    /// but the epoch advances with a named reason, every plan placed on
+    /// the device recompiles, and its present-table residency is
+    /// invalidated — functional truth lives in the host `DataEnv`, so no
+    /// data is lost, only the transfer-elision credit.  Returns the
+    /// device-valid bytes whose residency was dropped (the potential
+    /// re-streaming bill).  The host cannot be removed.
+    pub fn unregister_device(&mut self, dev: DeviceId) -> Result<usize> {
+        anyhow::ensure!(
+            dev != HOST_DEVICE,
+            "unregister_device: the host (device 0) cannot be removed"
+        );
+        anyhow::ensure!(
+            dev.0 < self.devices.len(),
+            "unregister_device: no device {}",
+            dev.0
+        );
+        anyhow::ensure!(
+            !self.dead.contains(&dev.0),
+            "unregister_device: device {} already removed",
+            dev.0
+        );
+        let arch = self.devices[dev.0].arch();
+        self.bump_epoch(format!("unregister_device({}: {arch})", dev.0));
+        self.dead.insert(dev.0);
+        self.faults.disarm(dev);
+        let (_buffers, bytes) = self.present.fail_device(dev);
+        Ok(bytes)
+    }
+
+    /// Arm a deterministic fault-injection schedule ([`FaultSchedule`]):
+    /// the executor consults it before every device batch dispatch and a
+    /// tripped spec makes the batch observe [`super::fault::DeviceFailed`]
+    /// mid-drain, exercising the recovery path.  Specs may not target
+    /// the host or a dead/unknown device.  Arming replaces any previous
+    /// schedule and does *not* bump the epoch — faults are an execution
+    /// phenomenon, not a table change.
+    pub fn inject_faults(&mut self, schedule: FaultSchedule) -> Result<()> {
+        for spec in &schedule.specs {
+            let d = spec.device();
+            anyhow::ensure!(
+                d != HOST_DEVICE,
+                "inject_faults: the host (device 0) cannot fail"
+            );
+            anyhow::ensure!(
+                d.0 < self.devices.len(),
+                "inject_faults: no device {}",
+                d.0
+            );
+            anyhow::ensure!(
+                !self.dead.contains(&d.0),
+                "inject_faults: device {} already removed",
+                d.0
+            );
+        }
+        self.faults.arm(schedule);
+        Ok(())
+    }
+
+    /// Drop the armed fault schedule.
+    pub fn clear_faults(&mut self) {
+        self.faults.arm(FaultSchedule::new());
     }
 
     /// Register a host software function.  Invalidates compiled plans
@@ -314,6 +406,12 @@ impl OmpRuntime {
         anyhow::ensure!(
             dev.0 < self.devices.len(),
             "target enter data: no device {}",
+            dev.0
+        );
+        anyhow::ensure!(
+            !self.dead.contains(&dev.0),
+            "target enter data: device {} was removed \
+             (nothing can become resident on a dead board)",
             dev.0
         );
         for (m, name) in maps {
@@ -1229,5 +1327,107 @@ mod tests {
         // makespan = max(3, 2), not 3 + 2: the chains share no edges and
         // run on different devices, so they overlap in virtual time
         assert!((rep.virtual_time_s() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unregister_device_bumps_epoch_with_a_named_reason() {
+        let mut rt = inc_runtime();
+        let acc = rt.register_device(Box::new(FakeAccel::new(1.0)));
+        let epoch_before = rt.epoch;
+
+        // guard rails first: the host and unknown slots are named errors
+        let err = rt.unregister_device(HOST_DEVICE).unwrap_err();
+        assert!(err.to_string().contains("cannot be removed"), "{err}");
+        let err = rt.unregister_device(DeviceId(9)).unwrap_err();
+        assert!(err.to_string().contains("no device 9"), "{err}");
+        assert_eq!(rt.epoch, epoch_before, "refused removals don't bump");
+
+        rt.unregister_device(acc).unwrap();
+        assert_eq!(rt.epoch, epoch_before + 1);
+        assert!(
+            rt.epoch_reason.contains("unregister_device(1: fake)"),
+            "{}",
+            rt.epoch_reason
+        );
+        assert!(rt.is_dead(acc));
+        let listed = rt.devices();
+        assert!(
+            listed[acc.0].1.contains("<removed:"),
+            "dead slot must render as removed: {:?}",
+            listed
+        );
+        // a dead slot stays dead: double removal is a named error, and
+        // nothing can become resident there
+        let err = rt.unregister_device(acc).unwrap_err();
+        assert!(err.to_string().contains("already removed"), "{err}");
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        let err = rt
+            .target_enter_data(acc, &env, &[(EnterMap::To, "V")])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("dead device"), "{err:#}");
+    }
+
+    #[test]
+    fn work_bound_to_a_removed_device_is_a_named_rebind_error() {
+        let mut rt = inc_runtime();
+        let acc = rt.register_device(Box::new(FakeAccel::new(1.0)));
+        rt.unregister_device(acc).unwrap();
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::zeros(&[3, 3]).unwrap());
+        let err = rt
+            .parallel(&mut env, |ctx| {
+                ctx.target("inc_v")
+                    .device(acc)
+                    .map(MapDir::ToFrom, "V")
+                    .submit()?;
+                Ok(())
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("removed"), "{msg}");
+        assert!(msg.contains("device(any)"), "{msg}");
+        // device(any) work, by contrast, silently avoids the dead slot
+        // and falls back to the host base function
+        let rep = rt
+            .parallel(&mut env, |ctx| {
+                ctx.target("inc_v")
+                    .device_any()
+                    .map(MapDir::ToFrom, "V")
+                    .submit()?;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(rep.batches[0].0, HOST_DEVICE);
+        assert!(env.get("V").unwrap().data().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn inject_faults_validates_its_victims() {
+        let mut rt = inc_runtime();
+        let acc = rt.register_device(Box::new(FakeAccel::new(1.0)));
+        let err = rt
+            .inject_faults(FaultSchedule::new().fail_at(HOST_DEVICE, 0.0))
+            .unwrap_err();
+        assert!(err.to_string().contains("host"), "{err}");
+        let err = rt
+            .inject_faults(FaultSchedule::new().fail_at(DeviceId(5), 0.0))
+            .unwrap_err();
+        assert!(err.to_string().contains("no device 5"), "{err}");
+        rt.inject_faults(FaultSchedule::new().fail_at(acc, 0.5)).unwrap();
+        assert!(rt.faults.is_armed());
+        rt.clear_faults();
+        assert!(!rt.faults.is_armed());
+        // arming is an execution concern, not a compilation one: no
+        // epoch bump, cached plans stay valid
+        let epoch = rt.epoch;
+        rt.inject_faults(FaultSchedule::new().fail_at(acc, 0.5)).unwrap();
+        assert_eq!(rt.epoch, epoch);
+        // a dead victim is refused by name
+        rt.unregister_device(acc).unwrap();
+        let err = rt
+            .inject_faults(FaultSchedule::new().fail_at(acc, 0.5))
+            .unwrap_err();
+        assert!(err.to_string().contains("already removed"), "{err}");
     }
 }

@@ -265,14 +265,34 @@ pub struct Dispatcher {
 
 impl Dispatcher {
     pub fn new(dag: BatchDag) -> Dispatcher {
+        Dispatcher::new_seeded(dag, &[], &BTreeMap::new())
+    }
+
+    /// A dispatcher whose clocks do not start at zero: run `r`'s release
+    /// is floored at `release_floor[r]` (beyond its DAG predecessors)
+    /// and each device's busy-until clock is seeded from `dev_clocks`.
+    /// This is the mid-run recovery entry point (`omp::program`): the
+    /// surviving suffix of a failed plan re-schedules *after* the work
+    /// already committed — replayed prefix finishes floor the orphaned
+    /// runs, surviving boards keep their occupied time — instead of
+    /// pretending the region starts fresh at t=0.
+    pub fn new_seeded(
+        dag: BatchDag,
+        release_floor: &[f64],
+        dev_clocks: &BTreeMap<usize, f64>,
+    ) -> Dispatcher {
         let m = dag.len();
         let indeg: Vec<usize> = (0..m).map(|r| dag.preds(r).len()).collect();
         let binding = dag.runs().iter().map(|r| r.device.bound()).collect();
+        let mut release = vec![0.0; m];
+        for (r, floor) in release_floor.iter().enumerate().take(m) {
+            release[r] = *floor;
+        }
         let mut d = Dispatcher {
             dag,
             indeg,
-            release: vec![0.0; m],
-            dev_free: BTreeMap::new(),
+            release,
+            dev_free: dev_clocks.clone(),
             queues: BTreeMap::new(),
             any_ready: BTreeSet::new(),
             in_flight: Vec::new(),

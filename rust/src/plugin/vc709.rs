@@ -59,6 +59,16 @@ pub struct Vc709Plugin {
     pub naive_stream: bool,
     /// report of the last batch, for inspection
     pub last_assignment: Option<Assignment>,
+    /// When set, the next non-empty `run_batch` fails **atomically** —
+    /// before any pass programs CONF registers or streams a byte, so
+    /// the data environment is exactly as the caller handed it — with
+    /// a typed [`DeviceFailed`] carrying this cause at the batch's
+    /// release instant.  This is the plugin-raised half of the fault
+    /// plane (the schedule-armed half lives in `omp::fault`): it
+    /// models a board dying on dispatch (link drop, CONF timeout) and
+    /// the executor's recovery path downcasts it by type, not by
+    /// message.  Consumed by the failure it triggers.
+    pub fail_next_batch: Option<String>,
 }
 
 impl Vc709Plugin {
@@ -94,6 +104,7 @@ impl Vc709Plugin {
             fuse_chains: true,
             naive_stream: false,
             last_assignment: None,
+            fail_next_batch: None,
         })
     }
 
@@ -915,6 +926,15 @@ impl DevicePlugin for Vc709Plugin {
                 ..DeviceReport::default()
             });
         }
+        // injected board death: fail before touching CONF, the VFIFO or
+        // the data environment, so recovery sees pre-dispatch state
+        if let Some(cause) = self.fail_next_batch.take() {
+            return Err(crate::omp::DeviceFailed {
+                at_s: release_s,
+                cause,
+            }
+            .into());
+        }
         // -- validate the batch is a chain in the given order ------------
         for pair in tasks.windows(2) {
             let succ = graph.task(pair[1]);
@@ -1187,6 +1207,50 @@ mod tests {
         assert!(plugin
             .estimate_batch_s(&graph, &ids, &soft, &fns, &env, &none)
             .is_none());
+    }
+
+    #[test]
+    fn injected_failure_is_typed_and_atomic() {
+        // the fail knob must (a) surface as a downcastable DeviceFailed
+        // stamped at the batch's release instant, (b) leave the data
+        // environment bit-identical (nothing streamed), and (c) be
+        // consumed — the very next dispatch succeeds
+        let cfg = ClusterConfig::homogeneous(1, 1, Kernel::Laplace2d);
+        let mut plugin = Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap();
+        let mut graph = TaskGraph::new();
+        let mut fns = FnRegistry::default();
+        fns.register("hw_f", crate::omp::TaskFn::HwKernel(Kernel::Laplace2d));
+        let id = graph.add(Task {
+            id: TaskId(0),
+            base_name: "f".into(),
+            fn_name: "hw_f".into(),
+            device: crate::omp::DeviceId(1).into(),
+            maps: vec![(crate::omp::MapDir::ToFrom, "V".into())],
+            deps_in: vec![],
+            deps_out: vec![DepVar(0)],
+            nowait: true,
+        });
+        let mut env = DataEnv::new();
+        env.insert("V", Grid::random(&[16, 12], 5).unwrap());
+        let before = env.get("V").unwrap().clone();
+        plugin.fail_next_batch = Some("link drop (injected)".into());
+        let err = plugin
+            .run_batch(&graph, &[id], &mut env, &fns, &BatchCtx::at(1.25))
+            .expect_err("armed plugin must fail");
+        let df = err
+            .downcast_ref::<crate::omp::DeviceFailed>()
+            .expect("typed DeviceFailed, not a stringly error");
+        assert_eq!(df.at_s, 1.25);
+        assert!(df.cause.contains("link drop"));
+        assert_eq!(
+            env.get("V").unwrap().data(),
+            before.data(),
+            "failed dispatch must not touch the data environment"
+        );
+        // consumed: the retry dispatch runs clean
+        plugin
+            .run_batch(&graph, &[id], &mut env, &fns, &BatchCtx::at(1.25))
+            .expect("knob is one-shot");
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Failure-schedule property net for the fault-injection plane and
+//! mid-run recovery (DESIGN.md §9): randomized task DAGs over 1–3
+//! buffers on two single-board VC709 clusters, executed twice on
+//! identically constructed runtimes — once failure-free, once under a
+//! *seeded* [`FaultSchedule`] — asserting
+//!
+//! (a) **bit-identical grids**: a board dying mid-drain must never
+//!     perturb numerics, whatever the schedule kills and whenever —
+//!     functional truth lives in the host data environment, so recovery
+//!     re-prices timing only;
+//! (b) **conservation**: every task executes exactly once (no orphan is
+//!     lost, none replays) and the recovery bill is internally
+//!     consistent (failures match dead boards, re-streamed bytes match
+//!     the `ResidencyLost` audit trail);
+//! (c) **refcount drain**: `target enter data` references held by the
+//!     victim still drain to an empty present table through the normal
+//!     exits — death invalidates residency, not bookkeeping;
+//! (d) **makespan monotonicity** (no-fallback configurations): with a
+//!     capable survivor, losing a board never *shrinks* the modelled
+//!     makespan.  This is asserted only where no run degrades to the
+//!     host base function — host batches are free in virtual time, so a
+//!     fallback can legitimately finish "earlier" than the failure-free
+//!     device schedule.
+//!
+//! Cases are seeded (a failing schedule reproduces from the printed
+//! case) and shrink greedily: tasks are dropped, enters stripped and
+//! fault specs removed one at a time until the counterexample is
+//! locally minimal.
+
+use omp_fpga::config::ClusterConfig;
+use omp_fpga::omp::{
+    DataEnv, DeviceId, EnterMap, ExitMap, FaultSchedule, MapDir, OmpReport,
+    OmpRuntime, RecoveryEvent,
+};
+use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
+use omp_fpga::stencil::{Grid, Kernel};
+use omp_fpga::util::prop::{check_shrink, Rng};
+
+const KERNEL: Kernel = Kernel::Diffusion2d;
+const SHAPE: [usize; 2] = [6, 5];
+const DEV1: DeviceId = DeviceId(1);
+const DEV2: DeviceId = DeviceId(2);
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Kind {
+    /// statically bound to board 1 / board 2
+    Bound1,
+    Bound2,
+    /// `device(any)` — placed by HEFT, re-placed by recovery
+    Any,
+}
+
+#[derive(Debug, Clone)]
+struct TaskSpec {
+    buf: usize,
+    kind: Kind,
+    chained: bool,
+}
+
+#[derive(Debug, Clone)]
+struct Case {
+    nbufs: usize,
+    tasks: Vec<TaskSpec>,
+    /// per buffer: enter-data reference held on board 1 for the whole
+    /// run (the victim set includes board 1, so death-with-residency is
+    /// exercised)
+    enters: Vec<bool>,
+    /// seed for `FaultSchedule::seeded` — the schedule itself depends
+    /// on the failure-free makespan (horizon), so only the seed is the
+    /// case datum
+    fault_seed: u64,
+    max_faults: usize,
+}
+
+fn gen_tasks(rng: &mut Rng, nbufs: usize, kinds: &[Kind]) -> Vec<TaskSpec> {
+    let ntasks = rng.range(1, 10);
+    (0..ntasks)
+        .map(|_| TaskSpec {
+            buf: rng.range(0, nbufs),
+            kind: *rng.choose(kinds),
+            chained: rng.bool(),
+        })
+        .collect()
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let nbufs = rng.range(1, 4);
+    Case {
+        nbufs,
+        tasks: gen_tasks(rng, nbufs, &[Kind::Bound1, Kind::Bound2, Kind::Any]),
+        enters: (0..nbufs).map(|_| rng.bool()).collect(),
+        fault_seed: rng.next_u64(),
+        max_faults: 2,
+    }
+}
+
+fn shrink_case(case: &Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    for i in 0..case.tasks.len() {
+        let mut c = case.clone();
+        c.tasks.remove(i);
+        if !c.tasks.is_empty() {
+            out.push(c);
+        }
+    }
+    for b in 0..case.nbufs {
+        if case.enters[b] {
+            let mut c = case.clone();
+            c.enters[b] = false;
+            out.push(c);
+        }
+    }
+    if case.max_faults > 1 {
+        let mut c = case.clone();
+        c.max_faults -= 1;
+        out.push(c);
+    }
+    out
+}
+
+fn buf_name(b: usize) -> String {
+    format!("B{b}")
+}
+
+fn build_runtime(case: &Case) -> Result<OmpRuntime, String> {
+    let mut rt = OmpRuntime::new(2);
+    for b in 0..case.nbufs {
+        let take = buf_name(b);
+        rt.register_software(&format!("soft{b}"), move |env| {
+            let g = env.take(&take)?;
+            env.put(&take, KERNEL.apply(&g)?);
+            Ok(())
+        });
+        rt.declare_hw_variant(
+            &format!("soft{b}"),
+            "vc709",
+            &format!("hw{b}"),
+            KERNEL,
+        );
+    }
+    let cfg = ClusterConfig::homogeneous(1, 2, KERNEL);
+    for _ in 0..2 {
+        rt.register_device(Box::new(
+            Vc709Plugin::new(&cfg, ExecBackend::Golden)
+                .map_err(|e| e.to_string())?,
+        ));
+    }
+    Ok(rt)
+}
+
+/// Run the case once.  `faults` arms a schedule before the region.
+/// Returns (grids, report, present drained after exits).
+fn run_case(
+    case: &Case,
+    faults: Option<FaultSchedule>,
+) -> Result<(Vec<Grid>, OmpReport, bool), String> {
+    let mut rt = build_runtime(case)?;
+    let mut env = DataEnv::new();
+    for b in 0..case.nbufs {
+        env.insert(
+            &buf_name(b),
+            Grid::random(&SHAPE, b as u64 + 1).map_err(|e| e.to_string())?,
+        );
+    }
+    for b in 0..case.nbufs {
+        if case.enters[b] {
+            let name = buf_name(b);
+            rt.target_enter_data(DEV1, &env, &[(EnterMap::To, name.as_str())])
+                .map_err(|e| e.to_string())?;
+        }
+    }
+    if let Some(schedule) = faults {
+        rt.inject_faults(schedule).map_err(|e| e.to_string())?;
+    }
+    let deps = rt.dep_vars(2 * case.tasks.len() + case.nbufs + 2);
+    let report = rt
+        .parallel(&mut env, |ctx| {
+            let mut cur: Vec<usize> = (0..case.nbufs).collect();
+            let mut global = case.nbufs;
+            let mut next = case.nbufs + 1;
+            for t in &case.tasks {
+                let name = buf_name(t.buf);
+                let mut b = match t.kind {
+                    Kind::Bound1 => {
+                        ctx.target(&format!("soft{}", t.buf)).device(DEV1)
+                    }
+                    Kind::Bound2 => {
+                        ctx.target(&format!("soft{}", t.buf)).device(DEV2)
+                    }
+                    Kind::Any => {
+                        ctx.target(&format!("soft{}", t.buf)).device_any()
+                    }
+                };
+                b = b
+                    .map(MapDir::ToFrom, &name)
+                    .depend_in(deps[cur[t.buf]])
+                    .depend_out(deps[next]);
+                cur[t.buf] = next;
+                next += 1;
+                if t.chained {
+                    b = b.depend_in(deps[global]).depend_out(deps[next]);
+                    global = next;
+                    next += 1;
+                }
+                b.nowait().submit()?;
+            }
+            Ok(())
+        })
+        .map_err(|e| format!("{e:#}"))?;
+    // the victim may be dead by now; exits must still drain its
+    // references (death invalidates residency, not bookkeeping)
+    for b in 0..case.nbufs {
+        if case.enters[b] {
+            let name = buf_name(b);
+            rt.target_exit_data(DEV1, &[(ExitMap::From, name.as_str())])
+                .map_err(|e| e.to_string())?;
+        }
+    }
+    let drained = rt.present().is_empty();
+    // audit-trail consistency is checked while the runtime is in hand
+    for ev in &report.recovery {
+        if let RecoveryEvent::DeviceFailed { device, .. } = ev {
+            if !rt.is_dead(*device) {
+                return Err(format!(
+                    "device {} reported failed but is not dead",
+                    device.0
+                ));
+            }
+        }
+    }
+    let mut grids = Vec::new();
+    for b in 0..case.nbufs {
+        grids.push(env.take(&buf_name(b)).map_err(|e| e.to_string())?);
+    }
+    Ok((grids, report, drained))
+}
+
+fn tasks_executed(report: &OmpReport) -> usize {
+    report.batches.iter().map(|(_, r)| r.tasks_run).sum()
+}
+
+fn task_count(case: &Case) -> usize {
+    case.tasks.len()
+}
+
+#[test]
+fn prop_any_failure_schedule_recovers_bit_identically() {
+    check_shrink(
+        "fault-bit-identity",
+        30,
+        gen_case,
+        shrink_case,
+        |case| {
+            let (g_free, rep_free, drained_free) = run_case(case, None)?;
+            if !drained_free {
+                return Err("failure-free present table not drained".into());
+            }
+            if tasks_executed(&rep_free) != task_count(case) {
+                return Err("failure-free run lost tasks".into());
+            }
+            let horizon = rep_free.virtual_time_s() * 1.1 + 1e-6;
+            let schedule = FaultSchedule::seeded(
+                case.fault_seed,
+                &[DEV1, DEV2],
+                horizon,
+                case.max_faults,
+            );
+            let armed = !schedule.is_empty();
+            let (g_fault, rep, drained) = run_case(case, Some(schedule))?;
+
+            // (a) bit-identical numerics under ANY schedule
+            if g_fault != g_free {
+                return Err(format!(
+                    "recovered grids diverged ({} failure(s): {:?})",
+                    rep.recovery_cost.failures, rep.recovery
+                ));
+            }
+            // (b) conservation + a self-consistent bill
+            if tasks_executed(&rep) != task_count(case) {
+                return Err(format!(
+                    "task conservation violated: {} executed, {} submitted",
+                    tasks_executed(&rep),
+                    task_count(case)
+                ));
+            }
+            if !armed && rep.recovery_cost.failures > 0 {
+                return Err("failures observed with no schedule armed".into());
+            }
+            if rep.recovery_cost.failures
+                != rep
+                    .recovery
+                    .iter()
+                    .filter(|e| {
+                        matches!(e, RecoveryEvent::DeviceFailed { .. })
+                    })
+                    .count()
+            {
+                return Err("failure count != DeviceFailed events".into());
+            }
+            let lost: usize = rep
+                .recovery
+                .iter()
+                .filter_map(|e| match e {
+                    RecoveryEvent::ResidencyLost { bytes, .. } => Some(*bytes),
+                    _ => None,
+                })
+                .sum();
+            if lost != rep.recovery_cost.restreamed_bytes {
+                return Err(format!(
+                    "restreamed_bytes {} != ResidencyLost sum {}",
+                    rep.recovery_cost.restreamed_bytes, lost
+                ));
+            }
+            if rep.recovery_cost.extra_makespan_s < 0.0 {
+                return Err("negative extra makespan".into());
+            }
+            // (c) the victim's enter-data references drained regardless
+            if !drained {
+                return Err("present table not drained after failure".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_single_fault_with_capable_survivor_never_shrinks_makespan() {
+    // device(any)-only *independent* per-buffer chains on two identical
+    // boards, at most one death: the survivor implements every kernel,
+    // so nothing falls back to the (virtually free) host, and with no
+    // cross-buffer edges no orphan runs can re-condense into a merged
+    // batch (which could legitimately elide a host round-trip and
+    // finish *earlier* — why `chained` is excluded here).  Under those
+    // conditions re-queueing orphans on fewer boards can only push the
+    // makespan out.
+    check_shrink(
+        "fault-makespan-monotonic",
+        30,
+        |rng| {
+            let nbufs = rng.range(1, 4);
+            let mut tasks = gen_tasks(rng, nbufs, &[Kind::Any]);
+            for t in &mut tasks {
+                t.chained = false;
+            }
+            Case {
+                nbufs,
+                tasks,
+                enters: vec![false; nbufs],
+                fault_seed: rng.next_u64(),
+                max_faults: 1,
+            }
+        },
+        shrink_case,
+        |case| {
+            let (g_free, rep_free, _) = run_case(case, None)?;
+            let horizon = rep_free.virtual_time_s() * 1.1 + 1e-6;
+            let schedule = FaultSchedule::seeded(
+                case.fault_seed,
+                &[DEV1, DEV2],
+                horizon,
+                case.max_faults,
+            );
+            let (g_fault, rep, _) = run_case(case, Some(schedule))?;
+            if g_fault != g_free {
+                return Err("recovered grids diverged".into());
+            }
+            if rep.recovery_cost.host_fallbacks != 0 {
+                return Err(format!(
+                    "host fallback despite a capable survivor: {:?}",
+                    rep.recovery
+                ));
+            }
+            if rep.recovery_cost.failures > 0
+                && rep.recovery_cost.replacements == 0
+            {
+                return Err("a failure must re-place its orphaned run".into());
+            }
+            if rep.virtual_time_s() + 1e-9 < rep_free.virtual_time_s() {
+                return Err(format!(
+                    "makespan shrank under failure: {} < {} ({:?})",
+                    rep.virtual_time_s(),
+                    rep_free.virtual_time_s(),
+                    rep.recovery_cost
+                ));
+            }
+            Ok(())
+        },
+    );
+}
