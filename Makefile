@@ -1,6 +1,6 @@
 # Entry points the docs and test skip-messages refer to.
 
-.PHONY: artifacts test perf warm-start failover clean
+.PHONY: artifacts test perf warm-start failover serving clean
 
 # AOT-lower the five Table-I stencils to HLO-text artifacts + manifest.
 # Written to ./artifacts (where the examples, run from the repo root,
@@ -31,6 +31,12 @@ warm-start:
 # recovery bill to results/failover_recovery.json (DESIGN.md §9).
 failover:
 	cargo run --release --example failover
+
+# Multi-tenant serving demo: four tenants (coalesced plans, WFQ,
+# admission control, one resident working set) ride through a mid-run
+# board death with bit-identical grids (DESIGN.md §10).
+serving:
+	cargo run --release --example multi_tenant_serving
 
 clean:
 	rm -rf target artifacts rust/artifacts results BENCH_*.json

@@ -128,19 +128,18 @@ pub fn fig10() -> Vec<String> {
 }
 
 /// Which infrastructure component dominates each resource (paper §V-C).
+/// `INFRA_COMPONENTS` is a non-empty compile-time table, but keep the
+/// selection total anyway (NaN-safe ordering, first row as fallback)
+/// so no table edit can ever turn this into a panic.
 pub fn dominant_components() -> (InfraComponent, InfraComponent) {
     let lut_max = INFRA_COMPONENTS
         .into_iter()
-        .max_by(|a, b| {
-            a.fractions().0.partial_cmp(&b.fractions().0).unwrap()
-        })
-        .unwrap();
+        .max_by(|a, b| a.fractions().0.total_cmp(&b.fractions().0))
+        .unwrap_or(INFRA_COMPONENTS[0]);
     let bram_max = INFRA_COMPONENTS
         .into_iter()
-        .max_by(|a, b| {
-            a.fractions().1.partial_cmp(&b.fractions().1).unwrap()
-        })
-        .unwrap();
+        .max_by(|a, b| a.fractions().1.total_cmp(&b.fractions().1))
+        .unwrap_or(INFRA_COMPONENTS[0]);
     (lut_max, bram_max)
 }
 

@@ -164,7 +164,13 @@ fn cmd_validate(args: &Args) -> Result<()> {
             spec.keep_grid = true;
             let res = run_stencil_app(&spec)
                 .with_context(|| format!("{} via {:?}", k.name(), backend))?;
-            let got = res.grid.unwrap();
+            let got = res.grid.with_context(|| {
+                format!(
+                    "{} via {:?}: run returned no grid despite keep_grid",
+                    k.name(),
+                    backend
+                )
+            })?;
             let diff = got.max_abs_diff(&host);
             let ok = diff < 2e-4;
             println!(

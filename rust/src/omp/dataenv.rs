@@ -233,6 +233,21 @@ impl PresentTable {
         }
     }
 
+    /// Total mapped bytes resident on `dev` — the footprint the serving
+    /// layer balances when it spreads hot tenants' working sets across
+    /// boards ([`crate::omp::serve`]): a new tenant is pinned to the
+    /// live device currently holding the fewest resident bytes, so the
+    /// `device(any)` placement (which prices residency per buffer) then
+    /// keeps that tenant's requests on its own board instead of piling
+    /// every working set onto device 1.
+    pub fn device_bytes(&self, dev: DeviceId) -> usize {
+        self.entries
+            .iter()
+            .filter(|((d, _), _)| *d == dev)
+            .map(|(_, e)| e.bytes)
+            .sum()
+    }
+
     /// `writer` produced a new value of `name`: every *other* device's
     /// copy is now out of date — it must re-stream before use, and any
     /// pending writeback of it is cancelled (a stale copy is never the
@@ -449,6 +464,19 @@ mod tests {
         // ...but a further write that only bumps the generation is not
         t.mark_device_write(D1, "V");
         assert_eq!(dirty, fp(&t));
+    }
+
+    #[test]
+    fn device_bytes_sums_per_device_footprint() {
+        let mut t = PresentTable::new();
+        assert_eq!(t.device_bytes(D1), 0);
+        t.enter(D1, "A", 64, EnterMap::To);
+        t.enter(D1, "B", 32, EnterMap::To);
+        t.enter(D2, "A", 64, EnterMap::To);
+        assert_eq!(t.device_bytes(D1), 96);
+        assert_eq!(t.device_bytes(D2), 64);
+        t.exit(D1, "B", ExitMap::Release).unwrap();
+        assert_eq!(t.device_bytes(D1), 64);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! paper's verification flow.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -32,6 +32,16 @@ struct SchedState {
     indeg: Vec<usize>,
     env: DataEnv,
     error: Option<String>,
+}
+
+/// Lock the scheduler state, surviving poisoning: a worker that panics
+/// mid-task poisons the mutex, but the batch must fail with a *named*
+/// error on the serving thread — one bad request never takes down the
+/// pool (the panicking worker's task is accounted via `error`, and the
+/// state itself stays structurally sound because every mutation happens
+/// under short straight-line critical sections).
+fn lock_state(state: &Mutex<SchedState>) -> MutexGuard<'_, SchedState> {
+    state.lock().unwrap_or_else(|poison| poison.into_inner())
 }
 
 impl DevicePlugin for HostDevice {
@@ -90,10 +100,20 @@ impl DevicePlugin for HostDevice {
             }
         });
 
-        let mut st = state.into_inner().unwrap();
+        let mut st = state
+            .into_inner()
+            .unwrap_or_else(|poison| poison.into_inner());
         *env = std::mem::take(&mut st.env);
         if let Some(e) = st.error {
             return Err(anyhow!("host task failed: {e}"));
+        }
+        if st.remaining != 0 {
+            // a worker panicked mid-task without recording an error:
+            // the batch did not complete — refuse to report success
+            return Err(anyhow!(
+                "host pool lost {} task(s) to a panicked worker",
+                st.remaining
+            ));
         }
         let mut report = DeviceReport {
             tasks_run: tasks.len(),
@@ -118,7 +138,7 @@ fn worker(
 ) {
     loop {
         // -- claim a ready task and take its buffers ---------------------
-        let mut st = state.lock().unwrap();
+        let mut st = lock_state(state);
         let id = loop {
             if st.remaining == 0 || st.error.is_some() {
                 cv.notify_all();
@@ -127,7 +147,7 @@ fn worker(
             if let Some(id) = st.ready.pop_front() {
                 break id;
             }
-            st = cv.wait(st).unwrap();
+            st = cv.wait(st).unwrap_or_else(|poison| poison.into_inner());
         };
         let task = graph.task(id);
         // private environment: ownership of the mapped buffers moves to
@@ -155,7 +175,7 @@ fn worker(
         let body = match fns.get(&task.fn_name) {
             Ok(TaskFn::Software(f)) => f.clone(),
             Ok(TaskFn::HwKernel(k)) => {
-                let mut st = state.lock().unwrap();
+                let mut st = lock_state(state);
                 st.error = Some(format!(
                     "task '{}' resolved to hardware kernel {} but was \
                      scheduled on the host device",
@@ -167,7 +187,7 @@ fn worker(
                 return;
             }
             Err(e) => {
-                let mut st = state.lock().unwrap();
+                let mut st = lock_state(state);
                 st.error = Some(e.to_string());
                 st.remaining = 0;
                 cv.notify_all();
@@ -177,7 +197,7 @@ fn worker(
         let run_result = body(&mut private);
 
         // -- return buffers, retire, release successors ------------------
-        let mut st = state.lock().unwrap();
+        let mut st = lock_state(state);
         for (_, name) in &task.maps {
             if let Ok(g) = private.take(name) {
                 st.env.put(name, g);

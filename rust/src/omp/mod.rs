@@ -37,6 +37,11 @@
 //!   fingerprint).
 //! * [`runtime`] — `parallel` / `single` / `target` entry points and the
 //!   deferred-dispatch executor driving [`sched`] at the barrier.
+//! * [`serve`] — the multi-tenant serving front end over the
+//!   compile-once pipeline: shape-keyed request coalescing onto shared
+//!   [`Executable`]s, bounded-queue admission control, weighted fair
+//!   queueing across tenants, and residency-affine placement of hot
+//!   working sets.
 
 pub mod dataenv;
 pub mod device;
@@ -46,6 +51,7 @@ pub mod host;
 pub mod program;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod task;
 pub mod variant;
 
@@ -67,5 +73,9 @@ pub use runtime::{
     OmpReport, OmpRuntime, SingleCtx, TargetBuilder, WritebackEvent,
 };
 pub use sched::{BatchDag, Dispatcher, Run};
+pub use serve::{
+    serve, Dispatch, ServeConfig, ServeOutcome, ServeReport, TenantSpec,
+    TenantStats,
+};
 pub use task::{DepVar, MapDir, Task, TaskId};
 pub use variant::VariantRegistry;

@@ -652,7 +652,7 @@ fn read_task(r: &mut Reader<'_>) -> Result<Task> {
     r.expect_obj()?;
     let mut base: Option<String> = None;
     let mut fn_name: Option<String> = None;
-    let mut device: Option<usize> = None;
+    let mut device: Option<DeviceSel> = None;
     let mut nowait = false;
     let mut maps: Vec<(MapDir, String)> = Vec::new();
     let mut deps_in: Vec<DepVar> = Vec::new();
@@ -661,7 +661,24 @@ fn read_task(r: &mut Reader<'_>) -> Result<Task> {
         match key.as_ref() {
             "base" => base = Some(r.read_str()?.into_owned()),
             "fn" => fn_name = Some(r.read_str()?.into_owned()),
-            "device" => device = Some(r.read_usize()?),
+            "device" => {
+                // the writer only ever emits bound indices, but a
+                // hand-edited file may carry the source-level `"any"`
+                // selector — represent it faithfully so the loader can
+                // refuse it by task name instead of panicking
+                device = Some(match r.peek()? {
+                    Some(Event::Str(_)) => {
+                        let s = r.read_str()?;
+                        ensure!(
+                            s == "any",
+                            "task device must be an index or \"any\", \
+                             got '{s}'"
+                        );
+                        DeviceSel::Any
+                    }
+                    _ => DeviceSel::Bound(DeviceId(r.read_usize()?)),
+                });
+            }
             "nowait" => nowait = r.read_bool()?,
             "maps" => {
                 r.expect_arr()?;
@@ -696,9 +713,7 @@ fn read_task(r: &mut Reader<'_>) -> Result<Task> {
         id: TaskId(0),
         base_name: base.context("task missing 'base'")?,
         fn_name: fn_name.context("task missing 'fn'")?,
-        device: DeviceSel::Bound(DeviceId(
-            device.context("task missing 'device'")?,
-        )),
+        device: device.context("task missing 'device'")?,
         maps,
         deps_in,
         deps_out,
@@ -1624,11 +1639,17 @@ impl OmpRuntime {
         // loaded graph's preds/succs equal the compiled ones.
         let mut graph = TaskGraph::new();
         for t in m.tasks {
-            let dev = t
-                .device
-                .bound()
-                .expect("parser only produces bound tasks")
-                .0;
+            // a compiled plan binds every task; an `"any"` selector can
+            // only come from a hand-edited or corrupt file, and must be
+            // a named refusal here — never a process abort
+            let Some(DeviceId(dev)) = t.device.bound() else {
+                bail!(
+                    "executable task '{}' carries an unbound device(any) \
+                     selector — compiled plans bind every task; corrupt \
+                     file, recompile the program",
+                    t.base_name
+                );
+            };
             ensure!(
                 dev < self.devices.len(),
                 "executable task '{}' is bound to device {dev} but this \

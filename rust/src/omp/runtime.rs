@@ -201,6 +201,20 @@ impl OmpRuntime {
         self.epoch_reason = reason;
     }
 
+    /// The current plan-invalidation epoch.  A compiled [`super::program::Executable`]
+    /// whose [`super::program::Executable::epoch`] differs is stale and
+    /// must be recompiled — serving layers use this to evict shared
+    /// plans cheaply instead of waiting for the execute-time error.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// What caused the most recent epoch bump (e.g.
+    /// `"device_failed(2: vc709 — …)"`), for recompile attribution.
+    pub fn epoch_reason(&self) -> &str {
+        &self.epoch_reason
+    }
+
     /// Register an acceleration device; returns its device id (the
     /// integer the `device` clause takes).  Invalidates compiled plans:
     /// `device(any)` placements priced without the new device are stale.

@@ -1,0 +1,901 @@
+//! Multi-tenant serving front end over compile-once/run-many — the
+//! ROADMAP's "millions of users" direction (DESIGN.md §10).
+//!
+//! The paper's offloading model is one host program driving the FPGA
+//! cluster; production serving is thousands of in-flight requests from
+//! many tenants competing for the same boards.  This module drives an
+//! [`OmpRuntime`] like that front end:
+//!
+//! * **Shape-keyed coalescing** — concurrent identical requests (same
+//!   service, grid shape and chain length) fold onto one shared
+//!   [`Executable`]: the first request compiles (or warm-starts from a
+//!   persisted plan, PR 6), every later one replays with zero
+//!   re-planning (PR 4).  The cache revalidates exactly like the
+//!   runtime's own plan cache: a runtime **epoch** bump evicts with the
+//!   epoch reason named, and mapped-buffer **residency fingerprint**
+//!   drift recompiles transparently — so at every dispatch the plan
+//!   used is bit-for-bit the plan a cold compile would have produced,
+//!   which is what makes coalesced and per-request-compile serving
+//!   produce identical grids and identical virtual latencies.
+//! * **Admission control** — each tenant owns a bounded queue; a
+//!   request arriving at a full queue is *rejected at the door* with
+//!   per-tenant accounting, never silently dropped mid-flight.
+//!   Conservation holds by construction: generated = admitted +
+//!   rejected, and every admitted request completes.
+//! * **Weighted fair queueing** — start-time fair queueing (SFQ) over
+//!   the tenant queues: each dispatch picks the backlogged tenant with
+//!   the smallest virtual finish tag `start + cost / weight`, so a
+//!   backlogged tenant receives service proportional to its weight
+//!   within one maximal request of slack, and no tenant starves behind
+//!   a heavy hitter.
+//! * **Residency-affine placement** — a tenant marked
+//!   [`TenantSpec::resident`] has its working set entered
+//!   (`target enter data`) on the live board currently holding the
+//!   fewest resident bytes ([`PresentTable::device_bytes`]); the
+//!   `device(any)` placement then prices that residency (PR 3) and
+//!   keeps the tenant's requests on its own board with the H2D elided.
+//! * **Degradation under fault** — a mid-service board death (PR 7)
+//!   recovers *inside* the victim request's execute (replayed suffix,
+//!   re-placed orphans, itemized bill), then bumps the epoch; the next
+//!   dispatch of every affected shape recompiles against the survivors
+//!   with the failure named in [`ServeReport::stale_recompiles`].  No
+//!   admitted request is ever dropped.
+//!
+//! Request arrivals, queue wait and service all live on the DES virtual
+//! clock (f64 seconds): latency percentiles are deterministic and
+//! seed-reproducible.  Host-side planning work is real wall time — that
+//! is the req/s win coalescing buys — so [`ServeReport`] carries both
+//! clocks separately.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::dataenv::EnterMap;
+use super::device::{DataEnv, DeviceId};
+use super::program::Executable;
+use super::runtime::OmpRuntime;
+use super::task::MapDir;
+use crate::stencil::Grid;
+use crate::util::prop::Rng;
+
+/// One tenant of the serving fleet: its service (the logical model it
+/// requests), traffic model, admission bound and scheduling weight.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// tenant identity (report key)
+    pub name: String,
+    /// the logical service: the captured region's buffer name.  Tenants
+    /// sharing a service (and therefore shape + steps) coalesce onto
+    /// one shared [`Executable`]; a [`TenantSpec::resident`] tenant
+    /// must own its service exclusively (its working set is private).
+    pub service: String,
+    /// WFQ weight — service received while backlogged is proportional
+    /// to this (must be positive)
+    pub weight: f64,
+    /// grid shape of one request's working set
+    pub shape: Vec<usize>,
+    /// chain length of the served region (stencil sweeps per request)
+    pub steps: usize,
+    /// how many requests this tenant issues
+    pub requests: usize,
+    /// mean inter-arrival gap (virtual seconds, exponential); 0 = all
+    /// requests arrive at once (a closed-loop saturating tenant)
+    pub mean_gap_s: f64,
+    /// admission bound: requests arriving when this many are already
+    /// queued are rejected
+    pub queue_cap: usize,
+    /// pin this tenant's working set device-resident (see module docs)
+    pub resident: bool,
+}
+
+impl TenantSpec {
+    pub fn new(
+        name: &str,
+        service: &str,
+        shape: &[usize],
+        steps: usize,
+    ) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            service: service.to_string(),
+            weight: 1.0,
+            shape: shape.to_vec(),
+            steps,
+            requests: 16,
+            mean_gap_s: 0.0,
+            queue_cap: 1024,
+            resident: false,
+        }
+    }
+
+    pub fn weight(mut self, w: f64) -> Self {
+        self.weight = w;
+        self
+    }
+
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+
+    pub fn mean_gap_s(mut self, s: f64) -> Self {
+        self.mean_gap_s = s;
+        self
+    }
+
+    pub fn queue_cap(mut self, n: usize) -> Self {
+        self.queue_cap = n;
+        self
+    }
+
+    pub fn resident(mut self) -> Self {
+        self.resident = true;
+        self
+    }
+}
+
+/// Serving-run configuration: the tenant fleet plus engine knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub tenants: Vec<TenantSpec>,
+    /// seeds arrival processes and tenant input grids
+    pub seed: u64,
+    /// `true`: shape-keyed coalescing (compile once per shape, replay).
+    /// `false`: the pre-compile-once baseline — every request captures
+    /// and compiles from scratch.  Both produce bit-identical grids and
+    /// identical virtual latencies; only the host planning work (and so
+    /// wall-clock req/s) differs.
+    pub coalesce: bool,
+    /// the base function every request's chain targets (resolved via
+    /// `declare variant` per placed device, host fallback included)
+    pub target_fn: String,
+    /// when set, compiled plans persist here ([`Executable::save`]) and
+    /// cache misses try [`OmpRuntime::load_executable`] first — the
+    /// warm start: a fresh replica serves with zero compiles
+    pub warm_dir: Option<PathBuf>,
+}
+
+impl ServeConfig {
+    pub fn new(tenants: Vec<TenantSpec>) -> ServeConfig {
+        ServeConfig {
+            tenants,
+            seed: 1,
+            coalesce: true,
+            target_fn: "do_step".to_string(),
+            warm_dir: None,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn coalesce(mut self, on: bool) -> Self {
+        self.coalesce = on;
+        self
+    }
+
+    pub fn warm_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.warm_dir = Some(dir.into());
+        self
+    }
+}
+
+/// Per-tenant accounting.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    pub generated: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub completed: usize,
+    /// total virtual service received (sum of per-request makespans)
+    pub service_s: f64,
+    /// the board a resident tenant's working set was pinned to
+    pub affine_device: Option<usize>,
+}
+
+/// One dispatch, in dispatch order — the WFQ audit trail the fairness
+/// properties check.
+#[derive(Debug, Clone)]
+pub struct Dispatch {
+    pub tenant: String,
+    /// virtual instant service started
+    pub start_s: f64,
+    /// virtual service duration of this request
+    pub service_s: f64,
+}
+
+/// Everything one serving run measured.
+#[derive(Debug, Default)]
+pub struct ServeReport {
+    pub generated: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub completed: usize,
+    /// dispatches served from the shared-plan cache
+    pub plan_hits: usize,
+    /// dispatches that compiled (or warm-loaded) a plan
+    pub plan_misses: usize,
+    /// misses satisfied by loading a persisted plan instead of compiling
+    pub warm_loaded: usize,
+    /// epoch-bump evictions, each naming the shape key and the epoch
+    /// reason (e.g. a mid-service board death)
+    pub stale_recompiles: Vec<String>,
+    /// transparent recompiles after mapped-buffer residency drift (the
+    /// first execution of a resident tenant's plan makes later plans
+    /// cheaper — same policy as the runtime plan cache)
+    pub residency_recompiles: usize,
+    /// requests that rode through a mid-execute device failure and
+    /// completed via recovery
+    pub recovered_requests: usize,
+    /// final virtual time (the serving horizon)
+    pub horizon_s: f64,
+    /// real host time for the whole run (planning + bookkeeping + DES)
+    pub wall_s: f64,
+    /// per-completed-request latency (completion − arrival, virtual
+    /// seconds), in completion order
+    pub latencies_s: Vec<f64>,
+    pub per_tenant: BTreeMap<String, TenantStats>,
+    pub dispatches: Vec<Dispatch>,
+}
+
+impl ServeReport {
+    /// Plan-cache hit rate over all dispatches.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.plan_hits + self.plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / total as f64
+        }
+    }
+
+    /// Median request latency (virtual seconds).
+    pub fn p50_s(&self) -> f64 {
+        percentile(&self.latencies_s, 0.50)
+    }
+
+    /// 95th-percentile request latency (virtual seconds).
+    pub fn p95_s(&self) -> f64 {
+        percentile(&self.latencies_s, 0.95)
+    }
+
+    /// Completed requests per **virtual** second of serving horizon —
+    /// the DES-clock throughput, deterministic under a seed.
+    pub fn req_per_s_virtual(&self) -> f64 {
+        if self.horizon_s > 0.0 {
+            self.completed as f64 / self.horizon_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Completed requests per **wall** second — this is where coalesced
+    /// serving beats per-request cold compiles: replay skips the
+    /// capture/condense/place planning work entirely.
+    pub fn req_per_s_wall(&self) -> f64 {
+        self.completed as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Human-readable run summary (the examples print this).
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut out = vec![
+            format!(
+                "requests      : {} generated = {} admitted + {} rejected; \
+                 {} completed",
+                self.generated, self.admitted, self.rejected, self.completed
+            ),
+            format!(
+                "plan cache    : {} hits / {} misses ({:.1}% hit rate), \
+                 {} warm-loaded, {} residency recompiles, {} stale evictions",
+                self.plan_hits,
+                self.plan_misses,
+                100.0 * self.hit_rate(),
+                self.warm_loaded,
+                self.residency_recompiles,
+                self.stale_recompiles.len()
+            ),
+            format!(
+                "latency       : p50 {:.6} s, p95 {:.6} s over a {:.6} s \
+                 horizon ({:.1} req/s virtual)",
+                self.p50_s(),
+                self.p95_s(),
+                self.horizon_s,
+                self.req_per_s_virtual()
+            ),
+            format!(
+                "throughput    : {:.0} req/s wall ({} requests in {:.3} s)",
+                self.req_per_s_wall(),
+                self.completed,
+                self.wall_s
+            ),
+        ];
+        if self.recovered_requests > 0 {
+            out.push(format!(
+                "degradation   : {} request(s) recovered through a board \
+                 death; recompiled: {}",
+                self.recovered_requests,
+                self.stale_recompiles.join("; ")
+            ));
+        }
+        for (name, t) in &self.per_tenant {
+            out.push(format!(
+                "  tenant {:<10} {:>5} completed / {:>2} rejected, \
+                 service {:.6} s{}",
+                name,
+                t.completed,
+                t.rejected,
+                t.service_s,
+                match t.affine_device {
+                    Some(d) => format!("  (resident on device {d})"),
+                    None => String::new(),
+                }
+            ));
+        }
+        out
+    }
+}
+
+/// A serving run's results: the measurements plus each tenant's final
+/// grid (for bit-identity checks against a baseline run).
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub report: ServeReport,
+    /// tenant name → final working-set grid
+    pub grids: BTreeMap<String, Grid>,
+}
+
+/// Nearest-rank percentile of an unsorted sample (0.0 for an empty one).
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// One queued request.
+#[derive(Debug, Clone, Copy)]
+struct Request {
+    tenant: usize,
+    arrive_s: f64,
+}
+
+/// One cached shared plan, with the revalidation state the runtime's
+/// own plan cache keys on: epoch (checked against the live runtime) and
+/// the mapped-buffer residency fingerprint at compile time.
+struct PlanEntry {
+    exe: Executable,
+    fingerprint: u64,
+    slot_names: Vec<String>,
+}
+
+/// The shape-coalescing key: tenants agreeing on all three request the
+/// same compiled plan.
+fn shape_key(spec: &TenantSpec) -> String {
+    let dims: Vec<String> =
+        spec.shape.iter().map(|d| d.to_string()).collect();
+    format!("{}:{}x[{}]", spec.service, spec.steps, dims.join("x"))
+}
+
+/// Stable on-disk name for a shape's persisted plan.
+fn plan_file(key: &str) -> String {
+    let safe: String = key
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    format!("{safe}.plan.json")
+}
+
+fn validate(cfg: &ServeConfig) -> Result<()> {
+    ensure!(!cfg.tenants.is_empty(), "serve: no tenants configured");
+    for t in &cfg.tenants {
+        ensure!(!t.name.is_empty(), "serve: tenant with empty name");
+        ensure!(
+            !t.service.is_empty(),
+            "serve: tenant '{}' has an empty service name",
+            t.name
+        );
+        ensure!(
+            t.weight > 0.0 && t.weight.is_finite(),
+            "serve: tenant '{}' has non-positive weight {}",
+            t.name,
+            t.weight
+        );
+        ensure!(
+            t.steps >= 1,
+            "serve: tenant '{}' requests a 0-step chain",
+            t.name
+        );
+        ensure!(
+            !t.shape.is_empty(),
+            "serve: tenant '{}' has an empty grid shape",
+            t.name
+        );
+        ensure!(
+            t.mean_gap_s >= 0.0,
+            "serve: tenant '{}' has a negative arrival gap",
+            t.name
+        );
+    }
+    let mut names = std::collections::BTreeSet::new();
+    for t in &cfg.tenants {
+        ensure!(
+            names.insert(t.name.as_str()),
+            "serve: duplicate tenant name '{}'",
+            t.name
+        );
+    }
+    // a resident tenant's working set is private: sharing its buffer
+    // name would alias two tenants' data in the present table
+    for t in cfg.tenants.iter().filter(|t| t.resident) {
+        let sharers = cfg
+            .tenants
+            .iter()
+            .filter(|o| o.service == t.service)
+            .count();
+        ensure!(
+            sharers == 1,
+            "serve: resident tenant '{}' shares service '{}' with {} \
+             other tenant(s) — resident working sets must be private",
+            t.name,
+            t.service,
+            sharers - 1
+        );
+    }
+    Ok(())
+}
+
+/// Compile one shape's plan: capture the chain against `env`, compile
+/// with the current residency priced in.
+fn compile_shape(
+    rt: &mut OmpRuntime,
+    cfg: &ServeConfig,
+    spec: &TenantSpec,
+    env: &DataEnv,
+) -> Result<Executable> {
+    let deps = rt.dep_vars(spec.steps + 1);
+    let service = spec.service.clone();
+    let target = cfg.target_fn.clone();
+    let program = rt
+        .capture(env, |ctx| {
+            for i in 0..spec.steps {
+                ctx.target(&target)
+                    .device_any()
+                    .map(MapDir::ToFrom, &service)
+                    .depend_in(deps[i])
+                    .depend_out(deps[i + 1])
+                    .nowait()
+                    .submit()?;
+            }
+            Ok(())
+        })
+        .with_context(|| {
+            format!("serve: capturing shape {}", shape_key(spec))
+        })?;
+    program.compile(rt).with_context(|| {
+        format!("serve: compiling shape {}", shape_key(spec))
+    })
+}
+
+/// Produce the plan to dispatch with: cache hit, warm load, or compile
+/// — revalidating epoch and residency fingerprint exactly like the
+/// runtime's own plan cache, so the dispatched plan always equals what
+/// a cold compile would build right now.
+#[allow(clippy::too_many_arguments)]
+fn ensure_exe(
+    rt: &mut OmpRuntime,
+    cache: &mut BTreeMap<String, PlanEntry>,
+    cfg: &ServeConfig,
+    spec: &TenantSpec,
+    env: &DataEnv,
+    report: &mut ServeReport,
+) -> Result<Executable> {
+    let key = shape_key(spec);
+    if !cfg.coalesce {
+        report.plan_misses += 1;
+        return compile_shape(rt, cfg, spec, env);
+    }
+    if let Some(entry) = cache.get(&key) {
+        if entry.exe.epoch() != rt.epoch() {
+            report
+                .stale_recompiles
+                .push(format!("{key}: {}", rt.epoch_reason()));
+            cache.remove(&key);
+        } else if rt.residency_fingerprint_names(&entry.slot_names)
+            != entry.fingerprint
+        {
+            report.residency_recompiles += 1;
+            cache.remove(&key);
+        } else {
+            report.plan_hits += 1;
+            return Ok(entry.exe.clone());
+        }
+    }
+    report.plan_misses += 1;
+    let slot_names = vec![spec.service.clone()];
+    // warm start: a persisted plan loads with zero compiles if the
+    // loader's revalidation (epoch, registry, fingerprint, format)
+    // accepts it; any refusal falls through to a fresh compile
+    if let Some(dir) = &cfg.warm_dir {
+        let path = dir.join(plan_file(&key));
+        if path.exists() {
+            if let Ok(exe) = rt.load_executable(&path) {
+                report.warm_loaded += 1;
+                let fingerprint =
+                    rt.residency_fingerprint_names(&slot_names);
+                let out = exe.clone();
+                cache.insert(key, PlanEntry { exe, fingerprint, slot_names });
+                return Ok(out);
+            }
+        }
+    }
+    let exe = compile_shape(rt, cfg, spec, env)?;
+    if let Some(dir) = &cfg.warm_dir {
+        std::fs::create_dir_all(dir).with_context(|| {
+            format!("serve: creating warm-plan dir {}", dir.display())
+        })?;
+        exe.save(rt, dir.join(plan_file(&key)))?;
+    }
+    let fingerprint = rt.residency_fingerprint_names(&slot_names);
+    let out = exe.clone();
+    cache.insert(key, PlanEntry { exe, fingerprint, slot_names });
+    Ok(out)
+}
+
+/// Drive one serving run over `rt`: generate each tenant's arrival
+/// process, admit against the per-tenant queue bounds, dispatch in SFQ
+/// order, and account everything into a [`ServeReport`].  The runtime
+/// arrives configured (devices registered, variants declared, faults
+/// armed); `serve` adds only resident tenants' `target enter data`.
+pub fn serve(rt: &mut OmpRuntime, cfg: &ServeConfig) -> Result<ServeOutcome> {
+    validate(cfg)?;
+    let t0 = Instant::now();
+    let mut report = ServeReport::default();
+    for t in &cfg.tenants {
+        report.per_tenant.insert(t.name.clone(), TenantStats::default());
+    }
+
+    // -- tenant working sets -------------------------------------------
+    let mut envs: Vec<DataEnv> = Vec::with_capacity(cfg.tenants.len());
+    for (i, spec) in cfg.tenants.iter().enumerate() {
+        let grid = Grid::random(
+            &spec.shape,
+            cfg.seed ^ (0x9E37 + 7919 * i as u64),
+        )
+        .with_context(|| {
+            format!("serve: building tenant '{}' working set", spec.name)
+        })?;
+        let mut env = DataEnv::new();
+        env.insert(&spec.service, grid);
+        envs.push(env);
+    }
+
+    // -- residency-affine pinning of hot tenants -----------------------
+    // spread working sets: each resident tenant lands on the live
+    // accelerator currently holding the fewest resident bytes, then
+    // `device(any)` placement prices that residency and keeps the
+    // tenant's requests there
+    for (i, spec) in cfg.tenants.iter().enumerate() {
+        if !spec.resident {
+            continue;
+        }
+        let affine = rt
+            .devices()
+            .into_iter()
+            .map(|(d, _)| d)
+            .filter(|d| d.0 != 0 && !rt.is_dead(*d))
+            .min_by_key(|d| (rt.present().device_bytes(*d), d.0));
+        let Some(dev) = affine else {
+            // no live accelerator: serve degraded (streaming) instead
+            // of refusing the tenant
+            continue;
+        };
+        rt.target_enter_data(
+            dev,
+            &envs[i],
+            &[(EnterMap::To, &spec.service)],
+        )
+        .with_context(|| {
+            format!("serve: pinning tenant '{}' residency", spec.name)
+        })?;
+        if let Some(st) = report.per_tenant.get_mut(&spec.name) {
+            st.affine_device = Some(dev.0);
+        }
+    }
+
+    // -- arrival processes ---------------------------------------------
+    let mut rng = Rng::with_seed(cfg.seed);
+    let mut arrivals: Vec<Request> = Vec::new();
+    for (ti, spec) in cfg.tenants.iter().enumerate() {
+        let mut t = 0.0f64;
+        for _ in 0..spec.requests {
+            if spec.mean_gap_s > 0.0 {
+                // exponential inter-arrival from the seeded uniform
+                let u = f64::from(rng.f32());
+                t += -spec.mean_gap_s * (1.0 - u).ln();
+            }
+            arrivals.push(Request { tenant: ti, arrive_s: t });
+        }
+    }
+    arrivals.sort_by(|a, b| {
+        a.arrive_s
+            .total_cmp(&b.arrive_s)
+            .then(a.tenant.cmp(&b.tenant))
+    });
+
+    // -- the serving loop ----------------------------------------------
+    let mut queues: Vec<VecDeque<Request>> =
+        vec![VecDeque::new(); cfg.tenants.len()];
+    let mut cache: BTreeMap<String, PlanEntry> = BTreeMap::new();
+    // last observed virtual service cost per shape, for the SFQ tags
+    // (an unseen shape costs 0: it gets one priority dispatch, after
+    // which its measured cost steers fairness — identical in coalesced
+    // and baseline mode, so both dispatch in the same order)
+    let mut shape_cost: BTreeMap<String, f64> = BTreeMap::new();
+    // SFQ virtual time and per-tenant finish tags
+    let mut vtime = 0.0f64;
+    let mut finish_tag = vec![0.0f64; cfg.tenants.len()];
+    let mut next_arrival = 0usize;
+    let mut now = 0.0f64;
+
+    loop {
+        // admit, in arrival order, everything that has arrived by `now`
+        while next_arrival < arrivals.len()
+            && arrivals[next_arrival].arrive_s <= now
+        {
+            let req = arrivals[next_arrival];
+            next_arrival += 1;
+            let spec = &cfg.tenants[req.tenant];
+            let st = report
+                .per_tenant
+                .get_mut(&spec.name)
+                .context("serve: tenant stats missing")?;
+            st.generated += 1;
+            report.generated += 1;
+            if queues[req.tenant].len() >= spec.queue_cap {
+                st.rejected += 1;
+                report.rejected += 1;
+            } else {
+                st.admitted += 1;
+                report.admitted += 1;
+                queues[req.tenant].push_back(req);
+            }
+        }
+        if queues.iter().all(|q| q.is_empty()) {
+            match arrivals.get(next_arrival) {
+                Some(r) => {
+                    // idle: jump the clock to the next arrival
+                    now = r.arrive_s;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // SFQ pick: smallest virtual finish tag among backlogged heads
+        let mut pick: Option<(f64, usize)> = None;
+        for (ti, q) in queues.iter().enumerate() {
+            if q.is_empty() {
+                continue;
+            }
+            let cost = shape_cost
+                .get(&shape_key(&cfg.tenants[ti]))
+                .copied()
+                .unwrap_or(0.0);
+            let start = vtime.max(finish_tag[ti]);
+            let fin = start + cost / cfg.tenants[ti].weight;
+            if pick.is_none_or(|(best, _)| fin < best) {
+                pick = Some((fin, ti));
+            }
+        }
+        let Some((_, ti)) = pick else {
+            bail!("serve: scheduler found no backlogged tenant (bug)");
+        };
+        let Some(req) = queues[ti].pop_front() else {
+            bail!("serve: picked tenant {ti} with an empty queue (bug)");
+        };
+        let spec = &cfg.tenants[ti];
+
+        // plan (hit / warm load / compile), then replay
+        let exe =
+            ensure_exe(rt, &mut cache, cfg, spec, &envs[ti], &mut report)?;
+        let rep = exe.execute(rt, &mut envs[ti]).with_context(|| {
+            format!(
+                "serve: executing request of tenant '{}' (shape {})",
+                spec.name,
+                shape_key(spec)
+            )
+        })?;
+        let service_s = rep.virtual_time_s();
+        if !rep.recovery.is_empty() {
+            report.recovered_requests += 1;
+        }
+
+        // advance both clocks: the DES horizon and the SFQ tags (the
+        // tags use the *measured* service so fairness tracks truth)
+        let start_s = now;
+        now += service_s;
+        let start_tag = vtime.max(finish_tag[ti]);
+        vtime = start_tag;
+        finish_tag[ti] = start_tag + service_s / spec.weight;
+        shape_cost.insert(shape_key(spec), service_s);
+
+        report.latencies_s.push(now - req.arrive_s);
+        report.completed += 1;
+        report.dispatches.push(Dispatch {
+            tenant: spec.name.clone(),
+            start_s,
+            service_s,
+        });
+        let st = report
+            .per_tenant
+            .get_mut(&spec.name)
+            .context("serve: tenant stats missing")?;
+        st.completed += 1;
+        st.service_s += service_s;
+    }
+
+    report.horizon_s = now;
+    report.wall_s = t0.elapsed().as_secs_f64();
+
+    // hand each tenant's final working set back for bit-identity checks
+    let mut grids = BTreeMap::new();
+    for (i, spec) in cfg.tenants.iter().enumerate() {
+        let g = envs[i].take(&spec.service).with_context(|| {
+            format!("serve: tenant '{}' lost its working set", spec.name)
+        })?;
+        grids.insert(spec.name.clone(), g);
+    }
+    Ok(ServeOutcome { report, grids })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Host-only runtime: `do_step` as a software base function (no
+    /// accelerator), so units stay fast and dependency-free.
+    fn host_runtime() -> OmpRuntime {
+        let mut rt = OmpRuntime::new(2);
+        rt.register_software("do_step", |env| {
+            let mut g = env.take("S")?;
+            for v in g.data_mut() {
+                *v += 1.0;
+            }
+            env.put("S", g);
+            Ok(())
+        });
+        rt
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[3.0], 0.5), 3.0);
+        let s = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&s, 0.50), 2.0);
+        assert_eq!(percentile(&s, 0.95), 4.0);
+        assert_eq!(percentile(&s, 1.0), 4.0);
+    }
+
+    #[test]
+    fn conservation_and_hit_counting() {
+        let mut rt = host_runtime();
+        let cfg = ServeConfig::new(vec![
+            TenantSpec::new("a", "S", &[4, 4], 2).requests(7),
+            TenantSpec::new("b", "S", &[4, 4], 2).requests(5),
+        ]);
+        let out = serve(&mut rt, &cfg).unwrap();
+        let r = &out.report;
+        assert_eq!(r.generated, 12);
+        assert_eq!(r.generated, r.admitted + r.rejected);
+        assert_eq!(r.admitted, r.completed);
+        // both tenants share one shape: one compile, the rest replay
+        assert_eq!(r.plan_misses, 1);
+        assert_eq!(r.plan_hits, 11);
+        assert!((r.hit_rate() - 11.0 / 12.0).abs() < 1e-12);
+        assert_eq!(out.grids.len(), 2);
+    }
+
+    #[test]
+    fn admission_rejects_at_the_door() {
+        let mut rt = host_runtime();
+        // all 10 requests arrive at t=0 against a queue bound of 3
+        let cfg = ServeConfig::new(vec![TenantSpec::new(
+            "burst", "S", &[4, 4], 1,
+        )
+        .requests(10)
+        .queue_cap(3)]);
+        let out = serve(&mut rt, &cfg).unwrap();
+        let r = &out.report;
+        assert_eq!(r.generated, 10);
+        assert_eq!(r.admitted, 3);
+        assert_eq!(r.rejected, 7);
+        assert_eq!(r.completed, 3, "every admitted request completes");
+        let t = &r.per_tenant["burst"];
+        assert_eq!((t.admitted, t.rejected, t.completed), (3, 7, 3));
+    }
+
+    #[test]
+    fn cold_mode_compiles_per_request() {
+        let mut rt = host_runtime();
+        let cfg = ServeConfig::new(vec![TenantSpec::new(
+            "a", "S", &[4, 4], 2,
+        )
+        .requests(6)])
+        .coalesce(false);
+        let out = serve(&mut rt, &cfg).unwrap();
+        assert_eq!(out.report.plan_hits, 0);
+        assert_eq!(out.report.plan_misses, 6);
+        assert_eq!(rt.plan_stats().plans_built, 6);
+    }
+
+    #[test]
+    fn coalesced_and_cold_grids_are_bit_identical() {
+        let tenants = || {
+            vec![
+                TenantSpec::new("a", "S", &[6, 5], 3).requests(4),
+                TenantSpec::new("b", "S", &[6, 5], 3).requests(4),
+            ]
+        };
+        let mut rt_a = host_runtime();
+        let hot =
+            serve(&mut rt_a, &ServeConfig::new(tenants()).seed(9)).unwrap();
+        let mut rt_b = host_runtime();
+        let cold = serve(
+            &mut rt_b,
+            &ServeConfig::new(tenants()).seed(9).coalesce(false),
+        )
+        .unwrap();
+        assert_eq!(hot.grids, cold.grids);
+        assert_eq!(
+            hot.report.latencies_s, cold.report.latencies_s,
+            "same dispatch order, same virtual latencies"
+        );
+    }
+
+    #[test]
+    fn validation_names_the_offender() {
+        let mut rt = host_runtime();
+        let dup = ServeConfig::new(vec![
+            TenantSpec::new("x", "S", &[4, 4], 1),
+            TenantSpec::new("x", "S", &[4, 4], 1),
+        ]);
+        let err = serve(&mut rt, &dup).unwrap_err();
+        assert!(err.to_string().contains("duplicate tenant"), "{err}");
+
+        let shared = ServeConfig::new(vec![
+            TenantSpec::new("x", "S", &[4, 4], 1).resident(),
+            TenantSpec::new("y", "S", &[4, 4], 1),
+        ]);
+        let err = serve(&mut rt, &shared).unwrap_err();
+        assert!(err.to_string().contains("must be private"), "{err}");
+
+        let zero_w = ServeConfig::new(vec![
+            TenantSpec::new("x", "S", &[4, 4], 1).weight(0.0)
+        ]);
+        let err = serve(&mut rt, &zero_w).unwrap_err();
+        assert!(err.to_string().contains("weight"), "{err}");
+    }
+
+    #[test]
+    fn empty_fleet_is_an_error_and_zero_requests_are_fine() {
+        let mut rt = host_runtime();
+        assert!(serve(&mut rt, &ServeConfig::new(vec![])).is_err());
+        let cfg = ServeConfig::new(vec![TenantSpec::new(
+            "idle", "S", &[4, 4], 1,
+        )
+        .requests(0)]);
+        let out = serve(&mut rt, &cfg).unwrap();
+        assert_eq!(out.report.generated, 0);
+        assert_eq!(out.report.completed, 0);
+        assert_eq!(out.report.horizon_s, 0.0);
+    }
+}

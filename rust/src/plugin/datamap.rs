@@ -110,14 +110,21 @@ pub fn plan(graph: &TaskGraph, tasks: &[TaskId]) -> Result<BatchPlan> {
                 .windows(2)
                 .filter(|w| w[0].from_device() && w[1].to_device())
                 .count();
-            MovePlan {
+            let (Some(first), Some(last)) = (dirs.first(), dirs.last())
+            else {
+                bail!(
+                    "buffer '{buffer}' recorded no uses in the batch \
+                     walk — data-movement planner bug"
+                );
+            };
+            Ok(MovePlan {
                 buffer,
-                h2d: dirs.first().unwrap().to_device(),
-                d2h: dirs.last().unwrap().from_device(),
+                h2d: first.to_device(),
+                d2h: last.from_device(),
                 saved_roundtrips: saved,
-            }
+            })
         })
-        .collect();
+        .collect::<Result<Vec<_>>>()?;
     Ok(BatchPlan { moves, segments: segs })
 }
 

@@ -92,7 +92,7 @@ pub fn assign(
                 // either nothing free, or the only matches are behind the
                 // cursor (stream cannot flow backwards through the ring in
                 // one pass): close the pass
-                if passes.last().unwrap().is_empty() {
+                if passes.last().is_none_or(|p| p.is_empty()) {
                     return Err(no_ip(t, k));
                 }
                 passes.push(Vec::new());
@@ -106,7 +106,10 @@ pub fn assign(
         used[j] = true;
         cursor = j + 1;
         slots.push(flat[j].0);
-        passes.last_mut().unwrap().push(t);
+        match passes.last_mut() {
+            Some(pass) => pass.push(t),
+            None => passes.push(vec![t]),
+        }
         if cursor >= total {
             // ring exhausted: next task starts a new pass
             if t + 1 < task_kernels.len() {

@@ -135,7 +135,13 @@ impl Vc709Plugin {
     ) -> Result<Vec<(usize, Vec<usize>)>> {
         let groups = group_slots(slots);
         let nboards = self.cluster.nboards();
-        let last_board = groups.last().unwrap().0;
+        let last_board = groups
+            .last()
+            .map(|g| g.0)
+            .ok_or_else(|| anyhow::anyhow!(
+                "pass has no IP slots to program — mapper produced an \
+                 empty pass"
+            ))?;
 
         for b in &mut self.cluster.boards {
             b.conf.clear_log();
@@ -166,7 +172,10 @@ impl Vc709Plugin {
                 board.conf.program_route(ip_port(w[0]), ip_port(w[1]));
             }
             // exit route from the last IP of the group
-            let last_ip = *ips.last().unwrap();
+            let last_ip = *ips.last().ok_or_else(|| anyhow::anyhow!(
+                "board {b}: empty IP group in pass — mapper produced a \
+                 group with no slots"
+            ))?;
             let is_last_group = gi + 1 == groups.len();
             let exit = if !is_last_group {
                 PORT_NET

@@ -41,12 +41,22 @@ impl Server {
         start + ser + self.latency_s
     }
 
-    /// Utilization over a horizon (for the per-module report).
+    /// Utilization over a horizon: the **raw** busy/horizon ratio.  A
+    /// value above 1.0 means the server accumulated more busy time than
+    /// the horizon covers — oversubscription the serving layer must see,
+    /// so it is *not* clamped here (presentation layers cap the printed
+    /// percentage).  A negative horizon is a caller bug, not a value to
+    /// mask.
     pub fn utilization(&self, horizon_s: f64) -> f64 {
-        if horizon_s <= 0.0 {
+        assert!(
+            horizon_s >= 0.0,
+            "{}: negative utilization horizon {horizon_s}",
+            self.name
+        );
+        if horizon_s == 0.0 {
             0.0
         } else {
-            (self.busy_s / horizon_s).min(1.0)
+            self.busy_s / horizon_s
         }
     }
 
@@ -108,5 +118,21 @@ mod tests {
         assert_eq!(s.utilization(0.0), 0.0);
         s.reset();
         assert_eq!(s.busy_s, 0.0);
+    }
+
+    #[test]
+    fn utilization_reports_oversubscription_raw() {
+        // 2 us of busy time against a 1 us horizon: the old clamp hid
+        // this as 100%; the serving layer needs to see 200%
+        let mut s = Server::new("x", 8e9, 0.0);
+        s.offer(0.0, 1000.0);
+        s.offer(0.0, 1000.0);
+        assert!((s.utilization(1e-6) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative utilization horizon")]
+    fn negative_horizon_is_a_caller_bug() {
+        Server::new("x", 8e9, 0.0).utilization(-1.0);
     }
 }

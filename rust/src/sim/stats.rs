@@ -59,10 +59,16 @@ impl RunStats {
         self.roundtrips_elided += other.roundtrips_elided;
     }
 
+    /// Raw busy/virtual-time ratio for one module — deliberately not
+    /// clamped: a value above 1.0 is oversubscription (more busy time
+    /// than the run's makespan covers, i.e. the module was the
+    /// bottleneck across overlapping batches) and callers sizing a
+    /// serving fleet need to see it.  Only [`RunStats::summary_lines`]
+    /// caps the *printed* percentage.
     pub fn utilization(&self, module: &str) -> f64 {
         match self.modules.get(module) {
             Some(m) if self.virtual_time_s > 0.0 => {
-                (m.busy_s / self.virtual_time_s).min(1.0)
+                m.busy_s / self.virtual_time_s
             }
             _ => 0.0,
         }
@@ -80,12 +86,16 @@ impl RunStats {
             ));
         }
         for (name, m) in &self.modules {
+            // presentation-layer clamp: a percentage over 100 reads as a
+            // typo, so cap the printed figure and flag the oversubscribed
+            let util = self.utilization(name);
             out.push(format!(
-                "  {:<14} {:>12.0} bytes  busy {:>10.6} s  util {:>5.1}%",
+                "  {:<14} {:>12.0} bytes  busy {:>10.6} s  util {:>5.1}%{}",
                 name,
                 m.bytes,
                 m.busy_s,
-                100.0 * self.utilization(name)
+                100.0 * util.min(1.0),
+                if util > 1.0 { "  (oversubscribed)" } else { "" }
             ));
         }
         out
@@ -136,6 +146,21 @@ mod tests {
         assert_eq!(a.modules["pcie"].bytes, 10.0);
         // a single summary header, no duplicated module rows
         assert_eq!(a.summary_lines().len(), 1 + 2);
+    }
+
+    #[test]
+    fn utilization_is_raw_but_summary_is_clamped() {
+        let mut st = RunStats::default();
+        st.record("dma", 0.0, 3.0); // 3 s busy in a 2 s run
+        st.virtual_time_s = 2.0;
+        assert!((st.utilization("dma") - 1.5).abs() < 1e-12);
+        let line = st
+            .summary_lines()
+            .into_iter()
+            .find(|l| l.contains("dma"))
+            .unwrap();
+        assert!(line.contains("100.0%"), "{line}");
+        assert!(line.contains("oversubscribed"), "{line}");
     }
 
     #[test]

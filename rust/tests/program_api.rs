@@ -446,6 +446,60 @@ fn stale_plan_file_is_a_named_recompile_error() {
     std::fs::remove_file(&path).ok();
 }
 
+/// Replace the value of the first `"device"` key following `anchor`
+/// with `replacement` (raw JSON text), returning the corrupted text.
+fn corrupt_device_after(text: &str, anchor: &str, replacement: &str) -> String {
+    let at = text.find(anchor).expect("anchor in plan file");
+    let dev = text[at..].find("\"device\"").expect("device key") + at;
+    let colon = text[dev..].find(':').expect("colon") + dev + 1;
+    let end = text[colon..]
+        .find(|c: char| c == ',' || c == '}')
+        .expect("value end")
+        + colon;
+    format!("{}{}{}", &text[..colon], replacement, &text[end..])
+}
+
+#[test]
+fn corrupt_unbound_device_in_plan_file_is_a_named_refusal() {
+    // a compiled plan binds every task; an `"any"` device selector can
+    // only come from a hand-edited or corrupt file.  Loading one must
+    // be a named error carrying the task, never a process abort.
+    let path = temp_plan("corrupt-device.plan.json");
+    let input = Grid::random(&SHAPE, 31).unwrap();
+    let (mut rt_a, _) = make_runtime(&[(1, 2)]);
+    let mut env = DataEnv::new();
+    env.insert("V", input);
+    let deps = rt_a.dep_vars(6);
+    let program =
+        rt_a.capture(&env, |ctx| submit_service(ctx, &deps)).unwrap();
+    let exe = program.compile(&mut rt_a).unwrap();
+    exe.save(&rt_a, &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+
+    // unbind a stencil task's device
+    std::fs::write(&path, corrupt_device_after(&text, "do_step", "\"any\""))
+        .unwrap();
+    let (mut rt_b, _) = make_runtime(&[(1, 2)]);
+    let err = rt_b.load_executable(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("do_step"), "error must name the task: {msg}");
+    assert!(msg.contains("unbound"), "{msg}");
+    assert!(msg.contains("recompile"), "{msg}");
+
+    // any other string there is malformed, not a selector
+    std::fs::write(&path, corrupt_device_after(&text, "do_step", "\"weird\""))
+        .unwrap();
+    let err = rt_b.load_executable(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("\"any\""), "{msg}");
+
+    // the intact twin of the corrupted file still loads and serves
+    std::fs::write(&path, text).unwrap();
+    let loaded = rt_b.load_executable(&path).unwrap();
+    loaded.execute(&mut rt_b, &mut env).unwrap();
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn mismatched_slot_binding_is_a_named_error() {
     let input = Grid::random(&SHAPE, 17).unwrap();

@@ -1,0 +1,425 @@
+//! Property net for the multi-tenant serving front end (`omp::serve`,
+//! DESIGN.md §10): randomized tenant fleets served over identically
+//! constructed runtimes, asserting
+//!
+//! (a) **request conservation**: generated = admitted + rejected,
+//!     every admitted request completes (none is dropped mid-flight),
+//!     per-tenant accounting sums to the global totals, and every
+//!     dispatch went through the plan path exactly once;
+//! (b) **WFQ fairness**: over any prefix where all tenants are
+//!     backlogged, normalized service shares obey the SFQ bound
+//!     `|W_i/w_i − W_j/w_j| ≤ 2·c_max·(1/w_i + 1/w_j)` — a heavy
+//!     tenant cannot starve a light one;
+//! (c) **coalescing is invisible**: shape-keyed coalescing onto shared
+//!     `Executable`s versus per-request cold compiles produce the same
+//!     dispatch order, the same virtual latencies and **bit-identical**
+//!     grids — including when interleaved tenants share one service —
+//!     while only the coalesced run skips the planning work;
+//! (d) **graceful degradation**: a board dying mid-service recovers
+//!     inside the victim request, evicts the stale plans with the
+//!     failure named, and still completes every admitted request with
+//!     grids bit-identical to the failure-free run.
+
+use omp_fpga::config::ClusterConfig;
+use omp_fpga::omp::{
+    serve, DeviceId, FaultSchedule, OmpRuntime, ServeConfig, ServeOutcome,
+    TenantSpec,
+};
+use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
+use omp_fpga::stencil::Kernel;
+use omp_fpga::util::prop::{check, Rng};
+
+const KERNEL: Kernel = Kernel::Diffusion2d;
+/// The service buffer names random fleets draw from (the software
+/// fallback body below resolves whichever one the task mapped).
+const SERVICES: [&str; 4] = ["A", "B", "C", "D"];
+const SHAPES: [[usize; 2]; 3] = [[6, 5], [8, 6], [10, 7]];
+
+/// Runtime with the served base function registered (software fallback
+/// + vc709 variant) and one Golden cluster per `(boards, ips)` entry.
+fn make_runtime(clusters: &[(usize, usize)]) -> OmpRuntime {
+    let mut rt = OmpRuntime::new(2);
+    rt.register_software("do_step", |env| {
+        for name in SERVICES {
+            if let Ok(g) = env.take(name) {
+                env.put(name, KERNEL.apply(&g)?);
+                return Ok(());
+            }
+        }
+        anyhow::bail!("do_step: no known service buffer bound")
+    });
+    rt.declare_hw_variant("do_step", "vc709", "hw_step", KERNEL);
+    for &(boards, ips) in clusters {
+        let cfg = ClusterConfig::homogeneous(boards, ips, KERNEL);
+        rt.register_device(Box::new(
+            Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap(),
+        ));
+    }
+    rt
+}
+
+#[derive(Debug, Clone)]
+struct TenantCase {
+    service: usize,
+    shape: usize,
+    steps: usize,
+    weight: f64,
+    requests: usize,
+    mean_gap_s: f64,
+    queue_cap: usize,
+}
+
+#[derive(Debug, Clone)]
+struct FleetCase {
+    tenants: Vec<TenantCase>,
+    with_cluster: bool,
+    coalesce: bool,
+    seed: u64,
+}
+
+fn gen_fleet(rng: &mut Rng) -> FleetCase {
+    let n = rng.range(1, 5) as usize;
+    let tenants = (0..n)
+        .map(|_| TenantCase {
+            service: rng.range(0, SERVICES.len() as u64) as usize,
+            shape: rng.range(0, SHAPES.len() as u64) as usize,
+            steps: rng.range(1, 4) as usize,
+            weight: [1.0, 2.0, 4.0][rng.range(0, 3) as usize],
+            requests: rng.range(0, 13) as usize,
+            mean_gap_s: if rng.bool() {
+                0.0
+            } else {
+                1e-6 * (1 + rng.range(0, 50)) as f64
+            },
+            queue_cap: rng.range(1, 9) as usize,
+        })
+        .collect();
+    FleetCase {
+        tenants,
+        with_cluster: rng.bool(),
+        coalesce: rng.bool(),
+        seed: rng.next_u64(),
+    }
+}
+
+fn build_config(case: &FleetCase) -> ServeConfig {
+    let tenants = case
+        .tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            TenantSpec::new(
+                &format!("t{i}"),
+                SERVICES[t.service],
+                &SHAPES[t.shape],
+                t.steps,
+            )
+            .weight(t.weight)
+            .requests(t.requests)
+            .mean_gap_s(t.mean_gap_s)
+            .queue_cap(t.queue_cap)
+        })
+        .collect();
+    ServeConfig::new(tenants).seed(case.seed).coalesce(case.coalesce)
+}
+
+fn run_case(case: &FleetCase) -> ServeOutcome {
+    let clusters: &[(usize, usize)] =
+        if case.with_cluster { &[(1, 2)] } else { &[] };
+    let mut rt = make_runtime(clusters);
+    serve(&mut rt, &build_config(case)).unwrap()
+}
+
+#[test]
+fn prop_request_conservation() {
+    check("serving request conservation", 40, gen_fleet, |case| {
+        let out = run_case(case);
+        let r = &out.report;
+        let issued: usize = case.tenants.iter().map(|t| t.requests).sum();
+        if r.generated != issued {
+            return Err(format!(
+                "generated {} != issued {issued}",
+                r.generated
+            ));
+        }
+        if r.generated != r.admitted + r.rejected {
+            return Err(format!(
+                "{} generated != {} admitted + {} rejected",
+                r.generated, r.admitted, r.rejected
+            ));
+        }
+        if r.completed != r.admitted {
+            return Err(format!(
+                "admitted {} but completed {} — a request was dropped",
+                r.admitted, r.completed
+            ));
+        }
+        if r.latencies_s.len() != r.completed {
+            return Err("one latency per completed request".into());
+        }
+        if r.latencies_s.iter().any(|&l| l.is_nan() || l < 0.0) {
+            return Err(format!("negative latency: {:?}", r.latencies_s));
+        }
+        if r.plan_hits + r.plan_misses != r.completed {
+            return Err(format!(
+                "{} hits + {} misses != {} dispatches",
+                r.plan_hits, r.plan_misses, r.completed
+            ));
+        }
+        let (mut adm, mut rej, mut dones) = (0, 0, 0);
+        for t in r.per_tenant.values() {
+            if t.completed != t.admitted {
+                return Err("per-tenant drop".into());
+            }
+            adm += t.admitted;
+            rej += t.rejected;
+            dones += t.completed;
+        }
+        if (adm, rej, dones) != (r.admitted, r.rejected, r.completed) {
+            return Err("per-tenant sums diverge from globals".into());
+        }
+        if out.grids.len() != case.tenants.len() {
+            return Err("every tenant gets its working set back".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wfq_fairness_bound() {
+    // saturating tenants (everything arrives at t=0) with equal request
+    // costs: over every prefix where all queues are backlogged, the SFQ
+    // service-share bound must hold for each tenant pair.
+    for weights in [[1.0, 1.0, 1.0], [1.0, 2.0, 4.0], [4.0, 1.0, 1.0]] {
+        let requests = 12;
+        let tenants: Vec<TenantSpec> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| {
+                TenantSpec::new(&format!("t{i}"), "A", &[8, 6], 2)
+                    .weight(w)
+                    .requests(requests)
+            })
+            .collect();
+        let mut rt = make_runtime(&[(1, 2)]);
+        let out =
+            serve(&mut rt, &ServeConfig::new(tenants).seed(17)).unwrap();
+        let r = &out.report;
+        assert_eq!(r.completed, 3 * requests);
+
+        let c_max = r
+            .dispatches
+            .iter()
+            .map(|d| d.service_s)
+            .fold(0.0f64, f64::max);
+        assert!(c_max > 0.0, "cluster service must cost virtual time");
+        let mut served = vec![0.0f64; weights.len()];
+        let mut count = vec![0usize; weights.len()];
+        for d in &r.dispatches {
+            let ti: usize = d.tenant[1..].parse().unwrap();
+            served[ti] += d.service_s;
+            count[ti] += 1;
+            if count.iter().any(|&c| c >= requests) {
+                break; // someone drained: prefix no longer all-backlogged
+            }
+            for i in 0..weights.len() {
+                for j in (i + 1)..weights.len() {
+                    let gap = (served[i] / weights[i]
+                        - served[j] / weights[j])
+                        .abs();
+                    let bound = 2.0
+                        * c_max
+                        * (1.0 / weights[i] + 1.0 / weights[j]);
+                    assert!(
+                        gap <= bound + 1e-9,
+                        "weights {weights:?}: normalized share gap {gap} \
+                         exceeds SFQ bound {bound} after {:?} dispatches",
+                        count
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Run one fleet both coalesced and cold on identically constructed
+/// runtimes and assert the coalescing is observationally invisible.
+fn assert_hot_equals_cold(
+    clusters: &[(usize, usize)],
+    mk: impl Fn(bool) -> ServeConfig,
+) -> (ServeOutcome, ServeOutcome) {
+    let mut rt_hot = make_runtime(clusters);
+    let hot = serve(&mut rt_hot, &mk(true)).unwrap();
+    let mut rt_cold = make_runtime(clusters);
+    let cold = serve(&mut rt_cold, &mk(false)).unwrap();
+
+    assert_eq!(
+        hot.grids, cold.grids,
+        "coalesced grids must be bit-identical to per-request compiles"
+    );
+    assert_eq!(hot.report.latencies_s, cold.report.latencies_s);
+    let order = |o: &ServeOutcome| {
+        o.report
+            .dispatches
+            .iter()
+            .map(|d| d.tenant.clone())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(order(&hot), order(&cold), "same dispatch order");
+    assert_eq!(hot.report.completed, cold.report.completed);
+    // only the planning work differs
+    assert_eq!(cold.report.plan_hits, 0);
+    assert_eq!(cold.report.plan_misses, cold.report.completed);
+    (hot, cold)
+}
+
+#[test]
+fn prop_coalesced_serving_is_invisible() {
+    check(
+        "coalesced == cold serving",
+        12,
+        |rng| {
+            let mut case = gen_fleet(rng);
+            case.with_cluster = true;
+            for t in &mut case.tenants {
+                t.requests = 1 + t.requests.min(5);
+                t.queue_cap = 64; // saturate nothing: compare full fleets
+            }
+            case
+        },
+        |case| {
+            let (hot, _) = assert_hot_equals_cold(&[(1, 2)], |coalesce| {
+                build_config(case).coalesce(coalesce)
+            });
+            let distinct: std::collections::BTreeSet<_> = case
+                .tenants
+                .iter()
+                .map(|t| (t.service, t.shape, t.steps))
+                .collect();
+            let r = &hot.report;
+            if r.plan_misses > distinct.len() {
+                return Err(format!(
+                    "{} compiles for {} distinct shapes",
+                    r.plan_misses,
+                    distinct.len()
+                ));
+            }
+            if r.completed > distinct.len() && r.plan_hits == 0 {
+                return Err("repeated shapes never hit the cache".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn interleaved_tenants_sharing_a_service_hit_one_plan() {
+    // two tenants share one service and interleave via arrival gaps:
+    // the coalesced run compiles exactly once and replays for both,
+    // indistinguishably from per-request compiles
+    let mk = |coalesce: bool| {
+        ServeConfig::new(vec![
+            TenantSpec::new("alpha", "A", &[8, 6], 3)
+                .requests(6)
+                .mean_gap_s(2e-5),
+            TenantSpec::new("beta", "A", &[8, 6], 3)
+                .requests(6)
+                .weight(2.0)
+                .mean_gap_s(1e-5),
+        ])
+        .seed(23)
+        .coalesce(coalesce)
+    };
+    let (hot, cold) = assert_hot_equals_cold(&[(1, 2), (1, 1)], mk);
+    assert_eq!(hot.report.plan_misses, 1, "one shared compile");
+    assert_eq!(hot.report.plan_hits, hot.report.completed - 1);
+    assert_eq!(cold.report.plan_misses, cold.report.completed);
+    assert!(hot.report.stale_recompiles.is_empty());
+}
+
+#[test]
+fn board_death_mid_service_degrades_gracefully() {
+    let fleet = || {
+        vec![
+            TenantSpec::new("a", "A", &[6, 5], 3).requests(8),
+            TenantSpec::new("b", "B", &[8, 6], 2)
+                .weight(2.0)
+                .requests(8),
+        ]
+    };
+    let cfg = ServeConfig::new(fleet()).seed(5);
+
+    let mut rt_ok = make_runtime(&[(1, 4), (1, 1)]);
+    let base = serve(&mut rt_ok, &cfg).unwrap();
+    assert_eq!(base.report.completed, 16);
+    assert_eq!(base.report.recovered_requests, 0);
+
+    // same fleet, but the preferred (faster) board dies mid-run
+    let mut rt_hurt = make_runtime(&[(1, 4), (1, 1)]);
+    rt_hurt
+        .inject_faults(
+            FaultSchedule::new().fail_after_batches(DeviceId(1), 3),
+        )
+        .unwrap();
+    let hurt = serve(&mut rt_hurt, &cfg).unwrap();
+    let r = &hurt.report;
+
+    // conservation survives the failure: nothing dropped
+    assert_eq!(r.generated, 16);
+    assert_eq!(r.admitted + r.rejected, r.generated);
+    assert_eq!(r.completed, r.admitted);
+    // the victim request recovered in-flight...
+    assert!(
+        r.recovered_requests >= 1,
+        "expected an in-flight recovery: {r:?}"
+    );
+    // ...the stale shared plans were evicted with the failure named...
+    assert!(
+        r.stale_recompiles.iter().any(|s| s.contains("device_failed")),
+        "stale evictions must name the death: {:?}",
+        r.stale_recompiles
+    );
+    // ...and numerics never flinched
+    assert_eq!(
+        hurt.grids, base.grids,
+        "recovery must be bit-identical to the failure-free run"
+    );
+    assert!(rt_hurt.is_dead(DeviceId(1)));
+}
+
+#[test]
+fn resident_tenant_is_pinned_and_numerically_invisible() {
+    let fleet = |resident: bool| {
+        let hot = TenantSpec::new("hot", "A", &[8, 6], 3).requests(6);
+        vec![
+            if resident { hot.resident() } else { hot },
+            TenantSpec::new("cold", "B", &[6, 5], 2).requests(6),
+        ]
+    };
+    let mut rt_res = make_runtime(&[(1, 2), (1, 2)]);
+    let res = serve(
+        &mut rt_res,
+        &ServeConfig::new(fleet(true)).seed(41),
+    )
+    .unwrap();
+    let pinned = res.report.per_tenant["hot"].affine_device;
+    assert!(
+        matches!(pinned, Some(d) if d != 0),
+        "resident tenant must be pinned to an accelerator: {pinned:?}"
+    );
+    assert_eq!(res.report.per_tenant["cold"].affine_device, None);
+    assert_eq!(res.report.completed, 12);
+
+    // residency changes pricing/placement only — never numerics
+    let mut rt_str = make_runtime(&[(1, 2), (1, 2)]);
+    let streamed = serve(
+        &mut rt_str,
+        &ServeConfig::new(fleet(false)).seed(41),
+    )
+    .unwrap();
+    assert_eq!(res.grids, streamed.grids);
+    // and coalesced == cold holds with residency in play too
+    assert_hot_equals_cold(&[(1, 2), (1, 2)], |coalesce| {
+        ServeConfig::new(fleet(true)).seed(41).coalesce(coalesce)
+    });
+}
