@@ -1,6 +1,6 @@
 # Entry points the docs and test skip-messages refer to.
 
-.PHONY: artifacts test perf warm-start failover serving clean
+.PHONY: artifacts test perf warm-start failover serving sharded clean
 
 # AOT-lower the five Table-I stencils to HLO-text artifacts + manifest.
 # Written to ./artifacts (where the examples, run from the repo root,
@@ -37,6 +37,14 @@ failover:
 # board death with bit-identical grids (DESIGN.md §10).
 serving:
 	cargo run --release --example multi_tenant_serving
+
+# Cluster-wide grid sharding demo: a grid too large for any one board
+# runs row-sharded across 2/4/6 VC709s with per-sweep halo exchanges,
+# stays bit-identical to the host reference, shows makespan improving
+# monotonically with boards and ring-vs-crossbar fabric pricing, and
+# writes the curve to results/shard_scaling.json (DESIGN.md §11).
+sharded:
+	cargo run --release --example sharded_stencil
 
 clean:
 	rm -rf target artifacts rust/artifacts results BENCH_*.json

@@ -108,8 +108,8 @@ fn main() {
         let hops: Vec<Server> = (0..38)
             .map(|i| Server::new("h", if i % 7 == 0 { 10e9 } else { 51.2e9 }, 1e-7))
             .collect();
-        let mut p = Pipeline::new(hops);
-        p.stream(0.0, 8.39e6, 16384.0).makespan_s
+        let mut p = Pipeline::new(hops).unwrap();
+        p.stream(0.0, 8.39e6, 16384.0).unwrap().makespan_s
     });
     results.push((m, None));
 

@@ -1,0 +1,93 @@
+//! Sharding benchmark (DESIGN.md §11): one logical grid decomposed
+//! across 1/2/4/6 single-board VC709 devices on a ring fabric, full
+//! scatter → sweep+halo schedule → gather each iteration.
+//!
+//! Reports wall-clock cost of the sharded coordinator path and, in the
+//! `shard speedup-vs-boards` entry, the modelled-makespan speedup of
+//! each board count over the single-board plan — the scaling curve the
+//! README quotes.  Writes `BENCH_shard.json` at the repository root.
+
+use std::path::PathBuf;
+
+use omp_fpga::config::ClusterConfig;
+use omp_fpga::hw::{FabricSlot, Topology};
+use omp_fpga::omp::{DeviceId, OmpRuntime, ShardPlan, ShardSpec, ShardedGrid};
+use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
+use omp_fpga::stencil::{Grid, Kernel};
+use omp_fpga::util::bench;
+use omp_fpga::util::json::{num, obj, Value};
+
+const KERNEL: Kernel = Kernel::Diffusion2d;
+const SHAPE: [usize; 2] = [384, 128];
+const SWEEPS: usize = 4;
+const TOPOLOGY: Topology = Topology::Ring;
+
+/// Decompose, install, run, gather — the whole sharded path.
+fn run_sharded(nboards: usize, global: &Grid) -> (Grid, f64) {
+    let mut rt = OmpRuntime::new(2);
+    let mut cfg = ClusterConfig::homogeneous(1, 2, KERNEL);
+    cfg.topology = TOPOLOGY;
+    for d in 0..nboards {
+        let mut plugin = Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap();
+        plugin.fabric = FabricSlot::new(TOPOLOGY, nboards, d).unwrap();
+        rt.register_device(Box::new(plugin));
+    }
+    let spec = ShardSpec { halo: 1, capacity_cells: None };
+    let plan = ShardPlan::decompose("V", &SHAPE, nboards, &spec).unwrap();
+    let devices: Vec<DeviceId> = (1..=nboards).map(DeviceId).collect();
+    let sharded =
+        ShardedGrid::install(&mut rt, plan, KERNEL, devices, SWEEPS).unwrap();
+    let (out, report) = sharded.run(&mut rt, global).unwrap();
+    (out, report.virtual_time_s())
+}
+
+fn main() {
+    let global = Grid::random(&SHAPE, 7).unwrap();
+    let reference = KERNEL.iterate(&global, SWEEPS).unwrap();
+    let cell_sweeps = (global.cells() * SWEEPS) as f64;
+
+    let mut entries: Vec<(String, Value)> = Vec::new();
+    let mut makespans: Vec<(usize, f64)> = Vec::new();
+    for nboards in [1usize, 2, 4, 6] {
+        let (out, makespan) = run_sharded(nboards, &global);
+        assert_eq!(out, reference, "{nboards}-board shard diverged");
+        makespans.push((nboards, makespan));
+        let m = bench::time(
+            &format!(
+                "shard run ({nboards} boards, {}x{}, {SWEEPS} sweeps)",
+                SHAPE[0], SHAPE[1]
+            ),
+            1,
+            10,
+            || run_sharded(nboards, &global).1,
+        );
+        let thr = bench::per_second(&m, cell_sweeps);
+        println!("    -> {:.2} Mcell-sweeps/s coordinated", thr / 1e6);
+        entries.push((m.name.clone(), m.to_json(Some(thr))));
+    }
+
+    // modelled-makespan speedup over the single-board plan
+    let base = makespans[0].1;
+    let mut pairs = vec![("base_makespan_s", num(base))];
+    let keys: Vec<String> = makespans
+        .iter()
+        .map(|(n, _)| format!("speedup_{n}_boards"))
+        .collect();
+    for ((_, makespan), key) in makespans.iter().zip(&keys) {
+        pairs.push((key.as_str(), num(base / makespan)));
+    }
+    for (nboards, makespan) in &makespans[1..] {
+        println!(
+            "    {} boards: modelled makespan {makespan:.6} s \
+             ({:.2}x over 1 board)",
+            nboards,
+            base / makespan
+        );
+    }
+    entries.push(("shard speedup-vs-boards".into(), obj(pairs)));
+
+    let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_shard.json");
+    bench::write_report(&out_path, entries).unwrap();
+}

@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use super::timing::TimingConfig;
 use crate::hw::pcie::PcieGen;
+use crate::hw::topology::Topology;
 use crate::stencil::Kernel;
 use crate::util::json::{Reader, Writer};
 
@@ -38,6 +39,9 @@ pub struct ClusterConfig {
     pub bitstream_dir: String,
     pub fpgas: Vec<FpgaConfig>,
     pub timing: TimingConfig,
+    /// Inter-FPGA fabric shape; prices every board-to-board transfer
+    /// (stream crossings and halo exchanges).  Default: the paper's ring.
+    pub topology: Topology,
 }
 
 impl ClusterConfig {
@@ -55,6 +59,7 @@ impl ClusterConfig {
                 })
                 .collect(),
             timing: TimingConfig::default(),
+            topology: Topology::Ring,
         }
     }
 
@@ -66,6 +71,7 @@ impl ClusterConfig {
         let mut bitstream_dir = "artifacts".to_string();
         let mut fpgas: Option<Vec<FpgaConfig>> = None;
         let mut timing = TimingConfig::default();
+        let mut topology = Topology::Ring;
         r.expect_obj().context("conf.json parse error")?;
         while let Some(key) = r.next_key()? {
             match key.as_ref() {
@@ -86,10 +92,7 @@ impl ClusterConfig {
                     fpgas = Some(list);
                 }
                 "topology" => {
-                    let t = r.read_str()?;
-                    if t != "ring" {
-                        bail!("only 'ring' topology is supported, got '{t}'");
-                    }
+                    topology = Topology::from_name(r.read_str()?.as_ref())?;
                 }
                 "host" => {
                     r.expect_obj()?;
@@ -143,7 +146,7 @@ impl ClusterConfig {
         }
         r.next()?; // enforce no trailing garbage
         let fpgas = fpgas.context("conf.json: missing 'fpgas' array")?;
-        let cfg = ClusterConfig { bitstream_dir, fpgas, timing };
+        let cfg = ClusterConfig { bitstream_dir, fpgas, timing, topology };
         cfg.validate()?;
         Ok(cfg)
     }
@@ -231,7 +234,7 @@ impl ClusterConfig {
         w.f64(self.timing.vfifo_bps / 1e9)?;
         w.end_obj()?;
         w.key("topology")?;
-        w.str("ring")?;
+        w.str(self.topology.name())?;
         w.end_obj()
     }
 
@@ -308,6 +311,27 @@ mod tests {
         assert!(rel(c.timing.net_bps, d.timing.net_bps));
         assert_eq!(c.timing.chunk_cells, d.timing.chunk_cells);
         assert_eq!(c.timing.pcie, d.timing.pcie);
+        assert_eq!(c.topology, d.topology);
+    }
+
+    #[test]
+    fn topology_parses_and_roundtrips() {
+        let c = ClusterConfig::parse(
+            r#"{"fpgas": [{"ips": ["laplace2d"]}], "topology": "crossbar"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.topology, Topology::Crossbar);
+        let d = ClusterConfig::parse(&c.to_json()).unwrap();
+        assert_eq!(d.topology, Topology::Crossbar);
+        let t = ClusterConfig::parse(
+            r#"{"fpgas": [{"ips": ["laplace2d"]}], "topology": "torus"}"#,
+        )
+        .unwrap();
+        assert_eq!(t.topology, Topology::Torus);
+        // omitted -> the paper's ring
+        let r = ClusterConfig::parse(r#"{"fpgas": [{"ips": ["laplace2d"]}]}"#)
+            .unwrap();
+        assert_eq!(r.topology, Topology::Ring);
     }
 
     #[test]

@@ -170,6 +170,23 @@ impl Cluster {
         Ok(())
     }
 
+    /// Ship all frames queued on `from`'s east TX fiber directly to
+    /// `to`'s west RX — an arbitrary-pair link, used when the fabric is
+    /// not the physical ring (crossbar circuits, torus column links).
+    /// `propagate` is the `to == east_of(from)` special case.
+    pub fn propagate_pair(&mut self, from: usize, to: usize) -> Result<()> {
+        let n = self.boards.len();
+        if from >= n || to >= n {
+            bail!("propagate_pair: board out of range ({from} -> {to})");
+        }
+        if from == to {
+            bail!("propagate_pair: board {from} cannot link to itself");
+        }
+        let (a, b) = index_pair(&mut self.boards, from, to);
+        propagate_east(&mut a.net, &mut b.net);
+        Ok(())
+    }
+
     /// Deliver and unpack every frame waiting on `board`'s west RX.
     pub fn drain_rx(&mut self, board: usize) -> Result<Vec<f32>> {
         let local = self.boards[board].mac(CHANNEL_WEST as u8);

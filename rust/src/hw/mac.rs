@@ -47,12 +47,57 @@ impl std::fmt::Display for MacAddr {
 /// EtherType used for stencil stream traffic (private/experimental range).
 pub const ETHERTYPE_STENCIL: u16 = 0x88B5;
 
+/// CRC-32/ISO-HDLC (the Ethernet FCS polynomial): reflected 0xEDB88320,
+/// init all-ones, final xor all-ones.  Bitwise — frames are short and
+/// this keeps the crate dependency-free.
+pub fn crc32_ieee(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
 /// Header bytes: dst(6) + src(6) + ethertype(2) + stream-id(2) + seq(4).
 pub const HEADER_BYTES: usize = 20;
 /// FCS trailer bytes (CRC32 over header+payload).
 pub const FCS_BYTES: usize = 4;
 /// Maximum payload per frame — jumbo frames, as the TRD's XGEMAC supports.
 pub const MAX_PAYLOAD: usize = 8192;
+
+/// The MFH segmentation rule: how many cells each MAC frame of a
+/// `cells`-cell stream carries (`MAX_PAYLOAD / 4` per frame, always at
+/// least one frame — an empty stream still emits one empty frame).
+/// The functional framing path and the DES pricing path both derive
+/// their frames from this one function, so "halo bytes shipped" ≡
+/// "halo bytes priced" holds exactly.
+pub fn frame_cell_counts(cells: usize) -> Vec<usize> {
+    let per_frame = MAX_PAYLOAD / 4;
+    if cells == 0 {
+        return vec![0];
+    }
+    let mut out = Vec::with_capacity(cells.div_ceil(per_frame));
+    let mut left = cells;
+    while left > 0 {
+        let c = left.min(per_frame);
+        out.push(c);
+        left -= c;
+    }
+    out
+}
+
+/// Total wire bytes to carry `cells` f32 cells as MAC frames under
+/// [`frame_cell_counts`] segmentation.
+pub fn stream_wire_bytes(cells: usize) -> usize {
+    frame_cell_counts(cells)
+        .iter()
+        .map(|c| c * 4 + HEADER_BYTES + FCS_BYTES)
+        .sum()
+}
 
 /// A MAC frame carrying a segment of a cell stream.
 #[derive(Debug, Clone, PartialEq)]
@@ -84,7 +129,7 @@ impl MacFrame {
         out.extend_from_slice(&self.stream_id.to_be_bytes());
         out.extend_from_slice(&self.seq.to_be_bytes());
         out.extend_from_slice(&self.payload);
-        let crc = crc32fast::hash(&out);
+        let crc = crc32_ieee(&out);
         out.extend_from_slice(&crc.to_be_bytes());
         out
     }
@@ -98,7 +143,7 @@ impl MacFrame {
         let mut fcs = [0u8; 4];
         fcs.copy_from_slice(&bytes[bytes.len() - FCS_BYTES..]);
         let want = u32::from_be_bytes(fcs);
-        let got = crc32fast::hash(body);
+        let got = crc32_ieee(body);
         if got != want {
             bail!("FCS mismatch: computed {got:#010x}, frame has {want:#010x}");
         }
@@ -183,6 +228,30 @@ mod tests {
         assert_eq!(a.port(), 1);
         assert_eq!(a.to_string(), "02:46:4d:00:03:01");
         assert_eq!(MacAddr::from_u64(a.as_u64()), a);
+    }
+
+    #[test]
+    fn crc32_known_answers() {
+        // CRC-32/ISO-HDLC check value for "123456789" is 0xCBF43926.
+        assert_eq!(crc32_ieee(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32_ieee(b""), 0);
+    }
+
+    #[test]
+    fn stream_wire_bytes_matches_segmentation() {
+        let per_frame = MAX_PAYLOAD / 4;
+        // empty stream still costs one frame of overhead
+        assert_eq!(stream_wire_bytes(0), HEADER_BYTES + FCS_BYTES);
+        // one full frame
+        assert_eq!(
+            stream_wire_bytes(per_frame),
+            per_frame * 4 + HEADER_BYTES + FCS_BYTES
+        );
+        // one cell over a frame boundary adds a second frame's overhead
+        assert_eq!(
+            stream_wire_bytes(per_frame + 1),
+            (per_frame + 1) * 4 + 2 * (HEADER_BYTES + FCS_BYTES)
+        );
     }
 
     #[test]

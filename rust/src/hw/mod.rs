@@ -14,8 +14,10 @@ pub mod mfh;
 pub mod net;
 pub mod pcie;
 pub mod resources;
+pub mod topology;
 pub mod vfifo;
 
 pub use board::{Cluster, Fpga};
 pub use conf::ConfSpace;
 pub use mac::{MacAddr, MacFrame};
+pub use topology::{FabricSlot, Topology};

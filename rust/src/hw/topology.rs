@@ -1,0 +1,283 @@
+//! First-class inter-FPGA fabric model.
+//!
+//! The cluster's boards are joined by serial optical links; *which*
+//! links exist is the topology, and it prices every board-to-board
+//! transfer (intra-cluster stream crossings and sharded-grid halo
+//! exchanges alike).  Three fabrics are modelled, after Meyer et al.
+//! (arXiv 2202.13995, "Multi-FPGA designs and scaling of HPC
+//! challenge benchmarks"):
+//!
+//! * [`Topology::Ring`] — the paper's 6-board fiber ring.  Each board
+//!   has one eastbound transmit link; reaching board `d` from board
+//!   `s` costs `(d - s) mod n` store-and-forward hops, so a "reverse"
+//!   neighbor is the most expensive destination of all.
+//! * [`Topology::Torus`] — a 2-D wraparound grid (near-square
+//!   factorization, row-major board numbering); hop count is the
+//!   directed wraparound Manhattan distance, routed row-first.
+//! * [`Topology::Crossbar`] — a circuit-switched crossbar: every
+//!   ordered pair is one hop, so halo-neighbor distance stops
+//!   mattering and placement prices reflect pure bandwidth.
+//!
+//! `hops` is the number of transmitting boards on the path (0 for a
+//! board talking to itself); `path` lists those transmitting boards in
+//! order, which the functional plane walks frame-by-frame and the DES
+//! plane prices as one store-and-forward server occupancy per hop.
+//! Both planes consult the same numbers, which is how the
+//! estimate == executed-duration invariant extends to halo traffic.
+
+use anyhow::{bail, Result};
+
+/// Inter-FPGA fabric shape.  Hop counts from here feed both
+/// `estimate_batch_s` and the DES timing plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Unidirectional (eastbound) ring — the paper's deployment.
+    Ring,
+    /// 2-D wraparound torus on a near-square factorization.
+    Torus,
+    /// Circuit-switched crossbar: any pair, one hop.
+    Crossbar,
+}
+
+impl Topology {
+    /// Canonical lowercase name, as written to cluster config files.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Ring => "ring",
+            Topology::Torus => "torus",
+            Topology::Crossbar => "crossbar",
+        }
+    }
+
+    /// Parse a config-file name.  Anything else (e.g. "mesh") is a
+    /// named error, preserving the historical strictness of the
+    /// cluster-config parser.
+    pub fn from_name(name: &str) -> Result<Topology> {
+        match name {
+            "ring" => Ok(Topology::Ring),
+            "torus" => Ok(Topology::Torus),
+            "crossbar" => Ok(Topology::Crossbar),
+            other => bail!(
+                "unsupported topology '{other}' (expected ring, torus \
+                 or crossbar)"
+            ),
+        }
+    }
+
+    /// Near-square `rows x cols` factorization of `n` boards for the
+    /// torus (rows <= cols, rows * cols == n; degenerates to `1 x n`
+    /// for primes, which makes a 1-row torus a ring).
+    pub fn torus_dims(n: usize) -> (usize, usize) {
+        let mut rows = 1;
+        let mut r = 1;
+        while r * r <= n {
+            if n % r == 0 {
+                rows = r;
+            }
+            r += 1;
+        }
+        (rows, n / rows)
+    }
+
+    /// Number of store-and-forward link hops (transmitting boards) on
+    /// the routed path from `from` to `to` in an `n`-board fabric.
+    /// Zero iff `from == to`.
+    pub fn hops(&self, n: usize, from: usize, to: usize) -> usize {
+        self.path(n, from, to).len()
+    }
+
+    /// The transmitting boards on the routed path `from -> to`, in
+    /// transmission order.  `path(..).len() == hops(..)`; the last
+    /// entry (if any) is the board whose link delivers into `to`.
+    pub fn path(&self, n: usize, from: usize, to: usize) -> Vec<usize> {
+        assert!(n > 0, "topology over zero boards");
+        assert!(from < n && to < n, "board out of range");
+        if from == to {
+            return Vec::new();
+        }
+        match self {
+            Topology::Ring => {
+                let mut cur = from;
+                let mut out = Vec::new();
+                while cur != to {
+                    out.push(cur);
+                    cur = (cur + 1) % n;
+                }
+                out
+            }
+            Topology::Crossbar => vec![from],
+            Topology::Torus => {
+                let (rows, cols) = Topology::torus_dims(n);
+                let (mut r, mut c) = (from / cols, from % cols);
+                let (tr, tc) = (to / cols, to % cols);
+                let mut out = Vec::new();
+                // row-first dimension-ordered routing, each dimension
+                // walked in its positive (wraparound) direction
+                while c != tc {
+                    out.push(r * cols + c);
+                    c = (c + 1) % cols;
+                }
+                while r != tr {
+                    out.push(r * cols + c);
+                    r = (r + 1) % rows;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// A device's slot in the sharding fabric: which fabric, how many
+/// boards participate, and which index this device occupies.  A
+/// single-device deployment is the identity slot (every transfer is
+/// local, zero hops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FabricSlot {
+    pub topology: Topology,
+    pub nboards: usize,
+    pub index: usize,
+}
+
+impl FabricSlot {
+    pub fn solo() -> FabricSlot {
+        FabricSlot {
+            topology: Topology::Ring,
+            nboards: 1,
+            index: 0,
+        }
+    }
+
+    pub fn new(topology: Topology, nboards: usize, index: usize) -> Result<FabricSlot> {
+        if nboards == 0 {
+            bail!("fabric needs at least one board");
+        }
+        if index >= nboards {
+            bail!("fabric slot {index} out of range for {nboards} boards");
+        }
+        Ok(FabricSlot {
+            topology,
+            nboards,
+            index,
+        })
+    }
+
+    /// Hops from `src` slot into this slot.
+    pub fn hops_from(&self, src: usize) -> usize {
+        self.topology.hops(self.nboards, src, self.index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn names_roundtrip() {
+        for t in [Topology::Ring, Topology::Torus, Topology::Crossbar] {
+            assert_eq!(Topology::from_name(t.name()).unwrap(), t);
+        }
+        assert!(Topology::from_name("mesh").is_err());
+        assert!(Topology::from_name("").is_err());
+    }
+
+    #[test]
+    fn ring_is_directed_east_distance() {
+        let t = Topology::Ring;
+        assert_eq!(t.hops(6, 0, 1), 1);
+        assert_eq!(t.hops(6, 1, 0), 5); // reverse neighbor: all the way round
+        assert_eq!(t.hops(6, 2, 2), 0);
+        assert_eq!(t.path(6, 4, 1), vec![4, 5, 0]);
+    }
+
+    #[test]
+    fn crossbar_is_always_one_hop() {
+        let t = Topology::Crossbar;
+        for n in 1..8 {
+            for a in 0..n {
+                for b in 0..n {
+                    let want = usize::from(a != b);
+                    assert_eq!(t.hops(n, a, b), want);
+                }
+            }
+        }
+        assert_eq!(t.path(6, 3, 0), vec![3]);
+    }
+
+    #[test]
+    fn torus_dims_near_square() {
+        assert_eq!(Topology::torus_dims(1), (1, 1));
+        assert_eq!(Topology::torus_dims(4), (2, 2));
+        assert_eq!(Topology::torus_dims(6), (2, 3));
+        assert_eq!(Topology::torus_dims(7), (1, 7)); // prime -> ring-like
+        assert_eq!(Topology::torus_dims(12), (3, 4));
+    }
+
+    #[test]
+    fn torus_walks_row_then_column() {
+        // 6 boards -> 2x3: board = row*3 + col
+        let t = Topology::Torus;
+        assert_eq!(t.path(6, 0, 2), vec![0, 1]); // along the row
+        assert_eq!(t.path(6, 0, 3), vec![0]); // down the column
+        assert_eq!(t.path(6, 0, 5), vec![0, 1, 2]); // row first, then col
+        assert_eq!(t.hops(6, 5, 0), 2); // wraparound beats the long way
+    }
+
+    #[test]
+    fn fabric_slot_validation() {
+        assert!(FabricSlot::new(Topology::Ring, 0, 0).is_err());
+        assert!(FabricSlot::new(Topology::Ring, 2, 2).is_err());
+        let s = FabricSlot::new(Topology::Crossbar, 4, 3).unwrap();
+        assert_eq!(s.hops_from(0), 1);
+        assert_eq!(s.hops_from(3), 0);
+        assert_eq!(FabricSlot::solo().hops_from(0), 0);
+    }
+
+    #[test]
+    fn prop_path_len_is_hops_and_ends_adjacent_to_dst() {
+        check(
+            "topology-path-consistency",
+            200,
+            |rng| {
+                let t = match rng.range(0, 3) {
+                    0 => Topology::Ring,
+                    1 => Topology::Torus,
+                    _ => Topology::Crossbar,
+                };
+                let n = rng.range(1, 9);
+                let from = rng.range(0, n);
+                let to = rng.range(0, n);
+                (t, n, from, to)
+            },
+            |&(t, n, from, to)| {
+                let path = t.path(n, from, to);
+                if path.len() != t.hops(n, from, to) {
+                    return Err("path length != hops".into());
+                }
+                if from == to {
+                    if !path.is_empty() {
+                        return Err("self path not empty".into());
+                    }
+                    return Ok(());
+                }
+                if path.first() != Some(&from) {
+                    return Err("path must start at src".into());
+                }
+                if path.len() > n {
+                    return Err("path longer than board count".into());
+                }
+                // every transmitter is a valid board, no repeats
+                let mut seen = std::collections::BTreeSet::new();
+                for &b in &path {
+                    if b >= n {
+                        return Err("transmitter out of range".into());
+                    }
+                    if !seen.insert(b) {
+                        return Err("path revisits a board".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -104,6 +104,89 @@ impl DataEnv {
     }
 }
 
+/// A halo-exchange body: copy `nrows` whole rows (axis-0 slabs) from a
+/// source tile buffer into a destination tile buffer, shipping them as
+/// MAC frames over the inter-FPGA fabric when the tiles live on
+/// different boards (see `omp::shard` and DESIGN.md §11).
+///
+/// The task *maps* only `dst` (`map(tofrom: dst)`); `src` is read
+/// out-of-band from the shared environment.  That is deliberate: the
+/// transfer is a board-to-board link shipment, not a host round-trip,
+/// so the present-table must not see a host read of `src` (which would
+/// bill a forced writeback the real fabric never performs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HaloOp {
+    /// source tile buffer name (read)
+    pub src: String,
+    /// destination tile buffer name (written — the task's sole map)
+    pub dst: String,
+    /// first row copied out of `src`
+    pub src_row0: usize,
+    /// first row written in `dst`
+    pub dst_row0: usize,
+    /// rows copied (the halo width)
+    pub nrows: usize,
+    /// f32 cells per row — tiles of one grid share this by construction
+    pub row_cells: usize,
+    /// fabric slot holding `src` (the tile's home board index)
+    pub src_slot: usize,
+    /// fabric slot holding `dst`
+    pub dst_slot: usize,
+}
+
+impl HaloOp {
+    /// Cells moved per exchange.
+    pub fn cells(&self) -> usize {
+        self.nrows * self.row_cells
+    }
+
+    fn check_tile(&self, role: &str, g: &Grid, row0: usize) -> Result<()> {
+        let shape = g.shape();
+        let rows = shape[0];
+        let row_cells: usize = shape[1..].iter().product();
+        if row_cells != self.row_cells {
+            bail!(
+                "halo {role} '{}': tile rows hold {row_cells} cells but \
+                 the exchange was built for {}",
+                if role == "src" { &self.src } else { &self.dst },
+                self.row_cells
+            );
+        }
+        if row0 + self.nrows > rows {
+            bail!(
+                "halo {role} '{}': rows {row0}..{} out of range (tile has \
+                 {rows} rows)",
+                if role == "src" { &self.src } else { &self.dst },
+                row0 + self.nrows
+            );
+        }
+        Ok(())
+    }
+
+    /// Copy the exchanged rows out of the source tile.
+    pub fn read_src(&self, g: &Grid) -> Result<Vec<f32>> {
+        self.check_tile("src", g, self.src_row0)?;
+        let a = self.src_row0 * self.row_cells;
+        Ok(g.data()[a..a + self.cells()].to_vec())
+    }
+
+    /// Write the exchanged rows into the destination tile.
+    pub fn write_dst(&self, g: &mut Grid, cells: &[f32]) -> Result<()> {
+        self.check_tile("dst", g, self.dst_row0)?;
+        if cells.len() != self.cells() {
+            bail!(
+                "halo into '{}': got {} cells, expected {}",
+                self.dst,
+                cells.len(),
+                self.cells()
+            );
+        }
+        let a = self.dst_row0 * self.row_cells;
+        g.data_mut()[a..a + self.cells()].copy_from_slice(cells);
+        Ok(())
+    }
+}
+
 /// What a task body is, once variant-resolved.
 #[derive(Clone)]
 pub enum TaskFn {
@@ -113,6 +196,10 @@ pub enum TaskFn {
     /// A hardware IP kernel (the `declare variant` target) — executed by
     /// a device plugin.
     HwKernel(Kernel),
+    /// A halo exchange between two tiles of a sharded grid — executed
+    /// natively by any device (the host copies rows; the VC709 plugin
+    /// frames them over the fabric and prices the hops).
+    Halo(HaloOp),
 }
 
 impl std::fmt::Debug for TaskFn {
@@ -120,6 +207,15 @@ impl std::fmt::Debug for TaskFn {
         match self {
             TaskFn::Software(_) => write!(f, "Software(..)"),
             TaskFn::HwKernel(k) => write!(f, "HwKernel({})", k.name()),
+            TaskFn::Halo(op) => write!(
+                f,
+                "Halo({}[{}..] -> {}[{}..] x{} rows)",
+                op.src,
+                op.src_row0,
+                op.dst,
+                op.dst_row0,
+                op.nrows
+            ),
         }
     }
 }
@@ -147,6 +243,17 @@ impl FnRegistry {
             TaskFn::Software(_) => {
                 bail!("'{name}' is a software function, not a hardware IP")
             }
+            TaskFn::Halo(_) => {
+                bail!("'{name}' is a halo exchange, not a hardware IP")
+            }
+        }
+    }
+
+    /// The halo op registered as `name`, if it is one.
+    pub fn halo_of(&self, name: &str) -> Option<&HaloOp> {
+        match self.fns.get(name) {
+            Some(TaskFn::Halo(op)) => Some(op),
+            _ => None,
         }
     }
 }

@@ -172,8 +172,31 @@ fn worker(
         drop(st);
 
         // -- run the body outside the lock -------------------------------
-        let body = match fns.get(&task.fn_name) {
-            Ok(TaskFn::Software(f)) => f.clone(),
+        let run_result = match fns.get(&task.fn_name) {
+            Ok(TaskFn::Software(f)) => {
+                let f = f.clone();
+                f(&mut private)
+            }
+            Ok(TaskFn::Halo(op)) => {
+                // The halo maps only its destination tile; the source
+                // rows are read out-of-band from the shared environment
+                // under the lock (flow dependences guarantee no writer
+                // owns the source while the exchange runs), then written
+                // into the privately-held destination.  This is the
+                // bit-identical host fallback for an exchange the VC709
+                // plugin would ship over the fabric.
+                let op = op.clone();
+                let cells = {
+                    let st = lock_state(state);
+                    st.env.get(&op.src).and_then(|g| op.read_src(g))
+                };
+                cells.and_then(|cells| {
+                    let mut dst = private.take(&op.dst)?;
+                    op.write_dst(&mut dst, &cells)?;
+                    private.put(&op.dst, dst);
+                    Ok(())
+                })
+            }
             Ok(TaskFn::HwKernel(k)) => {
                 let mut st = lock_state(state);
                 st.error = Some(format!(
@@ -194,7 +217,6 @@ fn worker(
                 return;
             }
         };
-        let run_result = body(&mut private);
 
         // -- return buffers, retire, release successors ------------------
         let mut st = lock_state(state);
@@ -343,6 +365,50 @@ mod tests {
         let mut host = HostDevice::new(2);
         let err = host.run_batch(&g, &[id], &mut env, &fns, &BatchCtx::at(0.0)).unwrap_err();
         assert!(err.to_string().contains("kaboom"));
+    }
+
+    #[test]
+    fn halo_task_copies_rows_between_tiles() {
+        use crate::omp::device::HaloOp;
+        let mut fns = FnRegistry::default();
+        let op = HaloOp {
+            src: "A".into(),
+            dst: "B".into(),
+            src_row0: 3,
+            dst_row0: 0,
+            nrows: 1,
+            row_cells: 3,
+            src_slot: 0,
+            dst_slot: 1,
+        };
+        fns.register("halo", TaskFn::Halo(op));
+        let mut g = TaskGraph::new();
+        let id = g.add(Task {
+            id: TaskId(0),
+            base_name: "halo".into(),
+            fn_name: "halo".into(),
+            device: HOST_DEVICE.into(),
+            // only the destination is mapped; the source is read
+            // out-of-band from the shared environment
+            maps: vec![(MapDir::ToFrom, "B".into())],
+            deps_in: vec![],
+            deps_out: vec![],
+            nowait: true,
+        });
+        let mut env = DataEnv::new();
+        let mut a = Grid::zeros(&[4, 3]).unwrap();
+        for (i, v) in a.data_mut().iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        env.insert("A", a);
+        env.insert("B", Grid::zeros(&[3, 3]).unwrap());
+        let mut host = HostDevice::new(2);
+        host.run_batch(&g, &[id], &mut env, &fns, &BatchCtx::at(0.0)).unwrap();
+        // src row 3 (cells 9, 10, 11) landed in dst row 0
+        assert_eq!(&env.get("B").unwrap().data()[..3], &[9.0, 10.0, 11.0]);
+        assert!(env.get("B").unwrap().data()[3..].iter().all(|&v| v == 0.0));
+        // src untouched
+        assert_eq!(env.get("A").unwrap().data()[9], 9.0);
     }
 
     #[test]

@@ -42,6 +42,13 @@
 //!   [`Executable`]s, bounded-queue admission control, weighted fair
 //!   queueing across tenants, and residency-affine placement of hot
 //!   working sets.
+//! * [`shard`] — cluster-wide grid sharding (DESIGN.md §11): 1-D row
+//!   decomposition of one logical grid into per-device tiles with
+//!   configurable halo width, per-sweep halo-exchange tasks emitted
+//!   into the ordinary task graph, and topology-priced inter-FPGA
+//!   transfers ([`crate::hw::topology`]), so a grid larger than any one
+//!   board runs across the cluster bit-identically to the host
+//!   reference.
 
 pub mod dataenv;
 pub mod device;
@@ -52,6 +59,7 @@ pub mod program;
 pub mod runtime;
 pub mod sched;
 pub mod serve;
+pub mod shard;
 pub mod task;
 pub mod variant;
 
@@ -66,13 +74,14 @@ pub use program::{
 };
 pub use device::{
     DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel, FnRegistry,
-    TaskFn, HOST_DEVICE,
+    HaloOp, TaskFn, HOST_DEVICE,
 };
 pub use graph::TaskGraph;
 pub use runtime::{
     OmpReport, OmpRuntime, SingleCtx, TargetBuilder, WritebackEvent,
 };
 pub use sched::{BatchDag, Dispatcher, Run};
+pub use shard::{ShardPlan, ShardSpec, ShardedGrid};
 pub use serve::{
     serve, Dispatch, ServeConfig, ServeOutcome, ServeReport, TenantSpec,
     TenantStats,

@@ -337,6 +337,17 @@ impl OmpRuntime {
         self.fns.register(name, TaskFn::Software(Arc::new(f)));
     }
 
+    /// Register a halo-exchange operation under `name` (cluster-wide
+    /// sharding, DESIGN.md §11).  A task submitted with this base name
+    /// copies the op's source rows into the destination tile, carried —
+    /// and priced — across the inter-FPGA fabric by the executing
+    /// plugin.  Invalidates compiled plans like any function-table
+    /// change.
+    pub fn register_halo(&mut self, name: &str, op: crate::omp::HaloOp) {
+        self.bump_epoch(format!("register_halo('{name}')"));
+        self.fns.register(name, TaskFn::Halo(op));
+    }
+
     /// `#pragma omp declare variant (base) match(device=arch(<arch>))`
     /// binding `variant` to hardware IP `kernel`.  Invalidates compiled
     /// plans: variant resolution participates in placement.

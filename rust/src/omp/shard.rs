@@ -1,0 +1,595 @@
+//! Cluster-wide grid sharding (DESIGN.md §11): run one logical grid
+//! that fits on **no single board** across several FPGAs.
+//!
+//! Three pieces, deliberately thin:
+//!
+//! * [`ShardPlan`] — 1-D domain decomposition along axis 0: each of `n`
+//!   devices owns a contiguous slab of rows, padded with `halo` ghost
+//!   rows per shared boundary.  The plan is pure geometry: it cuts a
+//!   grid into tile buffers ([`ShardPlan::scatter`]), stitches owned
+//!   rows back ([`ShardPlan::gather`]), and enumerates the directed
+//!   halo exchanges a sweep needs ([`ShardPlan::halo_ops`]).
+//! * [`ShardedGrid`] — the runtime binding: registers one software
+//!   sweep function (hardware variant declared for vc709) plus one
+//!   [`HaloOp`] per directed boundary, then emits the whole sweep/
+//!   exchange schedule as **ordinary tasks** with `depend(in/out)`
+//!   clauses.  Nothing downstream knows sharding exists: condensation,
+//!   `device(any)` placement, the plan cache, fault recovery and the
+//!   serving front end all see plain dependent tasks.
+//! * the fabric model ([`crate::hw::topology`]) — the executing plugin
+//!   prices each exchange by the configured topology's hop count, so a
+//!   ring and a crossbar produce different makespans for the same
+//!   schedule, and `estimate_batch_s == run_batch` extends to halos.
+//!
+//! Dependence wiring (the part worth writing down): with `K` sweeps
+//! over `n` tiles, sweep task `S(k,d)` writes variable `sw[k][d]`;
+//! exchange `H(k, d->e)` (emitted after every sweep but the last)
+//! reads `sw[k][d]` (flow: the rows it ships) **and** `sw[k][e]`
+//! (anti: it overwrites tile `e`'s ghost rows, which `S(k,e)` read),
+//! and writes `h[k][d->e]`.  `S(k+1,e)` reads `sw[k][e]` plus every
+//! `h[k][..]` touching `e` — including `e`'s *outgoing* edges, which
+//! carry the write-after-read ordering on `e`'s boundary rows.  Every
+//! variable has exactly one writer, so the graph is pure flow
+//! dependences and the scheduler needs no special cases.
+//!
+//! Bit-identity: tiles exchange after **every** sweep, ghost rows are
+//! refreshed from the neighbour's freshly-computed owned rows before
+//! anyone reads them again, and the stencils are radius-1 with
+//! copy-boundary semantics — so each owned row always sees exactly the
+//! values the unsharded computation would, and the gathered result is
+//! bit-identical to the single-grid host reference (property-tested in
+//! `tests/props_shard.rs`).
+
+use anyhow::{bail, Result};
+
+use super::device::{DataEnv, DeviceId, HaloOp};
+use super::dataenv::{EnterMap, ExitMap};
+use super::runtime::{OmpReport, OmpRuntime, SingleCtx};
+use super::task::{DepVar, MapDir, TaskId};
+use crate::stencil::{Grid, Kernel};
+
+/// Architecture string the sweep's hardware variant is declared for.
+const SHARD_HW_ARCH: &str = "vc709";
+
+/// Decomposition parameters.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Ghost-row width per shared boundary.  Must be >= 1: the stencils
+    /// are radius-1, so one refreshed ghost row per sweep is the
+    /// minimum that keeps owned rows exact.  Wider halos are legal
+    /// (they ship more bytes per exchange — useful for studying the
+    /// communication/computation trade-off) and must not change the
+    /// numerics (property-tested).
+    pub halo: usize,
+    /// Per-board tile capacity in cells, if the deployment is
+    /// capacity-limited.  [`ShardPlan::decompose`] rejects any tile
+    /// (owned rows + ghosts) that would not fit — the named error the
+    /// "grid larger than one board" demos pivot on.
+    pub capacity_cells: Option<usize>,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        ShardSpec {
+            halo: 1,
+            capacity_cells: None,
+        }
+    }
+}
+
+/// One device's slab of the logical grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tile {
+    /// Buffer name in the data environment (`"{grid}.shard{d}"`).
+    pub name: String,
+    /// First owned global row.
+    pub row0: usize,
+    /// Owned rows (gathered back; never ghost).
+    pub owned: usize,
+    /// Ghost rows below `row0` (0 for the first tile).
+    pub lo: usize,
+    /// Ghost rows above the owned slab (0 for the last tile).
+    pub hi: usize,
+}
+
+impl Tile {
+    /// Total rows in the tile buffer.
+    pub fn nrows(&self) -> usize {
+        self.lo + self.owned + self.hi
+    }
+}
+
+/// A 1-D row decomposition of one logical grid — pure geometry.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Logical grid name the tiles derive from.
+    pub buffer: String,
+    /// Logical grid shape.
+    pub shape: Vec<usize>,
+    /// Ghost width per shared boundary.
+    pub halo: usize,
+    pub tiles: Vec<Tile>,
+    /// Cells per row (product of the trailing dimensions).
+    row_cells: usize,
+}
+
+impl ShardPlan {
+    /// Split `shape` into `ndev` row slabs, as even as possible (the
+    /// first `rows % ndev` tiles get one extra row).  Errors are named:
+    /// a grid too small to give every tile `max(2, halo)` owned rows,
+    /// or a tile that exceeds `spec.capacity_cells`, never a panic.
+    pub fn decompose(
+        buffer: &str,
+        shape: &[usize],
+        ndev: usize,
+        spec: &ShardSpec,
+    ) -> Result<ShardPlan> {
+        if shape.is_empty() {
+            bail!("shard '{buffer}': cannot decompose a 0-d grid");
+        }
+        if ndev == 0 {
+            bail!("shard '{buffer}': need at least one device");
+        }
+        if spec.halo == 0 {
+            bail!(
+                "shard '{buffer}': halo width 0 cannot feed a radius-1 \
+                 stencil; use halo >= 1"
+            );
+        }
+        let rows = shape[0];
+        let row_cells = shape[1..].iter().product::<usize>().max(1);
+        // each tile must own at least `halo` rows (an exchange copies
+        // owned rows only) and at least 2 (so no owned row is both a
+        // copy-boundary of its own tile and somebody's ghost source)
+        let min_owned = spec.halo.max(2);
+        if rows < ndev * min_owned {
+            bail!(
+                "shard '{buffer}': {rows} rows cannot give {ndev} tiles \
+                 >= {min_owned} owned rows each (shrink the device count \
+                 or the halo)"
+            );
+        }
+        let base = rows / ndev;
+        let rem = rows % ndev;
+        let mut tiles = Vec::with_capacity(ndev);
+        let mut row0 = 0usize;
+        for d in 0..ndev {
+            let owned = base + usize::from(d < rem);
+            let tile = Tile {
+                name: format!("{buffer}.shard{d}"),
+                row0,
+                owned,
+                lo: if d > 0 { spec.halo } else { 0 },
+                hi: if d + 1 < ndev { spec.halo } else { 0 },
+            };
+            if let Some(cap) = spec.capacity_cells {
+                let need = tile.nrows() * row_cells;
+                if need > cap {
+                    bail!(
+                        "shard '{buffer}': tile {d} needs {need} cells \
+                         (owned {} + ghosts) but a board holds {cap}; \
+                         add boards",
+                        tile.owned
+                    );
+                }
+            }
+            row0 += owned;
+            tiles.push(tile);
+        }
+        Ok(ShardPlan {
+            buffer: buffer.to_string(),
+            shape: shape.to_vec(),
+            halo: spec.halo,
+            tiles,
+            row_cells,
+        })
+    }
+
+    pub fn ntiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn row_cells(&self) -> usize {
+        self.row_cells
+    }
+
+    /// Shape of tile `d`'s buffer (ghost rows included).
+    pub fn tile_shape(&self, d: usize) -> Vec<usize> {
+        let mut s = self.shape.clone();
+        s[0] = self.tiles[d].nrows();
+        s
+    }
+
+    /// Largest tile buffer, in cells — what a board must hold.
+    pub fn max_tile_cells(&self) -> usize {
+        self.tiles
+            .iter()
+            .map(|t| t.nrows() * self.row_cells)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Cut `global` into per-tile buffers (owned slab plus ghost rows,
+    /// seeded from the neighbours' initial values) and insert them into
+    /// `env` under the tile names.
+    pub fn scatter(&self, global: &Grid, env: &mut DataEnv) -> Result<()> {
+        if global.shape() != self.shape.as_slice() {
+            bail!(
+                "shard '{}': grid shape {:?} does not match the plan's {:?}",
+                self.buffer,
+                global.shape(),
+                self.shape
+            );
+        }
+        let data = global.data();
+        for (d, t) in self.tiles.iter().enumerate() {
+            let start = (t.row0 - t.lo) * self.row_cells;
+            let end = (t.row0 + t.owned + t.hi) * self.row_cells;
+            let g = Grid::from_vec(&self.tile_shape(d), data[start..end].to_vec())?;
+            env.insert(&t.name, g);
+        }
+        Ok(())
+    }
+
+    /// Stitch every tile's **owned** rows back into one grid (ghost
+    /// rows are scratch and never leave the tiles).
+    pub fn gather(&self, env: &DataEnv) -> Result<Grid> {
+        let cells = self.shape.iter().product::<usize>();
+        let mut out = vec![0.0f32; cells];
+        for (d, t) in self.tiles.iter().enumerate() {
+            let g = env.get(&t.name)?;
+            if g.shape() != self.tile_shape(d).as_slice() {
+                bail!(
+                    "shard '{}': tile '{}' came back shaped {:?}, \
+                     expected {:?}",
+                    self.buffer,
+                    t.name,
+                    g.shape(),
+                    self.tile_shape(d)
+                );
+            }
+            let src0 = t.lo * self.row_cells;
+            let len = t.owned * self.row_cells;
+            out[t.row0 * self.row_cells..t.row0 * self.row_cells + len]
+                .copy_from_slice(&g.data()[src0..src0 + len]);
+        }
+        Grid::from_vec(&self.shape, out)
+    }
+
+    /// The directed halo exchanges one sweep round needs: for every
+    /// shared boundary `d | d+1`, tile `d`'s top `halo` owned rows
+    /// refresh `d+1`'s low ghosts, and `d+1`'s bottom `halo` owned rows
+    /// refresh `d`'s high ghosts.  Fabric slot = tile index, so the
+    /// topology prices each op by real board distance.
+    pub fn halo_ops(&self) -> Vec<HaloOp> {
+        let mut ops = Vec::new();
+        for d in 0..self.tiles.len().saturating_sub(1) {
+            let e = d + 1;
+            let (td, te) = (&self.tiles[d], &self.tiles[e]);
+            ops.push(HaloOp {
+                src: td.name.clone(),
+                dst: te.name.clone(),
+                src_row0: td.lo + td.owned - self.halo,
+                dst_row0: 0,
+                nrows: self.halo,
+                row_cells: self.row_cells,
+                src_slot: d,
+                dst_slot: e,
+            });
+            ops.push(HaloOp {
+                src: te.name.clone(),
+                dst: td.name.clone(),
+                src_row0: te.lo,
+                dst_row0: td.lo + td.owned,
+                nrows: self.halo,
+                row_cells: self.row_cells,
+                src_slot: e,
+                dst_slot: d,
+            });
+        }
+        ops
+    }
+}
+
+/// A [`ShardPlan`] bound to a runtime: functions registered, dependence
+/// variables allocated, ready to emit the sweep/exchange schedule into
+/// any `parallel` region (any number of times — the emitted graph is
+/// shape-stable, so the plan cache warm-replays it).
+pub struct ShardedGrid {
+    pub plan: ShardPlan,
+    /// Device owning each tile (`devices[d]` runs tile `d`'s sweeps and
+    /// receives its incoming halos).
+    devices: Vec<DeviceId>,
+    sweeps: usize,
+    sweep_fn: String,
+    halo_fns: Vec<String>,
+    ops: Vec<HaloOp>,
+    /// `sw[k][d]`: written by sweep `k` of tile `d`.
+    sw: Vec<Vec<DepVar>>,
+    /// `h[k][j]`: written by exchange `j` after sweep `k`.
+    h: Vec<Vec<DepVar>>,
+}
+
+impl ShardedGrid {
+    /// Bind `plan` to `rt`: register the sweep base function (software
+    /// fallback that applies `kernel` to whatever tile the task maps,
+    /// plus a vc709 hardware variant), register every directed halo op
+    /// under its own base name, and allocate the dependence variables
+    /// for `sweeps` rounds.  Registration bumps the runtime epoch, so
+    /// stale compiled plans invalidate by name.
+    pub fn install(
+        rt: &mut OmpRuntime,
+        plan: ShardPlan,
+        kernel: Kernel,
+        devices: Vec<DeviceId>,
+        sweeps: usize,
+    ) -> Result<ShardedGrid> {
+        if devices.len() != plan.ntiles() {
+            bail!(
+                "shard '{}': {} tiles but {} devices",
+                plan.buffer,
+                plan.ntiles(),
+                devices.len()
+            );
+        }
+        if sweeps == 0 {
+            bail!("shard '{}': need at least one sweep", plan.buffer);
+        }
+        let sweep_fn = format!("{}.sweep", plan.buffer);
+        rt.register_software(&sweep_fn, move |env: &mut DataEnv| {
+            // the private environment holds exactly the task's mapped
+            // buffers — for a sweep, the one tile it advances
+            let names: Vec<String> =
+                env.names().iter().map(|s| s.to_string()).collect();
+            for name in names {
+                let g = env.take(&name)?;
+                env.put(&name, kernel.apply(&g)?);
+            }
+            Ok(())
+        });
+        rt.declare_hw_variant(
+            &sweep_fn,
+            SHARD_HW_ARCH,
+            &format!("{sweep_fn}.{SHARD_HW_ARCH}"),
+            kernel,
+        );
+        let ops = plan.halo_ops();
+        let mut halo_fns = Vec::with_capacity(ops.len());
+        for op in &ops {
+            let name = format!(
+                "{}.halo.{}to{}",
+                plan.buffer, op.src_slot, op.dst_slot
+            );
+            rt.register_halo(&name, op.clone());
+            halo_fns.push(name);
+        }
+        let n = plan.ntiles();
+        let sw = (0..sweeps).map(|_| rt.dep_vars(n)).collect();
+        let h = (0..sweeps.saturating_sub(1))
+            .map(|_| rt.dep_vars(ops.len()))
+            .collect();
+        Ok(ShardedGrid {
+            plan,
+            devices,
+            sweeps,
+            sweep_fn,
+            halo_fns,
+            ops,
+            sw,
+            h,
+        })
+    }
+
+    pub fn sweeps(&self) -> usize {
+        self.sweeps
+    }
+
+    /// Tasks one full run emits: `K*n` sweeps + `(K-1)` exchange rounds.
+    pub fn task_count(&self) -> usize {
+        self.sweeps * self.plan.ntiles()
+            + self.sweeps.saturating_sub(1) * self.ops.len()
+    }
+
+    /// Make every tile resident on its device (`target enter data
+    /// map(to: tile)`), so per-sweep H2D is elided and only halos move
+    /// between batches.
+    pub fn enter(&self, rt: &mut OmpRuntime, env: &DataEnv) -> Result<()> {
+        for (d, t) in self.plan.tiles.iter().enumerate() {
+            rt.target_enter_data(
+                self.devices[d],
+                env,
+                &[(EnterMap::To, t.name.as_str())],
+            )?;
+        }
+        Ok(())
+    }
+
+    /// End residency (`target exit data map(from: tile)`); returns the
+    /// billed writeback seconds.
+    pub fn exit(&self, rt: &mut OmpRuntime) -> Result<f64> {
+        let mut billed = 0.0;
+        for (d, t) in self.plan.tiles.iter().enumerate() {
+            billed += rt
+                .target_exit_data(self.devices[d], &[(ExitMap::From, t.name.as_str())])?;
+        }
+        Ok(billed)
+    }
+
+    /// Emit the full schedule into a `single` region: for each sweep
+    /// round, one sweep task per tile, then (except after the last
+    /// round) every directed halo exchange.  See the module docs for
+    /// the variable wiring; all tasks are `nowait` — ordering comes
+    /// entirely from `depend` clauses.
+    pub fn emit(&self, ctx: &mut SingleCtx<'_>) -> Result<Vec<TaskId>> {
+        let n = self.plan.ntiles();
+        let mut ids = Vec::with_capacity(self.task_count());
+        for k in 0..self.sweeps {
+            for d in 0..n {
+                let mut b = ctx
+                    .target(&self.sweep_fn)
+                    .device(self.devices[d])
+                    .map(MapDir::ToFrom, &self.plan.tiles[d].name)
+                    .depend_out(self.sw[k][d])
+                    .nowait();
+                if k > 0 {
+                    // serialize on the tile's own previous sweep (the
+                    // only ordering a 1-tile degenerate plan has) ...
+                    b = b.depend_in(self.sw[k - 1][d]);
+                    // ... and on every exchange touching this tile:
+                    // incoming edges refreshed its ghosts (flow),
+                    // outgoing edges read its boundary rows (anti)
+                    for (j, op) in self.ops.iter().enumerate() {
+                        if op.src_slot == d || op.dst_slot == d {
+                            b = b.depend_in(self.h[k - 1][j]);
+                        }
+                    }
+                }
+                ids.push(b.submit()?);
+            }
+            if k + 1 < self.sweeps {
+                for (j, op) in self.ops.iter().enumerate() {
+                    ids.push(
+                        ctx.target(&self.halo_fns[j])
+                            .device(self.devices[op.dst_slot])
+                            .map(MapDir::ToFrom, &op.dst)
+                            .depend_in(self.sw[k][op.src_slot])
+                            .depend_in(self.sw[k][op.dst_slot])
+                            .depend_out(self.h[k][j])
+                            .nowait()
+                            .submit()?,
+                    );
+                }
+            }
+        }
+        Ok(ids)
+    }
+
+    /// Scatter → enter-data → run the schedule → exit-data → gather.
+    /// Returns the stitched result and the run report (the makespan is
+    /// `report.virtual_time_s()`; exit writebacks are billed inside the
+    /// runtime's writeback ledger as usual).
+    pub fn run(
+        &self,
+        rt: &mut OmpRuntime,
+        global: &Grid,
+    ) -> Result<(Grid, OmpReport)> {
+        let mut env = DataEnv::new();
+        self.plan.scatter(global, &mut env)?;
+        self.enter(rt, &env)?;
+        let report = rt.parallel(&mut env, |ctx| {
+            self.emit(ctx)?;
+            Ok(())
+        })?;
+        self.exit(rt)?;
+        let out = self.plan.gather(&env)?;
+        Ok((out, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(halo: usize) -> ShardSpec {
+        ShardSpec {
+            halo,
+            capacity_cells: None,
+        }
+    }
+
+    #[test]
+    fn decompose_covers_rows_exactly_once() {
+        let p =
+            ShardPlan::decompose("V", &[23, 7], 4, &spec(2)).unwrap();
+        assert_eq!(p.ntiles(), 4);
+        assert_eq!(p.row_cells(), 7);
+        // owned slabs partition the 23 rows: 6+6+6+5, contiguous
+        let owned: Vec<usize> = p.tiles.iter().map(|t| t.owned).collect();
+        assert_eq!(owned, vec![6, 6, 6, 5]);
+        let mut row = 0;
+        for t in &p.tiles {
+            assert_eq!(t.row0, row);
+            row += t.owned;
+        }
+        assert_eq!(row, 23);
+        // ghosts only on shared boundaries
+        assert_eq!((p.tiles[0].lo, p.tiles[0].hi), (0, 2));
+        assert_eq!((p.tiles[1].lo, p.tiles[1].hi), (2, 2));
+        assert_eq!((p.tiles[3].lo, p.tiles[3].hi), (2, 0));
+        assert_eq!(p.tile_shape(1), vec![10, 7]);
+        assert_eq!(p.max_tile_cells(), 10 * 7);
+    }
+
+    #[test]
+    fn decompose_errors_are_named() {
+        let e = ShardPlan::decompose("V", &[8, 4], 8, &spec(1))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("8 tiles"), "{e}");
+        let e = ShardPlan::decompose("V", &[8, 4], 2, &spec(0))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("halo"), "{e}");
+        let tight = ShardSpec {
+            halo: 1,
+            capacity_cells: Some(10),
+        };
+        let e = ShardPlan::decompose("V", &[8, 4], 2, &tight)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("board holds 10"), "{e}");
+        // but enough boards shrink the tiles under the cap
+        let p = ShardPlan::decompose(
+            "V",
+            &[8, 4],
+            4,
+            &ShardSpec {
+                halo: 1,
+                capacity_cells: Some(16),
+            },
+        )
+        .unwrap();
+        assert!(p.max_tile_cells() <= 16);
+    }
+
+    #[test]
+    fn scatter_gather_roundtrips_and_seeds_ghosts() {
+        let g = Grid::random(&[12, 5], 3).unwrap();
+        let p = ShardPlan::decompose("V", &[12, 5], 3, &spec(1)).unwrap();
+        let mut env = DataEnv::new();
+        p.scatter(&g, &mut env).unwrap();
+        // middle tile: rows 3..9 global, padded one row each side
+        let t1 = env.get("V.shard1").unwrap();
+        assert_eq!(t1.shape(), &[6, 5]);
+        assert_eq!(&t1.data()[..5], &g.data()[3 * 5..4 * 5]);
+        // untouched tiles stitch back bit-identically
+        assert_eq!(p.gather(&env).unwrap(), g);
+    }
+
+    #[test]
+    fn halo_ops_pair_every_shared_boundary() {
+        let p = ShardPlan::decompose("V", &[20, 4], 3, &spec(2)).unwrap();
+        let ops = p.halo_ops();
+        assert_eq!(ops.len(), 4, "two directed ops per boundary");
+        // boundary 0|1, forward: tile 0's top 2 owned rows (7 owned,
+        // no lo ghost) land in tile 1's lo ghosts
+        assert_eq!(ops[0].src, "V.shard0");
+        assert_eq!(ops[0].dst, "V.shard1");
+        assert_eq!(ops[0].src_row0, 5);
+        assert_eq!(ops[0].dst_row0, 0);
+        assert_eq!((ops[0].src_slot, ops[0].dst_slot), (0, 1));
+        // boundary 0|1, reverse: tile 1's bottom 2 owned rows (past its
+        // own lo ghosts) land in tile 0's hi ghosts (row 7)
+        assert_eq!(ops[1].src_row0, 2);
+        assert_eq!(ops[1].dst_row0, 7);
+        assert_eq!((ops[1].src_slot, ops[1].dst_slot), (1, 0));
+        for op in &ops {
+            assert_eq!(op.nrows, 2);
+            assert_eq!(op.row_cells, 4);
+            assert_eq!(op.cells(), 8);
+        }
+        // single tile: no boundaries, no exchanges
+        let solo = ShardPlan::decompose("V", &[20, 4], 1, &spec(2)).unwrap();
+        assert!(solo.halo_ops().is_empty());
+    }
+}

@@ -12,6 +12,8 @@
 //! `max(done[c][h-1], done[c-1][h]) + ser + lat`.  The pass completes at
 //! `done[last chunk][last hop]`.
 
+use anyhow::{bail, Result};
+
 use super::server::Server;
 
 #[derive(Debug, Clone)]
@@ -27,19 +29,29 @@ pub struct PassTiming {
 }
 
 impl Pipeline {
-    pub fn new(hops: Vec<Server>) -> Pipeline {
-        assert!(!hops.is_empty(), "pipeline needs at least one hop");
-        Pipeline { hops }
+    /// A pipeline with no hops has no defined recurrence — a caller bug
+    /// surfaced as a named error, not a panic mid-sweep.
+    pub fn new(hops: Vec<Server>) -> Result<Pipeline> {
+        if hops.is_empty() {
+            bail!("pipeline needs at least one hop");
+        }
+        Ok(Pipeline { hops })
     }
 
     /// Evaluate one pass starting at `start_s`; returns absolute finish.
+    /// A non-positive chunk size would loop forever (or divide by zero),
+    /// so it is rejected by name.
     pub fn stream(
         &mut self,
         start_s: f64,
         total_bytes: f64,
         chunk_bytes: f64,
-    ) -> PassTiming {
-        assert!(chunk_bytes > 0.0);
+    ) -> Result<PassTiming> {
+        if !(chunk_bytes > 0.0) {
+            bail!(
+                "pipeline chunk size must be positive, got {chunk_bytes}"
+            );
+        }
         let chunks = (total_bytes / chunk_bytes).ceil().max(1.0) as usize;
         let mut finish = start_s;
         let mut remaining = total_bytes;
@@ -52,7 +64,7 @@ impl Pipeline {
             }
             finish = finish.max(t);
         }
-        PassTiming { makespan_s: finish - start_s, chunks }
+        Ok(PassTiming { makespan_s: finish - start_s, chunks })
     }
 
     /// Sum of per-hop serialization for `bytes` — the no-pipelining lower
@@ -95,12 +107,23 @@ mod tests {
         Pipeline::new(
             rates.iter().map(|&r| Server::new("h", r, 0.0)).collect(),
         )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_and_zero_chunk_are_named_errors() {
+        let err = Pipeline::new(vec![]).unwrap_err().to_string();
+        assert!(err.contains("at least one hop"), "{err}");
+        let mut p = pipe(&[8e9]);
+        let err = p.stream(0.0, 1e6, 0.0).unwrap_err().to_string();
+        assert!(err.contains("chunk size"), "{err}");
+        assert!(p.stream(0.0, 1e6, -4.0).is_err());
     }
 
     #[test]
     fn single_hop_equals_serialization() {
         let mut p = pipe(&[8e9]);
-        let t = p.stream(0.0, 8_000_000.0, 4096.0);
+        let t = p.stream(0.0, 8_000_000.0, 4096.0).unwrap();
         // 8 MB at 8 Gb/s = 8 ms
         assert!((t.makespan_s - 8e-3).abs() < 1e-9, "{t:?}");
     }
@@ -109,7 +132,7 @@ mod tests {
     fn pipelined_beats_serial() {
         let mut p = pipe(&[10e9, 10e9, 10e9]);
         let bytes = 1_000_000.0;
-        let t = p.stream(0.0, bytes, 1000.0);
+        let t = p.stream(0.0, bytes, 1000.0).unwrap();
         let serial = p.serial_time(bytes);
         // 3 equal hops pipelined: ~1x serialization, not 3x
         assert!(t.makespan_s < 0.5 * serial, "{} vs {serial}", t.makespan_s);
@@ -120,7 +143,7 @@ mod tests {
         // fast-slow-fast: throughput set by the slow hop
         let mut p = pipe(&[40e9, 10e9, 40e9]);
         let bytes = 4_000_000.0;
-        let t = p.stream(0.0, bytes, 4096.0);
+        let t = p.stream(0.0, bytes, 4096.0).unwrap();
         let ideal = bytes * 8.0 / 10e9;
         assert!(t.makespan_s >= ideal);
         assert!(t.makespan_s < ideal * 1.05, "{} vs {ideal}", t.makespan_s);
@@ -130,9 +153,9 @@ mod tests {
     #[test]
     fn sequential_passes_queue() {
         let mut p = pipe(&[10e9]);
-        let t1 = p.stream(0.0, 1e6, 4096.0);
+        let t1 = p.stream(0.0, 1e6, 4096.0).unwrap();
         let f1 = t1.makespan_s;
-        let t2 = p.stream(f1, 1e6, 4096.0);
+        let t2 = p.stream(f1, 1e6, 4096.0).unwrap();
         assert!((t2.makespan_s - f1).abs() < 1e-9);
     }
 
@@ -152,7 +175,7 @@ mod tests {
             },
             |(rates, bytes, chunk)| {
                 let mut p = pipe(rates);
-                let t = p.stream(0.0, *bytes, *chunk);
+                let t = p.stream(0.0, *bytes, *chunk).unwrap();
                 // lower bound: serialization at the bottleneck
                 let lb = bytes * 8.0 / p.bottleneck_bps();
                 // upper bound: full store-and-forward of every chunk
@@ -181,8 +204,9 @@ mod tests {
                 ((rng.range(64, 4096) * 256) as f64, rates)
             },
             |(bytes, rates)| {
-                let coarse = pipe(rates).stream(0.0, *bytes, 65536.0);
-                let fine = pipe(rates).stream(0.0, *bytes, 4096.0);
+                let coarse =
+                    pipe(rates).stream(0.0, *bytes, 65536.0).unwrap();
+                let fine = pipe(rates).stream(0.0, *bytes, 4096.0).unwrap();
                 if fine.makespan_s <= coarse.makespan_s * 1.001 {
                     Ok(())
                 } else {

@@ -1,0 +1,322 @@
+//! Sharding property net (DESIGN.md §11): randomized grid shapes, halo
+//! widths, sweep counts and fabric topologies, each case executed
+//! sharded across N single-board VC709 devices and checked against the
+//! unsharded host reference:
+//!
+//! (a) **bit-identity**: the gathered sharded result equals
+//!     `kernel.iterate(grid, sweeps)` exactly — domain decomposition is
+//!     a scheduling concern, never a numerics concern;
+//! (b) **task conservation**: every emitted sweep and halo-exchange
+//!     task executes exactly once (`K*n + (K-1)*2*(n-1)` total);
+//! (c) **halo bytes ≡ priced bytes**: the functional wire bytes the
+//!     exchanges frame (`halo-wire`) equal the bytes the DES halo
+//!     servers bill (`halo-net`), per run, exactly — the timing plane
+//!     prices precisely the frames the functional plane ships;
+//! (d) **death-mid-sweep recovery**: a seeded fault schedule killing
+//!     shard-owning boards mid-run still yields the bit-identical
+//!     gathered grid, with the orphaned tile's tasks re-placed and the
+//!     re-streamed residency billed.
+//!
+//! Cases are seeded (reproduce from the printed case) and shrink
+//! greedily: fewer sweeps, fewer tiles, thinner halos, smaller grids.
+
+use omp_fpga::config::ClusterConfig;
+use omp_fpga::hw::{FabricSlot, Topology};
+use omp_fpga::omp::{DeviceId, FaultSchedule, OmpReport, OmpRuntime, ShardPlan, ShardSpec, ShardedGrid};
+use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
+use omp_fpga::stencil::{Grid, Kernel};
+use omp_fpga::util::prop::{check_shrink, Rng};
+
+const KERNEL: Kernel = Kernel::Diffusion2d;
+const TOPOLOGIES: [Topology; 3] =
+    [Topology::Ring, Topology::Torus, Topology::Crossbar];
+
+#[derive(Debug, Clone)]
+struct Case {
+    rows: usize,
+    cols: usize,
+    ntiles: usize,
+    halo: usize,
+    sweeps: usize,
+    topology: Topology,
+    seed: u64,
+    fault_seed: u64,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let ntiles = rng.range(1, 5);
+    let halo = rng.range(1, 4);
+    // every tile must own >= max(2, halo) rows, plus slack to randomize
+    let min_rows = ntiles * halo.max(2);
+    Case {
+        rows: min_rows + rng.range(0, 12),
+        cols: rng.range(3, 9),
+        ntiles,
+        halo,
+        sweeps: rng.range(1, 5),
+        topology: *rng.choose(&TOPOLOGIES),
+        seed: rng.next_u64(),
+        fault_seed: rng.next_u64(),
+    }
+}
+
+fn shrink_case(case: &Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    if case.sweeps > 1 {
+        let mut c = case.clone();
+        c.sweeps -= 1;
+        out.push(c);
+    }
+    if case.ntiles > 1 {
+        let mut c = case.clone();
+        c.ntiles -= 1;
+        out.push(c);
+    }
+    if case.halo > 1 {
+        let mut c = case.clone();
+        c.halo -= 1;
+        out.push(c);
+    }
+    let min_rows = case.ntiles * case.halo.max(2);
+    if case.rows > min_rows {
+        let mut c = case.clone();
+        c.rows = min_rows;
+        out.push(c);
+    }
+    if case.cols > 3 {
+        let mut c = case.clone();
+        c.cols = 3;
+        out.push(c);
+    }
+    if case.topology != Topology::Ring {
+        let mut c = case.clone();
+        c.topology = Topology::Ring;
+        out.push(c);
+    }
+    out
+}
+
+/// One single-board VC709 device per tile, every plugin sharing the
+/// case's fabric topology, each in its own slot.
+fn build_runtime(case: &Case) -> Result<OmpRuntime, String> {
+    let mut rt = OmpRuntime::new(2);
+    let mut cfg = ClusterConfig::homogeneous(1, 2, KERNEL);
+    cfg.topology = case.topology;
+    for d in 0..case.ntiles {
+        let mut plugin = Vc709Plugin::new(&cfg, ExecBackend::Golden)
+            .map_err(|e| e.to_string())?;
+        plugin.fabric = FabricSlot::new(case.topology, case.ntiles, d)
+            .map_err(|e| e.to_string())?;
+        rt.register_device(Box::new(plugin));
+    }
+    Ok(rt)
+}
+
+fn tasks_executed(report: &OmpReport) -> usize {
+    report.batches.iter().map(|(_, r)| r.tasks_run).sum()
+}
+
+fn module_bytes(report: &OmpReport, module: &str) -> f64 {
+    report
+        .batches
+        .iter()
+        .filter_map(|(_, r)| r.stats.modules.get(module))
+        .map(|m| m.bytes)
+        .sum()
+}
+
+/// Decompose, install and run the case.  Returns the gathered grid,
+/// the report, and the emitted task count.
+fn run_case(
+    case: &Case,
+    faults: Option<FaultSchedule>,
+) -> Result<(Grid, OmpReport, usize), String> {
+    let mut rt = build_runtime(case)?;
+    if let Some(schedule) = faults {
+        rt.inject_faults(schedule).map_err(|e| e.to_string())?;
+    }
+    let shape = [case.rows, case.cols];
+    let global =
+        Grid::random(&shape, case.seed).map_err(|e| e.to_string())?;
+    let spec = ShardSpec {
+        halo: case.halo,
+        capacity_cells: None,
+    };
+    let plan = ShardPlan::decompose("V", &shape, case.ntiles, &spec)
+        .map_err(|e| e.to_string())?;
+    let devices: Vec<DeviceId> =
+        (1..=case.ntiles).map(DeviceId).collect();
+    let sharded =
+        ShardedGrid::install(&mut rt, plan, KERNEL, devices, case.sweeps)
+            .map_err(|e| e.to_string())?;
+    let ntasks = sharded.task_count();
+    let (out, report) = sharded
+        .run(&mut rt, &global)
+        .map_err(|e| format!("{e:#}"))?;
+    Ok((out, report, ntasks))
+}
+
+fn reference(case: &Case) -> Result<Grid, String> {
+    let global = Grid::random(&[case.rows, case.cols], case.seed)
+        .map_err(|e| e.to_string())?;
+    KERNEL
+        .iterate(&global, case.sweeps)
+        .map_err(|e| e.to_string())
+}
+
+#[test]
+fn prop_sharded_equals_host_reference_bit_identically() {
+    check_shrink(
+        "shard-bit-identity",
+        25,
+        gen_case,
+        shrink_case,
+        |case| {
+            let (out, report, ntasks) = run_case(case, None)?;
+            let want = reference(case)?;
+            // (a) bit-identity, any shape/halo/sweeps/topology
+            if out != want {
+                return Err(format!(
+                    "sharded result diverged from host reference \
+                     (max abs diff {})",
+                    out.max_abs_diff(&want)
+                ));
+            }
+            // (b) conservation: K*n sweeps + (K-1) exchange rounds
+            let expect = case.sweeps * case.ntiles
+                + case.sweeps.saturating_sub(1) * 2 * (case.ntiles - 1);
+            if ntasks != expect {
+                return Err(format!(
+                    "emitted {ntasks} tasks, expected {expect}"
+                ));
+            }
+            if tasks_executed(&report) != ntasks {
+                return Err(format!(
+                    "task conservation violated: {} executed, \
+                     {ntasks} emitted",
+                    tasks_executed(&report)
+                ));
+            }
+            // (c) functional wire bytes == DES-priced bytes, exactly
+            let wire = module_bytes(&report, "halo-wire");
+            let priced = module_bytes(&report, "halo-net");
+            if wire != priced {
+                return Err(format!(
+                    "halo bytes {wire} != priced bytes {priced}"
+                ));
+            }
+            // multi-tile multi-sweep runs must actually exchange
+            if case.ntiles > 1 && case.sweeps > 1 && wire == 0.0 {
+                return Err("no halo bytes despite shared boundaries".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_board_death_mid_sweep_recovers_bit_identically() {
+    check_shrink(
+        "shard-death-recovery",
+        20,
+        gen_case,
+        shrink_case,
+        |case| {
+            let (g_free, rep_free, ntasks) = run_case(case, None)?;
+            let want = reference(case)?;
+            if g_free != want {
+                return Err("failure-free sharded run diverged".into());
+            }
+            let horizon = rep_free.virtual_time_s() * 1.1 + 1e-6;
+            let devices: Vec<DeviceId> =
+                (1..=case.ntiles).map(DeviceId).collect();
+            let schedule = FaultSchedule::seeded(
+                case.fault_seed,
+                &devices,
+                horizon,
+                1,
+            );
+            let armed = !schedule.is_empty();
+            let (g_fault, rep, _) = run_case(case, Some(schedule))?;
+            // a shard owner died mid-run: the orphaned tile's sweeps
+            // and halo exchanges re-place, neighbours rewire through
+            // the same HaloOps (slots are baked into the ops, so the
+            // fabric prices identically wherever they land), and the
+            // re-streamed tile is billed — but the gathered grid is
+            // exactly the reference, still
+            if g_fault != want {
+                return Err(format!(
+                    "post-recovery grid diverged ({} failure(s): {:?})",
+                    rep.recovery_cost.failures, rep.recovery
+                ));
+            }
+            if tasks_executed(&rep) != ntasks {
+                return Err(format!(
+                    "task conservation violated under failure: \
+                     {} executed, {ntasks} emitted",
+                    tasks_executed(&rep)
+                ));
+            }
+            if !armed && rep.recovery_cost.failures > 0 {
+                return Err("failures observed with no schedule armed".into());
+            }
+            if rep.recovery_cost.failures > 0
+                && rep.recovery_cost.replacements
+                    + rep.recovery_cost.host_fallbacks
+                    == 0
+            {
+                return Err(
+                    "a death must re-place or host-fall-back its \
+                     orphaned runs"
+                        .into(),
+                );
+            }
+            // pricing consistency survives recovery too
+            let wire = module_bytes(&rep, "halo-wire");
+            let priced = module_bytes(&rep, "halo-net");
+            if wire != priced {
+                return Err(format!(
+                    "halo bytes {wire} != priced bytes {priced} \
+                     after recovery"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ring_and_crossbar_makespans_differ_but_grids_agree() {
+    // 3 tiles: the reverse halo 1->0 walks 2 fabric links on the
+    // directed ring but exactly 1 on the crossbar, so the same emitted
+    // schedule must price to different makespans — while the gathered
+    // grids stay bit-identical (topology is a timing-plane concept)
+    let base = Case {
+        rows: 18,
+        cols: 6,
+        ntiles: 3,
+        halo: 1,
+        sweeps: 3,
+        topology: Topology::Ring,
+        seed: 42,
+        fault_seed: 0,
+    };
+    let mut crossbar = base.clone();
+    crossbar.topology = Topology::Crossbar;
+    let (g_ring, rep_ring, _) = run_case(&base, None).unwrap();
+    let (g_xbar, rep_xbar, _) = run_case(&crossbar, None).unwrap();
+    assert_eq!(g_ring, g_xbar, "topology must not touch numerics");
+    assert_eq!(g_ring, reference(&base).unwrap());
+    let (m_ring, m_xbar) =
+        (rep_ring.virtual_time_s(), rep_xbar.virtual_time_s());
+    assert!(
+        m_ring > m_xbar,
+        "multi-hop ring halos must outprice the crossbar: \
+         {m_ring} vs {m_xbar}"
+    );
+    // more fabric traversals => more halo-net bytes billed
+    assert!(
+        module_bytes(&rep_ring, "halo-net")
+            > module_bytes(&rep_xbar, "halo-net")
+    );
+}
