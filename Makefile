@@ -39,12 +39,16 @@ serving:
 	cargo run --release --example multi_tenant_serving
 
 # Cluster-wide grid sharding demo: a grid too large for any one board
-# runs row-sharded across 2/4/6 VC709s with per-sweep halo exchanges,
-# stays bit-identical to the host reference, shows makespan improving
-# monotonically with boards and ring-vs-crossbar fabric pricing, and
-# writes the curve to results/shard_scaling.json (DESIGN.md §11).
+# runs row-sharded across 2/4/6 VC709s with halo-exchange tasks, stays
+# bit-identical to the host reference, shows makespan improving
+# monotonically with boards and ring-vs-crossbar fabric pricing, then
+# sweeps the §12 communication-avoidance knobs ({block, split}:
+# temporal halo blocking cuts exchanges and makespan, interior/boundary
+# splitting drops the halo-blocked seconds) and writes everything to
+# results/shard_scaling.json (DESIGN.md §11–§12).
 sharded:
 	cargo run --release --example sharded_stencil
+	cargo bench --bench shard
 
 clean:
 	rm -rf target artifacts rust/artifacts results BENCH_*.json

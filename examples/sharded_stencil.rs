@@ -1,4 +1,5 @@
-//! Cluster-wide grid sharding over the VC709 fabric (DESIGN.md §11).
+//! Cluster-wide grid sharding over the VC709 fabric (DESIGN.md §11)
+//! and communication-avoiding sharded schedules (§12).
 //!
 //! A 1536x256 stencil grid (393,216 cells) is strictly larger than the
 //! demo deployment's per-board tile budget (200,000 cells): no single
@@ -17,6 +18,14 @@
 //! * the modelled makespan **improves monotonically** from 2 to 6
 //!   boards (smaller tiles stream faster than the added halo traffic
 //!   costs);
+//! * **temporal halo blocking** (`block = B`, halo deepened to match)
+//!   cuts the exchange count from `(K-1)·2(n-1)` to
+//!   `(ceil(K/B)-1)·2(n-1)` and strictly improves the modelled
+//!   makespan — same gathered bits;
+//! * **interior/boundary splitting** overlaps interior compute with
+//!   in-flight halo frames: the halo-blocked seconds
+//!   (`report.halo.wait_s`) drop versus the unsplit schedule at the
+//!   same block factor — same gathered bits;
 //! * a directed **ring** fabric prices the same schedule strictly
 //!   slower than a **crossbar** (reverse-direction halos walk n-1
 //!   links), while the grids stay identical — topology is a
@@ -34,8 +43,8 @@ use omp_fpga::config::ClusterConfig;
 use omp_fpga::hw::{FabricSlot, Topology};
 use omp_fpga::omp::{
     BatchCtx, DataEnv, DepVar, DeviceId, DevicePlugin, FnRegistry, MapDir,
-    OmpRuntime, Residency, ShardPlan, ShardSpec, ShardedGrid, Task, TaskFn,
-    TaskGraph, TaskId,
+    OmpReport, OmpRuntime, Residency, ShardPlan, ShardSpec, ShardedGrid,
+    Task, TaskFn, TaskGraph, TaskId,
 };
 use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
 use omp_fpga::stencil::{Grid, Kernel};
@@ -46,10 +55,14 @@ const SHAPE: [usize; 2] = [1536, 256];
 /// enough for half the grid plus ghosts, far too small for all of it.
 const CAPACITY_CELLS: usize = 200_000;
 const SWEEPS: usize = 4;
+/// Board count the §12 blocking/splitting ablation runs on.
+const ABLATION_BOARDS: usize = 6;
 
 fn spec() -> ShardSpec {
     ShardSpec {
         halo: 1,
+        block: 1,
+        split: false,
         capacity_cells: Some(CAPACITY_CELLS),
     }
 }
@@ -67,18 +80,16 @@ fn build_runtime(topology: Topology, nboards: usize) -> Result<OmpRuntime> {
     Ok(rt)
 }
 
-/// Shard, run, gather.  Returns (result, makespan_s, halo_wire_bytes).
+/// Shard, run, gather.  Returns the gathered grid and the full report
+/// (makespan, halo counters, per-batch stats).
 fn run_sharded(
     topology: Topology,
     nboards: usize,
+    spec: &ShardSpec,
     global: &Grid,
-) -> Result<(Grid, f64, f64)> {
+) -> Result<(Grid, OmpReport)> {
     let mut rt = build_runtime(topology, nboards)?;
-    let plan = ShardPlan::decompose("V", &SHAPE, nboards, &spec())?;
-    ensure!(
-        plan.max_tile_cells() <= CAPACITY_CELLS,
-        "every tile must fit its board"
-    );
+    let plan = ShardPlan::decompose("V", &SHAPE, nboards, spec)?;
     let devices: Vec<DeviceId> = (1..=nboards).map(DeviceId).collect();
     let sharded =
         ShardedGrid::install(&mut rt, plan, KERNEL, devices, SWEEPS)?;
@@ -99,7 +110,12 @@ fn run_sharded(
         halo_wire == priced,
         "functional halo bytes {halo_wire} != DES-priced bytes {priced}"
     );
-    Ok((out, report.virtual_time_s(), halo_wire))
+    ensure!(
+        report.halo.bytes == halo_wire,
+        "halo counter {} != wire bytes {halo_wire}",
+        report.halo.bytes
+    );
+    Ok((out, report))
 }
 
 /// Placement estimate vs executed duration for one cross-fabric halo
@@ -175,8 +191,9 @@ fn main() -> Result<()> {
     let mut rows = Vec::new();
     let mut last = f64::INFINITY;
     for nboards in [2usize, 4, 6] {
-        let (out, makespan, halo_bytes) =
-            run_sharded(Topology::Ring, nboards, &global)?;
+        let (out, report) =
+            run_sharded(Topology::Ring, nboards, &spec(), &global)?;
+        let makespan = report.virtual_time_s();
         ensure!(
             out == reference,
             "{nboards}-board sharded run diverged from the host reference"
@@ -187,18 +204,107 @@ fn main() -> Result<()> {
         );
         last = makespan;
         println!(
-            "{nboards} boards: makespan {makespan:.6} s, halo wire \
-             {halo_bytes:.0} B — bit-identical"
+            "{nboards} boards: makespan {makespan:.6} s, {} exchanges, \
+             halo wire {:.0} B, halo wait {:.6} s — bit-identical",
+            report.halo.exchanges, report.halo.bytes, report.halo.wait_s
         );
         rows.push(format!(
             "    {{\"boards\": {nboards}, \"makespan_s\": {makespan}, \
-             \"halo_wire_bytes\": {halo_bytes}}}"
+             \"halo_exchanges\": {}, \"halo_wire_bytes\": {}, \
+             \"halo_wait_s\": {}}}",
+            report.halo.exchanges, report.halo.bytes, report.halo.wait_s
         ));
     }
 
+    // §12 ablation on the 6-board ring: temporal blocking cuts the
+    // exchange count by the predicted factor and strictly improves the
+    // modelled makespan; splitting then drops the halo-blocked seconds
+    // at the same block factor — every configuration bit-identical
+    let n = ABLATION_BOARDS;
+    let mut ablation_rows = Vec::new();
+    let mut baseline: Option<OmpReport> = None;
+    for (block, split) in [(1, false), (2, false), (2, true)] {
+        let spec = ShardSpec {
+            halo: block,
+            block,
+            split,
+            capacity_cells: Some(CAPACITY_CELLS),
+        };
+        let (out, report) =
+            run_sharded(Topology::Ring, n, &spec, &global)?;
+        ensure!(
+            out == reference,
+            "block={block} split={split} diverged from the reference"
+        );
+        let predicted =
+            (SWEEPS.div_ceil(block) - 1) * 2 * (n - 1);
+        ensure!(
+            report.halo.exchanges == predicted,
+            "block={block}: {} exchanges, blocking predicts {predicted}",
+            report.halo.exchanges
+        );
+        println!(
+            "{n} boards, block={block}{}: makespan {:.6} s, \
+             {} exchanges, halo wait {:.6} s — bit-identical",
+            if split { ", split" } else { "" },
+            report.virtual_time_s(),
+            report.halo.exchanges,
+            report.halo.wait_s
+        );
+        ablation_rows.push(format!(
+            "    {{\"block\": {block}, \"split\": {split}, \
+             \"makespan_s\": {}, \"halo_exchanges\": {}, \
+             \"halo_wire_bytes\": {}, \"halo_wait_s\": {}}}",
+            report.virtual_time_s(),
+            report.halo.exchanges,
+            report.halo.bytes,
+            report.halo.wait_s
+        ));
+        match (block, split) {
+            (1, false) => baseline = Some(report),
+            (2, false) => {
+                let base = baseline.as_ref().expect("baseline ran first");
+                ensure!(
+                    report.halo.exchanges < base.halo.exchanges,
+                    "blocking must cut exchanges: {} !< {}",
+                    report.halo.exchanges,
+                    base.halo.exchanges
+                );
+                ensure!(
+                    report.virtual_time_s() < base.virtual_time_s(),
+                    "blocking must improve the makespan: {} !< {}",
+                    report.virtual_time_s(),
+                    base.virtual_time_s()
+                );
+                baseline = Some(report);
+            }
+            (2, true) => {
+                // `baseline` now holds block=2 unsplit: same exchange
+                // schedule, but interior compute no longer stalls on it
+                let unsplit = baseline.as_ref().expect("unsplit ran");
+                ensure!(
+                    report.halo.exchanges == unsplit.halo.exchanges,
+                    "splitting must not change the exchange schedule"
+                );
+                ensure!(
+                    report.halo.wait_s < unsplit.halo.wait_s,
+                    "splitting must drop the halo-blocked seconds: \
+                     {} !< {}",
+                    report.halo.wait_s,
+                    unsplit.halo.wait_s
+                );
+            }
+            _ => unreachable!(),
+        }
+    }
+
     // same schedule, different fabric: ring prices slower than crossbar
-    let (g_ring, m_ring, _) = run_sharded(Topology::Ring, 4, &global)?;
-    let (g_xbar, m_xbar, _) = run_sharded(Topology::Crossbar, 4, &global)?;
+    let (g_ring, rep_ring) =
+        run_sharded(Topology::Ring, 4, &spec(), &global)?;
+    let (g_xbar, rep_xbar) =
+        run_sharded(Topology::Crossbar, 4, &spec(), &global)?;
+    let (m_ring, m_xbar) =
+        (rep_ring.virtual_time_s(), rep_xbar.virtual_time_s());
     ensure!(g_ring == g_xbar, "topology must not touch numerics");
     ensure!(
         m_ring > m_xbar,
@@ -222,9 +328,11 @@ fn main() -> Result<()> {
         "{{\n  \"grid_cells\": {grid_cells},\n  \
          \"board_capacity_cells\": {CAPACITY_CELLS},\n  \
          \"sweeps\": {SWEEPS},\n  \"scaling\": [\n{}\n  ],\n  \
+         \"blocking_ablation\": [\n{}\n  ],\n  \
          \"ring_makespan_s\": {m_ring},\n  \
          \"crossbar_makespan_s\": {m_xbar}\n}}\n",
-        rows.join(",\n")
+        rows.join(",\n"),
+        ablation_rows.join(",\n")
     );
     std::fs::write("results/shard_scaling.json", json)?;
     println!("wrote results/shard_scaling.json");

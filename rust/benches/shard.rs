@@ -1,17 +1,24 @@
-//! Sharding benchmark (DESIGN.md §11): one logical grid decomposed
+//! Sharding benchmark (DESIGN.md §11–§12): one logical grid decomposed
 //! across 1/2/4/6 single-board VC709 devices on a ring fabric, full
-//! scatter → sweep+halo schedule → gather each iteration.
+//! scatter → sweep+halo schedule → gather each iteration, plus a
+//! communication-avoidance ablation on the 6-board ring sweeping the
+//! temporal block factor and interior/boundary splitting.
 //!
-//! Reports wall-clock cost of the sharded coordinator path and, in the
-//! `shard speedup-vs-boards` entry, the modelled-makespan speedup of
-//! each board count over the single-board plan — the scaling curve the
-//! README quotes.  Writes `BENCH_shard.json` at the repository root.
+//! Reports wall-clock cost of the sharded coordinator path, the
+//! modelled-makespan speedup of each board count over the single-board
+//! plan (`shard speedup-vs-boards` — the scaling curve the README
+//! quotes), and per-configuration halo economics (`shard
+//! blocking-ablation`: exchange count, shipped bytes, halo-blocked
+//! seconds, makespan).  Writes `BENCH_shard.json` at the repository
+//! root.
 
 use std::path::PathBuf;
 
 use omp_fpga::config::ClusterConfig;
 use omp_fpga::hw::{FabricSlot, Topology};
-use omp_fpga::omp::{DeviceId, OmpRuntime, ShardPlan, ShardSpec, ShardedGrid};
+use omp_fpga::omp::{
+    DeviceId, OmpReport, OmpRuntime, ShardPlan, ShardSpec, ShardedGrid,
+};
 use omp_fpga::plugin::{ExecBackend, Vc709Plugin};
 use omp_fpga::stencil::{Grid, Kernel};
 use omp_fpga::util::bench;
@@ -21,9 +28,14 @@ const KERNEL: Kernel = Kernel::Diffusion2d;
 const SHAPE: [usize; 2] = [384, 128];
 const SWEEPS: usize = 4;
 const TOPOLOGY: Topology = Topology::Ring;
+const ABLATION_BOARDS: usize = 6;
 
 /// Decompose, install, run, gather — the whole sharded path.
-fn run_sharded(nboards: usize, global: &Grid) -> (Grid, f64) {
+fn run_sharded(
+    nboards: usize,
+    spec: &ShardSpec,
+    global: &Grid,
+) -> (Grid, OmpReport) {
     let mut rt = OmpRuntime::new(2);
     let mut cfg = ClusterConfig::homogeneous(1, 2, KERNEL);
     cfg.topology = TOPOLOGY;
@@ -32,26 +44,26 @@ fn run_sharded(nboards: usize, global: &Grid) -> (Grid, f64) {
         plugin.fabric = FabricSlot::new(TOPOLOGY, nboards, d).unwrap();
         rt.register_device(Box::new(plugin));
     }
-    let spec = ShardSpec { halo: 1, capacity_cells: None };
-    let plan = ShardPlan::decompose("V", &SHAPE, nboards, &spec).unwrap();
+    let plan = ShardPlan::decompose("V", &SHAPE, nboards, spec).unwrap();
     let devices: Vec<DeviceId> = (1..=nboards).map(DeviceId).collect();
     let sharded =
         ShardedGrid::install(&mut rt, plan, KERNEL, devices, SWEEPS).unwrap();
     let (out, report) = sharded.run(&mut rt, global).unwrap();
-    (out, report.virtual_time_s())
+    (out, report)
 }
 
 fn main() {
     let global = Grid::random(&SHAPE, 7).unwrap();
     let reference = KERNEL.iterate(&global, SWEEPS).unwrap();
     let cell_sweeps = (global.cells() * SWEEPS) as f64;
+    let every = ShardSpec::default();
 
     let mut entries: Vec<(String, Value)> = Vec::new();
     let mut makespans: Vec<(usize, f64)> = Vec::new();
     for nboards in [1usize, 2, 4, 6] {
-        let (out, makespan) = run_sharded(nboards, &global);
+        let (out, report) = run_sharded(nboards, &every, &global);
         assert_eq!(out, reference, "{nboards}-board shard diverged");
-        makespans.push((nboards, makespan));
+        makespans.push((nboards, report.virtual_time_s()));
         let m = bench::time(
             &format!(
                 "shard run ({nboards} boards, {}x{}, {SWEEPS} sweeps)",
@@ -59,7 +71,7 @@ fn main() {
             ),
             1,
             10,
-            || run_sharded(nboards, &global).1,
+            || run_sharded(nboards, &every, &global).1.virtual_time_s(),
         );
         let thr = bench::per_second(&m, cell_sweeps);
         println!("    -> {:.2} Mcell-sweeps/s coordinated", thr / 1e6);
@@ -85,6 +97,62 @@ fn main() {
         );
     }
     entries.push(("shard speedup-vs-boards".into(), obj(pairs)));
+
+    // communication-avoidance ablation: {block, split} on the 6-board
+    // ring, every configuration bit-identical to the reference
+    println!(
+        "shard blocking ablation ({ABLATION_BOARDS} boards, {}x{}, \
+         {SWEEPS} sweeps)",
+        SHAPE[0], SHAPE[1]
+    );
+    println!(
+        "    {:<18} {:>9} {:>12} {:>12} {:>12}",
+        "config", "exchanges", "halo MB", "halo wait s", "makespan s"
+    );
+    let mut ablation: Vec<(String, Value)> = Vec::new();
+    for (block, split) in
+        [(1, false), (2, false), (4, false), (2, true), (4, true)]
+    {
+        let spec = ShardSpec {
+            halo: block,
+            block,
+            split,
+            capacity_cells: None,
+        };
+        let (out, report) = run_sharded(ABLATION_BOARDS, &spec, &global);
+        assert_eq!(
+            out, reference,
+            "block={block} split={split} shard diverged"
+        );
+        let label = format!(
+            "block{block}{}",
+            if split { "+split" } else { "" }
+        );
+        println!(
+            "    {:<18} {:>9} {:>12.3} {:>12.6} {:>12.6}",
+            label,
+            report.halo.exchanges,
+            report.halo.bytes / 1e6,
+            report.halo.wait_s,
+            report.virtual_time_s()
+        );
+        ablation.push((
+            label,
+            obj(vec![
+                ("block", num(block as f64)),
+                ("split", num(if split { 1.0 } else { 0.0 })),
+                ("halo_exchanges", num(report.halo.exchanges as f64)),
+                ("halo_bytes", num(report.halo.bytes)),
+                ("halo_wait_s", num(report.halo.wait_s)),
+                ("makespan_s", num(report.virtual_time_s())),
+            ]),
+        ));
+    }
+    let ablation_refs: Vec<(&str, Value)> = ablation
+        .iter()
+        .map(|(k, v)| (k.as_str(), v.clone()))
+        .collect();
+    entries.push(("shard blocking-ablation".into(), obj(ablation_refs)));
 
     let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("..")

@@ -187,6 +187,136 @@ impl HaloOp {
     }
 }
 
+/// A band-restricted stencil sweep: apply `kernel` to axis-0 rows
+/// `[rows.0, rows.1)` of a sharded tile, reading the previous-parity
+/// tile buffer `src` and writing the band into `dst` (the task's sole
+/// map).  This is the body of the interior/boundary tasks the
+/// communication-avoiding sharded schedules emit (DESIGN.md §12): the
+/// tiles ping-pong between two buffers per sweep, so the interior task
+/// and the two boundary tasks of one sweep are order-independent — all
+/// read `src` (sweep `k-1`'s values), all write disjoint bands of
+/// `dst` — which is what lets the scheduler overlap interior compute
+/// with in-flight halo frames.
+///
+/// Like [`HaloOp`], the task maps only `dst`; `src` is read out-of-band
+/// from the shared environment (flow dependences guarantee its writer
+/// finished), so the present table never sees a host read the fabric
+/// would not perform.  The full tile geometry is baked in so a device
+/// can price the band from shape alone (estimate == executed duration
+/// without consulting buffer values).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BandSweep {
+    /// previous-parity tile buffer (read out-of-band)
+    pub src: String,
+    /// next-parity tile buffer (written — the task's sole map)
+    pub dst: String,
+    pub kernel: Kernel,
+    /// shape both tile buffers must have
+    pub tile_shape: Vec<usize>,
+    /// updated axis-0 rows `[r0, r1)`; `1 <= r0 < r1 <= rows-1`
+    pub rows: (usize, usize),
+}
+
+impl BandSweep {
+    /// Rows of the streamed sub-grid: the band plus one fringe row on
+    /// each side (the stencil radius).
+    pub fn sub_rows(&self) -> (usize, usize) {
+        (self.rows.0 - 1, self.rows.1 + 1)
+    }
+
+    /// Shape of the streamed sub-grid.
+    pub fn sub_shape(&self) -> Vec<usize> {
+        let mut s = self.tile_shape.clone();
+        s[0] = self.rows.1 + 1 - (self.rows.0 - 1);
+        s
+    }
+
+    /// Bytes of the streamed sub-grid — what the device moves and the
+    /// DES prices.
+    pub fn sub_bytes(&self) -> f64 {
+        (self.sub_shape().iter().product::<usize>() * 4) as f64
+    }
+
+    fn row_cells(&self) -> usize {
+        self.tile_shape[1..].iter().product::<usize>().max(1)
+    }
+
+    fn check_tile(&self, role: &str, g: &Grid) -> Result<()> {
+        if g.shape() != self.tile_shape.as_slice() {
+            bail!(
+                "band {role} '{}': tile shaped {:?}, band built for {:?}",
+                if role == "src" { &self.src } else { &self.dst },
+                g.shape(),
+                self.tile_shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Geometric sanity, checked at registration: the band must sit
+    /// strictly inside the tile (fringe rows exist on both sides).
+    pub fn validate(&self) -> Result<()> {
+        if self.tile_shape.len() != self.kernel.ndim() {
+            bail!(
+                "band on '{}': {} expects {}D but the tile is {}D",
+                self.dst,
+                self.kernel.name(),
+                self.kernel.ndim(),
+                self.tile_shape.len()
+            );
+        }
+        let rows = self.tile_shape.first().copied().unwrap_or(0);
+        let (r0, r1) = self.rows;
+        if r0 < 1 || r1 <= r0 || r1 > rows.saturating_sub(1) {
+            bail!(
+                "band on '{}': rows {r0}..{r1} invalid for a {rows}-row \
+                 tile (need 1 <= r0 < r1 <= {})",
+                self.dst,
+                rows.saturating_sub(1)
+            );
+        }
+        Ok(())
+    }
+
+    /// Copy the band's sub-grid (band rows plus the one-row fringe) out
+    /// of the source tile.
+    pub fn extract(&self, src: &Grid) -> Result<Grid> {
+        self.check_tile("src", src)?;
+        let rc = self.row_cells();
+        let (a, b) = self.sub_rows();
+        Grid::from_vec(&self.sub_shape(), src.data()[a * rc..b * rc].to_vec())
+    }
+
+    /// Write the swept sub-grid's interior rows back into the band of
+    /// the destination tile (the fringe rows are scratch — they carried
+    /// the stencil's neighbour reads and are discarded).
+    pub fn write_back(&self, dst: &mut Grid, swept: &Grid) -> Result<()> {
+        self.check_tile("dst", dst)?;
+        if swept.shape() != self.sub_shape().as_slice() {
+            bail!(
+                "band into '{}': swept sub-grid shaped {:?}, expected {:?}",
+                self.dst,
+                swept.shape(),
+                self.sub_shape()
+            );
+        }
+        let rc = self.row_cells();
+        let (r0, r1) = self.rows;
+        let n = (r1 - r0) * rc;
+        dst.data_mut()[r0 * rc..r0 * rc + n]
+            .copy_from_slice(&swept.data()[rc..rc + n]);
+        Ok(())
+    }
+
+    /// Host-side body: the band of `dst` gets `kernel` applied reading
+    /// `src`, via the bit-exact row-band kernel path.
+    pub fn sweep_into(&self, src: &Grid, dst: &mut Grid) -> Result<()> {
+        self.check_tile("src", src)?;
+        self.check_tile("dst", dst)?;
+        self.kernel.apply_rows_into(src, dst, self.rows.0, self.rows.1)
+    }
+}
+
 /// What a task body is, once variant-resolved.
 #[derive(Clone)]
 pub enum TaskFn {
@@ -200,6 +330,10 @@ pub enum TaskFn {
     /// natively by any device (the host copies rows; the VC709 plugin
     /// frames them over the fabric and prices the hops).
     Halo(HaloOp),
+    /// A band-restricted stencil sweep on a sharded tile — executed by
+    /// the host row-band kernel path or streamed as a sub-grid by a
+    /// device plugin.
+    Band(BandSweep),
 }
 
 impl std::fmt::Debug for TaskFn {
@@ -215,6 +349,15 @@ impl std::fmt::Debug for TaskFn {
                 op.dst,
                 op.dst_row0,
                 op.nrows
+            ),
+            TaskFn::Band(b) => write!(
+                f,
+                "Band({} -> {} rows {}..{} via {})",
+                b.src,
+                b.dst,
+                b.rows.0,
+                b.rows.1,
+                b.kernel.name()
             ),
         }
     }
@@ -246,6 +389,9 @@ impl FnRegistry {
             TaskFn::Halo(_) => {
                 bail!("'{name}' is a halo exchange, not a hardware IP")
             }
+            TaskFn::Band(_) => {
+                bail!("'{name}' is a band sweep, not a hardware IP")
+            }
         }
     }
 
@@ -253,6 +399,14 @@ impl FnRegistry {
     pub fn halo_of(&self, name: &str) -> Option<&HaloOp> {
         match self.fns.get(name) {
             Some(TaskFn::Halo(op)) => Some(op),
+            _ => None,
+        }
+    }
+
+    /// The band sweep registered as `name`, if it is one.
+    pub fn band_of(&self, name: &str) -> Option<&BandSweep> {
+        match self.fns.get(name) {
+            Some(TaskFn::Band(b)) => Some(b),
             _ => None,
         }
     }
@@ -380,5 +534,88 @@ mod tests {
         assert!(r.kernel_of("soft").is_err());
         // Debug impls don't panic
         let _ = format!("{:?}", r);
+    }
+
+    fn ramp(shape: &[usize]) -> Grid {
+        let n: usize = shape.iter().product();
+        Grid::from_vec(shape, (0..n).map(|v| (v as f32).sin()).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn band_registry_and_validation() {
+        let band = BandSweep {
+            src: "T".into(),
+            dst: "T.pong".into(),
+            kernel: Kernel::Laplace2d,
+            tile_shape: vec![8, 6],
+            rows: (2, 5),
+        };
+        band.validate().unwrap();
+        let mut r = FnRegistry::default();
+        r.register("b", TaskFn::Band(band.clone()));
+        assert_eq!(r.band_of("b"), Some(&band));
+        assert!(r.band_of("missing").is_none());
+        let err = r.kernel_of("b").unwrap_err().to_string();
+        assert!(err.contains("band sweep"), "{err}");
+        // fringe rows must exist: r0 == 0 and r1 == rows are invalid
+        for rows in [(0, 5), (2, 8), (3, 3)] {
+            let bad = BandSweep { rows, ..band.clone() };
+            assert!(bad.validate().is_err(), "rows {rows:?} accepted");
+        }
+        let wrong_dim = BandSweep {
+            kernel: Kernel::Laplace3d,
+            ..band.clone()
+        };
+        assert!(wrong_dim.validate().is_err());
+    }
+
+    #[test]
+    fn band_extract_sweep_writeback_matches_sweep_into() {
+        // The device path (extract sub-grid, sweep it whole, write the
+        // interior rows back) must be bit-identical to the host path
+        // (apply_rows_into on the full tile).
+        for (kernel, shape) in [
+            (Kernel::Diffusion2d, vec![9, 5]),
+            (Kernel::Laplace3d, vec![7, 4, 4]),
+        ] {
+            let band = BandSweep {
+                src: "T".into(),
+                dst: "T.pong".into(),
+                kernel,
+                tile_shape: shape.clone(),
+                rows: (2, shape[0] - 2),
+            };
+            band.validate().unwrap();
+            let src = ramp(&shape);
+            let mut host_dst = ramp(&shape);
+            band.sweep_into(&src, &mut host_dst).unwrap();
+
+            let sub = band.extract(&src).unwrap();
+            let mut swept = sub.clone();
+            kernel.apply_into(&sub, &mut swept).unwrap();
+            let mut dev_dst = ramp(&shape);
+            band.write_back(&mut dev_dst, &swept).unwrap();
+
+            assert_eq!(host_dst.data(), dev_dst.data(), "{kernel:?}");
+        }
+    }
+
+    #[test]
+    fn band_shape_mismatches_are_named() {
+        let band = BandSweep {
+            src: "T".into(),
+            dst: "T.pong".into(),
+            kernel: Kernel::Laplace2d,
+            tile_shape: vec![8, 6],
+            rows: (2, 5),
+        };
+        let wrong = Grid::zeros(&[7, 6]).unwrap();
+        let err = band.extract(&wrong).unwrap_err().to_string();
+        assert!(err.contains("band src"), "{err}");
+        let mut tile = Grid::zeros(&[8, 6]).unwrap();
+        let bad_sub = Grid::zeros(&[3, 6]).unwrap();
+        let err = band.write_back(&mut tile, &bad_sub).unwrap_err().to_string();
+        assert!(err.contains("swept sub-grid"), "{err}");
     }
 }

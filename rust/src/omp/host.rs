@@ -13,6 +13,7 @@ use super::dataenv::BatchCtx;
 use super::device::{DataEnv, DevicePlugin, DeviceReport, FnRegistry, TaskFn};
 use super::graph::TaskGraph;
 use super::task::TaskId;
+use crate::stencil::Grid;
 
 pub struct HostDevice {
     pub nthreads: usize,
@@ -194,6 +195,26 @@ fn worker(
                     let mut dst = private.take(&op.dst)?;
                     op.write_dst(&mut dst, &cells)?;
                     private.put(&op.dst, dst);
+                    Ok(())
+                })
+            }
+            Ok(TaskFn::Band(band)) => {
+                // Same out-of-band read discipline as halos: the band
+                // maps only its destination (next-parity) buffer; the
+                // source (previous-parity) buffer is snapshotted from
+                // the shared environment under the lock — flow
+                // dependences guarantee its last writer retired — and
+                // the band rows are swept into the privately-held
+                // destination via the bit-exact row-band kernel path.
+                let band = band.clone();
+                let src = {
+                    let st = lock_state(state);
+                    st.env.get(&band.src).map(Grid::clone)
+                };
+                src.and_then(|src| {
+                    let mut dst = private.take(&band.dst)?;
+                    band.sweep_into(&src, &mut dst)?;
+                    private.put(&band.dst, dst);
                     Ok(())
                 })
             }
@@ -409,6 +430,50 @@ mod tests {
         assert!(env.get("B").unwrap().data()[3..].iter().all(|&v| v == 0.0));
         // src untouched
         assert_eq!(env.get("A").unwrap().data()[9], 9.0);
+    }
+
+    #[test]
+    fn band_task_sweeps_rows_into_next_parity_buffer() {
+        use crate::omp::device::BandSweep;
+        use crate::stencil::Kernel;
+        let shape = vec![8, 5];
+        let band = BandSweep {
+            src: "T".into(),
+            dst: "T.pong".into(),
+            kernel: Kernel::Laplace2d,
+            tile_shape: shape.clone(),
+            rows: (2, 6),
+        };
+        let mut fns = FnRegistry::default();
+        fns.register("band", TaskFn::Band(band.clone()));
+        let mut g = TaskGraph::new();
+        let id = g.add(Task {
+            id: TaskId(0),
+            base_name: "band".into(),
+            fn_name: "band".into(),
+            device: HOST_DEVICE.into(),
+            // only the destination parity buffer is mapped; the source
+            // parity buffer is read out-of-band
+            maps: vec![(MapDir::ToFrom, "T.pong".into())],
+            deps_in: vec![],
+            deps_out: vec![],
+            nowait: true,
+        });
+        let mut src = Grid::zeros(&shape).unwrap();
+        for (i, v) in src.data_mut().iter_mut().enumerate() {
+            *v = (i as f32).cos();
+        }
+        let pong = src.clone();
+        let mut env = DataEnv::new();
+        env.insert("T", src.clone());
+        env.insert("T.pong", pong.clone());
+        let mut host = HostDevice::new(2);
+        host.run_batch(&g, &[id], &mut env, &fns, &BatchCtx::at(0.0)).unwrap();
+        let mut want = pong;
+        band.sweep_into(&src, &mut want).unwrap();
+        assert_eq!(env.get("T.pong").unwrap().data(), want.data());
+        // source parity buffer untouched
+        assert_eq!(env.get("T").unwrap().data(), src.data());
     }
 
     #[test]

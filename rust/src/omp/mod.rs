@@ -42,13 +42,17 @@
 //!   [`Executable`]s, bounded-queue admission control, weighted fair
 //!   queueing across tenants, and residency-affine placement of hot
 //!   working sets.
-//! * [`shard`] — cluster-wide grid sharding (DESIGN.md §11): 1-D row
-//!   decomposition of one logical grid into per-device tiles with
-//!   configurable halo width, per-sweep halo-exchange tasks emitted
-//!   into the ordinary task graph, and topology-priced inter-FPGA
-//!   transfers ([`crate::hw::topology`]), so a grid larger than any one
-//!   board runs across the cluster bit-identically to the host
-//!   reference.
+//! * [`shard`] — cluster-wide grid sharding (DESIGN.md §11–§12): 1-D
+//!   row decomposition of one logical grid into per-device tiles with
+//!   configurable halo width, halo-exchange tasks emitted into the
+//!   ordinary task graph, and topology-priced inter-FPGA transfers
+//!   ([`crate::hw::topology`]), so a grid larger than any one board
+//!   runs across the cluster bit-identically to the host reference.
+//!   Two communication-avoiding schedule transformations compose on
+//!   top: temporal halo blocking (`block` sweeps per exchange round
+//!   under a `halo >= block` ghost band) and interior/boundary
+//!   splitting (ping-pong [`BandSweep`] tasks whose interior chain
+//!   never waits on the fabric), both bit-identity-preserving.
 
 pub mod dataenv;
 pub mod device;
@@ -73,12 +77,13 @@ pub use program::{
     BufferSlot, Executable, PlanStats, Program, EXECUTABLE_FORMAT,
 };
 pub use device::{
-    DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel, FnRegistry,
-    HaloOp, TaskFn, HOST_DEVICE,
+    BandSweep, DataEnv, DeviceId, DevicePlugin, DeviceReport, DeviceSel,
+    FnRegistry, HaloOp, TaskFn, HOST_DEVICE,
 };
 pub use graph::TaskGraph;
 pub use runtime::{
-    OmpReport, OmpRuntime, SingleCtx, TargetBuilder, WritebackEvent,
+    HaloReport, OmpReport, OmpRuntime, SingleCtx, TargetBuilder,
+    WritebackEvent,
 };
 pub use sched::{BatchDag, Dispatcher, Run};
 pub use shard::{ShardPlan, ShardSpec, ShardedGrid};

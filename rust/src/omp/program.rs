@@ -1283,6 +1283,42 @@ impl OmpRuntime {
                 .iter()
                 .flat_map(|&r| runs[r].tasks.iter().copied())
                 .collect();
+            // Halo-wait attribution (DESIGN.md §12): time this step sat
+            // released-but-stalled on a halo predecessor that finished
+            // later than every other gate (non-halo predecessors, the
+            // recovery floor, and the device's own availability).  This
+            // is the serialization temporal blocking shrinks and the
+            // interior/boundary split hides — zero when ghosts landed
+            // before the tile was ready anyway.
+            let is_halo_run = |r: usize| {
+                runs[r].tasks.iter().any(|&t| {
+                    self.fns.halo_of(&graph.task(t).fn_name).is_some()
+                })
+            };
+            let halo_rel = runs[primary]
+                .preds
+                .iter()
+                .filter(|&&p| is_halo_run(p))
+                .map(|&p| finish[p])
+                .fold(f64::NEG_INFINITY, f64::max);
+            let halo_wait = if halo_rel.is_finite() {
+                let other_rel = runs[primary]
+                    .preds
+                    .iter()
+                    .filter(|&&p| !is_halo_run(p))
+                    .map(|&p| finish[p])
+                    .fold(runs[primary].floor, f64::max);
+                let avail = dev_free.get(&dev.0).copied().unwrap_or(0.0);
+                (halo_rel - other_rel.max(avail)).max(0.0)
+            } else {
+                0.0
+            };
+            let halo_exchanges = ids
+                .iter()
+                .filter(|&&t| {
+                    self.fns.halo_of(&graph.task(t).fn_name).is_some()
+                })
+                .count();
             // Forced writebacks against the live table: a buffer this
             // batch reads whose newest copy sits dirty on another
             // device is flushed first, pushing the release back.
@@ -1325,6 +1361,16 @@ impl OmpRuntime {
             };
             if dev != HOST_DEVICE {
                 self.faults.batch_completed(dev);
+            }
+            // counters accrue only for steps that actually executed — a
+            // failed dispatch is re-run by recovery and must not count
+            // twice.  Bytes are what the executing plugin shipped over
+            // the fabric for this batch's halos (`halo-wire` ≡
+            // `halo-net`, §11).
+            report.halo.wait_s += halo_wait;
+            report.halo.exchanges += halo_exchanges;
+            if let Some(m) = rep.stats.modules.get("halo-wire") {
+                report.halo.bytes += m.bytes;
             }
             // a plugin must not finish before it was released; normalize
             // so virtual_time_s() agrees with the release propagation

@@ -144,6 +144,23 @@ pub struct WritebackEvent {
     pub seconds: f64,
 }
 
+/// Halo-communication counters for one parallel region (sharded
+/// stencils, DESIGN.md §11–12).  Zeroed when the region ships no halos.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct HaloReport {
+    /// halo-exchange tasks executed (one per directed tile boundary per
+    /// exchange round — temporal blocking divides this by ~`block`)
+    pub exchanges: usize,
+    /// payload bytes shipped across the fabric (`halo-wire` bytes; the
+    /// same owned rows regardless of blocking)
+    pub bytes: f64,
+    /// virtual seconds compute batches spent released-but-stalled
+    /// waiting for a halo predecessor that finished later than every
+    /// non-halo gate — the serialization the interior/boundary split
+    /// exists to hide
+    pub wait_s: f64,
+}
+
 /// Report of one parallel region.
 #[derive(Debug, Default)]
 pub struct OmpReport {
@@ -159,6 +176,8 @@ pub struct OmpReport {
     pub recovery: Vec<RecoveryEvent>,
     /// the aggregate recovery bill (zeroed on a failure-free run)
     pub recovery_cost: RecoveryCost,
+    /// halo-communication counters (zeroed when no halos ran)
+    pub halo: HaloReport,
 }
 
 impl OmpReport {
@@ -346,6 +365,24 @@ impl OmpRuntime {
     pub fn register_halo(&mut self, name: &str, op: crate::omp::HaloOp) {
         self.bump_epoch(format!("register_halo('{name}')"));
         self.fns.register(name, TaskFn::Halo(op));
+    }
+
+    /// Register a band-restricted stencil sweep under `name`
+    /// (interior/boundary split sharded schedules, DESIGN.md §12).  A
+    /// task submitted with this base name applies the band's kernel to
+    /// its row range, reading the previous-parity tile buffer
+    /// out-of-band and writing the band of the mapped destination
+    /// buffer.  Errors if the band geometry is malformed.  Invalidates
+    /// compiled plans like any function-table change.
+    pub fn register_band(
+        &mut self,
+        name: &str,
+        band: crate::omp::BandSweep,
+    ) -> Result<()> {
+        band.validate()?;
+        self.bump_epoch(format!("register_band('{name}')"));
+        self.fns.register(name, TaskFn::Band(band));
+        Ok(())
     }
 
     /// `#pragma omp declare variant (base) match(device=arch(<arch>))`

@@ -1,5 +1,7 @@
-//! Cluster-wide grid sharding (DESIGN.md §11): run one logical grid
-//! that fits on **no single board** across several FPGAs.
+//! Cluster-wide grid sharding (DESIGN.md §11) and communication-
+//! avoiding sharded schedules (DESIGN.md §12): run one logical grid
+//! that fits on **no single board** across several FPGAs, with the
+//! inter-FPGA fabric held off the critical path.
 //!
 //! Three pieces, deliberately thin:
 //!
@@ -7,42 +9,100 @@
 //!   devices owns a contiguous slab of rows, padded with `halo` ghost
 //!   rows per shared boundary.  The plan is pure geometry: it cuts a
 //!   grid into tile buffers ([`ShardPlan::scatter`]), stitches owned
-//!   rows back ([`ShardPlan::gather`]), and enumerates the directed
-//!   halo exchanges a sweep needs ([`ShardPlan::halo_ops`]).
-//! * [`ShardedGrid`] — the runtime binding: registers one software
-//!   sweep function (hardware variant declared for vc709) plus one
-//!   [`HaloOp`] per directed boundary, then emits the whole sweep/
-//!   exchange schedule as **ordinary tasks** with `depend(in/out)`
-//!   clauses.  Nothing downstream knows sharding exists: condensation,
+//!   rows back ([`ShardPlan::gather`]), enumerates the directed halo
+//!   exchanges a round needs ([`ShardPlan::halo_ops`]), and computes
+//!   the trapezoid row bands blocked/split schedules sweep
+//!   ([`ShardPlan::sweep_band`], [`ShardPlan::interior_band`]).
+//! * [`ShardedGrid`] — the runtime binding: registers the sweep bodies
+//!   (whole-tile kernel, or per-band [`BandSweep`]s when splitting)
+//!   plus one [`HaloOp`] per directed boundary, then emits the whole
+//!   schedule as **ordinary tasks** with `depend(in/out)` clauses.
+//!   Nothing downstream knows sharding exists: condensation,
 //!   `device(any)` placement, the plan cache, fault recovery and the
 //!   serving front end all see plain dependent tasks.
 //! * the fabric model ([`crate::hw::topology`]) — the executing plugin
 //!   prices each exchange by the configured topology's hop count, so a
 //!   ring and a crossbar produce different makespans for the same
-//!   schedule, and `estimate_batch_s == run_batch` extends to halos.
+//!   schedule, and `estimate_batch_s == run_batch` extends to halos
+//!   and band sweeps.
 //!
-//! Dependence wiring (the part worth writing down): with `K` sweeps
-//! over `n` tiles, sweep task `S(k,d)` writes variable `sw[k][d]`;
-//! exchange `H(k, d->e)` (emitted after every sweep but the last)
-//! reads `sw[k][d]` (flow: the rows it ships) **and** `sw[k][e]`
-//! (anti: it overwrites tile `e`'s ghost rows, which `S(k,e)` read),
-//! and writes `h[k][d->e]`.  `S(k+1,e)` reads `sw[k][e]` plus every
-//! `h[k][..]` touching `e` — including `e`'s *outgoing* edges, which
-//! carry the write-after-read ordering on `e`'s boundary rows.  Every
-//! variable has exactly one writer, so the graph is pure flow
+//! ## Temporal halo blocking (`ShardSpec::block`)
+//!
+//! With halo width `H >= B`, tiles run `B` consecutive local sweeps
+//! per **exchange round** instead of exchanging after every sweep.
+//! Within a round the valid region shrinks one row per sweep from each
+//! ghost edge (the trapezoid): after in-round sweep `s`, the rows that
+//! hold the unsharded computation's values are `[s, nrows - s)` next
+//! to a shared boundary — so after `B <= H` sweeps the contamination
+//! is still confined to the ghost rows, every owned row is exact, and
+//! one `H`-deep exchange refreshes the ghosts for the next round.
+//! `K` sweeps therefore need `ceil(K/B) - 1` exchange rounds (the
+//! greedy blocking: rounds of `B` from sweep 0, no exchange after the
+//! last round) instead of `K - 1`, shipping ~`B×` fewer frames and
+//! paying the per-exchange MAC/CRC + hop latency ~`B×` less often,
+//! while each round still ships the same owned rows.
+//!
+//! ## Interior/boundary splitting (`ShardSpec::split`)
+//!
+//! Unsplit, a tile's first sweep of a round cannot start until its
+//! ghosts land — communication serializes against the whole tile.
+//! Splitting emits each sweep as an **interior** [`BandSweep`] (rows
+//! that need no fresh ghosts) plus up to two thin **boundary** bands
+//! (`halo` rows next to each shared edge).  The interior chain depends
+//! only on the tile's own previous sweep — never on an exchange — so
+//! the DES overlaps interior compute with in-flight halo frames;
+//! only the thin boundary bands wait for ghosts.
+//!
+//! Split sweeps ping-pong between two per-tile buffers (`tile` /
+//! `tile.pong`): sweep `k` reads parity buffer `P(k) = k % 2` and
+//! writes its bands into `P(k+1)`.  This is what keeps the same-sweep
+//! interior and boundary tasks order-independent — all read the
+//! previous parity, all write disjoint bands of the next — where an
+//! in-place split would make them racy.  Each band task maps only its
+//! destination buffer and reads the source parity out-of-band (the
+//! [`HaloOp`] discipline), exchanges write ghosts into the parity
+//! buffer the next round reads, and the gather reads `P(K)`.
+//!
+//! ## Dependence wiring
+//!
+//! Unsplit, with `K` sweeps over `n` tiles and block `B`: sweep task
+//! `S(k,d)` writes `sw[k][d]`; within a round it reads only
+//! `sw[k-1][d]`; at a round start it also reads every `h[r-1][j]`
+//! touching `d` — incoming edges refreshed its ghosts (flow), outgoing
+//! edges read its boundary rows (anti).  Exchange `X(r, d->e)` reads
+//! `sw[k][d]` (flow) and `sw[k][e]` (anti) for `k` the round's last
+//! sweep, and writes `h[r][j]`.  With `B = 1` this is exactly the
+//! every-sweep wiring of §11.
+//!
+//! Split: `I(k,d)` writes `iv[k][d]` and reads `iv[k-1][d]` (plus the
+//! previous sweep's boundary bands at a round start — never a *fresh*
+//! exchange: the interior's reads start at row `lo = H`, and an
+//! exchange writes rows `[0, H)`.  The one exchange edge the interior
+//! does carry is an anti-dependence with a full sweep of slack: the
+//! first sweep writing a just-exchanged parity buffer orders after
+//! that round's outgoing exchanges, which shipped owned rows from that
+//! same buffer).  Boundary band `B_lo(k,d)` reads
+//! `iv[k][d]` (same-buffer ordering), `blo[k-1][d]`, `iv[k-1][d]`,
+//! and — at a round start — the incoming exchange `h[r-1][j]` whose
+//! ghosts it consumes.  `B_hi` is symmetric (and ordered after `B_lo`
+//! where both exist).  An exchange reads every band of the round's
+//! last sweep on **both** endpoint tiles: flow on the source (the
+//! owned rows it ships), anti + buffer ordering on the destination
+//! (it overwrites ghost rows of the parity buffer those bands wrote).
+//! Every variable has exactly one writer, so the graph stays pure flow
 //! dependences and the scheduler needs no special cases.
 //!
-//! Bit-identity: tiles exchange after **every** sweep, ghost rows are
-//! refreshed from the neighbour's freshly-computed owned rows before
-//! anyone reads them again, and the stencils are radius-1 with
-//! copy-boundary semantics — so each owned row always sees exactly the
-//! values the unsharded computation would, and the gathered result is
-//! bit-identical to the single-grid host reference (property-tested in
-//! `tests/props_shard.rs`).
+//! Bit-identity: the trapezoid argument above, plus radius-1 stencils
+//! with copy-boundary semantics (global edge rows are written by
+//! nobody and stay at their scattered values in both parity buffers),
+//! means each owned row always sees exactly the values the unsharded
+//! computation would — so every `{block, split}` configuration gathers
+//! a result bit-identical to the single-grid host reference
+//! (property-tested in `tests/props_shard.rs`).
 
 use anyhow::{bail, Result};
 
-use super::device::{DataEnv, DeviceId, HaloOp};
+use super::device::{BandSweep, DataEnv, DeviceId, HaloOp};
 use super::dataenv::{EnterMap, ExitMap};
 use super::runtime::{OmpReport, OmpRuntime, SingleCtx};
 use super::task::{DepVar, MapDir, TaskId};
@@ -54,17 +114,26 @@ const SHARD_HW_ARCH: &str = "vc709";
 /// Decomposition parameters.
 #[derive(Debug, Clone)]
 pub struct ShardSpec {
-    /// Ghost-row width per shared boundary.  Must be >= 1: the stencils
-    /// are radius-1, so one refreshed ghost row per sweep is the
-    /// minimum that keeps owned rows exact.  Wider halos are legal
-    /// (they ship more bytes per exchange — useful for studying the
-    /// communication/computation trade-off) and must not change the
-    /// numerics (property-tested).
+    /// Ghost-row width per shared boundary.  Must be >= `block`: the
+    /// stencils are radius-1, so each in-round sweep consumes one ghost
+    /// row of validity.  Wider halos are legal (they ship more bytes
+    /// per exchange — the communication/computation trade-off) and must
+    /// not change the numerics (property-tested).
     pub halo: usize,
+    /// Temporal blocking factor: sweeps per halo-exchange round.
+    /// `1` reproduces the §11 every-sweep schedule exactly; `B > 1`
+    /// (with `halo >= B`) cuts the exchange count ~`B×`.
+    pub block: usize,
+    /// Emit each sweep as an interior band plus thin boundary bands
+    /// (ping-pong buffered) so interior compute overlaps in-flight
+    /// halo frames, instead of one whole-tile task that stalls on its
+    /// ghosts.
+    pub split: bool,
     /// Per-board tile capacity in cells, if the deployment is
     /// capacity-limited.  [`ShardPlan::decompose`] rejects any tile
-    /// (owned rows + ghosts) that would not fit — the named error the
-    /// "grid larger than one board" demos pivot on.
+    /// (owned rows + ghosts; ×2 when `split` ping-pongs two buffers)
+    /// that would not fit — the named error the "grid larger than one
+    /// board" demos pivot on.
     pub capacity_cells: Option<usize>,
 }
 
@@ -72,6 +141,8 @@ impl Default for ShardSpec {
     fn default() -> Self {
         ShardSpec {
             halo: 1,
+            block: 1,
+            split: false,
             capacity_cells: None,
         }
     }
@@ -108,6 +179,10 @@ pub struct ShardPlan {
     pub shape: Vec<usize>,
     /// Ghost width per shared boundary.
     pub halo: usize,
+    /// Sweeps per exchange round (temporal blocking factor).
+    pub block: usize,
+    /// Interior/boundary splitting (ping-pong band schedule).
+    pub split: bool,
     pub tiles: Vec<Tile>,
     /// Cells per row (product of the trailing dimensions).
     row_cells: usize,
@@ -115,9 +190,10 @@ pub struct ShardPlan {
 
 impl ShardPlan {
     /// Split `shape` into `ndev` row slabs, as even as possible (the
-    /// first `rows % ndev` tiles get one extra row).  Errors are named:
-    /// a grid too small to give every tile `max(2, halo)` owned rows,
-    /// or a tile that exceeds `spec.capacity_cells`, never a panic.
+    /// first `rows % ndev` tiles get one extra row).  Errors are named
+    /// and state the fix: a block factor the halo cannot feed, a grid
+    /// too small for the trapezoid, or a tile that exceeds
+    /// `spec.capacity_cells` — never a panic.
     pub fn decompose(
         buffer: &str,
         shape: &[usize],
@@ -136,21 +212,46 @@ impl ShardPlan {
                  stencil; use halo >= 1"
             );
         }
+        if spec.block == 0 {
+            bail!(
+                "shard '{buffer}': block 0 would never sweep; use \
+                 block >= 1"
+            );
+        }
+        if spec.halo < spec.block {
+            bail!(
+                "shard '{buffer}': temporal blocking runs {} sweeps per \
+                 exchange but the halo is only {} rows deep — the \
+                 trapezoid would eat into owned rows; raise halo to {} \
+                 or lower block to {}",
+                spec.block,
+                spec.halo,
+                spec.block,
+                spec.halo
+            );
+        }
         let rows = shape[0];
         let row_cells = shape[1..].iter().product::<usize>().max(1);
         // each tile must own at least `halo` rows (an exchange copies
         // owned rows only) and at least 2 (so no owned row is both a
-        // copy-boundary of its own tile and somebody's ghost source)
-        let min_owned = spec.halo.max(2);
+        // copy-boundary of its own tile and somebody's ghost source);
+        // split schedules additionally need `2*block + 1` owned rows so
+        // the interior band stays non-empty at the trapezoid's
+        // narrowest sweep and boundary-band reads stay covered
+        let mut min_owned = spec.halo.max(2);
+        if spec.split {
+            min_owned = min_owned.max(2 * spec.block + 1);
+        }
         if rows < ndev * min_owned {
             bail!(
                 "shard '{buffer}': {rows} rows cannot give {ndev} tiles \
-                 >= {min_owned} owned rows each (shrink the device count \
-                 or the halo)"
+                 >= {min_owned} owned rows each (shrink the device count, \
+                 the halo, or the block factor)"
             );
         }
         let base = rows / ndev;
         let rem = rows % ndev;
+        let buffers = if spec.split { 2 } else { 1 };
         let mut tiles = Vec::with_capacity(ndev);
         let mut row0 = 0usize;
         for d in 0..ndev {
@@ -163,13 +264,14 @@ impl ShardPlan {
                 hi: if d + 1 < ndev { spec.halo } else { 0 },
             };
             if let Some(cap) = spec.capacity_cells {
-                let need = tile.nrows() * row_cells;
+                let need = tile.nrows() * row_cells * buffers;
                 if need > cap {
                     bail!(
                         "shard '{buffer}': tile {d} needs {need} cells \
-                         (owned {} + ghosts) but a board holds {cap}; \
+                         (owned {} + ghosts{}) but a board holds {cap}; \
                          add boards",
-                        tile.owned
+                        tile.owned,
+                        if spec.split { ", ping-pong pair" } else { "" }
                     );
                 }
             }
@@ -180,6 +282,8 @@ impl ShardPlan {
             buffer: buffer.to_string(),
             shape: shape.to_vec(),
             halo: spec.halo,
+            block: spec.block,
+            split: spec.split,
             tiles,
             row_cells,
         })
@@ -193,6 +297,14 @@ impl ShardPlan {
         self.row_cells
     }
 
+    /// Exchange-round count for `sweeps` total sweeps: greedy rounds of
+    /// `block` from sweep 0 (the last round may be short).  Exchanges
+    /// happen **between** rounds, so a run performs `rounds - 1`
+    /// exchange rounds — `sweeps - 1` at `block = 1`, matching §11.
+    pub fn rounds(&self, sweeps: usize) -> usize {
+        sweeps.div_ceil(self.block)
+    }
+
     /// Shape of tile `d`'s buffer (ghost rows included).
     pub fn tile_shape(&self, d: usize) -> Vec<usize> {
         let mut s = self.shape.clone();
@@ -200,7 +312,8 @@ impl ShardPlan {
         s
     }
 
-    /// Largest tile buffer, in cells — what a board must hold.
+    /// Largest tile buffer, in cells.  With `split` a board holds two
+    /// of these (the ping-pong pair).
     pub fn max_tile_cells(&self) -> usize {
         self.tiles
             .iter()
@@ -209,9 +322,52 @@ impl ShardPlan {
             .unwrap_or(0)
     }
 
+    /// Name of tile `d`'s parity-`p` buffer: the tile itself for parity
+    /// 0, its ping-pong shadow for parity 1.  Split sweeps `k` read
+    /// parity `k % 2` and write parity `(k+1) % 2`; unsplit schedules
+    /// only ever touch parity 0.
+    pub fn tile_buffer(&self, d: usize, parity: usize) -> String {
+        if parity == 0 {
+            self.tiles[d].name.clone()
+        } else {
+            format!("{}.pong", self.tiles[d].name)
+        }
+    }
+
+    /// The whole row band in-round sweep `s` may validly write on tile
+    /// `d` (tile-buffer rows, half-open): the trapezoid shrinks one row
+    /// per sweep from each **shared** edge, while global edges hold
+    /// copy-boundary rows that are never written.
+    pub fn sweep_band(&self, d: usize, s: usize) -> (usize, usize) {
+        let t = &self.tiles[d];
+        let nrows = t.nrows();
+        let u0 = if t.lo > 0 { s + 1 } else { 1 };
+        let u1 = if t.hi > 0 { nrows - 1 - s } else { nrows - 1 };
+        (u0, u1)
+    }
+
+    /// The interior sub-band of [`ShardPlan::sweep_band`]: rows whose
+    /// in-round sweep-`s` update reads nothing a fresh exchange wrote —
+    /// `halo` rows in from each shared edge's band start.  What remains
+    /// on each side (`[u0, i0)` / `[i1, u1)`, each exactly `halo` rows
+    /// next to a shared edge) is that side's boundary band.
+    pub fn interior_band(&self, d: usize, s: usize) -> (usize, usize) {
+        let t = &self.tiles[d];
+        let i0 = if t.lo > 0 { t.lo + s + 1 } else { 1 };
+        let i1 = if t.hi > 0 {
+            t.lo + t.owned - 1 - s
+        } else {
+            t.nrows() - 1
+        };
+        (i0, i1)
+    }
+
     /// Cut `global` into per-tile buffers (owned slab plus ghost rows,
     /// seeded from the neighbours' initial values) and insert them into
-    /// `env` under the tile names.
+    /// `env` under the tile names.  Split plans also seed each tile's
+    /// ping-pong shadow with the same initial values: band sweeps only
+    /// ever write the trapezoid, so global-edge copy-boundary rows must
+    /// be present — and constant — in **both** parity buffers.
     pub fn scatter(&self, global: &Grid, env: &mut DataEnv) -> Result<()> {
         if global.shape() != self.shape.as_slice() {
             bail!(
@@ -226,24 +382,36 @@ impl ShardPlan {
             let start = (t.row0 - t.lo) * self.row_cells;
             let end = (t.row0 + t.owned + t.hi) * self.row_cells;
             let g = Grid::from_vec(&self.tile_shape(d), data[start..end].to_vec())?;
+            if self.split {
+                env.insert(&self.tile_buffer(d, 1), g.clone());
+            }
             env.insert(&t.name, g);
         }
         Ok(())
     }
 
     /// Stitch every tile's **owned** rows back into one grid (ghost
-    /// rows are scratch and never leave the tiles).
+    /// rows are scratch and never leave the tiles).  Reads the parity-0
+    /// buffers; split schedules gather via
+    /// [`ShardPlan::gather_parity`] with the final sweep's parity.
     pub fn gather(&self, env: &DataEnv) -> Result<Grid> {
+        self.gather_parity(env, 0)
+    }
+
+    /// [`ShardPlan::gather`] from the given parity's buffers — after
+    /// `K` split sweeps the result lives in parity `K % 2`.
+    pub fn gather_parity(&self, env: &DataEnv, parity: usize) -> Result<Grid> {
         let cells = self.shape.iter().product::<usize>();
         let mut out = vec![0.0f32; cells];
         for (d, t) in self.tiles.iter().enumerate() {
-            let g = env.get(&t.name)?;
+            let name = self.tile_buffer(d, parity);
+            let g = env.get(&name)?;
             if g.shape() != self.tile_shape(d).as_slice() {
                 bail!(
                     "shard '{}': tile '{}' came back shaped {:?}, \
                      expected {:?}",
                     self.buffer,
-                    t.name,
+                    name,
                     g.shape(),
                     self.tile_shape(d)
                 );
@@ -256,11 +424,13 @@ impl ShardPlan {
         Grid::from_vec(&self.shape, out)
     }
 
-    /// The directed halo exchanges one sweep round needs: for every
+    /// The directed halo exchanges one exchange round needs: for every
     /// shared boundary `d | d+1`, tile `d`'s top `halo` owned rows
     /// refresh `d+1`'s low ghosts, and `d+1`'s bottom `halo` owned rows
     /// refresh `d`'s high ghosts.  Fabric slot = tile index, so the
-    /// topology prices each op by real board distance.
+    /// topology prices each op by real board distance.  The same owned
+    /// rows ship regardless of `block` — blocking changes how often,
+    /// not what.
     pub fn halo_ops(&self) -> Vec<HaloOp> {
         let mut ops = Vec::new();
         for d in 0..self.tiles.len().saturating_sub(1) {
@@ -291,6 +461,15 @@ impl ShardPlan {
     }
 }
 
+/// The registered band-function names of one `(tile, parity, in-round
+/// sweep)` slot: the interior band plus the boundary bands that exist
+/// on this tile's shared edges.
+struct TileBandFns {
+    interior: String,
+    lo: Option<String>,
+    hi: Option<String>,
+}
+
 /// A [`ShardPlan`] bound to a runtime: functions registered, dependence
 /// variables allocated, ready to emit the sweep/exchange schedule into
 /// any `parallel` region (any number of times — the emitted graph is
@@ -301,22 +480,40 @@ pub struct ShardedGrid {
     /// receives its incoming halos).
     devices: Vec<DeviceId>,
     sweeps: usize,
+    rounds: usize,
+    /// Whole-tile sweep base function (unsplit schedules).
     sweep_fn: String,
+    /// Unsplit halo base names, indexed like `ops`.
     halo_fns: Vec<String>,
+    /// Split halo base names per parity, indexed like `ops`.
+    halo_fns_p: [Vec<String>; 2],
+    /// Split band names: `band_fns[d][parity][s]`.
+    band_fns: Vec<Vec<Vec<TileBandFns>>>,
+    /// Index into `ops` of tile `d`'s incoming low-ghost exchange.
+    in_lo: Vec<Option<usize>>,
+    /// Index into `ops` of tile `d`'s incoming high-ghost exchange.
+    in_hi: Vec<Option<usize>>,
     ops: Vec<HaloOp>,
-    /// `sw[k][d]`: written by sweep `k` of tile `d`.
+    /// `sw[k][d]`: written by whole-tile sweep `k` of tile `d`.
     sw: Vec<Vec<DepVar>>,
-    /// `h[k][j]`: written by exchange `j` after sweep `k`.
+    /// `iv[k][d]`: written by the interior band of split sweep `k`.
+    iv: Vec<Vec<DepVar>>,
+    /// `blo[k][d]` / `bhi[k][d]`: written by the boundary bands (only
+    /// meaningful where the tile has the matching shared edge).
+    blo: Vec<Vec<DepVar>>,
+    bhi: Vec<Vec<DepVar>>,
+    /// `h[r][j]`: written by exchange `j` after round `r`.
     h: Vec<Vec<DepVar>>,
 }
 
 impl ShardedGrid {
-    /// Bind `plan` to `rt`: register the sweep base function (software
-    /// fallback that applies `kernel` to whatever tile the task maps,
-    /// plus a vc709 hardware variant), register every directed halo op
-    /// under its own base name, and allocate the dependence variables
-    /// for `sweeps` rounds.  Registration bumps the runtime epoch, so
-    /// stale compiled plans invalidate by name.
+    /// Bind `plan` to `rt`: register the sweep bodies (a whole-tile
+    /// software function with a vc709 hardware variant, or one
+    /// [`BandSweep`] per `(tile, parity, in-round sweep, band)` when
+    /// splitting), register every directed halo op under its own base
+    /// name (per read-parity when splitting), and allocate the
+    /// dependence variables for `sweeps` sweeps.  Registration bumps
+    /// the runtime epoch, so stale compiled plans invalidate by name.
     pub fn install(
         rt: &mut OmpRuntime,
         plan: ShardPlan,
@@ -335,47 +532,153 @@ impl ShardedGrid {
         if sweeps == 0 {
             bail!("shard '{}': need at least one sweep", plan.buffer);
         }
-        let sweep_fn = format!("{}.sweep", plan.buffer);
-        rt.register_software(&sweep_fn, move |env: &mut DataEnv| {
-            // the private environment holds exactly the task's mapped
-            // buffers — for a sweep, the one tile it advances
-            let names: Vec<String> =
-                env.names().iter().map(|s| s.to_string()).collect();
-            for name in names {
-                let g = env.take(&name)?;
-                env.put(&name, kernel.apply(&g)?);
-            }
-            Ok(())
-        });
-        rt.declare_hw_variant(
-            &sweep_fn,
-            SHARD_HW_ARCH,
-            &format!("{sweep_fn}.{SHARD_HW_ARCH}"),
-            kernel,
-        );
-        let ops = plan.halo_ops();
-        let mut halo_fns = Vec::with_capacity(ops.len());
-        for op in &ops {
-            let name = format!(
-                "{}.halo.{}to{}",
-                plan.buffer, op.src_slot, op.dst_slot
-            );
-            rt.register_halo(&name, op.clone());
-            halo_fns.push(name);
-        }
         let n = plan.ntiles();
-        let sw = (0..sweeps).map(|_| rt.dep_vars(n)).collect();
-        let h = (0..sweeps.saturating_sub(1))
+        let rounds = plan.rounds(sweeps);
+        let ops = plan.halo_ops();
+        let sweep_fn = format!("{}.sweep", plan.buffer);
+        let mut halo_fns = Vec::new();
+        let mut halo_fns_p: [Vec<String>; 2] = [Vec::new(), Vec::new()];
+        let mut band_fns: Vec<Vec<Vec<TileBandFns>>> = Vec::new();
+        if plan.split {
+            for d in 0..n {
+                let tile_shape = plan.tile_shape(d);
+                let mut per_par = Vec::with_capacity(2);
+                for par in 0..2usize {
+                    let src = plan.tile_buffer(d, par);
+                    let dst = plan.tile_buffer(d, 1 - par);
+                    let mut per_s = Vec::with_capacity(plan.block);
+                    for s in 0..plan.block {
+                        let band = |rows: (usize, usize)| BandSweep {
+                            src: src.clone(),
+                            dst: dst.clone(),
+                            kernel,
+                            tile_shape: tile_shape.clone(),
+                            rows,
+                        };
+                        let (u0, u1) = plan.sweep_band(d, s);
+                        let (i0, i1) = plan.interior_band(d, s);
+                        let interior = format!(
+                            "{}.band{d}.s{s}.p{par}.int",
+                            plan.buffer
+                        );
+                        rt.register_band(&interior, band((i0, i1)))?;
+                        let lo = if plan.tiles[d].lo > 0 {
+                            let nm = format!(
+                                "{}.band{d}.s{s}.p{par}.lo",
+                                plan.buffer
+                            );
+                            rt.register_band(&nm, band((u0, i0)))?;
+                            Some(nm)
+                        } else {
+                            None
+                        };
+                        let hi = if plan.tiles[d].hi > 0 {
+                            let nm = format!(
+                                "{}.band{d}.s{s}.p{par}.hi",
+                                plan.buffer
+                            );
+                            rt.register_band(&nm, band((i1, u1)))?;
+                            Some(nm)
+                        } else {
+                            None
+                        };
+                        per_s.push(TileBandFns { interior, lo, hi });
+                    }
+                    per_par.push(per_s);
+                }
+                band_fns.push(per_par);
+            }
+            // exchanges write the parity buffer the next round reads,
+            // so each directed op registers once per parity it can run
+            // against — same geometry, parity-suffixed buffer names
+            for (par, fns) in halo_fns_p.iter_mut().enumerate() {
+                for op in &ops {
+                    let name = format!(
+                        "{}.halo.{}to{}.p{par}",
+                        plan.buffer, op.src_slot, op.dst_slot
+                    );
+                    let mut p_op = op.clone();
+                    if par == 1 {
+                        p_op.src = format!("{}.pong", p_op.src);
+                        p_op.dst = format!("{}.pong", p_op.dst);
+                    }
+                    rt.register_halo(&name, p_op);
+                    fns.push(name);
+                }
+            }
+        } else {
+            rt.register_software(&sweep_fn, move |env: &mut DataEnv| {
+                // the private environment holds exactly the task's
+                // mapped buffers — for a sweep, the one tile it advances
+                let names: Vec<String> =
+                    env.names().iter().map(|s| s.to_string()).collect();
+                for name in names {
+                    let g = env.take(&name)?;
+                    env.put(&name, kernel.apply(&g)?);
+                }
+                Ok(())
+            });
+            rt.declare_hw_variant(
+                &sweep_fn,
+                SHARD_HW_ARCH,
+                &format!("{sweep_fn}.{SHARD_HW_ARCH}"),
+                kernel,
+            );
+            for op in &ops {
+                let name = format!(
+                    "{}.halo.{}to{}",
+                    plan.buffer, op.src_slot, op.dst_slot
+                );
+                rt.register_halo(&name, op.clone());
+                halo_fns.push(name);
+            }
+        }
+        let in_lo = (0..n)
+            .map(|d| {
+                ops.iter()
+                    .position(|op| op.dst_slot == d && op.dst_row0 == 0)
+            })
+            .collect();
+        let in_hi = (0..n)
+            .map(|d| {
+                ops.iter()
+                    .position(|op| op.dst_slot == d && op.dst_row0 != 0)
+            })
+            .collect();
+        let (sw, iv, blo, bhi) = if plan.split {
+            (
+                Vec::new(),
+                (0..sweeps).map(|_| rt.dep_vars(n)).collect(),
+                (0..sweeps).map(|_| rt.dep_vars(n)).collect(),
+                (0..sweeps).map(|_| rt.dep_vars(n)).collect(),
+            )
+        } else {
+            (
+                (0..sweeps).map(|_| rt.dep_vars(n)).collect(),
+                Vec::new(),
+                Vec::new(),
+                Vec::new(),
+            )
+        };
+        let h = (0..rounds.saturating_sub(1))
             .map(|_| rt.dep_vars(ops.len()))
             .collect();
         Ok(ShardedGrid {
             plan,
             devices,
             sweeps,
+            rounds,
             sweep_fn,
             halo_fns,
+            halo_fns_p,
+            band_fns,
+            in_lo,
+            in_hi,
             ops,
             sw,
+            iv,
+            blo,
+            bhi,
             h,
         })
     }
@@ -384,69 +687,132 @@ impl ShardedGrid {
         self.sweeps
     }
 
-    /// Tasks one full run emits: `K*n` sweeps + `(K-1)` exchange rounds.
+    /// Exchange-separated sweep rounds this schedule runs.
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Tasks one full run emits: per sweep, one whole-tile task per
+    /// tile (or one interior band per tile plus one boundary band per
+    /// shared edge when splitting), plus `rounds - 1` exchange rounds
+    /// of one task per directed op.
     pub fn task_count(&self) -> usize {
-        self.sweeps * self.plan.ntiles()
-            + self.sweeps.saturating_sub(1) * self.ops.len()
+        let n = self.plan.ntiles();
+        let per_sweep = if self.plan.split {
+            let lo = self.plan.tiles.iter().filter(|t| t.lo > 0).count();
+            let hi = self.plan.tiles.iter().filter(|t| t.hi > 0).count();
+            n + lo + hi
+        } else {
+            n
+        };
+        self.sweeps * per_sweep
+            + self.rounds.saturating_sub(1) * self.ops.len()
     }
 
     /// Make every tile resident on its device (`target enter data
-    /// map(to: tile)`), so per-sweep H2D is elided and only halos move
-    /// between batches.
+    /// map(to: tile)` — both parity buffers when splitting), so
+    /// per-sweep H2D is elided and only halos move between batches.
     pub fn enter(&self, rt: &mut OmpRuntime, env: &DataEnv) -> Result<()> {
         for (d, t) in self.plan.tiles.iter().enumerate() {
-            rt.target_enter_data(
-                self.devices[d],
-                env,
-                &[(EnterMap::To, t.name.as_str())],
-            )?;
+            if self.plan.split {
+                let pong = self.plan.tile_buffer(d, 1);
+                rt.target_enter_data(
+                    self.devices[d],
+                    env,
+                    &[
+                        (EnterMap::To, t.name.as_str()),
+                        (EnterMap::To, pong.as_str()),
+                    ],
+                )?;
+            } else {
+                rt.target_enter_data(
+                    self.devices[d],
+                    env,
+                    &[(EnterMap::To, t.name.as_str())],
+                )?;
+            }
         }
         Ok(())
     }
 
-    /// End residency (`target exit data map(from: tile)`); returns the
-    /// billed writeback seconds.
+    /// End residency; returns the billed writeback seconds.  Split
+    /// schedules write back only the final parity's buffers (`map
+    /// (from:)`) and release the stale parity — its rows are trapezoid
+    /// scratch nobody gathers.
     pub fn exit(&self, rt: &mut OmpRuntime) -> Result<f64> {
         let mut billed = 0.0;
-        for (d, t) in self.plan.tiles.iter().enumerate() {
-            billed += rt
-                .target_exit_data(self.devices[d], &[(ExitMap::From, t.name.as_str())])?;
+        let final_par = if self.plan.split { self.sweeps % 2 } else { 0 };
+        for d in 0..self.plan.ntiles() {
+            if self.plan.split {
+                let keep = self.plan.tile_buffer(d, final_par);
+                let drop = self.plan.tile_buffer(d, 1 - final_par);
+                billed += rt.target_exit_data(
+                    self.devices[d],
+                    &[
+                        (ExitMap::From, keep.as_str()),
+                        (ExitMap::Release, drop.as_str()),
+                    ],
+                )?;
+            } else {
+                let name = self.plan.tiles[d].name.clone();
+                billed += rt.target_exit_data(
+                    self.devices[d],
+                    &[(ExitMap::From, name.as_str())],
+                )?;
+            }
         }
         Ok(billed)
     }
 
-    /// Emit the full schedule into a `single` region: for each sweep
-    /// round, one sweep task per tile, then (except after the last
-    /// round) every directed halo exchange.  See the module docs for
-    /// the variable wiring; all tasks are `nowait` — ordering comes
-    /// entirely from `depend` clauses.
+    /// Emit the full schedule into a `single` region.  See the module
+    /// docs for the variable wiring; all tasks are `nowait` — ordering
+    /// comes entirely from `depend` clauses.
     pub fn emit(&self, ctx: &mut SingleCtx<'_>) -> Result<Vec<TaskId>> {
+        if self.plan.split {
+            self.emit_split(ctx)
+        } else {
+            self.emit_blocked(ctx)
+        }
+    }
+
+    /// Whole-tile schedule: `block` consecutive sweeps per tile between
+    /// exchange rounds.  At `block = 1` this is byte-for-byte the §11
+    /// every-sweep schedule.
+    fn emit_blocked(&self, ctx: &mut SingleCtx<'_>) -> Result<Vec<TaskId>> {
         let n = self.plan.ntiles();
+        let b = self.plan.block;
         let mut ids = Vec::with_capacity(self.task_count());
         for k in 0..self.sweeps {
+            let r = k / b;
+            let s = k % b;
             for d in 0..n {
-                let mut b = ctx
+                let mut bld = ctx
                     .target(&self.sweep_fn)
                     .device(self.devices[d])
                     .map(MapDir::ToFrom, &self.plan.tiles[d].name)
                     .depend_out(self.sw[k][d])
                     .nowait();
                 if k > 0 {
-                    // serialize on the tile's own previous sweep (the
-                    // only ordering a 1-tile degenerate plan has) ...
-                    b = b.depend_in(self.sw[k - 1][d]);
-                    // ... and on every exchange touching this tile:
-                    // incoming edges refreshed its ghosts (flow),
-                    // outgoing edges read its boundary rows (anti)
-                    for (j, op) in self.ops.iter().enumerate() {
-                        if op.src_slot == d || op.dst_slot == d {
-                            b = b.depend_in(self.h[k - 1][j]);
+                    // serialize on the tile's own previous sweep — the
+                    // whole ordering a mid-round sweep needs (this is
+                    // the blocking win: no exchange in sight) ...
+                    bld = bld.depend_in(self.sw[k - 1][d]);
+                    // ... and at a round start, on every exchange of
+                    // the previous round touching this tile: incoming
+                    // edges refreshed its ghosts (flow), outgoing edges
+                    // read its boundary rows (anti)
+                    if s == 0 {
+                        for (j, op) in self.ops.iter().enumerate() {
+                            if op.src_slot == d || op.dst_slot == d {
+                                bld = bld.depend_in(self.h[r - 1][j]);
+                            }
                         }
                     }
                 }
-                ids.push(b.submit()?);
+                ids.push(bld.submit()?);
             }
-            if k + 1 < self.sweeps {
+            // a full round just ended with more sweeps to go: exchange
+            if s + 1 == b && k + 1 < self.sweeps {
                 for (j, op) in self.ops.iter().enumerate() {
                     ids.push(
                         ctx.target(&self.halo_fns[j])
@@ -454,7 +820,7 @@ impl ShardedGrid {
                             .map(MapDir::ToFrom, &op.dst)
                             .depend_in(self.sw[k][op.src_slot])
                             .depend_in(self.sw[k][op.dst_slot])
-                            .depend_out(self.h[k][j])
+                            .depend_out(self.h[r][j])
                             .nowait()
                             .submit()?,
                     );
@@ -464,10 +830,160 @@ impl ShardedGrid {
         Ok(ids)
     }
 
+    /// Interior/boundary band schedule over the ping-pong pair.  The
+    /// interior chain `I(0,d) -> I(1,d) -> ...` never depends on an
+    /// exchange; only the thin boundary bands do.
+    fn emit_split(&self, ctx: &mut SingleCtx<'_>) -> Result<Vec<TaskId>> {
+        let n = self.plan.ntiles();
+        let b = self.plan.block;
+        let mut ids = Vec::with_capacity(self.task_count());
+        for k in 0..self.sweeps {
+            let r = k / b;
+            let s = k % b;
+            let par = k % 2;
+            for d in 0..n {
+                let t = &self.plan.tiles[d];
+                let fns = &self.band_fns[d][par][s];
+                let dst = self.plan.tile_buffer(d, 1 - par);
+                // interior band: depends on the tile's previous sweep
+                // only — at a round start its reads begin at row
+                // `lo = halo`, past everything the exchange wrote
+                let mut bi = ctx
+                    .target(&fns.interior)
+                    .device(self.devices[d])
+                    .map(MapDir::ToFrom, &dst)
+                    .depend_out(self.iv[k][d])
+                    .nowait();
+                if k > 0 {
+                    bi = bi.depend_in(self.iv[k - 1][d]);
+                    if s == 0 {
+                        // round-start interior reads reach one row into
+                        // what the previous sweep's boundary bands wrote
+                        if t.lo > 0 {
+                            bi = bi.depend_in(self.blo[k - 1][d]);
+                        }
+                        if t.hi > 0 {
+                            bi = bi.depend_in(self.bhi[k - 1][d]);
+                        }
+                    }
+                }
+                // sweep k is the first writer of the parity buffer an
+                // exchange round just finished reading: anti-order it
+                // after that round's *outgoing* exchanges, which ship
+                // this tile's owned rows from the very buffer this
+                // sweep's bands overwrite.  (The functional plane
+                // executes batches in modelled-start order, so this
+                // write-after-read needs a real edge; the incoming
+                // exchanges need none here — they write ghost rows the
+                // interior never touches, and the boundary bands reach
+                // them through their own chains.)  The exchange had a
+                // full sweep of head start, so the interior chain still
+                // overlaps it rather than stalling on it.
+                if k >= 2 && (k - 1) % b == 0 && (k - 1) / b >= 1 {
+                    let rx = (k - 1) / b - 1;
+                    for (j, op) in self.ops.iter().enumerate() {
+                        if op.src_slot == d {
+                            bi = bi.depend_in(self.h[rx][j]);
+                        }
+                    }
+                }
+                ids.push(bi.submit()?);
+                // boundary bands: wait for the ghosts (the incoming
+                // exchange, at a round start) plus the previous sweep's
+                // neighbouring bands; ordered after this sweep's
+                // interior (and lo before hi) so same-destination-
+                // buffer tasks are never unordered
+                if t.lo > 0 {
+                    let name = fns.lo.as_ref().expect("lo band registered");
+                    let mut bl = ctx
+                        .target(name)
+                        .device(self.devices[d])
+                        .map(MapDir::ToFrom, &dst)
+                        .depend_out(self.blo[k][d])
+                        .depend_in(self.iv[k][d])
+                        .nowait();
+                    if k > 0 {
+                        bl = bl
+                            .depend_in(self.blo[k - 1][d])
+                            .depend_in(self.iv[k - 1][d]);
+                    }
+                    if s == 0 && r > 0 {
+                        let j = self.in_lo[d].expect("lo ghosts have a feeder");
+                        bl = bl.depend_in(self.h[r - 1][j]);
+                    }
+                    ids.push(bl.submit()?);
+                }
+                if t.hi > 0 {
+                    let name = fns.hi.as_ref().expect("hi band registered");
+                    let mut bh = ctx
+                        .target(name)
+                        .device(self.devices[d])
+                        .map(MapDir::ToFrom, &dst)
+                        .depend_out(self.bhi[k][d])
+                        .depend_in(if t.lo > 0 {
+                            self.blo[k][d]
+                        } else {
+                            self.iv[k][d]
+                        })
+                        .nowait();
+                    if k > 0 {
+                        bh = bh
+                            .depend_in(self.bhi[k - 1][d])
+                            .depend_in(self.iv[k - 1][d]);
+                    }
+                    if s == 0 && r > 0 {
+                        let j = self.in_hi[d].expect("hi ghosts have a feeder");
+                        bh = bh.depend_in(self.h[r - 1][j]);
+                    }
+                    ids.push(bh.submit()?);
+                }
+            }
+            // a full round just ended with more sweeps to go: exchange
+            // into the parity buffer sweep k+1 reads
+            if s + 1 == b && k + 1 < self.sweeps {
+                let par1 = (k + 1) % 2;
+                for (j, op) in self.ops.iter().enumerate() {
+                    let dst_name =
+                        self.plan.tile_buffer(op.dst_slot, par1);
+                    let mut bx = ctx
+                        .target(&self.halo_fns_p[par1][j])
+                        .device(self.devices[op.dst_slot])
+                        .map(MapDir::ToFrom, &dst_name)
+                        .depend_out(self.h[r][j])
+                        .nowait();
+                    // flow on the source tile's final bands (the owned
+                    // rows shipped), anti + same-buffer ordering on the
+                    // destination's (they wrote the parity buffer whose
+                    // ghosts this exchange overwrites)
+                    for &tt in &[op.src_slot, op.dst_slot] {
+                        let tile = &self.plan.tiles[tt];
+                        bx = bx.depend_in(self.iv[k][tt]);
+                        if tile.lo > 0 {
+                            bx = bx.depend_in(self.blo[k][tt]);
+                        }
+                        if tile.hi > 0 {
+                            bx = bx.depend_in(self.bhi[k][tt]);
+                        }
+                    }
+                    // the two exchanges into one tile write disjoint
+                    // ghost bands of the same buffer: order hi after lo
+                    if op.dst_row0 != 0 {
+                        if let Some(jl) = self.in_lo[op.dst_slot] {
+                            bx = bx.depend_in(self.h[r][jl]);
+                        }
+                    }
+                    ids.push(bx.submit()?);
+                }
+            }
+        }
+        Ok(ids)
+    }
+
     /// Scatter → enter-data → run the schedule → exit-data → gather.
     /// Returns the stitched result and the run report (the makespan is
-    /// `report.virtual_time_s()`; exit writebacks are billed inside the
-    /// runtime's writeback ledger as usual).
+    /// `report.virtual_time_s()`, halo counters are `report.halo`;
+    /// exit writebacks are billed inside the runtime's writeback
+    /// ledger as usual).
     pub fn run(
         &self,
         rt: &mut OmpRuntime,
@@ -481,7 +997,8 @@ impl ShardedGrid {
             Ok(())
         })?;
         self.exit(rt)?;
-        let out = self.plan.gather(&env)?;
+        let final_par = if self.plan.split { self.sweeps % 2 } else { 0 };
+        let out = self.plan.gather_parity(&env, final_par)?;
         Ok((out, report))
     }
 }
@@ -493,7 +1010,7 @@ mod tests {
     fn spec(halo: usize) -> ShardSpec {
         ShardSpec {
             halo,
-            capacity_cells: None,
+            ..ShardSpec::default()
         }
     }
 
@@ -533,6 +1050,7 @@ mod tests {
         let tight = ShardSpec {
             halo: 1,
             capacity_cells: Some(10),
+            ..ShardSpec::default()
         };
         let e = ShardPlan::decompose("V", &[8, 4], 2, &tight)
             .unwrap_err()
@@ -546,10 +1064,64 @@ mod tests {
             &ShardSpec {
                 halo: 1,
                 capacity_cells: Some(16),
+                ..ShardSpec::default()
             },
         )
         .unwrap();
         assert!(p.max_tile_cells() <= 16);
+    }
+
+    #[test]
+    fn decompose_blocking_errors_state_the_fix() {
+        // block deeper than the halo: the named error says which knob
+        // to turn, both ways
+        let bad = ShardSpec {
+            halo: 2,
+            block: 4,
+            ..ShardSpec::default()
+        };
+        let e = ShardPlan::decompose("V", &[32, 4], 2, &bad)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("raise halo to 4"), "{e}");
+        assert!(e.contains("lower block to 2"), "{e}");
+        let e = ShardPlan::decompose(
+            "V",
+            &[32, 4],
+            2,
+            &ShardSpec {
+                block: 0,
+                ..ShardSpec::default()
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("block"), "{e}");
+        // split needs 2*block+1 owned rows per tile for the trapezoid
+        let split = ShardSpec {
+            halo: 3,
+            block: 3,
+            split: true,
+            ..ShardSpec::default()
+        };
+        let e = ShardPlan::decompose("V", &[12, 4], 2, &split)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("2 tiles"), "{e}");
+        assert!(e.contains(">= 7 owned rows"), "{e}");
+        assert!(ShardPlan::decompose("V", &[14, 4], 2, &split).is_ok());
+        // split doubles the per-board footprint (ping-pong pair)
+        let tight = ShardSpec {
+            halo: 1,
+            split: true,
+            capacity_cells: Some(30),
+            ..ShardSpec::default()
+        };
+        let e = ShardPlan::decompose("V", &[8, 4], 2, &tight)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("ping-pong"), "{e}");
+        assert!(e.contains("board holds 30"), "{e}");
     }
 
     #[test]
@@ -564,6 +1136,28 @@ mod tests {
         assert_eq!(&t1.data()[..5], &g.data()[3 * 5..4 * 5]);
         // untouched tiles stitch back bit-identically
         assert_eq!(p.gather(&env).unwrap(), g);
+    }
+
+    #[test]
+    fn split_scatter_seeds_both_parities() {
+        let g = Grid::random(&[14, 3], 9).unwrap();
+        let sp = ShardSpec {
+            halo: 2,
+            block: 2,
+            split: true,
+            ..ShardSpec::default()
+        };
+        let p = ShardPlan::decompose("V", &[14, 3], 2, &sp).unwrap();
+        let mut env = DataEnv::new();
+        p.scatter(&g, &mut env).unwrap();
+        for d in 0..2 {
+            let a = env.get(&p.tile_buffer(d, 0)).unwrap();
+            let b = env.get(&p.tile_buffer(d, 1)).unwrap();
+            assert_eq!(a.data(), b.data(), "pong seeded from tile {d}");
+        }
+        // either parity gathers the untouched scatter back
+        assert_eq!(p.gather_parity(&env, 0).unwrap(), g);
+        assert_eq!(p.gather_parity(&env, 1).unwrap(), g);
     }
 
     #[test]
@@ -591,5 +1185,63 @@ mod tests {
         // single tile: no boundaries, no exchanges
         let solo = ShardPlan::decompose("V", &[20, 4], 1, &spec(2)).unwrap();
         assert!(solo.halo_ops().is_empty());
+    }
+
+    #[test]
+    fn rounds_follow_greedy_blocking() {
+        let mk = |block| {
+            ShardPlan::decompose(
+                "V",
+                &[64, 4],
+                2,
+                &ShardSpec {
+                    halo: block,
+                    block,
+                    ..ShardSpec::default()
+                },
+            )
+            .unwrap()
+        };
+        // block 1 degenerates to the §11 every-sweep schedule
+        assert_eq!(mk(1).rounds(6), 6);
+        // greedy rounds of `block` from sweep 0: ceil(K/B) rounds,
+        // ceil(K/B)-1 exchange rounds between them.  (Not the
+        // per-sweep-deadline ceil((K-1)/B): with K=4, B=2 the greedy
+        // schedule exchanges once — after sweeps {0,1} — and the final
+        // round {2,3} rides the same 2-deep ghosts to the end.)
+        assert_eq!(mk(2).rounds(4), 2);
+        assert_eq!(mk(2).rounds(5), 3);
+        assert_eq!(mk(3).rounds(6), 2);
+        assert_eq!(mk(3).rounds(7), 3);
+    }
+
+    #[test]
+    fn trapezoid_bands_shrink_and_partition_the_sweep() {
+        let sp = ShardSpec {
+            halo: 3,
+            block: 3,
+            split: true,
+            ..ShardSpec::default()
+        };
+        let p = ShardPlan::decompose("V", &[30, 4], 3, &sp).unwrap();
+        // middle tile: lo = hi = 3, owned = 10, nrows = 16
+        for s in 0..3 {
+            let (u0, u1) = p.sweep_band(1, s);
+            let (i0, i1) = p.interior_band(1, s);
+            assert_eq!((u0, u1), (s + 1, 16 - 1 - s));
+            assert_eq!((i0, i1), (3 + s + 1, 3 + 10 - 1 - s));
+            // boundary bands are exactly `halo` rows each, and the
+            // three bands tile the sweep band without gaps
+            assert_eq!(i0 - u0, 3);
+            assert_eq!(u1 - i1, 3);
+            assert!(i1 > i0, "interior non-empty at s={s}");
+        }
+        // edge tiles: no shrink on the global-boundary side
+        let (u0, _) = p.sweep_band(0, 2);
+        assert_eq!(u0, 1, "global lo edge holds the copy boundary");
+        let (_, u1) = p.sweep_band(2, 2);
+        assert_eq!(u1, p.tiles[2].nrows() - 1, "global hi edge too");
+        let (i0, _) = p.interior_band(0, 2);
+        assert_eq!(i0, 1, "no lo ghosts, no lo boundary band");
     }
 }

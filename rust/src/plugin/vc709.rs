@@ -31,7 +31,7 @@ use crate::hw::net::{CHANNEL_EAST, CHANNEL_WEST};
 use crate::hw::topology::{FabricSlot, Topology};
 use crate::omp::dataenv::{BatchCtx, Residency};
 use crate::omp::device::{
-    DataEnv, DevicePlugin, DeviceReport, FnRegistry, HaloOp,
+    BandSweep, DataEnv, DevicePlugin, DeviceReport, FnRegistry, HaloOp,
 };
 use crate::omp::graph::TaskGraph;
 use crate::omp::task::TaskId;
@@ -726,6 +726,100 @@ impl Vc709Plugin {
         finish
     }
 
+    /// Execute one band-restricted sweep (interior/boundary split
+    /// schedules, DESIGN.md §12): the band's sub-grid — its rows plus
+    /// the one-row fringe — is extracted from the previous-parity tile
+    /// buffer, streamed through this cluster exactly like a
+    /// whole-buffer segment (same CONF programming, same backend
+    /// numerics, so the swept rows are bit-identical to the host
+    /// row-band path), and the interior rows are written back into the
+    /// band of the destination parity buffer.
+    fn run_band(&mut self, env: &mut DataEnv, band: &BandSweep) -> Result<()> {
+        let assignment =
+            mapper::assign(&self.board_kernels(), &[band.kernel])?;
+        if assignment.npasses() != 1 {
+            bail!(
+                "band sweep on '{}': single kernel mapped to {} passes",
+                band.dst,
+                assignment.npasses()
+            );
+        }
+        let shape = band.sub_shape();
+        let groups = self.program_pass(
+            &assignment.pass_slots(0),
+            true,
+            true,
+            &[band.kernel],
+        )?;
+        if self.backend_kind != ExecBackend::TimingOnly {
+            let sub = {
+                let src = env.get(&band.src)?;
+                band.extract(src)?
+            };
+            let swept = if self.naive_stream {
+                self.stream_pass_naive(sub, &groups, true, true, &shape)?
+            } else {
+                let mut scratch = if self.backend.uses_scratch() {
+                    Grid::zeros(&shape)?
+                } else {
+                    Grid::zeros(&[1, 1])?
+                };
+                self.stream_pass(
+                    Some(sub),
+                    &mut scratch,
+                    &groups,
+                    true,
+                    true,
+                    &shape,
+                )?
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "band sweep on '{}' ended parked on the device \
+                         (routing bug)",
+                        band.dst
+                    )
+                })?
+            };
+            let mut dst = env.take(&band.dst)?;
+            let res = band.write_back(&mut dst, &swept);
+            env.put(&band.dst, dst);
+            res?;
+        }
+        self.last_assignment = Some(assignment);
+        Ok(())
+    }
+
+    /// DES pricing of one band-restricted sweep: a synthetic
+    /// single-pass [`SegPlan`] over the band's sub-grid geometry,
+    /// priced by the exact [`Vc709Plugin::model_segments`] path whole
+    /// buffers use.  Consults only geometry baked into the band (plus
+    /// the caller's residency flags), never buffer values, so
+    /// `estimate_batch_s` over a shape-only phantom environment prices
+    /// identically to execution — estimate == executed duration extends
+    /// to band traffic.  Errs when no IP in this cluster implements the
+    /// band's kernel (placement abstains).
+    fn model_band(
+        &self,
+        servers: &mut DesServers,
+        band: &BandSweep,
+        entry_resident: bool,
+        exit_deferred: bool,
+        start_s: f64,
+    ) -> Result<f64> {
+        let assignment =
+            mapper::assign(&self.board_kernels(), &[band.kernel])?;
+        let seg = SegPlan {
+            buffer: band.dst.clone(),
+            kernels: vec![band.kernel],
+            assignment,
+            shape: band.sub_shape(),
+            bytes: band.sub_bytes(),
+            entry_resident,
+            exit_deferred,
+        };
+        Ok(self.model_segments(servers, std::slice::from_ref(&seg), start_s))
+    }
+
     // ---------------------------------------------------------------------
     // Virtual-time streaming (DES over the same hop sequence)
     // ---------------------------------------------------------------------
@@ -1096,24 +1190,36 @@ impl DevicePlugin for Vc709Plugin {
                 );
             }
         }
-        // -- partition into kernel / halo sections (order-preserving) ----
-        // Halo-exchange tasks ride the ordinary graph, so a condensed run
-        // may interleave sweeps and exchanges.  Each maximal stretch of
+        // -- partition into kernel / halo / band sections (order-
+        // preserving).  Halo-exchange and band-sweep tasks ride the
+        // ordinary graph, so a condensed run may interleave whole-buffer
+        // sweeps, exchanges and band sweeps.  Each maximal stretch of
         // one flavor is planned with its own machinery, but all sections
         // share one DES server set and one virtual-time cursor, so the
         // batch prices as a single timeline.
         enum Section {
             Kernels(Vec<TaskId>),
             Halos(Vec<TaskId>),
+            Bands(Vec<TaskId>),
         }
         let mut sections: Vec<Section> = Vec::new();
         for &id in tasks {
-            let is_halo = fns.halo_of(&graph.task(id).fn_name).is_some();
-            match (sections.last_mut(), is_halo) {
-                (Some(Section::Halos(v)), true) => v.push(id),
-                (Some(Section::Kernels(v)), false) => v.push(id),
-                (_, true) => sections.push(Section::Halos(vec![id])),
-                (_, false) => sections.push(Section::Kernels(vec![id])),
+            let name = &graph.task(id).fn_name;
+            if fns.halo_of(name).is_some() {
+                match sections.last_mut() {
+                    Some(Section::Halos(v)) => v.push(id),
+                    _ => sections.push(Section::Halos(vec![id])),
+                }
+            } else if fns.band_of(name).is_some() {
+                match sections.last_mut() {
+                    Some(Section::Bands(v)) => v.push(id),
+                    _ => sections.push(Section::Bands(vec![id])),
+                }
+            } else {
+                match sections.last_mut() {
+                    Some(Section::Kernels(v)) => v.push(id),
+                    _ => sections.push(Section::Kernels(vec![id])),
+                }
             }
         }
 
@@ -1145,6 +1251,45 @@ impl DevicePlugin for Vc709Plugin {
                         halo_wire += self.exchange_halo(env, &op)?;
                         vtime = self.model_halo(&mut servers, &op, vtime);
                         ran_halos = true;
+                    }
+                    continue;
+                }
+                Section::Bands(ids) => {
+                    for id in ids {
+                        let band = fns
+                            .band_of(&graph.task(*id).fn_name)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "task {} lost its band sweep mid-batch",
+                                    id.0
+                                )
+                            })?
+                            .clone();
+                        // the streamed bytes originate in the source
+                        // parity buffer and land in the destination one:
+                        // H2D elides when the source's device copy is
+                        // current, D2H defers while the destination
+                        // stays resident — the same residency facts the
+                        // estimate consults
+                        let entry_resident =
+                            ctx.residency.device_valid.contains(&band.src);
+                        let exit_deferred =
+                            ctx.residency.resident.contains(&band.dst);
+                        self.run_band(env, &band)?;
+                        vtime = self.model_band(
+                            &mut servers,
+                            &band,
+                            entry_resident,
+                            exit_deferred,
+                            vtime,
+                        )?;
+                        total_passes += 1;
+                        if entry_resident {
+                            h2d_elided += 1;
+                        }
+                        if exit_deferred {
+                            d2h_deferred += 1;
+                        }
                     }
                     continue;
                 }
@@ -1317,11 +1462,16 @@ impl DevicePlugin for Vc709Plugin {
         enum Est {
             Kernels(Vec<TaskId>, Vec<Kernel>),
             Halo(HaloOp),
+            Band(BandSweep),
         }
         let mut sections: Vec<Est> = Vec::new();
         for (i, name) in fn_names.iter().enumerate() {
             if let Some(op) = fns.halo_of(name) {
                 sections.push(Est::Halo(op.clone()));
+                continue;
+            }
+            if let Some(band) = fns.band_of(name) {
+                sections.push(Est::Band(band.clone()));
                 continue;
             }
             // admission mirrors run_batch exactly: a batch the segment
@@ -1359,6 +1509,25 @@ impl DevicePlugin for Vc709Plugin {
                     // fabric slots baked into it — no buffers consulted,
                     // so the phantom env prices identically to execution
                     vtime = self.model_halo(&mut servers, op, vtime);
+                }
+                Est::Band(band) => {
+                    // band pricing needs only the geometry baked into
+                    // the band plus the same residency facts run_batch
+                    // reads; a kernel no IP here implements makes the
+                    // plugin abstain, mirroring execution's error
+                    let entry_resident =
+                        residency.device_valid.contains(&band.src);
+                    let exit_deferred =
+                        residency.resident.contains(&band.dst);
+                    vtime = self
+                        .model_band(
+                            &mut servers,
+                            band,
+                            entry_resident,
+                            exit_deferred,
+                            vtime,
+                        )
+                        .ok()?;
                 }
             }
         }
@@ -1453,6 +1622,77 @@ mod tests {
         let soft: Vec<String> = vec!["f".into(); 4];
         assert!(plugin
             .estimate_batch_s(&graph, &ids, &soft, &fns, &env, &none)
+            .is_none());
+    }
+
+    #[test]
+    fn band_run_matches_host_band_and_estimate_matches_duration() {
+        // a band-restricted sweep streamed through the fabric must be
+        // bit-identical to the host row-band path, and its placement
+        // estimate must equal the executed duration (same DES)
+        let cfg = ClusterConfig::homogeneous(2, 1, Kernel::Laplace2d);
+        let mut plugin = Vc709Plugin::new(&cfg, ExecBackend::Golden).unwrap();
+        let shape = vec![32, 12];
+        let band = BandSweep {
+            src: "T".into(),
+            dst: "T.pong".into(),
+            kernel: Kernel::Laplace2d,
+            tile_shape: shape.clone(),
+            rows: (3, 20),
+        };
+        let mut fns = FnRegistry::default();
+        fns.register("band", crate::omp::TaskFn::Band(band.clone()));
+        let mut graph = TaskGraph::new();
+        let id = graph.add(Task {
+            id: TaskId(0),
+            base_name: "band".into(),
+            fn_name: "band".into(),
+            device: crate::omp::DeviceId(1).into(),
+            maps: vec![(crate::omp::MapDir::ToFrom, "T.pong".into())],
+            deps_in: vec![],
+            deps_out: vec![DepVar(0)],
+            nowait: true,
+        });
+        let mut env = DataEnv::new();
+        let src = Grid::random(&shape, 7).unwrap();
+        env.insert("T", src.clone());
+        env.insert("T.pong", src.clone());
+        let names: Vec<String> = vec!["band".into()];
+        let none = Residency::default();
+        let est = plugin
+            .estimate_batch_s(&graph, &[id], &names, &fns, &env, &none)
+            .expect("band batch must be priced");
+        let rep = plugin
+            .run_batch(&graph, &[id], &mut env, &fns, &BatchCtx::at(0.25))
+            .unwrap();
+        assert!(
+            (est - rep.virtual_time_s).abs() < 1e-12,
+            "band estimate {est} != executed duration {}",
+            rep.virtual_time_s
+        );
+        let mut want = src.clone();
+        band.sweep_into(&src, &mut want).unwrap();
+        assert_eq!(env.get("T.pong").unwrap().data(), want.data());
+        assert_eq!(env.get("T").unwrap().data(), src.data());
+        // residency facts move the price: a current source elides the
+        // H2D and a resident destination defers the D2H
+        let mut resident = Residency::default();
+        resident.device_valid.insert("T".into());
+        resident.resident.insert("T".into());
+        resident.resident.insert("T.pong".into());
+        let est_res = plugin
+            .estimate_batch_s(&graph, &[id], &names, &fns, &env, &resident)
+            .unwrap();
+        assert!(
+            est_res < est,
+            "resident band {est_res} should price below streamed {est}"
+        );
+        // a kernel no IP here implements makes the plugin abstain
+        let foreign = BandSweep { kernel: Kernel::Jacobi9pt, ..band.clone() };
+        fns.register("band9", crate::omp::TaskFn::Band(foreign));
+        let bad: Vec<String> = vec!["band9".into()];
+        assert!(plugin
+            .estimate_batch_s(&graph, &[id], &bad, &fns, &env, &none)
             .is_none());
     }
 

@@ -110,6 +110,51 @@ impl Kernel {
     /// allocation).  `dst` must have the same shape as `src`; boundary
     /// cells are copied from `src`.
     pub fn apply_into(self, src: &Grid, dst: &mut Grid) -> Result<()> {
+        self.check_pair(src, dst)?;
+        let rows = src.shape()[0];
+        // outermost slabs are pure copy-boundary; the interior band is
+        // exactly the row-range core, so full-grid and banded sweeps
+        // share one arithmetic path (bit-identical by construction)
+        let row_cells: usize = src.shape()[1..].iter().product();
+        dst.data_mut()[..row_cells].copy_from_slice(&src.data()[..row_cells]);
+        let tail = (rows - 1) * row_cells;
+        dst.data_mut()[tail..].copy_from_slice(&src.data()[tail..]);
+        self.rows_core(src, dst, 1, rows - 1);
+        Ok(())
+    }
+
+    /// Apply one iteration to axis-0 rows `[r0, r1)` only: those rows of
+    /// `dst` are written exactly as [`Kernel::apply_into`] would write
+    /// them (within-row boundary cells copy through, interior cells
+    /// update from `src`); every row outside the band is left untouched.
+    /// Requires `1 <= r0 <= r1 <= rows-1` — the outermost rows are
+    /// copy-boundary and belong to the full-grid path.  The restriction
+    /// is bit-exact: band-sweeping any partition of `[1, rows-1)` equals
+    /// one full `apply_into` (tested), which is what lets the sharded
+    /// trapezoid schedules (DESIGN.md §12) split a sweep into interior
+    /// and boundary tasks without touching numerics.
+    pub fn apply_rows_into(
+        self,
+        src: &Grid,
+        dst: &mut Grid,
+        r0: usize,
+        r1: usize,
+    ) -> Result<()> {
+        self.check_pair(src, dst)?;
+        let rows = src.shape()[0];
+        if r0 < 1 || r1 > rows - 1 || r0 > r1 {
+            bail!(
+                "{}: row band {r0}..{r1} out of range for a {rows}-row \
+                 grid (need 1 <= r0 <= r1 <= {})",
+                self.name(),
+                rows - 1
+            );
+        }
+        self.rows_core(src, dst, r0, r1);
+        Ok(())
+    }
+
+    fn check_pair(self, src: &Grid, dst: &Grid) -> Result<()> {
         if src.shape() != dst.shape() {
             bail!("src/dst shape mismatch");
         }
@@ -124,23 +169,31 @@ impl Kernel {
         if src.shape().iter().any(|&d| d < 3) {
             bail!("grid too small for radius-1 stencil: {:?}", src.shape());
         }
+        Ok(())
+    }
+
+    /// The shared per-row update: rows `[r0, r1)` of `dst` get the
+    /// stencil applied (within-row boundaries copying), everything else
+    /// stays.  Callers have validated shapes and the row range.
+    fn rows_core(self, src: &Grid, dst: &mut Grid, r0: usize, r1: usize) {
         match self {
-            Kernel::Laplace2d => apply2(src, dst, |w, n, c, s, e| {
+            Kernel::Laplace2d => apply2_rows(src, dst, r0, r1, |w, n, c, s, e| {
                 let _ = c;
                 0.25 * (w + n + s + e)
             }),
-            Kernel::Diffusion2d => apply2(src, dst, |w, n, c, s, e| {
-                DIFFUSION2D_C[0] * w
-                    + DIFFUSION2D_C[1] * n
-                    + DIFFUSION2D_C[2] * c
-                    + DIFFUSION2D_C[3] * s
-                    + DIFFUSION2D_C[4] * e
-            }),
-            Kernel::Jacobi9pt => apply_jacobi9(src, dst),
-            Kernel::Laplace3d => apply3_laplace(src, dst),
-            Kernel::Diffusion3d => apply3_diffusion(src, dst),
+            Kernel::Diffusion2d => {
+                apply2_rows(src, dst, r0, r1, |w, n, c, s, e| {
+                    DIFFUSION2D_C[0] * w
+                        + DIFFUSION2D_C[1] * n
+                        + DIFFUSION2D_C[2] * c
+                        + DIFFUSION2D_C[3] * s
+                        + DIFFUSION2D_C[4] * e
+                })
+            }
+            Kernel::Jacobi9pt => apply_jacobi9_rows(src, dst, r0, r1),
+            Kernel::Laplace3d => apply3_laplace_rows(src, dst, r0, r1),
+            Kernel::Diffusion3d => apply3_diffusion_rows(src, dst, r0, r1),
         }
-        Ok(())
     }
 
     /// Apply `n` iterations ping-ponging two caller-owned buffers:
@@ -174,15 +227,20 @@ impl Kernel {
     }
 }
 
-/// Shared 2-D driver: f(west, north, centre, south, east).
-fn apply2(src: &Grid, dst: &mut Grid, f: impl Fn(f32, f32, f32, f32, f32) -> f32) {
-    let (h, w) = (src.shape()[0], src.shape()[1]);
+/// Shared 2-D driver over rows `[r0, r1)`: f(west, north, centre,
+/// south, east).  The full-grid sweep is the `[1, h-1)` band plus two
+/// copied boundary rows.
+fn apply2_rows(
+    src: &Grid,
+    dst: &mut Grid,
+    r0: usize,
+    r1: usize,
+    f: impl Fn(f32, f32, f32, f32, f32) -> f32,
+) {
+    let w = src.shape()[1];
     let s = src.data();
     let d = dst.data_mut();
-    // boundary rows/cols copy through
-    d[..w].copy_from_slice(&s[..w]);
-    d[(h - 1) * w..].copy_from_slice(&s[(h - 1) * w..]);
-    for i in 1..h - 1 {
+    for i in r0..r1 {
         let row = i * w;
         d[row] = s[row];
         d[row + w - 1] = s[row + w - 1];
@@ -193,14 +251,12 @@ fn apply2(src: &Grid, dst: &mut Grid, f: impl Fn(f32, f32, f32, f32, f32) -> f32
     }
 }
 
-fn apply_jacobi9(src: &Grid, dst: &mut Grid) {
-    let (h, w) = (src.shape()[0], src.shape()[1]);
+fn apply_jacobi9_rows(src: &Grid, dst: &mut Grid, r0: usize, r1: usize) {
+    let w = src.shape()[1];
     let s = src.data();
     let d = dst.data_mut();
-    d[..w].copy_from_slice(&s[..w]);
-    d[(h - 1) * w..].copy_from_slice(&s[(h - 1) * w..]);
     let c = JACOBI9PT_C;
-    for i in 1..h - 1 {
+    for i in r0..r1 {
         let row = i * w;
         d[row] = s[row];
         d[row + w - 1] = s[row + w - 1];
@@ -219,13 +275,15 @@ fn apply_jacobi9(src: &Grid, dst: &mut Grid) {
     }
 }
 
-fn apply3_laplace(src: &Grid, dst: &mut Grid) {
-    let (ni, nj, nk) = (src.shape()[0], src.shape()[1], src.shape()[2]);
+fn apply3_laplace_rows(src: &Grid, dst: &mut Grid, r0: usize, r1: usize) {
+    let (nj, nk) = (src.shape()[1], src.shape()[2]);
     let s = src.data();
     let d = dst.data_mut();
-    d.copy_from_slice(s);
     let (sj, si) = (nk, nj * nk);
-    for i in 1..ni - 1 {
+    for i in r0..r1 {
+        // copy the whole slab, then overwrite its interior — identical
+        // values to the historical full-grid copy-then-update
+        d[i * si..(i + 1) * si].copy_from_slice(&s[i * si..(i + 1) * si]);
         for j in 1..nj - 1 {
             let base = i * si + j * sj;
             for k in 1..nk - 1 {
@@ -238,16 +296,16 @@ fn apply3_laplace(src: &Grid, dst: &mut Grid) {
     }
 }
 
-fn apply3_diffusion(src: &Grid, dst: &mut Grid) {
-    let (ni, nj, nk) = (src.shape()[0], src.shape()[1], src.shape()[2]);
+fn apply3_diffusion_rows(src: &Grid, dst: &mut Grid, r0: usize, r1: usize) {
+    let (nj, nk) = (src.shape()[1], src.shape()[2]);
     let s = src.data();
     let d = dst.data_mut();
-    d.copy_from_slice(s);
     let (sj, si) = (nk, nj * nk);
     let c = DIFFUSION3D_C;
     // Table-I order: C1*V[i,j-1,k] + C2*V[i-1,j,k] + C3*V[i,j,k-1]
     //              + C4*V[i,j,k]  + C5*V[i+1,j,k] + C6*V[i,j+1,k]
-    for i in 1..ni - 1 {
+    for i in r0..r1 {
+        d[i * si..(i + 1) * si].copy_from_slice(&s[i * si..(i + 1) * si]);
         for j in 1..nj - 1 {
             let base = i * si + j * sj;
             for k in 1..nk - 1 {
@@ -439,6 +497,94 @@ mod tests {
         let mut a = Grid::zeros(&[4, 4]).unwrap();
         let mut b = Grid::zeros(&[4, 5]).unwrap();
         assert!(Kernel::Laplace2d.iterate_into(1, &mut a, &mut b).is_err());
+    }
+
+    #[test]
+    fn prop_row_band_partition_matches_full_apply() {
+        // band-sweeping any partition of [1, rows-1) — in any order —
+        // is bit-identical to one full apply_into; untouched rows stay
+        check(
+            "row-band-partition",
+            40,
+            |rng| {
+                let k = *rng.choose(&ALL_KERNELS);
+                let shape: Vec<usize> = if k.ndim() == 2 {
+                    vec![rng.range(4, 14), rng.range(3, 9)]
+                } else {
+                    vec![rng.range(4, 9), rng.range(3, 6), rng.range(3, 6)]
+                };
+                let cut = rng.range(2, shape[0] - 1); // 2..rows-2 inclusive
+                (k, Grid::random(&shape, rng.next_u64()).unwrap(), cut)
+            },
+            |(k, g, cut)| {
+                let rows = g.shape()[0];
+                let want = k.apply(g).unwrap();
+                // seed dst with src so the untouched boundary rows match
+                let mut banded = g.clone();
+                // apply the two bands in reverse order: both read `g`
+                k.apply_rows_into(g, &mut banded, *cut, rows - 1).unwrap();
+                k.apply_rows_into(g, &mut banded, 1, *cut).unwrap();
+                if banded == want {
+                    Ok(())
+                } else {
+                    Err("banded sweep != full apply".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn row_band_on_extracted_subgrid_matches_restriction() {
+        // extracting rows [r0-1, r1+1), applying the kernel to the
+        // sub-grid, and keeping its interior rows equals the full-grid
+        // band — the equivalence the VC709 band-restricted device runs
+        // rely on (DESIGN.md §12)
+        for k in ALL_KERNELS {
+            let shape: &[usize] =
+                if k.ndim() == 2 { &[12, 7] } else { &[10, 5, 6] };
+            let g = Grid::random(shape, 11).unwrap();
+            let (r0, r1) = (3usize, 8usize);
+            let mut want = g.clone();
+            k.apply_rows_into(&g, &mut want, r0, r1).unwrap();
+            // sub-grid: rows [r0-1, r1+1)
+            let row_cells: usize = shape[1..].iter().product();
+            let mut sub_shape = shape.to_vec();
+            sub_shape[0] = r1 + 1 - (r0 - 1);
+            let sub = Grid::from_vec(
+                &sub_shape,
+                g.data()[(r0 - 1) * row_cells..(r1 + 1) * row_cells].to_vec(),
+            )
+            .unwrap();
+            let swept = k.apply(&sub).unwrap();
+            for r in r0..r1 {
+                let a = (r - r0 + 1) * row_cells;
+                assert_eq!(
+                    &swept.data()[a..a + row_cells],
+                    &want.data()[r * row_cells..(r + 1) * row_cells],
+                    "{} row {r}",
+                    k.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn row_band_range_errors_are_named() {
+        let g = Grid::random(&[6, 5], 1).unwrap();
+        let mut d = g.clone();
+        for (r0, r1) in [(0usize, 3usize), (2, 6), (4, 2)] {
+            let e = Kernel::Laplace2d
+                .apply_rows_into(&g, &mut d, r0, r1)
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains("row band"), "{e}");
+        }
+        // full interior band is legal and equals apply_into
+        let mut full = g.clone();
+        Kernel::Laplace2d.apply_into(&g, &mut full).unwrap();
+        let mut band = g.clone();
+        Kernel::Laplace2d.apply_rows_into(&g, &mut band, 1, 5).unwrap();
+        assert_eq!(band, full);
     }
 
     #[test]

@@ -1,24 +1,29 @@
-//! Sharding property net (DESIGN.md §11): randomized grid shapes, halo
-//! widths, sweep counts and fabric topologies, each case executed
-//! sharded across N single-board VC709 devices and checked against the
+//! Sharding property net (DESIGN.md §11–§12): randomized grid shapes,
+//! halo widths, temporal block factors, interior/boundary splitting,
+//! sweep counts and fabric topologies, each case executed sharded
+//! across N single-board VC709 devices and checked against the
 //! unsharded host reference:
 //!
 //! (a) **bit-identity**: the gathered sharded result equals
-//!     `kernel.iterate(grid, sweeps)` exactly — domain decomposition is
-//!     a scheduling concern, never a numerics concern;
-//! (b) **task conservation**: every emitted sweep and halo-exchange
-//!     task executes exactly once (`K*n + (K-1)*2*(n-1)` total);
-//! (c) **halo bytes ≡ priced bytes**: the functional wire bytes the
-//!     exchanges frame (`halo-wire`) equal the bytes the DES halo
-//!     servers bill (`halo-net`), per run, exactly — the timing plane
-//!     prices precisely the frames the functional plane ships;
-//! (d) **death-mid-sweep recovery**: a seeded fault schedule killing
+//!     `kernel.iterate(grid, sweeps)` exactly — domain decomposition,
+//!     temporal blocking and band splitting are scheduling concerns,
+//!     never numerics concerns;
+//! (b) **task conservation**: every emitted sweep/band and
+//!     halo-exchange task executes exactly once;
+//! (c) **exchange economics**: the schedule performs exactly
+//!     `(ceil(K/B) - 1) * 2*(n-1)` exchanges (the greedy blocking's
+//!     round count — `(K-1)*2*(n-1)` at `B = 1`), and the functional
+//!     wire bytes the exchanges frame (`halo-wire`) equal both the
+//!     bytes the DES halo servers bill (`halo-net`) and the
+//!     `report.halo.bytes` counter, per run, exactly;
+//! (d) **death-mid-round recovery**: a seeded fault schedule killing
 //!     shard-owning boards mid-run still yields the bit-identical
 //!     gathered grid, with the orphaned tile's tasks re-placed and the
 //!     re-streamed residency billed.
 //!
 //! Cases are seeded (reproduce from the printed case) and shrink
-//! greedily: fewer sweeps, fewer tiles, thinner halos, smaller grids.
+//! greedily: fewer sweeps, fewer tiles, thinner halos, shallower
+//! blocks, split off, smaller grids.
 
 use omp_fpga::config::ClusterConfig;
 use omp_fpga::hw::{FabricSlot, Topology};
@@ -37,27 +42,43 @@ struct Case {
     cols: usize,
     ntiles: usize,
     halo: usize,
+    block: usize,
+    split: bool,
     sweeps: usize,
     topology: Topology,
     seed: u64,
     fault_seed: u64,
 }
 
+/// Smallest legal row count for the case's geometry (the decompose
+/// feasibility bound: `max(2, halo)` owned rows per tile, `2*block+1`
+/// when splitting keeps the trapezoid's interior non-empty).
+fn min_rows(case: &Case) -> usize {
+    let mut min_owned = case.halo.max(2);
+    if case.split {
+        min_owned = min_owned.max(2 * case.block + 1);
+    }
+    case.ntiles * min_owned
+}
+
 fn gen_case(rng: &mut Rng) -> Case {
     let ntiles = rng.range(1, 5);
     let halo = rng.range(1, 4);
-    // every tile must own >= max(2, halo) rows, plus slack to randomize
-    let min_rows = ntiles * halo.max(2);
-    Case {
-        rows: min_rows + rng.range(0, 12),
+    let mut case = Case {
+        rows: 0,
         cols: rng.range(3, 9),
         ntiles,
         halo,
+        // halo >= block is the decompose feasibility bound
+        block: rng.range(1, halo + 1),
+        split: rng.range(0, 2) == 1,
         sweeps: rng.range(1, 5),
         topology: *rng.choose(&TOPOLOGIES),
         seed: rng.next_u64(),
         fault_seed: rng.next_u64(),
-    }
+    };
+    case.rows = min_rows(&case) + rng.range(0, 12);
+    case
 }
 
 fn shrink_case(case: &Case) -> Vec<Case> {
@@ -72,15 +93,25 @@ fn shrink_case(case: &Case) -> Vec<Case> {
         c.ntiles -= 1;
         out.push(c);
     }
-    if case.halo > 1 {
+    if case.split {
+        let mut c = case.clone();
+        c.split = false;
+        out.push(c);
+    }
+    if case.block > 1 {
+        let mut c = case.clone();
+        c.block -= 1;
+        out.push(c);
+    }
+    // thinner halo stays feasible only while halo > block
+    if case.halo > case.block.max(1) {
         let mut c = case.clone();
         c.halo -= 1;
         out.push(c);
     }
-    let min_rows = case.ntiles * case.halo.max(2);
-    if case.rows > min_rows {
+    if case.rows > min_rows(case) {
         let mut c = case.clone();
-        c.rows = min_rows;
+        c.rows = min_rows(case);
         out.push(c);
     }
     if case.cols > 3 {
@@ -125,6 +156,21 @@ fn module_bytes(report: &OmpReport, module: &str) -> f64 {
         .sum()
 }
 
+/// Emitted task count the case's geometry predicts: per sweep, one
+/// whole-tile task per tile (split: an interior band per tile plus a
+/// boundary band per shared edge, `3n - 2` total), plus
+/// `ceil(K/B) - 1` exchange rounds of `2*(n-1)` directed ops each.
+fn expected_tasks(case: &Case) -> usize {
+    let n = case.ntiles;
+    let per_sweep = if case.split { 3 * n - 2 } else { n };
+    let rounds = case.sweeps.div_ceil(case.block);
+    case.sweeps * per_sweep + (rounds - 1) * 2 * (n - 1)
+}
+
+fn expected_exchanges(case: &Case) -> usize {
+    (case.sweeps.div_ceil(case.block) - 1) * 2 * (case.ntiles - 1)
+}
+
 /// Decompose, install and run the case.  Returns the gathered grid,
 /// the report, and the emitted task count.
 fn run_case(
@@ -140,6 +186,8 @@ fn run_case(
         Grid::random(&shape, case.seed).map_err(|e| e.to_string())?;
     let spec = ShardSpec {
         halo: case.halo,
+        block: case.block,
+        split: case.split,
         capacity_cells: None,
     };
     let plan = ShardPlan::decompose("V", &shape, case.ntiles, &spec)
@@ -174,7 +222,7 @@ fn prop_sharded_equals_host_reference_bit_identically() {
         |case| {
             let (out, report, ntasks) = run_case(case, None)?;
             let want = reference(case)?;
-            // (a) bit-identity, any shape/halo/sweeps/topology
+            // (a) bit-identity, any shape/halo/block/split/topology
             if out != want {
                 return Err(format!(
                     "sharded result diverged from host reference \
@@ -182,9 +230,8 @@ fn prop_sharded_equals_host_reference_bit_identically() {
                     out.max_abs_diff(&want)
                 ));
             }
-            // (b) conservation: K*n sweeps + (K-1) exchange rounds
-            let expect = case.sweeps * case.ntiles
-                + case.sweeps.saturating_sub(1) * 2 * (case.ntiles - 1);
+            // (b) conservation: the geometry predicts the task count
+            let expect = expected_tasks(case);
             if ntasks != expect {
                 return Err(format!(
                     "emitted {ntasks} tasks, expected {expect}"
@@ -197,7 +244,16 @@ fn prop_sharded_equals_host_reference_bit_identically() {
                     tasks_executed(&report)
                 ));
             }
-            // (c) functional wire bytes == DES-priced bytes, exactly
+            // (c) exchange economics: the greedy blocking's count ...
+            let xs = expected_exchanges(case);
+            if report.halo.exchanges != xs {
+                return Err(format!(
+                    "{} exchanges executed, blocking predicts {xs}",
+                    report.halo.exchanges
+                ));
+            }
+            // ... and functional wire bytes == DES-priced bytes ==
+            // the report's halo counter, exactly
             let wire = module_bytes(&report, "halo-wire");
             let priced = module_bytes(&report, "halo-net");
             if wire != priced {
@@ -205,8 +261,20 @@ fn prop_sharded_equals_host_reference_bit_identically() {
                     "halo bytes {wire} != priced bytes {priced}"
                 ));
             }
-            // multi-tile multi-sweep runs must actually exchange
-            if case.ntiles > 1 && case.sweeps > 1 && wire == 0.0 {
+            if report.halo.bytes != wire {
+                return Err(format!(
+                    "halo counter {} != wire bytes {wire}",
+                    report.halo.bytes
+                ));
+            }
+            if !report.halo.wait_s.is_finite() || report.halo.wait_s < 0.0 {
+                return Err(format!(
+                    "halo wait attribution went negative or non-finite: {}",
+                    report.halo.wait_s
+                ));
+            }
+            // multi-tile multi-round runs must actually exchange
+            if xs > 0 && wire == 0.0 {
                 return Err("no halo bytes despite shared boundaries".into());
             }
             Ok(())
@@ -215,7 +283,70 @@ fn prop_sharded_equals_host_reference_bit_identically() {
 }
 
 #[test]
-fn prop_board_death_mid_sweep_recovers_bit_identically() {
+fn prop_blocked_and_split_schedules_match_every_sweep_schedule() {
+    // the same case run {block: 1, split: false} (the §11 every-sweep
+    // schedule), {block: B} and {block: B, split: true} must gather
+    // three bit-identical grids while the blocked runs exchange
+    // strictly less (whenever B > 1 buys a round)
+    check_shrink(
+        "shard-blocking-equivalence",
+        15,
+        gen_case,
+        shrink_case,
+        |case| {
+            let mut every = case.clone();
+            every.block = 1;
+            every.split = false;
+            let mut blocked = case.clone();
+            blocked.split = false;
+            let (g_every, rep_every, _) = run_case(&every, None)?;
+            let (g_blocked, rep_blocked, _) = run_case(&blocked, None)?;
+            let (g_case, rep_case, _) = run_case(case, None)?;
+            if g_blocked != g_every {
+                return Err(format!(
+                    "block={} diverged from every-sweep schedule \
+                     (max abs diff {})",
+                    case.block,
+                    g_blocked.max_abs_diff(&g_every)
+                ));
+            }
+            if g_case != g_every {
+                return Err(format!(
+                    "split={} block={} diverged from every-sweep \
+                     schedule (max abs diff {})",
+                    case.split,
+                    case.block,
+                    g_case.max_abs_diff(&g_every)
+                ));
+            }
+            for (label, rep, c) in [
+                ("blocked", &rep_blocked, &blocked),
+                ("case", &rep_case, case),
+            ] {
+                let want = expected_exchanges(c);
+                if rep.halo.exchanges != want {
+                    return Err(format!(
+                        "{label}: {} exchanges, expected {want}",
+                        rep.halo.exchanges
+                    ));
+                }
+            }
+            if expected_exchanges(&blocked) < expected_exchanges(&every)
+                && rep_blocked.halo.bytes >= rep_every.halo.bytes
+                && rep_every.halo.bytes > 0.0
+            {
+                return Err(format!(
+                    "blocking saved rounds but not bytes: {} vs {}",
+                    rep_blocked.halo.bytes, rep_every.halo.bytes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_board_death_mid_round_recovers_bit_identically() {
     check_shrink(
         "shard-death-recovery",
         20,
@@ -238,12 +369,12 @@ fn prop_board_death_mid_sweep_recovers_bit_identically() {
             );
             let armed = !schedule.is_empty();
             let (g_fault, rep, _) = run_case(case, Some(schedule))?;
-            // a shard owner died mid-run: the orphaned tile's sweeps
-            // and halo exchanges re-place, neighbours rewire through
-            // the same HaloOps (slots are baked into the ops, so the
-            // fabric prices identically wherever they land), and the
-            // re-streamed tile is billed — but the gathered grid is
-            // exactly the reference, still
+            // a shard owner died mid-round: the orphaned tile's
+            // sweeps/bands and halo exchanges re-place, neighbours
+            // rewire through the same HaloOps (slots are baked into
+            // the ops, so the fabric prices identically wherever they
+            // land), and the re-streamed tile is billed — but the
+            // gathered grid is exactly the reference, still
             if g_fault != want {
                 return Err(format!(
                     "post-recovery grid diverged ({} failure(s): {:?})",
@@ -296,6 +427,8 @@ fn ring_and_crossbar_makespans_differ_but_grids_agree() {
         cols: 6,
         ntiles: 3,
         halo: 1,
+        block: 1,
+        split: false,
         sweeps: 3,
         topology: Topology::Ring,
         seed: 42,
@@ -319,4 +452,48 @@ fn ring_and_crossbar_makespans_differ_but_grids_agree() {
         module_bytes(&rep_ring, "halo-net")
             > module_bytes(&rep_xbar, "halo-net")
     );
+}
+
+#[test]
+fn blocking_and_splitting_keep_the_deterministic_case_exact() {
+    // a fixed 4-board ring case swept through every {block, split}
+    // configuration its halo allows: all gather the same grid as the
+    // every-sweep schedule, and deeper blocks exchange strictly less
+    let base = Case {
+        rows: 36,
+        cols: 5,
+        ntiles: 4,
+        halo: 3,
+        block: 1,
+        split: false,
+        sweeps: 5,
+        topology: Topology::Ring,
+        seed: 7,
+        fault_seed: 0,
+    };
+    let want = reference(&base).unwrap();
+    let mut last_exchanges = usize::MAX;
+    for block in 1..=3usize {
+        let mut got = Vec::new();
+        for split in [false, true] {
+            let mut c = base.clone();
+            c.block = block;
+            c.split = split;
+            let (g, rep, ntasks) = run_case(&c, None).unwrap();
+            assert_eq!(
+                g, want,
+                "block={block} split={split} must stay bit-identical"
+            );
+            assert_eq!(ntasks, expected_tasks(&c));
+            assert_eq!(rep.halo.exchanges, expected_exchanges(&c));
+            got.push(rep.halo.exchanges);
+        }
+        assert_eq!(got[0], got[1], "splitting never changes exchanges");
+        assert!(
+            got[0] < last_exchanges,
+            "block={block} must exchange less than block={}",
+            block - 1
+        );
+        last_exchanges = got[0];
+    }
 }
